@@ -1,0 +1,34 @@
+//! Fig 11 as a runnable example: relative error of the H-mat-vec against
+//! the exact dense product for growing ACA rank k, for Gaussian and
+//! Matérn kernels in d = 2 and 3 (exponential convergence expected).
+//!
+//! Run:  cargo run --release --example convergence_study -- [--n 8192]
+//! (paper: N = 32768, C_leaf = 256, η = 1.5 — pass --n 32768 to match)
+
+use hmx::config::{HmxConfig, KernelKind};
+use hmx::prelude::*;
+use hmx::util::prng::Xoshiro256;
+
+fn main() -> anyhow::Result<()> {
+    let args = hmx::util::cli::Args::parse();
+    let n = args.get("n", 1usize << 13);
+    let ks = [1usize, 2, 4, 8, 12, 16, 24, 32];
+    println!("relative H-matvec error vs ACA rank (N={n}, C_leaf=256, eta=1.5)");
+    println!("{:>8} {:>9} {:>12} {:>12}", "kernel", "d", "k", "rel_err");
+    for dim in [2usize, 3] {
+        for kernel in [KernelKind::Gaussian, KernelKind::Matern] {
+            let pts = PointSet::halton(n, dim);
+            let base = HmxConfig { n, dim, kernel, c_leaf: 256, ..HmxConfig::default() };
+            let exact = DenseOperator::new(pts.clone(), base.kernel());
+            let x = Xoshiro256::seed(1).vector(n);
+            let want = exact.matvec(&x);
+            for &k in &ks {
+                let cfg = HmxConfig { k, ..base.clone() };
+                let h = HMatrix::build(pts.clone(), &cfg)?;
+                let err = hmx::util::rel_err(&h.matvec(&x)?, &want);
+                println!("{:>8} {:>9} {:>12} {:>12.4e}", kernel.name(), dim, k, err);
+            }
+        }
+    }
+    Ok(())
+}

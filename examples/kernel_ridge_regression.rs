@@ -1,0 +1,150 @@
+//! END-TO-END driver: kernel ridge regression on a synthetic dataset,
+//! exercising the full three-layer stack on a real small workload.
+//!
+//! Pipeline: Halton training inputs + noisy function observations
+//!   → H-matrix for (A_{φ,Y×Y}) with the configured engine
+//!     (pass --engine xla after `make artifacts` to run the batched
+//!     numerics through the AOT-compiled JAX/Pallas executables via PJRT)
+//!   → CG solve of (A + σ²I) α = y   (the paper's Eq. (1) with ridge term)
+//!   → prediction on held-out test points, train/test RMSE
+//!   → per-phase timing + CG residual curve.
+//!
+//! Run:  cargo run --release --example kernel_ridge_regression -- \
+//!           [--n 8192] [--d 2] [--sigma2 1e-3] [--engine xla]
+//!
+//! The EXPERIMENTS.md "End-to-end validation" section records a reference
+//! run of this example.
+
+use hmx::config::{EngineKind, HmxConfig, KernelKind};
+use hmx::prelude::*;
+use hmx::solver::cg::RegularizedHOp;
+use hmx::util::cli::Args;
+use hmx::util::prng::Xoshiro256;
+use std::time::Instant;
+
+/// Ground-truth function to regress (smooth, multiscale).
+fn f_true(p: &[f64]) -> f64 {
+    let s: f64 = p.iter().sum();
+    let r2: f64 = p.iter().map(|x| (x - 0.5) * (x - 0.5)).sum();
+    (3.0 * s).sin() + (-4.0 * r2).exp()
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let n = args.get("n", 1usize << 13);
+    let dim = args.get("d", 2usize);
+    let sigma2 = args.get("sigma2", 1e-3f64);
+    let noise = args.get("noise", 1e-2f64);
+    let n_test = args.get("n-test", 1024usize);
+    let engine = match args.get_str("engine", "native").as_str() {
+        "xla" => EngineKind::Xla,
+        _ => EngineKind::Native,
+    };
+    let cfg = HmxConfig {
+        n,
+        dim,
+        k: args.get("k", 16usize),
+        c_leaf: args.get("c-leaf", 256usize),
+        kernel: KernelKind::from_name(&args.get_str("kernel", "gaussian")).unwrap(),
+        engine,
+        // P mode by default: CG re-applies the operator many times
+        precompute: !args.has("no-precompute"),
+        artifacts_dir: args.get_str("artifacts", "artifacts"),
+        ..HmxConfig::default()
+    };
+
+    // --- dataset: y_i = f(x_i) + ε ---
+    let train = PointSet::halton(n, dim);
+    let mut rng = Xoshiro256::seed(args.get("seed", 42u64));
+    let y_obs: Vec<f64> =
+        (0..n).map(|i| f_true(&train.point(i)) + noise * rng.normal()).collect();
+
+    // --- H-matrix construction ---
+    let t_setup = Instant::now();
+    let h = HMatrix::build(train.clone(), &cfg)?;
+    let setup_s = t_setup.elapsed().as_secs_f64();
+    println!(
+        "[setup]   n={n} d={dim} kernel={} engine={} precompute={} : {setup_s:.3}s",
+        cfg.kernel.name(),
+        h.engine_name(),
+        h.is_precomputed()
+    );
+    println!(
+        "[setup]   {} admissible / {} dense blocks, compression {:.4}",
+        h.stats.admissible_blocks,
+        h.stats.dense_blocks,
+        h.compression_ratio()
+    );
+
+    // --- CG solve of (A + σ²I) α = y ---
+    let op = RegularizedHOp::new(&h, sigma2);
+    let t_solve = Instant::now();
+    let res = cg_solve(
+        &op,
+        &y_obs,
+        CgOptions { max_iter: args.get("max-iter", 300usize), tol: args.get("tol", 1e-8f64) },
+    );
+    let solve_s = t_solve.elapsed().as_secs_f64();
+    println!(
+        "[solve]   CG {} in {} iters, residual {:.3e}, {:.3}s ({:.1} ms/iter)",
+        if res.converged { "converged" } else { "NOT converged" },
+        res.iterations,
+        res.residual,
+        solve_s,
+        1e3 * solve_s / res.iterations.max(1) as f64
+    );
+    // residual curve (every ~8th iteration)
+    let curve: Vec<String> = res
+        .history
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| i % 8 == 0)
+        .map(|(i, r)| format!("{i}:{r:.1e}"))
+        .collect();
+    println!("[solve]   residual curve: {}", curve.join(" "));
+
+    // --- prediction: f̂(x*) = Σ_i α_i φ(x*, x_i) ---
+    let alpha = &res.x;
+    let kern = cfg.kernel();
+    let predict = |p: &[f64]| -> f64 {
+        let mut acc = 0.0;
+        for i in 0..n {
+            let pt = train.point(i);
+            acc += alpha[i] * kern.eval_coords(p, &pt);
+        }
+        acc
+    };
+    let t_pred = Instant::now();
+    // train RMSE (on a subsample for speed)
+    let stride = (n / 2048).max(1);
+    let mut train_se = 0.0;
+    let mut train_cnt = 0usize;
+    for i in (0..n).step_by(stride) {
+        let p = train.point(i);
+        let e = predict(&p) - f_true(&p);
+        train_se += e * e;
+        train_cnt += 1;
+    }
+    // test RMSE on fresh random points
+    let mut test_rng = Xoshiro256::seed(999);
+    let mut test_se = 0.0;
+    for _ in 0..n_test {
+        let p: Vec<f64> = (0..dim).map(|_| test_rng.next_f64()).collect();
+        let e = predict(&p) - f_true(&p);
+        test_se += e * e;
+    }
+    println!(
+        "[predict] train RMSE {:.4e} (on {} pts), test RMSE {:.4e} (on {} pts), {:.3}s",
+        (train_se / train_cnt as f64).sqrt(),
+        train_cnt,
+        (test_se / n_test as f64).sqrt(),
+        n_test,
+        t_pred.elapsed().as_secs_f64()
+    );
+
+    println!("[phases]");
+    for (phase, total, count) in hmx::metrics::RECORDER.snapshot() {
+        println!("  {phase:<28} {:>9.4}s ({count}x)", total.as_secs_f64());
+    }
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Quickstart: build an H-matrix for a Gaussian kernel on Halton points,
+//! run the fast mat-vec, and check the error against the exact dense
+//! product — the paper's model problem (§6.2) in ~30 lines.
+//!
+//! Run:  cargo run --release --example quickstart [-- --n 16384 --d 2]
+
+use hmx::config::HmxConfig;
+use hmx::prelude::*;
+use hmx::util::cli::Args;
+use hmx::util::prng::Xoshiro256;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let cfg = HmxConfig {
+        n: args.get("n", 1usize << 14),
+        dim: args.get("d", 2usize),
+        k: args.get("k", 16usize),
+        c_leaf: args.get("c-leaf", 256usize),
+        ..HmxConfig::default()
+    };
+
+    // 1. the model workload: Halton points on the unit square/cube
+    let points = PointSet::halton(cfg.n, cfg.dim);
+
+    // 2. H-matrix construction (Morton sort -> block tree -> batch plans)
+    let t0 = Instant::now();
+    let h = HMatrix::build(points.clone(), &cfg)?;
+    println!(
+        "setup:  n={} d={} in {:.3}s ({} admissible + {} dense blocks, compression {:.3})",
+        cfg.n,
+        cfg.dim,
+        t0.elapsed().as_secs_f64(),
+        h.stats.admissible_blocks,
+        h.stats.dense_blocks,
+        h.compression_ratio()
+    );
+
+    // 3. fast mat-vec
+    let x = Xoshiro256::seed(7).vector(cfg.n);
+    let t1 = Instant::now();
+    let y = h.matvec(&x)?;
+    println!("matvec: {:.3}s, |y|_2 = {:.6}", t1.elapsed().as_secs_f64(), hmx::util::norm2(&y));
+
+    // 4. verify against the exact dense product (small n only)
+    if cfg.n <= 1 << 15 {
+        let exact = DenseOperator::new(points, cfg.kernel());
+        let err = hmx::util::rel_err(&y, &exact.matvec(&x));
+        println!("error:  |Hx - Ax| / |Ax| = {err:.3e}  (rank k = {})", cfg.k);
+    }
+    Ok(())
+}

@@ -1,0 +1,117 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts + manifest.
+
+Emits one HLO text file per (op, kernel, d, bucket) signature plus
+`manifest.tsv` (see rust/src/runtime/artifacts.rs for the schema).
+
+HLO *text* (never `.serialize()`): jax >= 0.5 emits protos with 64-bit
+instruction ids which xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md and aot_recipe).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts \
+            [--kernels gaussian,matern] [--dims 2,3] [--k 16] \
+            [--dense-buckets 64,256] [--aca-buckets 256,512,1024] [--batch 16]
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+jax.config.update("jax_enable_x64", True)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned on parse)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float64)
+
+
+def lower_dense_mv(kernel: str, d: int, m: int, b: int):
+    fn = lambda tau, sigma, x: model.dense_mv(tau, sigma, x, kernel=kernel)
+    return jax.jit(fn).lower(spec(b, m, d), spec(b, m, d), spec(b, m))
+
+
+def lower_aca_mv(kernel: str, d: int, m: int, k: int, b: int):
+    fn = lambda tau, sigma, x, rm, cm: model.aca_mv(tau, sigma, x, rm, cm, k=k, kernel=kernel)
+    return jax.jit(fn).lower(spec(b, m, d), spec(b, m, d), spec(b, m), spec(b, m), spec(b, m))
+
+
+def lower_aca_factors(kernel: str, d: int, m: int, k: int, b: int):
+    fn = lambda tau, sigma, rm, cm: model.aca_factors(tau, sigma, rm, cm, k=k, kernel=kernel)
+    return jax.jit(fn).lower(spec(b, m, d), spec(b, m, d), spec(b, m), spec(b, m))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--kernels", default="gaussian,matern")
+    ap.add_argument("--dims", default="2,3")
+    ap.add_argument("--k", type=int, default=16)
+    ap.add_argument("--dense-buckets", default="64,256")
+    ap.add_argument("--aca-buckets", default="256,512,1024")
+    ap.add_argument("--batch", type=int, default=16)
+    args = ap.parse_args()
+
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+    kernels = [k for k in args.kernels.split(",") if k]
+    dims = [int(x) for x in args.dims.split(",") if x]
+    dense_buckets = [int(x) for x in args.dense_buckets.split(",") if x]
+    aca_buckets = [int(x) for x in args.aca_buckets.split(",") if x]
+    b = args.batch
+    k = args.k
+
+    rows = []
+
+    def emit(name, lowered, op, kernel, d, m, n, kk):
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        rows.append((name, fname, op, kernel, d, m, n, kk, b))
+        print(f"  wrote {fname} ({len(text) // 1024} KiB)")
+
+    for kernel in kernels:
+        for d in dims:
+            for m in dense_buckets:
+                name = f"dense_mv_{kernel}_d{d}_m{m}"
+                print(f"lowering {name} ...")
+                emit(name, lower_dense_mv(kernel, d, m, b), "dense_mv", kernel, d, m, m, 0)
+            for m in aca_buckets:
+                name = f"aca_mv_{kernel}_d{d}_m{m}_k{k}"
+                print(f"lowering {name} ...")
+                emit(name, lower_aca_mv(kernel, d, m, k, b), "aca_mv", kernel, d, m, m, k)
+                name = f"aca_factors_{kernel}_d{d}_m{m}_k{k}"
+                print(f"lowering {name} ...")
+                emit(
+                    name,
+                    lower_aca_factors(kernel, d, m, k, b),
+                    "aca_factors",
+                    kernel,
+                    d,
+                    m,
+                    m,
+                    k,
+                )
+
+    manifest = os.path.join(out_dir, "manifest.tsv")
+    with open(manifest, "w") as f:
+        f.write("# name\tfile\top\tkernel\td\tm\tn\tk\tb\n")
+        for row in rows:
+            f.write("\t".join(str(c) for c in row) + "\n")
+    print(f"wrote {manifest} with {len(rows)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

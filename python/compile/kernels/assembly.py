@@ -1,0 +1,75 @@
+"""L1 Pallas kernel: batched kernel-matrix tile assembly.
+
+The compute hot-spot of the H-matrix method is evaluating phi on block
+tiles (the paper's "evaluating matrix elements is often much faster [than
+storing them]" observation drives the whole NP recompute strategy). This
+kernel computes A[b, i, j] = phi(tau[b, i], sigma[b, j]) tile by tile.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): a (BM × BN) tile of A plus
+the two point slabs (BM × D, BN × D) live in VMEM; the grid walks
+(batch, M/BM, N/BN) so HBM→VMEM traffic is one slab read per tile row/col
+and one tile write — the BlockSpec below *is* the paper's
+threadblock-to-shared-memory schedule, re-expressed. The distance
+computation is a rank-D contraction (MXU-friendly once D is padded) and
+phi is elementwise on the VPU.
+
+Must be lowered with interpret=True for CPU execution (Mosaic custom-calls
+cannot run on the CPU PJRT plugin).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+jax.config.update("jax_enable_x64", True)
+
+# Tile sizes: multiples of the smallest bucket (64); 64×64 f64 tiles are
+# 32 KiB — three buffers fit comfortably in a 16 MiB VMEM budget.
+TILE_M = 64
+TILE_N = 64
+
+
+def _phi_tile(tau_tile, sigma_tile, kernel: str, d: int):
+    """phi on a (BM, D) x (BN, D) tile -> (BM, BN)."""
+    diff = tau_tile[:, None, :] - sigma_tile[None, :, :]
+    r2 = jnp.sum(diff * diff, axis=-1)
+    return ref.phi_r2(r2, kernel, d)
+
+
+def _assembly_kernel(tau_ref, sigma_ref, out_ref, *, kernel: str, d: int):
+    """Pallas body: one (TILE_M, TILE_N) tile of one batch element."""
+    tau_tile = tau_ref[0]  # [TILE_M, D]
+    sigma_tile = sigma_ref[0]  # [TILE_N, D]
+    out_ref[0] = _phi_tile(tau_tile, sigma_tile, kernel, d)
+
+
+@functools.partial(jax.jit, static_argnames=("kernel",))
+def assemble(tau, sigma, kernel: str = "gaussian"):
+    """Batched assembly A[b,i,j] = phi(tau[b,i], sigma[b,j]) via Pallas.
+
+    tau: [B, M, D], sigma: [B, N, D] -> [B, M, N]; M, N must be multiples
+    of the tile sizes (the AOT buckets are).
+    """
+    b, m, d = tau.shape
+    _, n, _ = sigma.shape
+    tile_m = min(TILE_M, m)
+    tile_n = min(TILE_N, n)
+    assert m % tile_m == 0 and n % tile_n == 0, (m, n)
+    grid = (b, m // tile_m, n // tile_n)
+    return pl.pallas_call(
+        functools.partial(_assembly_kernel, kernel=kernel, d=d),
+        out_shape=jax.ShapeDtypeStruct((b, m, n), tau.dtype),
+        grid=grid,
+        in_specs=[
+            # each grid step sees one batch element's tile row slab ...
+            pl.BlockSpec((1, tile_m, d), lambda bi, i, j: (bi, i, 0)),
+            # ... and tile column slab
+            pl.BlockSpec((1, tile_n, d), lambda bi, i, j: (bi, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_m, tile_n), lambda bi, i, j: (bi, i, j)),
+        interpret=True,
+    )(tau, sigma)

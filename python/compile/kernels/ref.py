@@ -1,0 +1,171 @@
+"""Pure-jnp reference oracles for the L1/L2 numerics.
+
+Everything here is the *specification*: the Pallas assembly kernel and the
+batched ACA graph are tested against these functions, and the Rust native
+engine implements the same formulas (identical Abramowitz & Stegun
+coefficients), so all three layers agree to ~1e-8.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+# --- kernel functions phi (must mirror rust/src/geometry/{bessel,kernel}.rs) ---
+
+# A&S 9.8.3: I1(x)/x for |x| <= 3.75
+_I1_COEFFS = (0.5, 0.87890594, 0.51498869, 0.15084934, 0.02658733, 0.00301532, 0.00032411)
+# A&S 9.8.7 polynomial part of x*K1(x), x <= 2
+_K1_SMALL = (1.0, 0.15443144, -0.67278579, -0.18156897, -0.01919402, -0.00110404, -0.00004686)
+# A&S 9.8.8: sqrt(x) e^x K1(x), x >= 2
+_K1_LARGE = (1.25331414, 0.23498619, -0.03655620, 0.01504268, -0.00780353, 0.00325614, -0.00068245)
+
+
+def _poly(coeffs, t):
+    acc = jnp.zeros_like(t) + coeffs[-1]
+    for c in reversed(coeffs[:-1]):
+        acc = acc * t + c
+    return acc
+
+
+def bessel_i1_small(x):
+    """I1(x) for |x| <= 3.75 (A&S 9.8.3)."""
+    t2 = (x / 3.75) ** 2
+    return x * _poly(_I1_COEFFS, t2)
+
+
+def x_bessel_k1(x):
+    """x*K1(x), continuously extended by 1 at x = 0."""
+    xs = jnp.maximum(x, 1e-12)
+    small = xs * jnp.log(xs / 2.0) * bessel_i1_small(xs) + _poly(_K1_SMALL, (xs / 2.0) ** 2)
+    large = xs * _poly(_K1_LARGE, 2.0 / xs) * jnp.exp(-xs) / jnp.sqrt(xs)
+    val = jnp.where(xs <= 2.0, small, large)
+    return jnp.where(x < 1e-12, 1.0, val)
+
+
+_SQRT_PI = 1.7724538509055159
+
+
+def _gamma_one_plus_half_d(d: int) -> float:
+    """Gamma(1 + d/2) for integer d (exact recurrence)."""
+    two_beta = 2 + d
+    if two_beta % 2 == 0:
+        m = two_beta // 2
+        out = 1.0
+        for kk in range(1, m):
+            out *= float(kk)
+        return out
+    n = (two_beta - 1) // 2
+    acc = _SQRT_PI
+    for kk in range(n):
+        acc *= 0.5 + kk
+    return acc
+
+
+def matern_norm(d: int) -> float:
+    """1 / (2^{beta-1} Gamma(beta)) with beta = 1 + d/2."""
+    beta = 1.0 + d / 2.0
+    return 1.0 / (2.0 ** (beta - 1.0) * _gamma_one_plus_half_d(d))
+
+
+def phi_r2(r2, kernel: str, d: int):
+    """Evaluate phi from squared distances (elementwise)."""
+    if kernel == "gaussian":
+        return jnp.exp(-r2)
+    if kernel == "matern":
+        return matern_norm(d) * x_bessel_k1(jnp.sqrt(r2))
+    if kernel == "exponential":
+        return jnp.exp(-jnp.sqrt(r2))
+    raise ValueError(f"unknown kernel {kernel}")
+
+
+# --- reference batched operations ---
+
+
+def assemble_ref(tau, sigma, kernel: str):
+    """Batched kernel-matrix assembly: A[b,i,j] = phi(tau[b,i], sigma[b,j]).
+
+    tau: [B, M, D], sigma: [B, N, D] -> [B, M, N].
+    """
+    diff = tau[:, :, None, :] - sigma[:, None, :, :]
+    r2 = jnp.sum(diff * diff, axis=-1)
+    return phi_r2(r2, kernel, tau.shape[-1])
+
+
+def dense_mv_ref(tau, sigma, x, kernel: str):
+    """Batched dense mat-vec: y[b] = A_b @ x[b]."""
+    a = assemble_ref(tau, sigma, kernel)
+    return jnp.einsum("bmn,bn->bm", a, x)
+
+
+def aca_factors_block_ref(tau, sigma, row_mask, col_mask, k: int, kernel: str):
+    """Fixed-rank ACA with partial pivoting for ONE block (M,D)/(N,D).
+
+    Mirrors rust/src/aca/seq.rs `aca_fixed_rank` (same pivot rules:
+    first-occurrence argmax, used-row/col exclusion, 1e-14 pivot floor).
+    Returns U [M, k], V [N, k] with A ~= U @ V.T (masked entries zero).
+    """
+    d = tau.shape[-1]
+
+    def phi_col(j):
+        diff = tau - sigma[j][None, :]
+        return phi_r2(jnp.sum(diff * diff, axis=-1), kernel, d)
+
+    def phi_row(i):
+        diff = sigma - tau[i][None, :]
+        return phi_r2(jnp.sum(diff * diff, axis=-1), kernel, d)
+
+    def body(r, carry):
+        u_mat, v_mat, used_r, used_c, j_cur = carry
+        rank_mask = (jnp.arange(k) < r).astype(u_mat.dtype)
+        # residual column
+        u_hat = phi_col(j_cur) - u_mat @ (v_mat[j_cur] * rank_mask)
+        u_hat = jnp.where(row_mask > 0, u_hat, 0.0)
+        scores = jnp.where(used_r, -1.0, jnp.abs(u_hat))
+        i_cur = jnp.argmax(scores)
+        best = scores[i_cur]
+        active = best > 1e-14
+        pivot = u_hat[i_cur]
+        pivot = jnp.where(jnp.abs(pivot) < 1e-300, 1.0, pivot)
+        u_r = jnp.where(active, u_hat / pivot, 0.0)
+        # residual row
+        v_r = phi_row(i_cur) - v_mat @ (u_mat[i_cur] * rank_mask)
+        v_r = jnp.where(col_mask > 0, v_r, 0.0)
+        v_r = jnp.where(active, v_r, 0.0)
+        u_mat = u_mat.at[:, r].set(u_r)
+        v_mat = v_mat.at[:, r].set(v_r)
+        used_r = jnp.where(active, used_r.at[i_cur].set(True), used_r)
+        # the current column is retired either way: accepted as a pivot, or
+        # found to have zero residual (e.g. a duplicate of a used column —
+        # zero residual does NOT mean the block is exhausted)
+        used_c = used_c.at[j_cur].set(True)
+        cscores = jnp.where(used_c, -1.0, jnp.abs(v_r))
+        j_next = jnp.argmax(cscores)
+        # on pivot failure: advance to the first unused column instead
+        # (mirrors the column-retry of the sequential/native batched ACA)
+        first_unused = jnp.argmax(~used_c)
+        j_cur = jnp.where(active, j_next, first_unused)
+        return u_mat, v_mat, used_r, used_c, j_cur
+
+    m_pts, n_pts = tau.shape[0], sigma.shape[0]
+    u0 = jnp.zeros((m_pts, k))
+    v0 = jnp.zeros((n_pts, k))
+    used_r0 = row_mask <= 0  # padded rows start "used"
+    used_c0 = col_mask <= 0
+    j0 = jnp.argmax(col_mask)  # first valid column
+    u_mat, v_mat, _, _, _ = jax.lax.fori_loop(0, k, body, (u0, v0, used_r0, used_c0, j0))
+    return u_mat, v_mat
+
+
+def aca_factors_ref(tau, sigma, row_mask, col_mask, k: int, kernel: str):
+    """Batched fixed-rank ACA factors: vmap of the single-block reference."""
+    return jax.vmap(lambda t, s, rm, cm: aca_factors_block_ref(t, s, rm, cm, k, kernel))(
+        tau, sigma, row_mask, col_mask
+    )
+
+
+def aca_mv_ref(tau, sigma, x, row_mask, col_mask, k: int, kernel: str):
+    """Fused batched ACA + low-rank apply: y[b] = U_b (V_b^T x[b])."""
+    u_mat, v_mat = aca_factors_ref(tau, sigma, row_mask, col_mask, k, kernel)
+    t = jnp.einsum("bnk,bn->bk", v_mat, x)
+    return jnp.einsum("bmk,bk->bm", u_mat, t)

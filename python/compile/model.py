@@ -1,0 +1,50 @@
+"""L2: the batched linear-algebra compute graphs (§5.4 of the paper).
+
+Three entry points, each AOT-lowered per shape bucket by `aot.py`:
+
+* `dense_mv`      — batched dense block mat-vec: Pallas-assembled tiles
+                    (L1) contracted against x (the paper's MAGMA
+                    `dgemv_vbatched` role).
+* `aca_mv`        — fused batched fixed-rank ACA + low-rank apply
+                    (NP mode: factors live only inside the executable).
+* `aca_factors`   — batched ACA factors only (P-mode precompute).
+
+The ACA iteration itself is data-dependent gather/argmax-heavy work, which
+stays at the JAX level (vmap of a fori_loop); its inner kernel evaluations
+are the same formulas the L1 assembly kernel uses.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import assembly, ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+@functools.partial(jax.jit, static_argnames=("kernel",))
+def dense_mv(tau, sigma, x, kernel: str = "gaussian"):
+    """y[b] = A_b x[b] with A_b assembled on the fly by the Pallas kernel.
+
+    tau: [B, M, D], sigma: [B, N, D], x: [B, N] -> y: [B, M].
+    Padded sigma columns are neutralized by zeroed x entries (phi stays
+    finite on padded points by construction).
+    """
+    a = assembly.assemble(tau, sigma, kernel)
+    return jnp.einsum("bmn,bn->bm", a, x)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "kernel"))
+def aca_mv(tau, sigma, x, row_mask, col_mask, k: int = 16, kernel: str = "gaussian"):
+    """Fused batched rank-k ACA + apply; see ref.aca_mv_ref (the oracle is
+    the implementation here — the ACA graph is already the batched
+    formulation)."""
+    return ref.aca_mv_ref(tau, sigma, x, row_mask, col_mask, k, kernel)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "kernel"))
+def aca_factors(tau, sigma, row_mask, col_mask, k: int = 16, kernel: str = "gaussian"):
+    """Batched rank-k ACA factors (U [B,M,K], V [B,N,K])."""
+    return ref.aca_factors_ref(tau, sigma, row_mask, col_mask, k, kernel)

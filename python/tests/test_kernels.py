@@ -1,0 +1,102 @@
+"""L1 tests: Pallas assembly kernel vs the pure-jnp oracle, plus the
+kernel-function formulas vs scipy."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import assembly, ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def rand_points(rng, b, n, d, dtype=np.float64):
+    return jnp.asarray(rng.uniform(0.0, 1.0, size=(b, n, d)).astype(dtype))
+
+
+class TestPhi:
+    def test_gaussian_values(self):
+        r2 = jnp.asarray([0.0, 1.0, 4.0])
+        np.testing.assert_allclose(ref.phi_r2(r2, "gaussian", 2), np.exp([-0.0, -1.0, -4.0]))
+
+    def test_matern_k1_vs_scipy(self):
+        scipy_special = pytest.importorskip("scipy.special")
+        x = np.linspace(0.05, 10.0, 200)
+        want = x * scipy_special.k1(x)
+        got = np.asarray(ref.x_bessel_k1(jnp.asarray(x)))
+        np.testing.assert_allclose(got, want, rtol=5e-7, atol=1e-9)
+
+    def test_matern_diagonal_limit(self):
+        # x*K1(x) -> 1 as x -> 0; phi_M(0) = norm
+        val = ref.phi_r2(jnp.asarray([0.0]), "matern", 2)
+        np.testing.assert_allclose(val, [0.5], rtol=1e-12)
+
+    def test_matern_norm_matches_rust_constants(self):
+        # d=2 -> 0.5 ; d=3 -> 1/(2^1.5 * Gamma(2.5))
+        assert abs(ref.matern_norm(2) - 0.5) < 1e-15
+        assert abs(ref.matern_norm(3) - 1.0 / (2.0**1.5 * 1.3293403881791370)) < 1e-12
+
+    def test_exponential(self):
+        np.testing.assert_allclose(
+            ref.phi_r2(jnp.asarray([4.0]), "exponential", 2), [np.exp(-2.0)]
+        )
+
+    def test_unknown_kernel_raises(self):
+        with pytest.raises(ValueError):
+            ref.phi_r2(jnp.asarray([1.0]), "bogus", 2)
+
+
+class TestAssemblyKernel:
+    @pytest.mark.parametrize("kernel", ["gaussian", "matern", "exponential"])
+    @pytest.mark.parametrize("d", [2, 3])
+    def test_matches_ref(self, kernel, d):
+        rng = np.random.default_rng(0)
+        tau = rand_points(rng, 2, 128, d)
+        sigma = rand_points(rng, 2, 64, d)
+        got = assembly.assemble(tau, sigma, kernel)
+        want = ref.assemble_ref(tau, sigma, kernel)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12, atol=1e-14)
+
+    def test_symmetry_on_same_points(self):
+        rng = np.random.default_rng(1)
+        pts = rand_points(rng, 1, 64, 2)
+        a = np.asarray(assembly.assemble(pts, pts, "gaussian"))[0]
+        np.testing.assert_allclose(a, a.T, rtol=1e-13)
+        np.testing.assert_allclose(np.diag(a), 1.0, rtol=1e-13)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b=st.integers(1, 4),
+        mt=st.integers(1, 4),
+        nt=st.integers(1, 4),
+        d=st.integers(1, 4),
+        kernel=st.sampled_from(["gaussian", "matern"]),
+    )
+    def test_shape_sweep_hypothesis(self, b, mt, nt, d, kernel):
+        """Hypothesis sweep over grid shapes (tile multiples) and dims."""
+        m, n = 64 * mt, 64 * nt
+        rng = np.random.default_rng(b * 1000 + mt * 100 + nt * 10 + d)
+        tau = rand_points(rng, b, m, d)
+        sigma = rand_points(rng, b, n, d)
+        got = assembly.assemble(tau, sigma, kernel)
+        assert got.shape == (b, m, n)
+        want = ref.assemble_ref(tau, sigma, kernel)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-11, atol=1e-13)
+
+    def test_float32_supported(self):
+        rng = np.random.default_rng(5)
+        tau = rand_points(rng, 1, 64, 2, np.float32)
+        sigma = rand_points(rng, 1, 64, 2, np.float32)
+        got = assembly.assemble(tau, sigma, "gaussian")
+        assert got.dtype == jnp.float32
+        want = ref.assemble_ref(tau, sigma, "gaussian")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-7)
+
+    def test_coincident_points_finite_for_matern(self):
+        # r = 0 off-diagonal (duplicated points) must not produce inf/nan
+        tau = jnp.zeros((1, 64, 2))
+        a = np.asarray(assembly.assemble(tau, tau, "matern"))
+        assert np.all(np.isfinite(a))
+        np.testing.assert_allclose(a, 0.5, rtol=1e-12)

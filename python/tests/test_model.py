@@ -1,0 +1,157 @@
+"""L2 tests: batched dense mat-vec and batched ACA graphs."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def separated_clusters(rng, b, m, n, d, gap=0.6):
+    """tau in [0, 0.25]^d, sigma in [gap+0.25, gap+0.5]^d — admissible."""
+    tau = rng.uniform(0.0, 0.25, size=(b, m, d))
+    sigma = rng.uniform(gap + 0.25, gap + 0.5, size=(b, n, d))
+    return jnp.asarray(tau), jnp.asarray(sigma)
+
+
+class TestDenseMv:
+    @pytest.mark.parametrize("kernel", ["gaussian", "matern"])
+    def test_matches_ref(self, kernel):
+        rng = np.random.default_rng(2)
+        tau = jnp.asarray(rng.uniform(size=(3, 64, 2)))
+        sigma = jnp.asarray(rng.uniform(size=(3, 128, 2)))
+        x = jnp.asarray(rng.uniform(-1, 1, size=(3, 128)))
+        got = model.dense_mv(tau, sigma, x, kernel=kernel)
+        want = ref.dense_mv_ref(tau, sigma, x, kernel)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-11)
+
+    def test_zero_x_gives_zero(self):
+        rng = np.random.default_rng(3)
+        tau = jnp.asarray(rng.uniform(size=(1, 64, 2)))
+        x = jnp.zeros((1, 64))
+        got = model.dense_mv(tau, tau, x)
+        assert np.allclose(np.asarray(got), 0.0)
+
+    def test_padded_columns_are_neutral(self):
+        """Zero-padding x neutralizes padded sigma columns (§5.4.2)."""
+        rng = np.random.default_rng(4)
+        tau = jnp.asarray(rng.uniform(size=(1, 64, 2)))
+        sigma_real = jnp.asarray(rng.uniform(size=(1, 64, 2)))
+        x_real = jnp.asarray(rng.uniform(-1, 1, size=(1, 64)))
+        # pad sigma to 128 with junk, x with zeros
+        sigma_pad = jnp.concatenate([sigma_real, jnp.full((1, 64, 2), 7.7)], axis=1)
+        x_pad = jnp.concatenate([x_real, jnp.zeros((1, 64))], axis=1)
+        got = model.dense_mv(tau, sigma_pad, x_pad)
+        want = model.dense_mv(tau, sigma_real, x_real)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12)
+
+
+class TestAca:
+    def test_factors_approximate_block(self):
+        rng = np.random.default_rng(5)
+        b, m, n, k = 2, 64, 64, 12
+        tau, sigma = separated_clusters(rng, b, m, n, 2)
+        rm = jnp.ones((b, m))
+        cm = jnp.ones((b, n))
+        u, v = model.aca_factors(tau, sigma, rm, cm, k=k)
+        a = np.asarray(ref.assemble_ref(tau, sigma, "gaussian"))
+        approx = np.einsum("bmk,bnk->bmn", np.asarray(u), np.asarray(v))
+        err = np.linalg.norm(a - approx) / np.linalg.norm(a)
+        assert err < 1e-8, err
+
+    def test_rank_convergence(self):
+        """Exponential convergence in k (Fig 11 in miniature)."""
+        rng = np.random.default_rng(6)
+        tau, sigma = separated_clusters(rng, 1, 128, 128, 2)
+        rm = jnp.ones((1, 128))
+        cm = jnp.ones((1, 128))
+        a = np.asarray(ref.assemble_ref(tau, sigma, "gaussian"))
+        errs = []
+        for k in [1, 2, 4, 8]:
+            u, v = model.aca_factors(tau, sigma, rm, cm, k=k)
+            approx = np.einsum("bmk,bnk->bmn", np.asarray(u), np.asarray(v))
+            errs.append(np.linalg.norm(a - approx) / np.linalg.norm(a))
+        assert errs[1] < errs[0] and errs[2] < errs[1] and errs[3] < errs[2], errs
+        assert errs[3] < 1e-6, errs
+
+    def test_fused_mv_equals_factors_then_apply(self):
+        rng = np.random.default_rng(7)
+        b, m, n, k = 3, 64, 64, 8
+        tau, sigma = separated_clusters(rng, b, m, n, 3)
+        rm = jnp.ones((b, m))
+        cm = jnp.ones((b, n))
+        x = jnp.asarray(rng.uniform(-1, 1, size=(b, n)))
+        y_fused = model.aca_mv(tau, sigma, x, rm, cm, k=k)
+        u, v = model.aca_factors(tau, sigma, rm, cm, k=k)
+        t = jnp.einsum("bnk,bn->bk", v, x)
+        y_two = jnp.einsum("bmk,bk->bm", u, t)
+        np.testing.assert_allclose(np.asarray(y_fused), np.asarray(y_two), rtol=1e-10)
+
+    def test_padding_invariance(self):
+        """Masked (padded) rows/cols and dummy batch entries must not change
+        the valid outputs — the contract the Rust runtime relies on."""
+        rng = np.random.default_rng(8)
+        m_real, n_real, k = 48, 40, 6
+        tau_r, sigma_r = separated_clusters(rng, 1, m_real, n_real, 2)
+        x_r = jnp.asarray(rng.uniform(-1, 1, size=(1, n_real)))
+        rm_r = jnp.ones((1, m_real))
+        cm_r = jnp.ones((1, n_real))
+        y_ref = model.aca_mv(tau_r, sigma_r, x_r, rm_r, cm_r, k=k)
+
+        # pad rows/cols to 64 by replicating the first point, x with zeros,
+        # masks with zeros; add a dummy all-masked batch entry of garbage
+        def pad(arr, target, axis, fill):
+            pad_n = target - arr.shape[axis]
+            reps = jnp.repeat(fill, pad_n, axis=axis)
+            return jnp.concatenate([arr, reps], axis=axis)
+
+        tau_p = pad(tau_r, 64, 1, tau_r[:, :1])
+        sigma_p = pad(sigma_r, 64, 1, sigma_r[:, :1])
+        x_p = pad(x_r, 64, 1, jnp.zeros((1, 1)))
+        rm_p = pad(rm_r, 64, 1, jnp.zeros((1, 1)))
+        cm_p = pad(cm_r, 64, 1, jnp.zeros((1, 1)))
+        # dummy second batch entry: all zeros points, masks zero
+        tau_b = jnp.concatenate([tau_p, jnp.zeros_like(tau_p)], axis=0)
+        sigma_b = jnp.concatenate([sigma_p, jnp.zeros_like(sigma_p)], axis=0)
+        x_b = jnp.concatenate([x_p, jnp.zeros_like(x_p)], axis=0)
+        rm_b = jnp.concatenate([rm_p, jnp.zeros_like(rm_p)], axis=0)
+        cm_b = jnp.concatenate([cm_p, jnp.zeros_like(cm_p)], axis=0)
+
+        y_pad = model.aca_mv(tau_b, sigma_b, x_b, rm_b, cm_b, k=k)
+        y_pad = np.asarray(y_pad)
+        np.testing.assert_allclose(y_pad[0, :m_real], np.asarray(y_ref)[0], rtol=1e-9, atol=1e-12)
+        # padded rows and the dummy batch produce zeros / finite values
+        assert np.all(np.isfinite(y_pad))
+        np.testing.assert_allclose(y_pad[1], 0.0, atol=1e-12)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        m=st.integers(8, 64),
+        n=st.integers(8, 64),
+        k=st.integers(1, 8),
+        kernel=st.sampled_from(["gaussian", "matern"]),
+    )
+    def test_aca_error_bounded_hypothesis(self, m, n, k, kernel):
+        """ACA approximation error is bounded by the (k+1)-th singular
+        value's tail, and factors are always finite."""
+        rng = np.random.default_rng(m * 100 + n * 10 + k)
+        tau, sigma = separated_clusters(rng, 1, m, n, 2)
+        rm = jnp.ones((1, m))
+        cm = jnp.ones((1, n))
+        u, v = model.aca_factors(tau, sigma, rm, cm, k=k, kernel=kernel)
+        u, v = np.asarray(u), np.asarray(v)
+        assert np.all(np.isfinite(u)) and np.all(np.isfinite(v))
+        a = np.asarray(ref.assemble_ref(tau, sigma, kernel))[0]
+        approx = u[0] @ v[0].T
+        err = np.linalg.norm(a - approx)
+        # SVD lower bound: best rank-k error
+        svals = np.linalg.svd(a, compute_uv=False)
+        best = np.linalg.norm(svals[k:])
+        # ACA with partial pivoting is near-optimal on asymptotically smooth
+        # kernels; allow a generous factor plus an absolute floor.
+        assert err <= max(200.0 * best, 1e-10), (err, best)

@@ -1,0 +1,60 @@
+//! Ablation (paper §7 future work): multi-device work distribution.
+//! Sweeps the simulated device count; reports the LPT load-balance
+//! quality (max/mean modeled cost) and the projected multi-device
+//! speedup (total time / max shard time), with correctness checked
+//! against the single-device product.
+
+use hmx::config::HmxConfig;
+use hmx::coordinator::distributed::{imbalance, partition_lpt, sharded_matvec};
+use hmx::coordinator::NativeEngine;
+use hmx::metrics::CsvTable;
+use hmx::prelude::*;
+use hmx::util::prng::Xoshiro256;
+
+fn main() {
+    let full = std::env::var("HMX_BENCH_FULL").is_ok();
+    let n = if full { 1 << 17 } else { 1 << 14 };
+    let cfg = HmxConfig { n, dim: 2, k: 16, c_leaf: 256, ..HmxConfig::default() };
+    let table = CsvTable::new(
+        "abl_distributed",
+        &["devices", "n", "imbalance", "sum_device_s", "max_device_s", "projected_speedup"],
+    );
+    println!("# ablation: LPT multi-device sharding (N={n}, k=16, simulated devices)");
+    let mut pts = PointSet::halton(n, 2);
+    hmx::morton::morton_sort(&mut pts);
+    let tree = hmx::tree::block::build_block_tree(&pts, cfg.eta, cfg.c_leaf);
+    let engine = NativeEngine;
+    let x = Xoshiro256::seed(2).vector(n);
+    let mut reference: Option<Vec<f64>> = None;
+    for devices in [1usize, 2, 4, 8, 16] {
+        let shards = partition_lpt(&tree.dense, &tree.admissible, cfg.k, devices);
+        let out = sharded_matvec(
+            &pts,
+            cfg.kernel(),
+            &cfg,
+            &tree.dense,
+            &tree.admissible,
+            &shards,
+            &engine,
+            &x,
+        );
+        match &reference {
+            None => reference = Some(out.y.clone()),
+            Some(r) => {
+                let err = hmx::util::rel_err(&out.y, r);
+                assert!(err < 1e-12, "sharding changed the product: {err}");
+            }
+        }
+        let sum: f64 = out.device_seconds.iter().sum();
+        let max = out.device_seconds.iter().cloned().fold(0.0, f64::max);
+        table.row(&[
+            devices.to_string(),
+            n.to_string(),
+            format!("{:.4}", imbalance(&shards)),
+            format!("{sum:.4}"),
+            format!("{max:.4}"),
+            format!("{:.2}", sum / max.max(1e-12)),
+        ]);
+    }
+    println!("# expectation: imbalance stays near 1.0 (LPT), projected speedup ~= devices");
+}

@@ -1,0 +1,53 @@
+//! Ablation: ACA factor recompression (Bebendorf–Kunis, paper ref. [5]).
+//! Sweeps the relative truncation ε and reports rank/storage compression
+//! vs the added mat-vec error — the trade-off that extends P-mode to
+//! larger problems under device-memory limits (§5.4/§6.1).
+
+use hmx::aca::batched::{batched_aca_factors, AcaBatch};
+use hmx::aca::recompress::{recompress, Truncation};
+use hmx::metrics::CsvTable;
+use hmx::prelude::*;
+use hmx::util::atomic::AtomicF64Vec;
+use hmx::util::prng::Xoshiro256;
+
+fn main() {
+    let full = std::env::var("HMX_BENCH_FULL").is_ok();
+    let n = if full { 1 << 16 } else { 1 << 13 };
+    let k = 16;
+    let table = CsvTable::new(
+        "abl_recompress",
+        &["eps", "n", "rank_before", "rank_after", "storage_ratio", "added_rel_err"],
+    );
+    println!("# ablation: ACA recompression trade-off (N={n}, k={k})");
+    let mut pts = PointSet::halton(n, 2);
+    hmx::morton::morton_sort(&mut pts);
+    let tree = hmx::tree::block::build_block_tree(&pts, 1.5, 128);
+    let blocks = tree.admissible;
+    let kern = Kernel::gaussian();
+    let x = Xoshiro256::seed(1).vector(n);
+    // reference apply with untruncated factors
+    let reference = {
+        let f = batched_aca_factors(&AcaBatch { points: &pts, kernel: kern, blocks: &blocks, k });
+        let z = AtomicF64Vec::zeros(n);
+        f.apply(&blocks, &x, &z);
+        z.into_vec()
+    };
+    for eps_pow in [14i32, 12, 10, 8, 6, 4, 2] {
+        let eps = 10f64.powi(-eps_pow);
+        let mut f =
+            batched_aca_factors(&AcaBatch { points: &pts, kernel: kern, blocks: &blocks, k });
+        let stats = recompress(&mut f, &blocks, Truncation::Relative(eps));
+        let z = AtomicF64Vec::zeros(n);
+        f.apply(&blocks, &x, &z);
+        let err = hmx::util::rel_err(&z.into_vec(), &reference);
+        table.row(&[
+            format!("1e-{eps_pow}"),
+            n.to_string(),
+            stats.rank_before.to_string(),
+            stats.rank_after.to_string(),
+            format!("{:.3}", stats.compression()),
+            format!("{err:.3e}"),
+        ]);
+    }
+    println!("# expectation: storage shrinks monotonically with eps; error tracks eps");
+}

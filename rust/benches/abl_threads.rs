@@ -1,0 +1,68 @@
+//! Ablation: scaling of the many-core engine with the number of worker
+//! threads ("device width"). The worker pool is fixed at process start
+//! (HMX_THREADS), so this bench re-executes itself as a child process per
+//! thread count.
+//!
+//! The paper's premise is that the algorithms expose enough parallelism
+//! to fill a many-core device; on CPU this shows up as near-linear
+//! scaling of setup and mat-vec until memory bandwidth saturates.
+
+use hmx::config::HmxConfig;
+use hmx::metrics::{measure, CsvTable};
+use hmx::prelude::*;
+use hmx::util::prng::Xoshiro256;
+
+fn child(n: usize) {
+    let cfg = HmxConfig { n, dim: 2, k: 16, c_leaf: 512, ..HmxConfig::default() };
+    let pts = PointSet::halton(n, 2);
+    let setup = measure(3, || HMatrix::build(pts.clone(), &cfg).unwrap());
+    let h = HMatrix::build(pts, &cfg).unwrap();
+    let mut rng = Xoshiro256::seed(3);
+    let mv = measure(5, || {
+        let x = rng.vector(n);
+        h.matvec(&x).unwrap()
+    });
+    // parsed by the parent
+    println!("CHILD {:.6} {:.6}", setup.secs(), mv.secs());
+}
+
+fn main() {
+    let full = std::env::var("HMX_BENCH_FULL").is_ok();
+    let n = if full { 1 << 18 } else { 1 << 15 };
+    if std::env::var("HMX_ABL_CHILD").is_ok() {
+        child(n);
+        return;
+    }
+    let exe = std::env::current_exe().unwrap();
+    let max_threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(8);
+    let table = CsvTable::new(
+        "abl_threads",
+        &["threads", "n", "setup_s", "matvec_s", "setup_speedup", "matvec_speedup"],
+    );
+    println!("# ablation: thread scaling of the many-core engine (N={n})");
+    let mut base: Option<(f64, f64)> = None;
+    let mut t = 1usize;
+    while t <= max_threads {
+        let out = std::process::Command::new(&exe)
+            .env("HMX_ABL_CHILD", "1")
+            .env("HMX_THREADS", t.to_string())
+            .output()
+            .expect("child run failed");
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        let line = stdout.lines().find(|l| l.starts_with("CHILD")).expect("no CHILD line");
+        let mut it = line.split_whitespace().skip(1);
+        let setup: f64 = it.next().unwrap().parse().unwrap();
+        let mv: f64 = it.next().unwrap().parse().unwrap();
+        let (s0, m0) = *base.get_or_insert((setup, mv));
+        table.row(&[
+            t.to_string(),
+            n.to_string(),
+            format!("{setup:.5}"),
+            format!("{mv:.5}"),
+            format!("{:.2}", s0 / setup),
+            format!("{:.2}", m0 / mv),
+        ]);
+        t *= 2;
+    }
+    println!("# expectation: near-linear speedup of both phases until bandwidth-bound");
+}

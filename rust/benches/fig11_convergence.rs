@@ -1,0 +1,45 @@
+//! Fig 11: exponential convergence of the H-mat-vec in the ACA rank k,
+//! for Gaussian and Matérn kernels, d = 2 (left) and d = 3 (right).
+//!
+//! Paper setup: N = 32768, C_leaf = 256, η = 1.5, k = 1..32; errors fall
+//! from ~1e-1 to ~1e-12 roughly geometrically. Default bench size is
+//! N = 4096 (the dense reference is O(N²)); set HMX_BENCH_FULL=1 for the
+//! paper's N.
+
+use hmx::config::{HmxConfig, KernelKind};
+use hmx::metrics::CsvTable;
+use hmx::prelude::*;
+use hmx::util::prng::Xoshiro256;
+
+fn main() {
+    let full = std::env::var("HMX_BENCH_FULL").is_ok();
+    let n = if full { 32768 } else { 4096 };
+    let table = CsvTable::new("fig11", &["kernel", "d", "n", "k", "rel_err"]);
+    println!("# Fig 11: H-matvec convergence in ACA rank (N={n}, C_leaf=256, eta=1.5)");
+    for dim in [2usize, 3] {
+        for kernel in [KernelKind::Gaussian, KernelKind::Matern] {
+            let pts = PointSet::halton(n, dim);
+            let base = HmxConfig { n, dim, kernel, c_leaf: 256, ..HmxConfig::default() };
+            let exact = DenseOperator::new(pts.clone(), base.kernel());
+            let x = Xoshiro256::seed(1).vector(n);
+            let want = exact.matvec(&x);
+            let mut prev = f64::INFINITY;
+            for k in [1usize, 2, 4, 8, 16, 24, 32] {
+                let cfg = HmxConfig { k, ..base.clone() };
+                let h = HMatrix::build(pts.clone(), &cfg).unwrap();
+                let err = hmx::util::rel_err(&h.matvec(&x).unwrap(), &want);
+                table.row(&[
+                    kernel.name().into(),
+                    dim.to_string(),
+                    n.to_string(),
+                    k.to_string(),
+                    format!("{err:.6e}"),
+                ]);
+                // sanity: decaying (the paper's headline convergence claim)
+                assert!(err <= prev * 2.0 + 1e-12, "convergence broke: {err} after {prev}");
+                prev = err;
+            }
+        }
+    }
+    println!("# expectation (paper): geometric decay in k for all four series");
+}

@@ -1,0 +1,57 @@
+//! Fig 12: runtime complexity of (left) the spatial data structure setup
+//! (Morton codes + Z-order sort) and (right) the block cluster tree
+//! construction + traversal, for growing N, d = 2 and 3.
+//!
+//! Paper: both phases are O(N log N) after a pre-asymptotic range; at
+//! N = 2^26 the spatial setup is < 0.5 s and the tree < 3 s on a P100.
+//! We reproduce the *slope* (t / (N log N) flattens); absolute times are
+//! CPU-testbed numbers.
+
+use hmx::config::HmxConfig;
+use hmx::metrics::{measure, CsvTable};
+use hmx::prelude::*;
+
+fn main() {
+    let full = std::env::var("HMX_BENCH_FULL").is_ok();
+    let max_pow = if full { 22 } else { 18 };
+    let trials = if full { 3 } else { 5 };
+    let table = CsvTable::new(
+        "fig12",
+        &["phase", "d", "n", "seconds", "sec_per_nlogn_x1e9"],
+    );
+    println!("# Fig 12: spatial data structure + block tree complexity (eta=1.5, C_leaf=2048)");
+    for dim in [2usize, 3] {
+        for pow in 12..=max_pow {
+            let n = 1usize << pow;
+            let nlogn = n as f64 * (n as f64).log2();
+            // left: morton codes + sort
+            let m = measure(trials, || {
+                let mut pts = PointSet::halton(n, dim);
+                hmx::morton::morton_sort(&mut pts);
+                pts
+            });
+            table.row(&[
+                "spatial".into(),
+                dim.to_string(),
+                n.to_string(),
+                format!("{:.6}", m.secs()),
+                format!("{:.3}", m.secs() / nlogn * 1e9),
+            ]);
+            // right: block cluster tree construction + traversal
+            let mut pts = PointSet::halton(n, dim);
+            hmx::morton::morton_sort(&mut pts);
+            let cfg = HmxConfig { n, dim, c_leaf: 2048, ..HmxConfig::default() };
+            let m = measure(trials, || {
+                hmx::tree::block::build_block_tree(&pts, cfg.eta, cfg.c_leaf)
+            });
+            table.row(&[
+                "blocktree".into(),
+                dim.to_string(),
+                n.to_string(),
+                format!("{:.6}", m.secs()),
+                format!("{:.3}", m.secs() / nlogn * 1e9),
+            ]);
+        }
+    }
+    println!("# expectation (paper): sec_per_nlogn flattens for large N (O(N log N) slope)");
+}

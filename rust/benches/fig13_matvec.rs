@@ -1,0 +1,49 @@
+//! Fig 13: H-mat-vec runtime for growing N, d = 2 (left) and d = 3
+//! (right), with (P) and without (NP) pre-computed ACA factors.
+//!
+//! Paper: O(N log N) in both dimensions; P is consistently faster than
+//! NP (≈ +60% at N = 2^19, Fig 17 discussion). Paper parameters: k = 16,
+//! C_leaf = 2048, bs_dense = 2^27, bs_ACA = 2^25.
+
+use hmx::config::HmxConfig;
+use hmx::metrics::{measure, CsvTable};
+use hmx::prelude::*;
+use hmx::util::prng::Xoshiro256;
+
+fn main() {
+    let full = std::env::var("HMX_BENCH_FULL").is_ok();
+    let max_pow = if full { 20 } else { 16 };
+    let trials = 5;
+    let table = CsvTable::new("fig13", &["d", "mode", "n", "seconds", "sec_per_nlogn_x1e9"]);
+    println!("# Fig 13: H-matvec runtime vs N (k=16, C_leaf=2048 scaled down to 512 on CPU)");
+    for dim in [2usize, 3] {
+        for pow in 12..=max_pow {
+            let n = 1usize << pow;
+            let nlogn = n as f64 * (n as f64).log2();
+            for precompute in [false, true] {
+                let cfg = HmxConfig {
+                    n,
+                    dim,
+                    k: 16,
+                    c_leaf: 512,
+                    precompute,
+                    ..HmxConfig::default()
+                };
+                let h = HMatrix::build(PointSet::halton(n, dim), &cfg).unwrap();
+                let mut rng = Xoshiro256::seed(7);
+                let m = measure(trials, || {
+                    let x = rng.vector(n);
+                    h.matvec(&x).unwrap()
+                });
+                table.row(&[
+                    dim.to_string(),
+                    if precompute { "P" } else { "NP" }.into(),
+                    n.to_string(),
+                    format!("{:.6}", m.secs()),
+                    format!("{:.3}", m.secs() / nlogn * 1e9),
+                ]);
+            }
+        }
+    }
+    println!("# expectation (paper): O(N log N) slope; P faster than NP; d=3 slightly slower");
+}

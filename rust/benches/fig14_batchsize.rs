@@ -1,0 +1,61 @@
+//! Fig 14: influence of the batching sizes bs_dense (left) and bs_ACA
+//! (right) on the batched dense mat-vec / batched ACA runtimes, for
+//! C_leaf ∈ {1024, 2048}.
+//!
+//! Paper: N = 2^20, k = 16, η = 1.5, d = 2. Increasing the batch size
+//! improves performance up to an optimum (better occupancy), then
+//! degrades slightly. Larger C_leaf shifts cost from ACA to dense.
+
+use hmx::config::HmxConfig;
+use hmx::metrics::{measure, CsvTable, RECORDER};
+use hmx::prelude::*;
+use hmx::util::prng::Xoshiro256;
+
+fn main() {
+    let full = std::env::var("HMX_BENCH_FULL").is_ok();
+    let n = if full { 1 << 20 } else { 1 << 16 };
+    let table = CsvTable::new(
+        "fig14",
+        &["sweep", "c_leaf", "bs_log2", "dense_s", "aca_s", "total_s"],
+    );
+    println!("# Fig 14: batching size sweep (N={n}, k=16, d=2)");
+    let c_leafs = if full { vec![1024usize, 2048] } else { vec![256usize, 512] };
+    for &c_leaf in &c_leafs {
+        // sweep bs_dense with bs_aca fixed, then vice versa
+        for (sweep, bs_list) in [
+            ("dense", (10..=26).step_by(2).collect::<Vec<_>>()),
+            ("aca", (8..=24).step_by(2).collect::<Vec<_>>()),
+        ] {
+            for &bs_pow in &bs_list {
+                let cfg = HmxConfig {
+                    n,
+                    dim: 2,
+                    k: 16,
+                    c_leaf,
+                    bs_dense: if sweep == "dense" { 1 << bs_pow } else { 1 << 22 },
+                    bs_aca: if sweep == "aca" { 1 << bs_pow } else { 1 << 20 },
+                    ..HmxConfig::default()
+                };
+                let h = HMatrix::build(PointSet::halton(n, 2), &cfg).unwrap();
+                let mut rng = Xoshiro256::seed(3);
+                RECORDER.reset();
+                let m = measure(3, || {
+                    let x = rng.vector(n);
+                    h.matvec(&x).unwrap()
+                });
+                let dense_s = RECORDER.total("matvec.dense").as_secs_f64() / 3.0;
+                let aca_s = RECORDER.total("matvec.aca").as_secs_f64() / 3.0;
+                table.row(&[
+                    sweep.into(),
+                    c_leaf.to_string(),
+                    bs_pow.to_string(),
+                    format!("{dense_s:.6}"),
+                    format!("{aca_s:.6}"),
+                    format!("{:.6}", m.secs()),
+                ]);
+            }
+        }
+    }
+    println!("# expectation (paper): runtime improves with batch size to an optimum, then");
+    println!("# degrades slightly; larger C_leaf raises dense cost and lowers ACA cost");
+}

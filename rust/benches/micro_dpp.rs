@@ -1,0 +1,47 @@
+//! Microbenchmarks of the dpp substrate (the Thrust-role primitives):
+//! scan, radix sort, reduce_by_key, Morton codes, output queue. These are
+//! the building blocks whose throughput bounds every phase in Figs 12–17.
+
+use hmx::dpp;
+use hmx::metrics::{measure, CsvTable};
+use hmx::util::prng::Xoshiro256;
+
+fn main() {
+    let full = std::env::var("HMX_BENCH_FULL").is_ok();
+    let n = if full { 1 << 24 } else { 1 << 20 };
+    let trials = 5;
+    let table = CsvTable::new("micro_dpp", &["primitive", "n", "seconds", "melems_per_s"]);
+    let mut rng = Xoshiro256::seed(1);
+
+    let data_u64: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+    let m = measure(trials, || dpp::exclusive_scan(&data_u64));
+    table.row(&["exclusive_scan".into(), n.to_string(), format!("{:.5}", m.secs()), format!("{:.1}", n as f64 / m.secs() / 1e6)]);
+
+    let m = measure(trials, || {
+        let mut keys = data_u64.clone();
+        dpp::sort_u64(&mut keys);
+        keys
+    });
+    table.row(&["radix_sort".into(), n.to_string(), format!("{:.5}", m.secs()), format!("{:.1}", n as f64 / m.secs() / 1e6)]);
+
+    // reduce_by_key with segments of ~64 (bbox-table-like workload)
+    let keys: Vec<u32> = (0..n).map(|i| (i / 64) as u32).collect();
+    let vals: Vec<f64> = (0..n).map(|i| i as f64).collect();
+    let m = measure(trials, || dpp::reduce_by_key(&keys, &vals, f64::NEG_INFINITY, f64::max));
+    table.row(&["reduce_by_key".into(), n.to_string(), format!("{:.5}", m.secs()), format!("{:.1}", n as f64 / m.secs() / 1e6)]);
+
+    let pts = hmx::geometry::points::PointSet::halton(n.min(1 << 22), 3);
+    let m = measure(trials, || hmx::morton::compute_morton_codes(&pts));
+    table.row(&["morton_codes_3d".into(), pts.len().to_string(), format!("{:.5}", m.secs()), format!("{:.1}", pts.len() as f64 / m.secs() / 1e6)]);
+
+    let m = measure(trials, || {
+        let q = dpp::OutputQueue::with_capacity(n);
+        dpp::launch(n, |tid| {
+            if tid % 3 == 0 {
+                q.put(tid as u64);
+            }
+        });
+        q.into_vec()
+    });
+    table.row(&["output_queue".into(), n.to_string(), format!("{:.5}", m.secs()), format!("{:.1}", n as f64 / m.secs() / 1e6)]);
+}

@@ -1,0 +1,238 @@
+//! Small dense linear algebra substrate for low-rank recompression:
+//! Householder QR (tall-skinny) and a one-sided Jacobi SVD for the tiny
+//! k×k core matrices. Self-contained (no BLAS/LAPACK is available in
+//! this offline environment), sized for k ≤ ~64.
+
+/// Compact QR of a column-major m×n matrix (m ≥ n): returns (Q, R) with
+/// Q m×n column-major orthonormal, R n×n column-major upper triangular.
+pub fn qr_thin(a: &[f64], m: usize, n: usize) -> (Vec<f64>, Vec<f64>) {
+    assert_eq!(a.len(), m * n);
+    assert!(m >= n);
+    let mut work = a.to_vec(); // column-major
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n); // householder vectors
+    for j in 0..n {
+        // householder on work[j.., j]
+        let col = &work[j * m..(j + 1) * m];
+        let norm_x: f64 = col[j..].iter().map(|x| x * x).sum::<f64>().sqrt();
+        let mut v = vec![0.0; m];
+        v[j..].copy_from_slice(&col[j..]);
+        if norm_x > 0.0 {
+            let alpha = if col[j] >= 0.0 { -norm_x } else { norm_x };
+            v[j] -= alpha;
+        }
+        let vnorm2: f64 = v[j..].iter().map(|x| x * x).sum();
+        if vnorm2 > 1e-300 {
+            // apply H = I - 2 v vᵀ / |v|² to remaining columns
+            for jj in j..n {
+                let col = &mut work[jj * m..(jj + 1) * m];
+                let dot: f64 = v[j..].iter().zip(&col[j..]).map(|(a, b)| a * b).sum();
+                let s = 2.0 * dot / vnorm2;
+                for i in j..m {
+                    col[i] -= s * v[i];
+                }
+            }
+        }
+        vs.push(v);
+    }
+    // R = upper triangle of work
+    let mut r = vec![0.0; n * n];
+    for j in 0..n {
+        for i in 0..=j {
+            r[j * n + i] = work[j * m + i];
+        }
+    }
+    // Q = H_0 H_1 ... H_{n-1} * [I; 0]
+    let mut q = vec![0.0; m * n];
+    for j in 0..n {
+        q[j * m + j] = 1.0;
+    }
+    for j in (0..n).rev() {
+        let v = &vs[j];
+        let vnorm2: f64 = v[j..].iter().map(|x| x * x).sum();
+        if vnorm2 <= 1e-300 {
+            continue;
+        }
+        for jj in 0..n {
+            let col = &mut q[jj * m..(jj + 1) * m];
+            let dot: f64 = v[j..].iter().zip(&col[j..]).map(|(a, b)| a * b).sum();
+            let s = 2.0 * dot / vnorm2;
+            for i in j..m {
+                col[i] -= s * v[i];
+            }
+        }
+    }
+    (q, r)
+}
+
+/// One-sided Jacobi SVD of a column-major n×n matrix: A = U diag(s) Vᵀ.
+/// Returns (u, s, v) with u, v column-major n×n, s descending.
+pub fn svd_jacobi(a: &[f64], n: usize) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    assert_eq!(a.len(), n * n);
+    let mut u = a.to_vec(); // columns rotate toward left singular vectors * s
+    let mut v = vec![0.0; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // gram entries over columns p, q
+                let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
+                for i in 0..n {
+                    let x = u[p * n + i];
+                    let y = u[q * n + i];
+                    app += x * x;
+                    aqq += y * y;
+                    apq += x * y;
+                }
+                off = off.max(apq.abs() / (app * aqq).sqrt().max(1e-300));
+                if apq.abs() <= 1e-15 * (app * aqq).sqrt() {
+                    continue;
+                }
+                // jacobi rotation zeroing the (p,q) gram entry
+                let zeta = (aqq - app) / (2.0 * apq);
+                let t = zeta.signum() / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..n {
+                    let x = u[p * n + i];
+                    let y = u[q * n + i];
+                    u[p * n + i] = c * x - s * y;
+                    u[q * n + i] = s * x + c * y;
+                }
+                for i in 0..n {
+                    let x = v[p * n + i];
+                    let y = v[q * n + i];
+                    v[p * n + i] = c * x - s * y;
+                    v[q * n + i] = s * x + c * y;
+                }
+            }
+        }
+        if off < 1e-14 {
+            break;
+        }
+    }
+    // singular values = column norms; normalize u columns
+    let mut s = vec![0.0; n];
+    for j in 0..n {
+        let norm: f64 = u[j * n..(j + 1) * n].iter().map(|x| x * x).sum::<f64>().sqrt();
+        s[j] = norm;
+        if norm > 1e-300 {
+            for i in 0..n {
+                u[j * n + i] /= norm;
+            }
+        }
+    }
+    // sort descending
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| s[b].partial_cmp(&s[a]).unwrap());
+    let mut us = vec![0.0; n * n];
+    let mut vs = vec![0.0; n * n];
+    let mut ss = vec![0.0; n];
+    for (dst, &src) in order.iter().enumerate() {
+        ss[dst] = s[src];
+        us[dst * n..(dst + 1) * n].copy_from_slice(&u[src * n..(src + 1) * n]);
+        vs[dst * n..(dst + 1) * n].copy_from_slice(&v[src * n..(src + 1) * n]);
+    }
+    (us, ss, vs)
+}
+
+/// Column-major matmul helper: C(m×n) = A(m×k) B(k×n).
+pub fn matmul_cm(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+    let mut c = vec![0.0; m * n];
+    for j in 0..n {
+        for l in 0..k {
+            let blj = b[j * k + l];
+            if blj == 0.0 {
+                continue;
+            }
+            let acol = &a[l * m..(l + 1) * m];
+            let ccol = &mut c[j * m..(j + 1) * m];
+            for i in 0..m {
+                ccol[i] += acol[i] * blj;
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+
+    fn rand_cm(m: usize, n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Xoshiro256::seed(seed);
+        (0..m * n).map(|_| rng.range_f64(-1.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn qr_reconstructs_and_q_orthonormal() {
+        for (m, n) in [(8usize, 8usize), (20, 5), (32, 16)] {
+            let a = rand_cm(m, n, 1);
+            let (q, r) = qr_thin(&a, m, n);
+            // A = Q R
+            let qr = matmul_cm(&q, &r, m, n, n);
+            for (x, y) in a.iter().zip(&qr) {
+                assert!((x - y).abs() < 1e-12, "QR reconstruction m={m} n={n}");
+            }
+            // QᵀQ = I
+            for j1 in 0..n {
+                for j2 in 0..n {
+                    let dot: f64 = (0..m).map(|i| q[j1 * m + i] * q[j2 * m + i]).sum();
+                    let want = (j1 == j2) as usize as f64;
+                    assert!((dot - want).abs() < 1e-12, "orthonormality");
+                }
+            }
+            // R upper triangular
+            for j in 0..n {
+                for i in (j + 1)..n {
+                    assert_eq!(r[j * n + i], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn svd_reconstructs_and_orders() {
+        for n in [2usize, 5, 12] {
+            let a = rand_cm(n, n, 7);
+            let (u, s, v) = svd_jacobi(&a, n);
+            assert!(s.windows(2).all(|w| w[0] >= w[1] - 1e-12), "descending");
+            // A = U diag(s) Vᵀ
+            for j in 0..n {
+                for i in 0..n {
+                    let mut acc = 0.0;
+                    for l in 0..n {
+                        acc += u[l * n + i] * s[l] * v[l * n + j];
+                    }
+                    assert!((acc - a[j * n + i]).abs() < 1e-10, "n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn svd_of_diagonal_is_exact() {
+        let n = 4;
+        let mut a = vec![0.0; n * n];
+        for (i, val) in [3.0, 1.0, 4.0, 1.5].iter().enumerate() {
+            a[i * n + i] = *val;
+        }
+        let (_, s, _) = svd_jacobi(&a, n);
+        assert!((s[0] - 4.0).abs() < 1e-12);
+        assert!((s[3] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = rand_cm(6, 4, 3);
+        let mut eye = vec![0.0; 16];
+        for i in 0..4 {
+            eye[i * 4 + i] = 1.0;
+        }
+        assert_eq!(matmul_cm(&a, &eye, 6, 4, 4), a);
+    }
+}

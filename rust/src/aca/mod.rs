@@ -1,0 +1,24 @@
+//! Adaptive cross approximation (§2.4, Alg 2; batched form §5.4.1).
+//!
+//! * [`seq`] — the classical sequential ACA with partial pivoting, both the
+//!   ε-stopping-criterion variant (Alg 2) and the fixed-rank variant the
+//!   paper's practical implementation uses.
+//! * [`batched`] — the many-core batched ACA: all blocks of a batch advance
+//!   rank-by-rank together through flat (batched) arrays with segmented
+//!   pivot reductions, exactly the §5.4.1 storage layout (Fig 10).
+
+//! * [`recompress`] — QR+SVD rank recompression of computed factors
+//!   (Bebendorf & Kunis, the paper's ref. [5]), shrinking the P-mode
+//!   factor storage.
+//! * [`linalg`] — the self-contained dense QR / Jacobi-SVD substrate the
+//!   recompression needs.
+
+pub mod batched;
+pub mod linalg;
+pub mod recompress;
+pub mod seq;
+pub mod stepwise;
+
+pub use batched::{batched_aca_factors, batched_aca_matvec, AcaBatch};
+pub use recompress::{recompress, RecompressStats, Truncation};
+pub use seq::{aca_fixed_rank, aca_with_tolerance, AcaResult};

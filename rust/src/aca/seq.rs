@@ -1,0 +1,325 @@
+//! Sequential adaptive cross approximation with partial pivoting
+//! (Algorithm 2, following Bebendorf & Rjasanow / Bebendorf & Kunis).
+//!
+//! Both factors are stored column-major by rank: `u[r*m + i]`, `v[r*n + j]`
+//! so `A ≈ Σ_r u_r v_rᵀ`. The normalization convention matches Alg 2:
+//! `u_r` is scaled by the inverse of its ∞-norm pivot entry, `v_r` carries
+//! the magnitude.
+
+/// Result of an ACA run.
+pub struct AcaResult {
+    /// m × rank, rank-major (`u[r*m + i]`).
+    pub u: Vec<f64>,
+    /// n × rank, rank-major (`v[r*n + j]`).
+    pub v: Vec<f64>,
+    pub rank: usize,
+    pub m: usize,
+    pub n: usize,
+}
+
+impl AcaResult {
+    /// y += (U Vᵀ) x  (y has length m, x length n).
+    pub fn apply(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.m);
+        for r in 0..self.rank {
+            let v_r = &self.v[r * self.n..(r + 1) * self.n];
+            let u_r = &self.u[r * self.m..(r + 1) * self.m];
+            let t: f64 = v_r.iter().zip(x).map(|(a, b)| a * b).sum();
+            for (yi, ui) in y.iter_mut().zip(u_r) {
+                *yi += ui * t;
+            }
+        }
+    }
+
+    /// Materialize the dense m×n approximation (tests / small blocks only).
+    pub fn dense(&self) -> Vec<f64> {
+        let mut a = vec![0.0; self.m * self.n];
+        for r in 0..self.rank {
+            for i in 0..self.m {
+                let u = self.u[r * self.m + i];
+                for j in 0..self.n {
+                    a[i * self.n + j] += u * self.v[r * self.n + j];
+                }
+            }
+        }
+        a
+    }
+}
+
+/// Fixed-rank ACA (the paper's practical variant: impose k_max only).
+/// `eval(i, j)` returns the block entry A[i,j]. Returns early if the
+/// residual vanishes (block is numerically low-rank already).
+pub fn aca_fixed_rank(eval: &dyn Fn(usize, usize) -> f64, m: usize, n: usize, k: usize) -> AcaResult {
+    aca_impl(eval, m, n, k, None)
+}
+
+/// ACA with the Alg 2 stopping criterion:
+/// ‖u_r‖₂‖v_r‖₂ ≤ ε(1−η)/(1+ε) · ‖Σ_l u_l v_lᵀ‖_F, up to rank `k_max`.
+pub fn aca_with_tolerance(
+    eval: &dyn Fn(usize, usize) -> f64,
+    m: usize,
+    n: usize,
+    k_max: usize,
+    eps: f64,
+    eta: f64,
+) -> AcaResult {
+    aca_impl(eval, m, n, k_max, Some((eps, eta)))
+}
+
+fn aca_impl(
+    eval: &dyn Fn(usize, usize) -> f64,
+    m: usize,
+    n: usize,
+    k: usize,
+    tol: Option<(f64, f64)>,
+) -> AcaResult {
+    let k = k.min(m).min(n);
+    let mut u = Vec::with_capacity(k * m);
+    let mut v = Vec::with_capacity(k * n);
+    let mut used_rows = vec![false; m];
+    let mut used_cols = vec![false; n];
+    // ‖S_r‖²_F updated incrementally:
+    // ‖S_r‖² = ‖S_{r−1}‖² + 2 Σ_{l<r} (u_l·u_r)(v_l·v_r) + ‖u_r‖²‖v_r‖².
+    let mut frob2 = 0.0f64;
+    let mut rank = 0usize;
+    let mut j_cur = 0usize; // first column pivot
+    // scale of the first pivot: residuals below ~machine-eps relative to it
+    // mean the block is numerically exhausted (early rank termination)
+    let mut pivot_scale = 0.0f64;
+
+    for r in 0..k {
+        // residual column: û = A[:, j] − Σ_l u_l v_l[j]
+        let mut u_hat = vec![0.0; m];
+        for (i, slot) in u_hat.iter_mut().enumerate() {
+            *slot = eval(i, j_cur);
+        }
+        for l in 0..r {
+            let vl_j = v[l * n + j_cur];
+            for i in 0..m {
+                u_hat[i] -= u[l * m + i] * vl_j;
+            }
+        }
+        // row pivot: max |û_i| over unused rows
+        let mut i_cur = usize::MAX;
+        let mut best = 0.0f64;
+        for (i, &val) in u_hat.iter().enumerate() {
+            if !used_rows[i] && val.abs() > best {
+                best = val.abs();
+                i_cur = i;
+            }
+        }
+        let exhausted = (pivot_scale * 1e-13).max(1e-300);
+        if i_cur == usize::MAX || best <= exhausted {
+            // The residual of *this* column is (numerically) zero — which
+            // does not mean the block is exhausted (duplicate points give
+            // exactly-duplicated columns). Retry with every remaining
+            // unused column (the "problem-dependent j_r choice" of Alg 2)
+            // until one has a usable pivot; only then is the block done.
+            used_cols[j_cur] = true;
+            let mut found = false;
+            'cols: for j in 0..n {
+                if used_cols[j] {
+                    continue;
+                }
+                let mut retry = vec![0.0; m];
+                for (i, slot) in retry.iter_mut().enumerate() {
+                    *slot = eval(i, j);
+                }
+                for l in 0..r {
+                    let vl_j = v[l * n + j];
+                    for i in 0..m {
+                        retry[i] -= u[l * m + i] * vl_j;
+                    }
+                }
+                let mut best2 = 0.0;
+                let mut i2 = usize::MAX;
+                for (i, &val) in retry.iter().enumerate() {
+                    if !used_rows[i] && val.abs() > best2 {
+                        best2 = val.abs();
+                        i2 = i;
+                    }
+                }
+                if i2 != usize::MAX && best2 > exhausted {
+                    j_cur = j;
+                    i_cur = i2;
+                    u_hat = retry;
+                    found = true;
+                    break 'cols;
+                }
+                used_cols[j] = true; // provably zero residual column
+            }
+            if !found {
+                break;
+            }
+        }
+        pivot_scale = pivot_scale.max(u_hat[i_cur].abs());
+        used_rows[i_cur] = true;
+        used_cols[j_cur] = true;
+        // u_r = û / û[i_r]
+        let pivot = u_hat[i_cur];
+        let u_r: Vec<f64> = u_hat.iter().map(|&x| x / pivot).collect();
+        // v_r = A[i_r, :] − Σ_l u_l[i_r] v_l
+        let mut v_r = vec![0.0; n];
+        for (j, slot) in v_r.iter_mut().enumerate() {
+            *slot = eval(i_cur, j);
+        }
+        for l in 0..r {
+            let ul_i = u[l * m + i_cur];
+            for j in 0..n {
+                v_r[j] -= ul_i * v[l * n + j];
+            }
+        }
+        // bookkeeping for the stopping criterion
+        let u_norm2: f64 = u_r.iter().map(|x| x * x).sum();
+        let v_norm2: f64 = v_r.iter().map(|x| x * x).sum();
+        let mut cross = 0.0;
+        for l in 0..r {
+            let uu: f64 = (0..m).map(|i| u[l * m + i] * u_r[i]).sum();
+            let vv: f64 = (0..n).map(|j| v[l * n + j] * v_r[j]).sum();
+            cross += uu * vv;
+        }
+        frob2 += 2.0 * cross + u_norm2 * v_norm2;
+        u.extend_from_slice(&u_r);
+        v.extend_from_slice(&v_r);
+        rank = r + 1;
+        if let Some((eps, eta)) = tol {
+            let thresh = eps * (1.0 - eta) / (1.0 + eps) * frob2.max(0.0).sqrt();
+            if (u_norm2 * v_norm2).sqrt() <= thresh {
+                break;
+            }
+        }
+        // next column pivot: max |v_r[j]| over unused columns
+        let mut best_v = -1.0;
+        let mut next_j = usize::MAX;
+        for (j, &val) in v_r.iter().enumerate() {
+            if !used_cols[j] && val.abs() > best_v {
+                best_v = val.abs();
+                next_j = j;
+            }
+        }
+        if next_j == usize::MAX {
+            break;
+        }
+        j_cur = next_j;
+    }
+    u.truncate(rank * m);
+    v.truncate(rank * n);
+    AcaResult { u, v, rank, m, n }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::kernel::Kernel;
+    use crate::geometry::points::PointSet;
+
+    fn frob_err(a: &[f64], b: &[f64]) -> f64 {
+        let num: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+        let den: f64 = b.iter().map(|x| x * x).sum();
+        (num / den.max(f64::MIN_POSITIVE)).sqrt()
+    }
+
+    /// ACA on an exactly rank-2 matrix recovers it exactly.
+    #[test]
+    fn exact_on_low_rank_matrix() {
+        let (m, n) = (20, 15);
+        let a: Vec<f64> = (0..m * n)
+            .map(|idx| {
+                let (i, j) = (idx / n, idx % n);
+                (i as f64) * (j as f64 + 1.0) + ((i * i) as f64) * (2.0 - j as f64)
+            })
+            .collect();
+        let eval = |i: usize, j: usize| a[i * n + j];
+        let r = aca_fixed_rank(&eval, m, n, 8);
+        assert!(r.rank <= 4, "rank blew up: {}", r.rank);
+        assert!(frob_err(&r.dense(), &a) < 1e-10);
+    }
+
+    /// Exponential error decay on a well-separated Gaussian kernel block
+    /// (the §6.4 convergence behaviour in miniature).
+    #[test]
+    fn exponential_convergence_on_separated_block() {
+        let m = 64;
+        // τ points in [0,0.3]^2, σ points in [0.7,1]^2 — well separated
+        let mut rows = Vec::new();
+        let tau = PointSet::halton(m, 2);
+        for i in 0..m {
+            rows.extend_from_slice(&[tau.coord(0, i) * 0.3, tau.coord(1, i) * 0.3]);
+        }
+        for i in 0..m {
+            rows.extend_from_slice(&[0.7 + tau.coord(0, i) * 0.3, 0.7 + tau.coord(1, i) * 0.3]);
+        }
+        let pts = PointSet::from_rows(&rows, 2);
+        let kern = Kernel::gaussian();
+        let eval = |i: usize, j: usize| kern.eval(&pts, i, &pts, m + j);
+        let dense: Vec<f64> =
+            (0..m * m).map(|idx| eval(idx / m, idx % m)).collect();
+        let mut errs = Vec::new();
+        for k in [1usize, 2, 4, 8] {
+            let r = aca_fixed_rank(&eval, m, m, k);
+            errs.push(frob_err(&r.dense(), &dense));
+        }
+        // strictly improving and eventually tiny (exponential-type decay)
+        assert!(errs[1] < errs[0] && errs[2] < errs[1] && errs[3] < errs[2]);
+        assert!(errs[3] < 1e-5, "errors: {errs:?}");
+        assert!(errs[3] < errs[0] * 1e-3, "decay too slow: {errs:?}");
+    }
+
+    #[test]
+    fn tolerance_variant_stops_early() {
+        let m = 48;
+        let pts_a = PointSet::halton(m, 2);
+        let mut rows = Vec::new();
+        for i in 0..m {
+            rows.extend_from_slice(&[pts_a.coord(0, i) * 0.2, pts_a.coord(1, i) * 0.2]);
+        }
+        for i in 0..m {
+            rows.extend_from_slice(&[0.8 + pts_a.coord(0, i) * 0.2, 0.8 + pts_a.coord(1, i) * 0.2]);
+        }
+        let pts = PointSet::from_rows(&rows, 2);
+        let kern = Kernel::gaussian();
+        let eval = |i: usize, j: usize| kern.eval(&pts, i, &pts, m + j);
+        let r = aca_with_tolerance(&eval, m, m, 32, 1e-6, 0.0);
+        assert!(r.rank < 32, "stopping criterion never fired (rank {})", r.rank);
+        let dense: Vec<f64> = (0..m * m).map(|idx| eval(idx / m, idx % m)).collect();
+        assert!(frob_err(&r.dense(), &dense) < 1e-5);
+    }
+
+    #[test]
+    fn apply_matches_dense_matvec() {
+        let (m, n) = (17, 23);
+        let a: Vec<f64> = (0..m * n).map(|i| ((i * 37 % 101) as f64) / 101.0).collect();
+        let eval = |i: usize, j: usize| a[i * n + j];
+        let r = aca_fixed_rank(&eval, m, n, n.min(m));
+        let x: Vec<f64> = (0..n).map(|j| (j as f64 * 0.37).sin()).collect();
+        let mut y = vec![0.0; m];
+        r.apply(&x, &mut y);
+        let approx = r.dense();
+        let mut want = vec![0.0; m];
+        for i in 0..m {
+            for j in 0..n {
+                want[i] += approx[i * n + j] * x[j];
+            }
+        }
+        for i in 0..m {
+            assert!((y[i] - want[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn rank_capped_by_dimensions() {
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // 2x3
+        let eval = |i: usize, j: usize| a[i * 3 + j];
+        let r = aca_fixed_rank(&eval, 2, 3, 100);
+        assert!(r.rank <= 2);
+    }
+
+    #[test]
+    fn zero_matrix_gives_rank_zero() {
+        let eval = |_: usize, _: usize| 0.0;
+        let r = aca_fixed_rank(&eval, 10, 10, 5);
+        assert_eq!(r.rank, 0);
+        assert!(r.dense().iter().all(|&x| x == 0.0));
+    }
+}

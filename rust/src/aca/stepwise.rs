@@ -1,0 +1,206 @@
+//! Unbatched ("stepwise") ACA and dense execution — the paper's Fig 15
+//! comparison mode.
+//!
+//! "The easiest way to consider a parallelization on many-core hardware
+//! would be to loop over all arrays b_i and to perform the necessary
+//! many-core parallel operations individually to each array" (§4.2).
+//! That is what this module does: for ONE block at a time, every ACA
+//! step is its own parallel operation — a kernel over the block's rows,
+//! a parallel argmax reduction, a kernel over the block's columns, … —
+//! so a rank-k approximation of a single block issues ~4k small kernel
+//! launches and reductions. On a wide device this cannot reach occupancy
+//! (the paper measures 32× ACA slowdown vs batching); on any device it
+//! pays per-launch overhead per step, which is what the Fig 15 bench
+//! quantifies on this testbed.
+
+use crate::dpp::executor::{launch, GlobalMem};
+use crate::dpp::reduce::reduce;
+use crate::geometry::kernel::Kernel;
+use crate::geometry::points::PointSet;
+use crate::tree::block::WorkItem;
+use crate::util::atomic::AtomicF64Vec;
+
+/// Rank-k ACA of a single block with per-step parallel operations,
+/// applied to `x` and accumulated into `z` (fused NP semantics).
+pub fn stepwise_aca_matvec(
+    points: &PointSet,
+    kernel: Kernel,
+    k: usize,
+    w: &WorkItem,
+    x: &[f64],
+    z: &AtomicF64Vec,
+) {
+    let m = w.rows();
+    let n = w.cols();
+    let k = k.min(m).min(n);
+    let mut u = vec![0.0f64; k * m];
+    let mut v = vec![0.0f64; k * n];
+    let mut u_hat = vec![0.0f64; m];
+    let mut used_r = vec![false; m];
+    let mut used_c = vec![false; n];
+    let mut j_cur = 0usize;
+    let mut rank = 0usize;
+    for r in 0..k {
+        // kernel over the block's rows: residual column
+        {
+            let uh = GlobalMem::new(&mut u_hat);
+            let u_ref = &u;
+            let v_ref = &v;
+            launch(m, |i| {
+                let mut val = kernel.eval(points, w.tau.lo + i, points, w.sigma.lo + j_cur);
+                for l in 0..r {
+                    val -= u_ref[l * m + i] * v_ref[l * n + j_cur];
+                }
+                uh.write(i, val);
+            });
+        }
+        // parallel argmax reduction over unused rows
+        let scored: Vec<(usize, f64)> = {
+            let mut s = vec![(usize::MAX, -1.0f64); m];
+            let sm = GlobalMem::new(&mut s);
+            let uh = &u_hat;
+            let ur = &used_r;
+            launch(m, |i| {
+                if !ur[i] {
+                    sm.write(i, (i, uh[i].abs()));
+                }
+            });
+            s
+        };
+        let (i_pivot, best) =
+            reduce(&scored, (usize::MAX, -1.0), |a, b| if b.1 > a.1 { b } else { a });
+        if i_pivot == usize::MAX || best < 1e-14 {
+            // zero residual column: retire, advance (same semantics as the
+            // batched/XLA paths)
+            used_c[j_cur] = true;
+            match used_c.iter().position(|&c| !c) {
+                Some(j) => {
+                    j_cur = j;
+                    continue;
+                }
+                None => break,
+            }
+        }
+        let pivot = u_hat[i_pivot];
+        used_r[i_pivot] = true;
+        used_c[j_cur] = true;
+        // kernel over rows: scale into u_r
+        {
+            let um = GlobalMem::new(&mut u);
+            let uh = &u_hat;
+            launch(m, |i| um.write(r * m + i, uh[i] / pivot));
+        }
+        // kernel over the block's columns: residual row
+        {
+            let vm = GlobalMem::new(&mut v);
+            let u_ref = &u;
+            launch(n, |j| {
+                let mut val =
+                    kernel.eval(points, w.tau.lo + i_pivot, points, w.sigma.lo + j);
+                for l in 0..r {
+                    val -= u_ref[l * m + i_pivot] * vm.read(l * n + j);
+                }
+                vm.write(r * n + j, val);
+            });
+        }
+        rank = r + 1;
+        // parallel argmax over unused columns for the next pivot
+        let scored: Vec<(usize, f64)> = {
+            let mut s = vec![(usize::MAX, -1.0f64); n];
+            let sm = GlobalMem::new(&mut s);
+            let v_ref = &v;
+            let uc = &used_c;
+            launch(n, |j| {
+                if !uc[j] {
+                    sm.write(j, (j, v_ref[r * n + j].abs()));
+                }
+            });
+            s
+        };
+        let (j_next, _) = reduce(&scored, (usize::MAX, -1.0), |a, b| if b.1 > a.1 { b } else { a });
+        if j_next == usize::MAX {
+            break;
+        }
+        j_cur = j_next;
+    }
+    // apply: t_r = v_r · x|σ (parallel products + reduction), then
+    // z|τ += Σ_r t_r u_r (kernel over rows)
+    let mut t = vec![0.0f64; rank];
+    for (r, tr) in t.iter_mut().enumerate() {
+        let prods: Vec<f64> = {
+            let mut p = vec![0.0f64; n];
+            let pm = GlobalMem::new(&mut p);
+            let v_ref = &v;
+            launch(n, |j| pm.write(j, v_ref[r * n + j] * x[w.sigma.lo + j]));
+            p
+        };
+        *tr = reduce(&prods, 0.0, |a, b| a + b);
+    }
+    let u_ref = &u;
+    let t_ref = &t;
+    launch(m, |i| {
+        let mut acc = 0.0;
+        for r in 0..rank {
+            acc += t_ref[r] * u_ref[r * m + i];
+        }
+        z.add(w.tau.lo + i, acc);
+    });
+}
+
+/// Unbatched dense block mat-vec: one parallel operation per block.
+pub fn stepwise_dense_matvec(
+    points: &PointSet,
+    kernel: Kernel,
+    w: &WorkItem,
+    x: &[f64],
+    z: &AtomicF64Vec,
+) {
+    launch(w.rows(), |i| {
+        let row = w.tau.lo + i;
+        let acc = kernel.row_dot(points, row, w.sigma.lo, w.sigma.hi, x);
+        z.add(row, acc);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aca::batched::{batched_aca_matvec, AcaBatch};
+    use crate::morton::morton_sort;
+    use crate::tree::block::build_block_tree;
+
+    #[test]
+    fn stepwise_matches_batched_aca() {
+        let mut pts = PointSet::halton(1024, 2);
+        morton_sort(&mut pts);
+        let tree = build_block_tree(&pts, 1.5, 64);
+        let blocks = &tree.admissible[..tree.admissible.len().min(8)];
+        let kern = Kernel::gaussian();
+        let x = crate::util::prng::Xoshiro256::seed(1).vector(pts.len());
+        let zb = AtomicF64Vec::zeros(pts.len());
+        batched_aca_matvec(&AcaBatch { points: &pts, kernel: kern, blocks, k: 10 }, &x, &zb);
+        let zs = AtomicF64Vec::zeros(pts.len());
+        for w in blocks {
+            stepwise_aca_matvec(&pts, kern, 10, w, &x, &zs);
+        }
+        let err = crate::util::rel_err(&zs.into_vec(), &zb.into_vec());
+        assert!(err < 1e-12, "stepwise != batched: {err}");
+    }
+
+    #[test]
+    fn stepwise_dense_matches_batched_dense() {
+        let mut pts = PointSet::halton(512, 2);
+        morton_sort(&mut pts);
+        let tree = build_block_tree(&pts, 1.5, 32);
+        let kern = Kernel::gaussian();
+        let x = crate::util::prng::Xoshiro256::seed(2).vector(pts.len());
+        let zb = AtomicF64Vec::zeros(pts.len());
+        crate::hmatrix::dense::batched_dense_matvec(&pts, kern, &tree.dense, &x, &zb);
+        let zs = AtomicF64Vec::zeros(pts.len());
+        for w in &tree.dense {
+            stepwise_dense_matvec(&pts, kern, w, &x, &zs);
+        }
+        let err = crate::util::rel_err(&zs.into_vec(), &zb.into_vec());
+        assert!(err < 1e-13, "stepwise dense != batched: {err}");
+    }
+}

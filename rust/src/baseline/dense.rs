@@ -1,0 +1,72 @@
+//! Exact dense kernel-matrix operator — the convergence reference (§6.4).
+
+use crate::dpp::executor::{launch, GlobalMem};
+use crate::geometry::kernel::Kernel;
+use crate::geometry::points::PointSet;
+
+/// The full dense matrix A_{φ,Y×Y}, applied without approximation
+/// (entries generated on the fly; O(N²) work, parallel over rows).
+pub struct DenseOperator {
+    pub points: PointSet,
+    pub kernel: Kernel,
+}
+
+impl DenseOperator {
+    pub fn new(points: PointSet, kernel: Kernel) -> Self {
+        DenseOperator { points, kernel }
+    }
+
+    /// y = A x (exact).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let n = self.points.len();
+        assert_eq!(x.len(), n);
+        let mut y = vec![0.0; n];
+        {
+            let out = GlobalMem::new(&mut y);
+            launch(n, |i| {
+                let mut acc = 0.0;
+                for j in 0..n {
+                    acc += self.kernel.eval(&self.points, i, &self.points, j) * x[j];
+                }
+                out.write(i, acc);
+            });
+        }
+        y
+    }
+
+    /// Single matrix entry.
+    pub fn entry(&self, i: usize, j: usize) -> f64 {
+        self.kernel.eval(&self.points, i, &self.points, j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_matches_naive_loop() {
+        let pts = PointSet::halton(64, 2);
+        let op = DenseOperator::new(pts.clone(), Kernel::gaussian());
+        let x: Vec<f64> = (0..64).map(|i| (i as f64 * 0.1).cos()).collect();
+        let y = op.matvec(&x);
+        for i in 0..64 {
+            let mut want = 0.0;
+            for j in 0..64 {
+                want += op.entry(i, j) * x[j];
+            }
+            assert!((y[i] - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn symmetric_kernel_gives_symmetric_entries() {
+        let pts = PointSet::halton(20, 3);
+        let op = DenseOperator::new(pts, Kernel::matern(3));
+        for i in 0..20 {
+            for j in 0..20 {
+                assert!((op.entry(i, j) - op.entry(j, i)).abs() < 1e-14);
+            }
+        }
+    }
+}

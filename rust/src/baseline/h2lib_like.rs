@@ -1,0 +1,267 @@
+//! Sequential, recursive, fully pre-computing H-matrix — the H2Lib-style
+//! CPU baseline of the paper's comparison (Figs 16/17).
+//!
+//! Classical design decisions, deliberately kept (the paper's point is the
+//! contrast with the many-core formulation):
+//!
+//! * recursive (pointer-based) cluster tree with geometric bisection along
+//!   the widest bounding-box axis (median split),
+//! * recursive block cluster tree construction (Alg 1 verbatim),
+//! * full pre-computation at setup: ACA factors *and* dense sub-blocks are
+//!   computed once and stored (the paper: "the dense sub-blocks of the
+//!   approximated matrix are often pre-computed, too"),
+//! * recursive, single-threaded mat-vec (Alg 3 verbatim).
+
+use crate::aca::seq::{aca_fixed_rank, AcaResult};
+use crate::geometry::kernel::Kernel;
+use crate::geometry::points::PointSet;
+use crate::tree::admissibility::{is_admissible, BBox};
+
+/// Recursive cluster-tree node over a permutation of point indices.
+struct ClusterNode {
+    /// Range into the baseline's own permutation array.
+    lo: usize,
+    hi: usize,
+    bbox: BBox,
+    children: Option<(Box<ClusterNode>, Box<ClusterNode>)>,
+}
+
+/// A block-cluster-tree leaf with its pre-computed data.
+enum BlockData {
+    /// Stored dense sub-block, row-major rows×cols.
+    Dense(Vec<f64>),
+    /// Stored ACA factors.
+    LowRank(AcaResult),
+}
+
+struct BlockLeaf {
+    row_lo: usize,
+    row_hi: usize,
+    col_lo: usize,
+    col_hi: usize,
+    data: BlockData,
+}
+
+/// The sequential H-matrix baseline.
+pub struct SequentialHMatrix {
+    points: PointSet,
+    /// `perm[p]` = original index of the point at tree position p.
+    perm: Vec<u32>,
+    leaves: Vec<BlockLeaf>,
+    pub stats: SeqStats,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct SeqStats {
+    pub admissible_blocks: usize,
+    pub dense_blocks: usize,
+    pub stored_bytes: usize,
+}
+
+impl SequentialHMatrix {
+    /// Full setup: cluster tree, block tree, pre-compute everything.
+    pub fn build(points: PointSet, kernel: Kernel, eta: f64, c_leaf: usize, k: usize) -> Self {
+        let n = points.len();
+        let mut perm: Vec<u32> = (0..n as u32).collect();
+        let root = build_cluster_tree(&points, &mut perm, 0, n, c_leaf);
+        let mut leaves = Vec::new();
+        let mut stats = SeqStats::default();
+        build_blocks(&points, &perm, kernel, eta, c_leaf, k, &root, &root, &mut leaves, &mut stats);
+        stats.stored_bytes = leaves
+            .iter()
+            .map(|l| match &l.data {
+                BlockData::Dense(d) => d.len() * 8,
+                BlockData::LowRank(r) => (r.u.len() + r.v.len()) * 8,
+            })
+            .sum();
+        SequentialHMatrix { points, perm, leaves, stats }
+    }
+
+    /// Recursive mat-vec (Alg 3); x, y in original point order.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let n = self.points.len();
+        assert_eq!(x.len(), n);
+        // permute into tree order
+        let xp: Vec<f64> = self.perm.iter().map(|&p| x[p as usize]).collect();
+        let mut zp = vec![0.0; n];
+        for leaf in &self.leaves {
+            let xs = &xp[leaf.col_lo..leaf.col_hi];
+            match &leaf.data {
+                BlockData::Dense(a) => {
+                    let cols = leaf.col_hi - leaf.col_lo;
+                    for (ii, zi) in zp[leaf.row_lo..leaf.row_hi].iter_mut().enumerate() {
+                        let row = &a[ii * cols..(ii + 1) * cols];
+                        let mut acc = 0.0;
+                        for (aij, xj) in row.iter().zip(xs) {
+                            acc += aij * xj;
+                        }
+                        *zi += acc;
+                    }
+                }
+                BlockData::LowRank(r) => {
+                    r.apply(xs, &mut zp[leaf.row_lo..leaf.row_hi]);
+                }
+            }
+        }
+        // permute back
+        let mut y = vec![0.0; n];
+        for (p, &orig) in self.perm.iter().enumerate() {
+            y[orig as usize] = zp[p];
+        }
+        y
+    }
+}
+
+/// Geometric bisection cluster tree (sequential, recursive).
+fn build_cluster_tree(
+    points: &PointSet,
+    perm: &mut [u32],
+    lo: usize,
+    hi: usize,
+    c_leaf: usize,
+) -> ClusterNode {
+    let d = points.dim();
+    let mut bbox = BBox::empty();
+    for &p in &perm[lo..hi] {
+        let pt = points.point(p as usize);
+        bbox.include(&pt);
+    }
+    if hi - lo <= c_leaf {
+        return ClusterNode { lo, hi, bbox, children: None };
+    }
+    // widest axis, median split (classical geometric clustering)
+    let mut axis = 0;
+    let mut widest = -1.0;
+    for kdim in 0..d {
+        let w = bbox.hi[kdim] - bbox.lo[kdim];
+        if w > widest {
+            widest = w;
+            axis = kdim;
+        }
+    }
+    let mid = lo + (hi - lo) / 2;
+    perm[lo..hi].select_nth_unstable_by(mid - lo, |&a, &b| {
+        points
+            .coord(axis, a as usize)
+            .partial_cmp(&points.coord(axis, b as usize))
+            .unwrap()
+    });
+    let left = build_cluster_tree(points, perm, lo, mid, c_leaf);
+    let right = build_cluster_tree(points, perm, mid, hi, c_leaf);
+    ClusterNode { lo, hi, bbox, children: Some((Box::new(left), Box::new(right))) }
+}
+
+/// Recursive block cluster tree with immediate pre-computation (Alg 1).
+#[allow(clippy::too_many_arguments)]
+fn build_blocks(
+    points: &PointSet,
+    perm: &[u32],
+    kernel: Kernel,
+    eta: f64,
+    c_leaf: usize,
+    k: usize,
+    tau: &ClusterNode,
+    sigma: &ClusterNode,
+    leaves: &mut Vec<BlockLeaf>,
+    stats: &mut SeqStats,
+) {
+    let d = points.dim();
+    let admissible = is_admissible(&tau.bbox, &sigma.bbox, d, eta);
+    let eval = |i: usize, j: usize| {
+        kernel.eval(
+            points,
+            perm[tau.lo + i] as usize,
+            points,
+            perm[sigma.lo + j] as usize,
+        )
+    };
+    if admissible {
+        let m = tau.hi - tau.lo;
+        let n = sigma.hi - sigma.lo;
+        let aca = aca_fixed_rank(&eval, m, n, k);
+        stats.admissible_blocks += 1;
+        leaves.push(BlockLeaf {
+            row_lo: tau.lo,
+            row_hi: tau.hi,
+            col_lo: sigma.lo,
+            col_hi: sigma.hi,
+            data: BlockData::LowRank(aca),
+        });
+    } else if tau.hi - tau.lo > c_leaf && sigma.hi - sigma.lo > c_leaf {
+        let (t1, t2) = tau.children.as_ref().map(|(a, b)| (a.as_ref(), b.as_ref())).unwrap();
+        let (s1, s2) = sigma.children.as_ref().map(|(a, b)| (a.as_ref(), b.as_ref())).unwrap();
+        for t in [t1, t2] {
+            for s in [s1, s2] {
+                build_blocks(points, perm, kernel, eta, c_leaf, k, t, s, leaves, stats);
+            }
+        }
+    } else {
+        // dense leaf: assemble and store
+        let m = tau.hi - tau.lo;
+        let n = sigma.hi - sigma.lo;
+        let mut a = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                a[i * n + j] = eval(i, j);
+            }
+        }
+        stats.dense_blocks += 1;
+        leaves.push(BlockLeaf {
+            row_lo: tau.lo,
+            row_hi: tau.hi,
+            col_lo: sigma.lo,
+            col_hi: sigma.hi,
+            data: BlockData::Dense(a),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::dense::DenseOperator;
+
+    #[test]
+    fn baseline_approximates_dense() {
+        let pts = PointSet::halton(1024, 2);
+        let kern = Kernel::gaussian();
+        let h = SequentialHMatrix::build(pts.clone(), kern, 1.5, 64, 12);
+        assert!(h.stats.admissible_blocks > 0);
+        assert!(h.stats.dense_blocks > 0);
+        assert!(h.stats.stored_bytes > 0);
+        let exact = DenseOperator::new(pts, kern);
+        let mut rng = crate::util::prng::Xoshiro256::seed(11);
+        let x = rng.vector(1024);
+        let err = crate::util::rel_err(&h.matvec(&x), &exact.matvec(&x));
+        assert!(err < 1e-6, "baseline error: {err}");
+    }
+
+    #[test]
+    fn baseline_matches_parallel_hmatrix_closely() {
+        use crate::config::HmxConfig;
+        use crate::hmatrix::HMatrix;
+        let cfg = HmxConfig { n: 512, dim: 2, c_leaf: 64, k: 16, ..HmxConfig::default() };
+        let pts = PointSet::halton(cfg.n, 2);
+        let seq = SequentialHMatrix::build(pts.clone(), cfg.kernel(), cfg.eta, cfg.c_leaf, cfg.k);
+        let par = HMatrix::build(pts, &cfg).unwrap();
+        let mut rng = crate::util::prng::Xoshiro256::seed(13);
+        let x = rng.vector(cfg.n);
+        // Different clusterings -> different approximations; both must be
+        // close to each other because both are close to the exact product.
+        let err = crate::util::rel_err(&par.matvec(&x).unwrap(), &seq.matvec(&x));
+        assert!(err < 1e-5, "baseline vs parallel: {err}");
+    }
+
+    #[test]
+    fn small_problem_all_dense() {
+        let pts = PointSet::halton(32, 2);
+        let kern = Kernel::gaussian();
+        let h = SequentialHMatrix::build(pts.clone(), kern, 1.5, 64, 4);
+        assert_eq!(h.stats.admissible_blocks, 0);
+        assert_eq!(h.stats.dense_blocks, 1);
+        let exact = DenseOperator::new(pts, kern);
+        let x = vec![1.0; 32];
+        let err = crate::util::rel_err(&h.matvec(&x), &exact.matvec(&x));
+        assert!(err < 1e-12, "all-dense must be exact: {err}");
+    }
+}

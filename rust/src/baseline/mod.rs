@@ -1,0 +1,12 @@
+//! Comparison substrates for the paper's evaluation:
+//!
+//! * [`dense`] — the exact dense operator (error reference for Fig 11;
+//!   O(N²) mat-vec).
+//! * [`h2lib_like`] — a classical *sequential, recursive, fully
+//!   pre-computing* CPU H-matrix in the style of H2Lib: pointer-based
+//!   recursive cluster/block trees, per-block stored ACA factors and
+//!   stored dense blocks, recursive mat-vec (Alg 3 verbatim). This is the
+//!   baseline of Figs 16/17.
+
+pub mod dense;
+pub mod h2lib_like;

@@ -1,0 +1,106 @@
+//! Parallel key generation for batching (Alg 5, Fig 4).
+//!
+//! Given per-batch bounds `[lo_i, hi_i)` within a batched array of length
+//! `n_b` and per-batch keys `k_i > 0`, produce the keys array where
+//! positions inside batch `i` hold `k_i` and positions outside any batch
+//! hold 0: mark `+k` at `lo` and `−k` at `hi`, then scan. The paper's Alg 5
+//! states the pattern for *inclusive* bounds (exclusive scan + two
+//! correction kernels); with half-open bounds the inclusive scan of the
+//! same marks is exact and both corrections vanish.
+
+use crate::dpp::executor::{launch, GlobalMem};
+use crate::dpp::scan::inclusive_scan_in_place;
+
+/// `bounds[i] = (lo, hi)` half-open; `batch_keys[i] > 0`. Bounds must be
+/// disjoint. Returns the length-`n_b` keys array.
+pub fn create_keys(bounds: &[(usize, usize)], batch_keys: &[i64], n_b: usize) -> Vec<i64> {
+    assert_eq!(bounds.len(), batch_keys.len());
+    let m = bounds.len();
+    // INIT<n_b+1>(keys, 0) — one extra slot so hi == n_b needs no branch.
+    let mut keys = vec![0i64; n_b + 1];
+    {
+        // SET_BATCH_BOUNDS_IN_KEYS<m>: +k at lo, −k at hi.
+        let ks = GlobalMem::new(&mut keys);
+        launch(m, |i| {
+            let (lo, hi) = bounds[i];
+            debug_assert!(lo < hi && hi <= n_b);
+            let k = batch_keys[i];
+            debug_assert!(k > 0);
+            // Disjoint batches may share a boundary (hi_i == lo_{i+1});
+            // accumulate rather than overwrite so both marks survive.
+            *ks.get_mut(lo) += k;
+            *ks.get_mut(hi) -= k;
+        });
+    }
+    // Inclusive scan: position p ends up with Σ_{q ≤ p} marks — exactly
+    // k_i on [lo_i, hi_i) and 0 outside (no correction kernels needed for
+    // half-open bounds).
+    inclusive_scan_in_place(&mut keys);
+    keys.truncate(n_b);
+    keys
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keys_mark_batches_and_gaps() {
+        // Fig 4 shape: batches [1,3) key 1, [4,8) key 2, gap at 0, 3.
+        let keys = create_keys(&[(1, 3), (4, 8)], &[1, 2], 9);
+        assert_eq!(keys, vec![0, 1, 1, 0, 2, 2, 2, 2, 0]);
+    }
+
+    #[test]
+    fn adjacent_batches_no_bleed() {
+        let keys = create_keys(&[(0, 2), (2, 4)], &[7, 9], 4);
+        assert_eq!(keys, vec![7, 7, 9, 9]);
+    }
+
+    #[test]
+    fn single_element_batches() {
+        let keys = create_keys(&[(0, 1), (2, 3)], &[5, 6], 3);
+        assert_eq!(keys, vec![5, 0, 6]);
+    }
+
+    #[test]
+    fn full_coverage_batch() {
+        let keys = create_keys(&[(0, 5)], &[3], 5);
+        assert_eq!(keys, vec![3; 5]);
+    }
+
+    #[test]
+    fn empty_input() {
+        assert_eq!(create_keys(&[], &[], 4), vec![0; 4]);
+    }
+
+    #[test]
+    fn large_randomized_against_naive() {
+        use crate::util::prng::Xoshiro256;
+        let mut rng = Xoshiro256::seed(77);
+        let n_b = 10_000;
+        // random disjoint ranges
+        let mut bounds = Vec::new();
+        let mut pos = 0usize;
+        while pos + 2 < n_b {
+            let gap = rng.below(5);
+            let len = 1 + rng.below(50);
+            let lo = (pos + gap).min(n_b - 1);
+            let hi = (lo + len).min(n_b);
+            if lo >= hi {
+                break;
+            }
+            bounds.push((lo, hi));
+            pos = hi;
+        }
+        let keys_in: Vec<i64> = (1..=bounds.len() as i64).collect();
+        let keys = create_keys(&bounds, &keys_in, n_b);
+        let mut naive = vec![0i64; n_b];
+        for (i, &(lo, hi)) in bounds.iter().enumerate() {
+            for slot in &mut naive[lo..hi] {
+                *slot = keys_in[i];
+            }
+        }
+        assert_eq!(keys, naive);
+    }
+}

@@ -1,0 +1,12 @@
+//! Batching of many similar, non-equally sized compute tasks (§4.2).
+//!
+//! * [`keys`] — parallel key-array generation for `reduce_by_key`-style
+//!   segmented operations over a batched array (Alg 5, Fig 4).
+//! * [`plan`] — the batching heuristics of §5.4: greedily fill batches of
+//!   blocks under the `bs_dense` / `bs_ACA` thresholds.
+
+pub mod keys;
+pub mod plan;
+
+pub use keys::create_keys;
+pub use plan::{plan_batches, BatchPlan, BlockShape};

@@ -1,0 +1,161 @@
+//! Batching heuristics (§5.4.1 / §5.4.2).
+//!
+//! The work queues produced by the block-tree traversal are decomposed into
+//! batches executed as single fused operations:
+//!
+//! * dense blocks:  max_i n'_i · Σ_i n_i ≤ bs_dense (padded column count
+//!   times total rows — the storage bound of §5.4.2), and
+//! * ACA blocks:    Σ_i n_i ≤ bs_ACA (total rows of the batched rank-k
+//!   factors, §5.4.1).
+
+/// Shape of one block in a work queue (rows = |τ|, cols = |σ|).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockShape {
+    pub rows: usize,
+    pub cols: usize,
+}
+
+/// A plan: each batch is a range of work-queue indices `[start, end)`
+/// (blocks stay in queue order, as in the paper's greedy fill).
+#[derive(Clone, Debug, Default)]
+pub struct BatchPlan {
+    pub batches: Vec<(usize, usize)>,
+}
+
+impl BatchPlan {
+    pub fn n_batches(&self) -> usize {
+        self.batches.len()
+    }
+
+    /// Total number of blocks covered.
+    pub fn n_blocks(&self) -> usize {
+        self.batches.iter().map(|(s, e)| e - s).sum()
+    }
+}
+
+/// Cost model selecting the §5.4 threshold semantics.
+#[derive(Clone, Copy, Debug)]
+pub enum BatchBudget {
+    /// Dense: `max_cols * total_rows <= bs` (padded batched GEMV storage).
+    DensePaddedElems { bs: usize },
+    /// ACA: `total_rows <= bs` (batched rank-one row storage).
+    AcaTotalRows { bs: usize },
+    /// One block per batch — the unbatched comparison mode (Fig 15).
+    Unbatched,
+}
+
+/// Greedily pack blocks (in order) into batches under `budget`. A block
+/// larger than the budget alone still gets its own singleton batch.
+pub fn plan_batches(shapes: &[BlockShape], budget: BatchBudget) -> BatchPlan {
+    let n = shapes.len();
+    let mut batches = Vec::new();
+    match budget {
+        BatchBudget::Unbatched => {
+            for i in 0..n {
+                batches.push((i, i + 1));
+            }
+        }
+        BatchBudget::AcaTotalRows { bs } => {
+            let mut start = 0usize;
+            let mut rows = 0usize;
+            for (i, s) in shapes.iter().enumerate() {
+                if i > start && rows + s.rows > bs {
+                    batches.push((start, i));
+                    start = i;
+                    rows = 0;
+                }
+                rows += s.rows;
+            }
+            if start < n {
+                batches.push((start, n));
+            }
+        }
+        BatchBudget::DensePaddedElems { bs } => {
+            let mut start = 0usize;
+            let mut rows = 0usize;
+            let mut max_cols = 0usize;
+            for (i, s) in shapes.iter().enumerate() {
+                let new_rows = rows + s.rows;
+                let new_max_cols = max_cols.max(s.cols);
+                if i > start && new_max_cols * new_rows > bs {
+                    batches.push((start, i));
+                    start = i;
+                    rows = 0;
+                    max_cols = 0;
+                }
+                rows += s.rows;
+                max_cols = max_cols.max(s.cols);
+            }
+            if start < n {
+                batches.push((start, n));
+            }
+        }
+    }
+    BatchPlan { batches }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sq(n: usize) -> BlockShape {
+        BlockShape { rows: n, cols: n }
+    }
+
+    #[test]
+    fn unbatched_is_singletons() {
+        let p = plan_batches(&[sq(4), sq(8), sq(2)], BatchBudget::Unbatched);
+        assert_eq!(p.batches, vec![(0, 1), (1, 2), (2, 3)]);
+    }
+
+    #[test]
+    fn aca_budget_packs_rows() {
+        let shapes = vec![sq(10), sq(10), sq(10), sq(10)];
+        let p = plan_batches(&shapes, BatchBudget::AcaTotalRows { bs: 25 });
+        assert_eq!(p.batches, vec![(0, 2), (2, 4)]);
+        assert_eq!(p.n_blocks(), 4);
+    }
+
+    #[test]
+    fn oversized_block_gets_singleton() {
+        let shapes = vec![sq(100), sq(1)];
+        let p = plan_batches(&shapes, BatchBudget::AcaTotalRows { bs: 10 });
+        assert_eq!(p.batches, vec![(0, 1), (1, 2)]);
+    }
+
+    #[test]
+    fn dense_budget_accounts_padding() {
+        // one wide block forces padding cost on subsequent rows
+        let shapes = vec![
+            BlockShape { rows: 4, cols: 100 },
+            BlockShape { rows: 4, cols: 2 },
+            BlockShape { rows: 4, cols: 2 },
+        ];
+        // batch of all three: max_cols=100 * rows=12 = 1200 > 900 -> split
+        let p = plan_batches(&shapes, BatchBudget::DensePaddedElems { bs: 900 });
+        assert_eq!(p.batches, vec![(0, 2), (2, 3)]);
+    }
+
+    #[test]
+    fn plan_covers_everything_in_order() {
+        use crate::util::prng::Xoshiro256;
+        let mut rng = Xoshiro256::seed(5);
+        let shapes: Vec<BlockShape> =
+            (0..500).map(|_| sq(1 + rng.below(64))).collect();
+        for budget in [
+            BatchBudget::AcaTotalRows { bs: 128 },
+            BatchBudget::DensePaddedElems { bs: 4096 },
+            BatchBudget::Unbatched,
+        ] {
+            let p = plan_batches(&shapes, budget);
+            assert_eq!(p.n_blocks(), shapes.len());
+            let mut pos = 0;
+            for &(s, e) in &p.batches {
+                assert_eq!(s, pos);
+                assert!(e > s);
+                pos = e;
+            }
+            assert_eq!(pos, shapes.len());
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! Algorithm 7: compute the bounding-box lookup table of all unique
+//! clusters on a level with sorting, unification and one batched
+//! `reduce_by_key` min/max per dimension.
+
+use crate::batch::keys::create_keys;
+use crate::dpp::reduce::reduce_by_key;
+use crate::dpp::sort::sort_u64;
+use crate::dpp::unique::unique_sorted;
+use crate::geometry::points::PointSet;
+use crate::tree::admissibility::BBox;
+use crate::tree::cluster::Cluster;
+
+/// The lookup table: `clusters[j]` (sorted by lower bound) has bounding box
+/// `boxes[j]`.
+pub struct BBoxTable {
+    pub clusters: Vec<Cluster>,
+    pub boxes: Vec<BBox>,
+}
+
+/// Build the table for all clusters referenced by a level (the
+/// concatenated τ- and σ-bounds of every node, see Alg 7).
+///
+/// `cluster_keys` are the packed `(lo << 32) | hi` keys of every referenced
+/// cluster, duplicates included; `points` is the Morton-ordered point set.
+pub fn compute_bbox_lookup_table(cluster_keys: &[u64], points: &PointSet) -> BBoxTable {
+    let n = points.len();
+    let d = points.dim();
+    // STABLE_SORT + UNIQUE: the unique clusters, ordered by lower bound.
+    // (The Z-curve CBC guarantees a lower bound determines its upper bound,
+    // so sorting the packed (lo, hi) keys equals sorting by lo.)
+    let mut sorted = cluster_keys.to_vec();
+    sort_u64(&mut sorted);
+    let unique = unique_sorted(&sorted);
+    let clusters: Vec<Cluster> = unique.iter().map(|&k| Cluster::from_key(k)).collect();
+    let m = clusters.len();
+
+    // CREATE_KEYS over the point array: batch j (1-based key) covers the
+    // index range of unique cluster j.
+    let bounds: Vec<(usize, usize)> = clusters.iter().map(|c| (c.lo, c.hi)).collect();
+    let batch_keys: Vec<i64> = (1..=m as i64).collect();
+    let keys = create_keys(&bounds, &batch_keys, n);
+
+    // Per dimension: batched min and max via REDUCE_BY_KEY, then
+    // REMOVE_BY_KEY(…, 0) drops points not covered by any cluster.
+    let mut boxes = vec![BBox::empty(); m];
+    for k in 0..d {
+        let coords = points.dim_slice(k);
+        let maxima = reduce_by_key(&keys, coords, f64::NEG_INFINITY, f64::max);
+        let minima = reduce_by_key(&keys, coords, f64::INFINITY, f64::min);
+        for (seg, &key) in maxima.keys.iter().enumerate() {
+            if key != 0 {
+                boxes[(key - 1) as usize].hi[k] = maxima.values[seg];
+            }
+        }
+        for (seg, &key) in minima.keys.iter().enumerate() {
+            if key != 0 {
+                boxes[(key - 1) as usize].lo[k] = minima.values[seg];
+            }
+        }
+    }
+    BBoxTable { clusters, boxes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_bbox(points: &PointSet, c: Cluster) -> BBox {
+        let mut b = BBox::empty();
+        for i in c.lo..c.hi {
+            let p = points.point(i);
+            b.include(&p);
+        }
+        b
+    }
+
+    #[test]
+    fn table_matches_naive_boxes() {
+        let points = PointSet::halton(1024, 2);
+        // duplicates allowed; distinct clusters must be disjoint (the
+        // Z-order CBC guarantees this for any tree level, see Alg 7)
+        let clusters =
+            [Cluster::new(0, 256), Cluster::new(512, 1024), Cluster::new(0, 256), Cluster::new(256, 512)];
+        let keys: Vec<u64> = clusters.iter().map(|c| c.key()).collect();
+        let table = compute_bbox_lookup_table(&keys, &points);
+        // duplicates removed, sorted by lo
+        assert_eq!(table.clusters.len(), 3);
+        assert_eq!(table.clusters[0], Cluster::new(0, 256));
+        assert_eq!(table.clusters[1], Cluster::new(256, 512));
+        assert_eq!(table.clusters[2], Cluster::new(512, 1024));
+        for (j, &c) in table.clusters.iter().enumerate() {
+            let want = naive_bbox(&points, c);
+            for k in 0..2 {
+                assert_eq!(table.boxes[j].lo[k], want.lo[k], "cluster {j} lo dim {k}");
+                assert_eq!(table.boxes[j].hi[k], want.hi[k], "cluster {j} hi dim {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn partial_coverage_leaves_gaps_out() {
+        // clusters covering only part of the point range — uncovered points
+        // must not contaminate any box (REMOVE_BY_KEY(0)).
+        let points = PointSet::halton(100, 3);
+        let clusters = [Cluster::new(10, 20), Cluster::new(50, 80)];
+        let keys: Vec<u64> = clusters.iter().map(|c| c.key()).collect();
+        let table = compute_bbox_lookup_table(&keys, &points);
+        assert_eq!(table.clusters.len(), 2);
+        for (j, &c) in table.clusters.iter().enumerate() {
+            let want = naive_bbox(&points, c);
+            for k in 0..3 {
+                assert_eq!(table.boxes[j].lo[k], want.lo[k]);
+                assert_eq!(table.boxes[j].hi[k], want.hi[k]);
+            }
+        }
+    }
+
+    #[test]
+    fn singleton_cluster_box_is_point() {
+        let points = PointSet::halton(16, 2);
+        let c = Cluster::new(5, 6);
+        let table = compute_bbox_lookup_table(&[c.key()], &points);
+        assert_eq!(table.boxes[0].lo[0], points.coord(0, 5));
+        assert_eq!(table.boxes[0].hi[0], points.coord(0, 5));
+        assert_eq!(table.boxes[0].diam(2), 0.0);
+    }
+}

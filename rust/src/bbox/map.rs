@@ -1,0 +1,94 @@
+//! Algorithm 8: build the map from level nodes to lookup-table entries.
+//!
+//! Sort the (packed) cluster bounds keeping the permutation, flag positions
+//! where the sorted sequence changes, inclusive-scan the flags to get the
+//! rank of each distinct value, and permute the ranks back (Fig 8). The
+//! rank equals the index in the (lo-sorted) lookup table.
+
+use crate::dpp::executor::{launch, GlobalMem};
+use crate::dpp::scan::inclusive_scan_in_place;
+use crate::dpp::sort::sort_with_permutation_u64;
+
+/// For each entry of `cluster_keys` (packed `(lo<<32)|hi`, duplicates
+/// allowed) return its index in the sorted-unique table built by
+/// [`crate::bbox::lookup::compute_bbox_lookup_table`] over the same keys.
+pub fn create_map_for_bounding_boxes(cluster_keys: &[u64]) -> Vec<usize> {
+    let m = cluster_keys.len();
+    if m == 0 {
+        return Vec::new();
+    }
+    // STABLE_SORT_BY_KEY keeping the permutation.
+    let mut sorted = cluster_keys.to_vec();
+    let perm = sort_with_permutation_u64(&mut sorted);
+    // INIT(map, 0); SET_BOUNDS_FOR_MAP: 1 where the sorted value changes.
+    let mut map = vec![0usize; m];
+    {
+        let mm = GlobalMem::new(&mut map);
+        launch(m, |i| {
+            mm.write(i, (i > 0 && sorted[i] != sorted[i - 1]) as usize);
+        });
+    }
+    // INCLUSIVE_SCAN → rank of the distinct value at each sorted position.
+    inclusive_scan_in_place(&mut map);
+    // PERMUTE_MAP: scatter ranks back to original positions.
+    let mut out = vec![0usize; m];
+    {
+        let o = GlobalMem::new(&mut out);
+        launch(m, |i| {
+            o.write(perm[i] as usize, map[i]);
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tree::cluster::Cluster;
+
+    #[test]
+    fn map_ranks_match_sorted_unique_position() {
+        let clusters = [
+            Cluster::new(512, 1024),
+            Cluster::new(0, 512),
+            Cluster::new(512, 1024),
+            Cluster::new(256, 512),
+            Cluster::new(0, 512),
+        ];
+        let keys: Vec<u64> = clusters.iter().map(|c| c.key()).collect();
+        let map = create_map_for_bounding_boxes(&keys);
+        // sorted-unique: [0,512) -> 0, [256,512) -> 1, [512,1024) -> 2
+        assert_eq!(map, vec![2, 0, 2, 1, 0]);
+    }
+
+    #[test]
+    fn map_agrees_with_lookup_table() {
+        use crate::bbox::lookup::compute_bbox_lookup_table;
+        use crate::geometry::points::PointSet;
+        let points = PointSet::halton(256, 2);
+        let clusters = [
+            Cluster::new(0, 64),
+            Cluster::new(64, 128),
+            Cluster::new(0, 64),
+            Cluster::new(128, 256),
+            Cluster::new(64, 128),
+        ];
+        let keys: Vec<u64> = clusters.iter().map(|c| c.key()).collect();
+        let table = compute_bbox_lookup_table(&keys, &points);
+        let map = create_map_for_bounding_boxes(&keys);
+        for (i, &c) in clusters.iter().enumerate() {
+            assert_eq!(table.clusters[map[i]], c, "entry {i}");
+        }
+    }
+
+    #[test]
+    fn all_identical_maps_to_zero() {
+        let keys = vec![Cluster::new(3, 9).key(); 10];
+        assert_eq!(create_map_for_bounding_boxes(&keys), vec![0; 10]);
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(create_map_for_bounding_boxes(&[]).is_empty());
+    }
+}

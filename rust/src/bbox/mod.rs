@@ -1,0 +1,13 @@
+//! Batched bounding-box computation for a block-cluster-tree level
+//! (§5.3, Algorithms 7 & 8, Fig 7/8).
+//!
+//! Many nodes on a level share identical clusters; the lookup table stores
+//! each unique cluster's bounding box exactly once, and a parallel map
+//! construction gives every node constant-time access to the boxes of its
+//! τ and σ.
+
+pub mod lookup;
+pub mod map;
+
+pub use lookup::{compute_bbox_lookup_table, BBoxTable};
+pub use map::create_map_for_bounding_boxes;

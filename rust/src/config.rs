@@ -1,0 +1,168 @@
+//! Configuration for the H-matrix pipeline — the paper's parameter set
+//! (η, C_leaf, k, bs_dense, bs_ACA, precompute, batching) plus engine
+//! selection (native many-core engine vs XLA/PJRT artifacts).
+
+use crate::geometry::kernel::Kernel;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    Gaussian,
+    Matern,
+    Exponential,
+}
+
+impl KernelKind {
+    pub fn to_kernel(self, d: usize) -> Kernel {
+        match self {
+            KernelKind::Gaussian => Kernel::gaussian(),
+            KernelKind::Matern => Kernel::matern(d),
+            KernelKind::Exponential => Kernel::exponential(),
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "gaussian" => Some(KernelKind::Gaussian),
+            "matern" => Some(KernelKind::Matern),
+            "exponential" => Some(KernelKind::Exponential),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Gaussian => "gaussian",
+            KernelKind::Matern => "matern",
+            KernelKind::Exponential => "exponential",
+        }
+    }
+}
+
+/// Which batched-linear-algebra engine executes the numerics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Native Rust many-core engine (dpp kernels) — default; always available.
+    Native,
+    /// AOT-compiled XLA executables via PJRT (requires `make artifacts`);
+    /// falls back to native for shapes without artifacts.
+    Xla,
+}
+
+#[derive(Clone, Debug)]
+pub struct HmxConfig {
+    /// Problem size (number of points).
+    pub n: usize,
+    /// Ambient dimension d (paper: 2 or 3).
+    pub dim: usize,
+    /// Kernel function φ.
+    pub kernel: KernelKind,
+    /// Admissibility parameter η (paper: 1.5).
+    pub eta: f64,
+    /// Leaf size C_leaf (paper: 256 for convergence, 2048 for performance).
+    pub c_leaf: usize,
+    /// Fixed ACA rank k (the practical implementation imposes only k_max).
+    pub k: usize,
+    /// Batch size threshold for dense mat-vec batching, in matrix elements
+    /// (paper default 2^27; scaled to the testbed by default here).
+    pub bs_dense: usize,
+    /// Batch size threshold for batched ACA, in Σ|τ_i| rows (paper 2^25).
+    pub bs_aca: usize,
+    /// Batch linear algebra (the paper's batching switch; turning it off
+    /// processes one block at a time — the Fig 15 comparison).
+    pub batching: bool,
+    /// Pre-compute ACA factors at construction (the paper's P mode);
+    /// NP recomputes factors during every mat-vec.
+    pub precompute: bool,
+    /// P mode only: recompress stored factors (Bebendorf–Kunis, ref. [5])
+    /// keeping singular values above `eps` relative — shrinks the factor
+    /// storage that limits P mode on device memory (§5.4/§6.1).
+    pub recompress_eps: Option<f64>,
+    /// Engine: native dpp kernels or XLA/PJRT artifacts.
+    pub engine: EngineKind,
+    /// Directory with AOT artifacts (manifest.tsv).
+    pub artifacts_dir: String,
+    /// RNG seed for workloads.
+    pub seed: u64,
+}
+
+impl Default for HmxConfig {
+    fn default() -> Self {
+        HmxConfig {
+            n: 1 << 14,
+            dim: 2,
+            kernel: KernelKind::Gaussian,
+            eta: 1.5,
+            c_leaf: 256,
+            k: 16,
+            // paper: 2^27 / 2^25 on a 16 GB P100; defaults here are sized for
+            // CPU caches and are swept in the Fig 14 bench.
+            bs_dense: 1 << 22,
+            bs_aca: 1 << 20,
+            batching: true,
+            precompute: false,
+            recompress_eps: None,
+            engine: EngineKind::Native,
+            artifacts_dir: "artifacts".to_string(),
+            seed: 42,
+        }
+    }
+}
+
+impl HmxConfig {
+    pub fn kernel(&self) -> Kernel {
+        self.kernel.to_kernel(self.dim)
+    }
+
+    pub fn validate(&self) -> crate::Result<()> {
+        if self.n == 0 {
+            return Err(crate::Error::Config("n must be positive".into()));
+        }
+        if !(1..=8).contains(&self.dim) {
+            return Err(crate::Error::Config(format!("dim {} out of range 1..=8", self.dim)));
+        }
+        if self.eta < 0.0 {
+            return Err(crate::Error::Config("eta must be >= 0".into()));
+        }
+        if self.c_leaf == 0 {
+            return Err(crate::Error::Config("c_leaf must be positive".into()));
+        }
+        if self.k == 0 {
+            return Err(crate::Error::Config("k must be positive".into()));
+        }
+        if self.bs_dense == 0 || self.bs_aca == 0 {
+            return Err(crate::Error::Config("batch sizes must be positive".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        assert!(HmxConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = HmxConfig { n: 0, ..HmxConfig::default() };
+        assert!(c.validate().is_err());
+        c = HmxConfig { dim: 0, ..HmxConfig::default() };
+        assert!(c.validate().is_err());
+        c = HmxConfig { dim: 9, ..HmxConfig::default() };
+        assert!(c.validate().is_err());
+        c = HmxConfig { eta: -1.0, ..HmxConfig::default() };
+        assert!(c.validate().is_err());
+        c = HmxConfig { k: 0, ..HmxConfig::default() };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn kernel_kind_names() {
+        for k in [KernelKind::Gaussian, KernelKind::Matern, KernelKind::Exponential] {
+            assert_eq!(KernelKind::from_name(k.name()), Some(k));
+        }
+    }
+}

@@ -1,0 +1,185 @@
+//! BSP-style kernel launches (§3.1 of the paper).
+//!
+//! `launch(n, |tid| ...)` executes the thread body for every virtual thread
+//! index `tid in 0..n`, exactly the paper's abstract kernel: an (in
+//! principle) unbounded number of virtual threads, each running the same
+//! sequential code distinguished only by its index. The mapping of virtual
+//! threads to hardware threads is *not* part of the model — here virtual
+//! threads are chunked over the worker pool, on a GPU they would be warps.
+//!
+//! The paper's memory rules (no two threads write the same global location
+//! in one kernel, except via atomics) are the caller's obligation, the same
+//! as in CUDA; all `hmx` kernels obey it and the property-test suite
+//! exercises the primitives built on top.
+
+use super::pool;
+use crate::metrics;
+
+/// Default minimum number of virtual threads per chunk. Tuned in the §Perf
+/// pass: small enough that mid-sized kernels still fan out, large enough
+/// that the per-chunk dispatch cost (~an atomic + indirect call) vanishes.
+pub const DEFAULT_GRAIN: usize = 4096;
+
+/// Launch a kernel of `n` virtual threads; `body(tid)` runs for each
+/// `tid in 0..n`. Blocks until every thread has finished (kernel-wide
+/// barrier at the end, as in the BSP model).
+#[inline]
+pub fn launch<F: Fn(usize) + Send + Sync>(n: usize, body: F) {
+    launch_with_grain(n, DEFAULT_GRAIN, body)
+}
+
+/// [`launch`] with an explicit chunk grain (virtual threads per chunk).
+pub fn launch_with_grain<F: Fn(usize) + Send + Sync>(n: usize, grain: usize, body: F) {
+    if n == 0 {
+        return;
+    }
+    metrics::count_launch(n);
+    let grain = grain.max(1);
+    // Below one grain (or with an empty pool) just run inline: a kernel
+    // launch on real hardware has fixed overhead too, and the paper's
+    // unbatched measurements exist precisely because tiny launches waste
+    // the processor.
+    let p = pool::global();
+    if n <= grain || p.workers == 0 {
+        for tid in 0..n {
+            body(tid);
+        }
+        return;
+    }
+    let n_chunks = n.div_ceil(grain);
+    p.run(n_chunks, |c| {
+        let lo = c * grain;
+        let hi = (lo + grain).min(n);
+        for tid in lo..hi {
+            body(tid);
+        }
+    });
+}
+
+/// Parallel iteration over contiguous ranges: `body(lo, hi)` for disjoint
+/// ranges covering `0..n`. Useful when the per-thread body benefits from a
+/// sequential inner loop (blocked scans/reductions).
+pub fn launch_blocked<F: Fn(usize, usize) + Send + Sync>(n: usize, grain: usize, body: F) {
+    if n == 0 {
+        return;
+    }
+    metrics::count_launch(n);
+    let grain = grain.max(1);
+    let p = pool::global();
+    if n <= grain || p.workers == 0 {
+        body(0, n);
+        return;
+    }
+    let n_chunks = n.div_ceil(grain);
+    p.run(n_chunks, |c| {
+        let lo = c * grain;
+        let hi = (lo + grain).min(n);
+        body(lo, hi);
+    });
+}
+
+/// Number of executing threads (workers + caller); the "device width".
+pub fn width() -> usize {
+    pool::global().workers + 1
+}
+
+/// Pick a block grain that splits `n` into roughly `4 * width` chunks but
+/// never below `min_grain` elements.
+pub fn auto_grain(n: usize, min_grain: usize) -> usize {
+    (n / (4 * width()).max(1)).max(min_grain).max(1)
+}
+
+/// A mutable-slice wrapper asserting the paper's write rule: each virtual
+/// thread writes only to indices it owns. Allows racing-free concurrent
+/// writes through a shared reference.
+pub struct GlobalMem<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Send for GlobalMem<'_, T> {}
+unsafe impl<T: Send> Sync for GlobalMem<'_, T> {}
+
+impl<'a, T> GlobalMem<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> Self {
+        GlobalMem { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: std::marker::PhantomData }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Write `value` at `i`. Caller guarantees no other thread writes `i`
+    /// within the same kernel (the §3.1 rule).
+    #[inline]
+    pub fn write(&self, i: usize, value: T) {
+        debug_assert!(i < self.len);
+        unsafe { self.ptr.add(i).write(value) }
+    }
+
+    /// Read the element at `i`. Valid if no thread concurrently writes `i`.
+    #[inline]
+    pub fn read(&self, i: usize) -> T
+    where
+        T: Copy,
+    {
+        debug_assert!(i < self.len);
+        unsafe { self.ptr.add(i).read() }
+    }
+
+    /// Raw in-place access for read-modify-write by the owning thread.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub fn get_mut(&self, i: usize) -> &mut T {
+        debug_assert!(i < self.len);
+        unsafe { &mut *self.ptr.add(i) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn launch_covers_all_tids() {
+        let mut out = vec![0usize; 100_000];
+        let mem = GlobalMem::new(&mut out);
+        launch_with_grain(100_000, 1024, |tid| mem.write(tid, tid * 2));
+        assert!(out.iter().enumerate().all(|(i, &v)| v == i * 2));
+    }
+
+    #[test]
+    fn launch_small_runs_inline() {
+        let mut out = vec![0u8; 7];
+        let mem = GlobalMem::new(&mut out);
+        launch(7, |tid| mem.write(tid, 1));
+        assert_eq!(out, vec![1u8; 7]);
+    }
+
+    #[test]
+    fn launch_blocked_partitions_range() {
+        let n = 54321;
+        let mut seen = vec![false; n];
+        let mem = GlobalMem::new(&mut seen);
+        launch_blocked(n, 1000, |lo, hi| {
+            for i in lo..hi {
+                assert!(!mem.read(i), "range overlap at {i}");
+                mem.write(i, true);
+            }
+        });
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn auto_grain_respects_minimum() {
+        assert!(auto_grain(10, 256) >= 256);
+        assert!(auto_grain(1 << 20, 256) >= 256);
+    }
+}

@@ -1,0 +1,42 @@
+//! Data-parallel primitives: the "many-core processor" substrate.
+//!
+//! The paper (§3) deliberately programs against an *abstract* many-core
+//! model: almost-embarrassingly-parallel kernels of virtual threads plus a
+//! library of standardized parallel algorithms (Thrust on GPUs). This module
+//! implements exactly that contract on the many-core hardware available in
+//! this environment (a multicore CPU):
+//!
+//! * [`executor`] — BSP-style kernel launches: `launch(n, |tid| ...)` runs a
+//!   thread-indexed body for `tid in 0..n` over a persistent worker pool,
+//!   with the paper's global/local-memory semantics (threads may not race on
+//!   global writes except through atomics).
+//! * [`scan`] — exclusive / inclusive prefix sums (two-phase blocked scan).
+//! * [`reduce`] — parallel reductions and the segmented `reduce_by_key` that
+//!   powers batching (§4.2).
+//! * [`sort`] — parallel stable LSD radix sort by `u64` keys (Morton codes,
+//!   index bounds).
+//! * [`unique`] — parallel `unique` / `unique_by_key` on sorted input.
+//! * [`sequence`] — iota and gather/scatter/permute helpers.
+//! * [`queue`] — the write-only parallel output queue of §4.3 (atomic head
+//!   pointer).
+//!
+//! Every primitive increments counters in [`crate::metrics`] so benches can
+//! report launch counts and aggregate thread work, mirroring the paper's
+//! performance analysis.
+
+pub mod executor;
+pub mod pool;
+pub mod queue;
+pub mod reduce;
+pub mod scan;
+pub mod sequence;
+pub mod sort;
+pub mod unique;
+
+pub use executor::{launch, launch_with_grain};
+pub use queue::OutputQueue;
+pub use reduce::{reduce, reduce_by_key, SegmentedReduce};
+pub use scan::{exclusive_scan, exclusive_scan_in_place, inclusive_scan_in_place};
+pub use sequence::{gather, permute_in_place, scatter, sequence};
+pub use sort::{sort_pairs_u64, sort_u64};
+pub use unique::unique_sorted;

@@ -1,0 +1,206 @@
+//! Persistent worker pool backing the BSP kernel executor.
+//!
+//! A fixed set of workers parks on a condvar; each [`Pool::run`] installs a
+//! job (a chunk-index consumer) and wakes everyone. Workers and the caller
+//! thread all pull chunk indices from a shared atomic counter until the
+//! chunk range is exhausted, so load imbalance between chunks self-levels
+//! (the same reason the paper's virtual-thread model maps well to GPUs).
+//!
+//! The pool is created once per process (see [`global`]) with
+//! `HMX_THREADS` (default: available parallelism) workers.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Type-erased chunk consumer: receives a chunk index in `0..n_chunks`.
+type Job = Arc<dyn Fn(usize) + Send + Sync>;
+
+struct Shared {
+    state: Mutex<State>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+    next_chunk: AtomicUsize,
+}
+
+struct State {
+    /// Monotonic id of the current job; workers detect new work by the bump.
+    epoch: u64,
+    job: Option<Job>,
+    n_chunks: usize,
+    /// Workers still running chunks of the current job.
+    active: usize,
+    shutdown: bool,
+}
+
+/// A persistent pool of `workers` OS threads executing chunked jobs.
+pub struct Pool {
+    shared: Arc<Shared>,
+    pub workers: usize,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Pool {
+    pub fn new(workers: usize) -> Self {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                job: None,
+                n_chunks: 0,
+                active: 0,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            next_chunk: AtomicUsize::new(0),
+        });
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let sh = shared.clone();
+            handles.push(std::thread::spawn(move || worker_loop(sh)));
+        }
+        Pool { shared, workers, handles }
+    }
+
+    /// Run `job` over `n_chunks` chunks, blocking until all chunks finish.
+    /// The calling thread participates, so a pool of W workers yields W+1
+    /// executing threads.
+    pub fn run(&self, n_chunks: usize, job: impl Fn(usize) + Send + Sync) {
+        if n_chunks == 0 {
+            return;
+        }
+        // Erase the lifetime: we block until all chunks complete before
+        // returning, so the borrow cannot escape. This is the standard
+        // scoped-parallelism transmute (same contract as std::thread::scope).
+        let job: Arc<dyn Fn(usize) + Send + Sync> = unsafe {
+            std::mem::transmute::<Arc<dyn Fn(usize) + Send + Sync + '_>, Job>(Arc::new(job))
+        };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.epoch += 1;
+            st.job = Some(job.clone());
+            st.n_chunks = n_chunks;
+            st.active = self.workers;
+            self.shared.next_chunk.store(0, Ordering::Relaxed);
+            self.shared.work_cv.notify_all();
+        }
+        // Caller participates.
+        loop {
+            let c = self.shared.next_chunk.fetch_add(1, Ordering::Relaxed);
+            if c >= n_chunks {
+                break;
+            }
+            job(c);
+        }
+        // Wait for workers to drain.
+        let mut st = self.shared.state.lock().unwrap();
+        while st.active > 0 {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        st.job = None;
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    let mut seen_epoch = 0u64;
+    loop {
+        let (job, n_chunks) = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen_epoch && st.job.is_some() {
+                    seen_epoch = st.epoch;
+                    break;
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+            (st.job.clone().unwrap(), st.n_chunks)
+        };
+        loop {
+            let c = shared.next_chunk.fetch_add(1, Ordering::Relaxed);
+            if c >= n_chunks {
+                break;
+            }
+            job(c);
+        }
+        let mut st = shared.state.lock().unwrap();
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+/// The process-global pool. Size from `HMX_THREADS` or available parallelism.
+pub fn global() -> &'static Pool {
+    static POOL: once_cell::sync::Lazy<Pool> = once_cell::sync::Lazy::new(|| {
+        let workers = std::env::var("HMX_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+            })
+            .max(1)
+            // one slot is the caller thread
+            .saturating_sub(1);
+        Pool::new(workers)
+    });
+    &POOL
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn run_executes_every_chunk_exactly_once() {
+        let pool = Pool::new(3);
+        let hits = (0..97).map(|_| AtomicU64::new(0)).collect::<Vec<_>>();
+        pool.run(97, |c| {
+            hits[c].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn run_zero_chunks_is_noop() {
+        let pool = Pool::new(2);
+        pool.run(0, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn sequential_jobs_do_not_interfere() {
+        let pool = Pool::new(4);
+        for round in 0..20 {
+            let sum = AtomicU64::new(0);
+            pool.run(64, |c| {
+                sum.fetch_add(c as u64, Ordering::Relaxed);
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), 64 * 63 / 2, "round {round}");
+        }
+    }
+
+    #[test]
+    fn global_pool_is_usable() {
+        let sum = AtomicU64::new(0);
+        global().run(10, |c| {
+            sum.fetch_add(c as u64 + 1, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 55);
+    }
+}

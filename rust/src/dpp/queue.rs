@@ -1,0 +1,112 @@
+//! Write-only parallel output queues (§4.3, Fig 5).
+//!
+//! Threads of a kernel `put` items concurrently; an atomic head pointer is
+//! bumped with `fetch_add` and the old head is the write slot — exactly the
+//! paper's GPU construction. The queue is drained as a plain array
+//! afterwards (no concurrent reads during enqueue).
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub struct OutputQueue<T> {
+    slots: Vec<UnsafeCell<MaybeUninit<T>>>,
+    head: AtomicUsize,
+}
+
+// Safety: distinct `put` calls write distinct slots (unique fetch_add
+// tickets); reads only happen after all writers finished (into_vec takes
+// &mut self / self by value).
+unsafe impl<T: Send> Send for OutputQueue<T> {}
+unsafe impl<T: Send> Sync for OutputQueue<T> {}
+
+impl<T> OutputQueue<T> {
+    /// Queue with fixed `capacity`. The H-matrix pipeline always has an
+    /// exact or upper-bound capacity available from a preceding scan (e.g.
+    /// each tree node enqueues at most one leaf), mirroring the paper's
+    /// "predict the size or re-allocate dynamically" discussion.
+    pub fn with_capacity(capacity: usize) -> Self {
+        let mut slots = Vec::with_capacity(capacity);
+        slots.resize_with(capacity, || UnsafeCell::new(MaybeUninit::uninit()));
+        OutputQueue { slots, head: AtomicUsize::new(0) }
+    }
+
+    /// Concurrently enqueue `item`; returns its slot index.
+    /// Panics if capacity is exceeded (capacity is an invariant upstream).
+    #[inline]
+    pub fn put(&self, item: T) -> usize {
+        let slot = self.head.fetch_add(1, Ordering::Relaxed);
+        assert!(slot < self.slots.len(), "OutputQueue overflow: capacity {}", self.slots.len());
+        unsafe { (*self.slots[slot].get()).write(item) };
+        slot
+    }
+
+    /// Number of items enqueued so far.
+    pub fn len(&self) -> usize {
+        self.head.load(Ordering::Relaxed).min(self.slots.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drain into a Vec (order is the enqueue-ticket order, which is
+    /// unordered with respect to thread ids — as the paper allows).
+    pub fn into_vec(self) -> Vec<T> {
+        let n = self.len();
+        let mut slots = self.slots;
+        let mut out = Vec::with_capacity(n);
+        for cell in slots.drain(..n) {
+            out.push(unsafe { cell.into_inner().assume_init() });
+        }
+        // remaining slots are uninit; dropped as MaybeUninit (no-op)
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpp::executor::launch;
+
+    #[test]
+    fn concurrent_puts_keep_all_items() {
+        let n = 100_000;
+        let q = OutputQueue::with_capacity(n);
+        launch(n, |tid| {
+            q.put(tid as u64);
+        });
+        let mut v = q.into_vec();
+        v.sort();
+        assert_eq!(v, (0..n as u64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn selective_puts() {
+        let n = 10_000;
+        let q = OutputQueue::with_capacity(n);
+        launch(n, |tid| {
+            if tid % 3 == 0 {
+                q.put(tid);
+            }
+        });
+        let v = q.into_vec();
+        assert_eq!(v.len(), n.div_ceil(3));
+        assert!(v.iter().all(|&x| x % 3 == 0));
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn overflow_panics() {
+        let q = OutputQueue::with_capacity(1);
+        q.put(1u8);
+        q.put(2u8);
+    }
+
+    #[test]
+    fn empty_queue_drains_empty() {
+        let q: OutputQueue<u8> = OutputQueue::with_capacity(8);
+        assert!(q.is_empty());
+        assert!(q.into_vec().is_empty());
+    }
+}

@@ -1,0 +1,207 @@
+//! Parallel reductions and `reduce_by_key` (segmented reduction).
+//!
+//! `reduce_by_key` is the heart of the batching pattern (§4.2, Fig 3): a
+//! batched array tagged with a keys array (identical consecutive keys = one
+//! batch) is reduced per batch in a single parallel operation — this is how
+//! bounding boxes of *all* clusters on a tree level are computed at once
+//! (Alg 7) and how batched ACA finds per-block pivots.
+
+use super::executor::{auto_grain, launch, launch_blocked, GlobalMem};
+use super::scan::exclusive_scan;
+
+/// Parallel reduction of `data` with the associative `op` and identity.
+pub fn reduce<T, F>(data: &[T], identity: T, op: F) -> T
+where
+    T: Copy + Send + Sync,
+    F: Fn(T, T) -> T + Send + Sync,
+{
+    let n = data.len();
+    if n == 0 {
+        return identity;
+    }
+    let grain = auto_grain(n, 8192);
+    let n_blocks = n.div_ceil(grain);
+    let mut partials = vec![identity; n_blocks];
+    {
+        let p = GlobalMem::new(&mut partials);
+        launch_blocked(n, grain, |lo, hi| {
+            let mut acc = identity;
+            for &v in &data[lo..hi] {
+                acc = op(acc, v);
+            }
+            p.write(lo / grain, acc);
+        });
+    }
+    partials.into_iter().fold(identity, op)
+}
+
+/// Result of [`reduce_by_key`]: one entry per segment of identical
+/// consecutive keys.
+pub struct SegmentedReduce<K, T> {
+    pub keys: Vec<K>,
+    pub values: Vec<T>,
+}
+
+/// Segmented reduction over consecutive identical keys, exactly Thrust's
+/// `reduce_by_key`. Keys need not be globally sorted; only runs of equal
+/// consecutive keys define segments (as in the paper's Fig 3).
+pub fn reduce_by_key<K, T, F>(keys: &[K], values: &[T], identity: T, op: F) -> SegmentedReduce<K, T>
+where
+    K: Copy + PartialEq + Send + Sync,
+    T: Copy + Send + Sync,
+    F: Fn(T, T) -> T + Send + Sync,
+{
+    let n = keys.len();
+    assert_eq!(n, values.len());
+    if n == 0 {
+        return SegmentedReduce { keys: Vec::new(), values: Vec::new() };
+    }
+    // 1. flag segment heads
+    let mut flags = vec![0usize; n];
+    {
+        let f = GlobalMem::new(&mut flags);
+        launch(n, |i| {
+            let head = i == 0 || keys[i] != keys[i - 1];
+            f.write(i, head as usize);
+        });
+    }
+    // 2. scan flags -> segment index per element; total = #segments
+    let seg_index = exclusive_scan(&flags);
+    let n_segs = seg_index[n];
+    // 3. gather segment start offsets
+    let mut starts = vec![0usize; n_segs + 1];
+    {
+        let s = GlobalMem::new(&mut starts);
+        launch(n, |i| {
+            if flags[i] == 1 {
+                s.write(seg_index[i], i);
+            }
+        });
+        s.write(n_segs, n);
+    }
+    // 4. reduce each segment. Parallel over segments; if there are few,
+    //    fat segments, reduce each one with a parallel blocked reduce so a
+    //    handful of giant clusters (tree levels near the root) cannot
+    //    serialize the whole operation.
+    let mut out_keys: Vec<K> = Vec::with_capacity(n_segs);
+    let mut out_vals: Vec<T> = Vec::with_capacity(n_segs);
+    unsafe {
+        out_keys.set_len(n_segs);
+        out_vals.set_len(n_segs);
+    }
+    let few_fat = n_segs < 4 * super::executor::width() && n / n_segs.max(1) > 4096;
+    if few_fat {
+        for s in 0..n_segs {
+            let (lo, hi) = (starts[s], starts[s + 1]);
+            out_keys[s] = keys[lo];
+            out_vals[s] = reduce(&values[lo..hi], identity, &op);
+        }
+    } else {
+        let ok = GlobalMem::new(&mut out_keys);
+        let ov = GlobalMem::new(&mut out_vals);
+        launch_with_seg_grain(n_segs, |s| {
+            let (lo, hi) = (starts[s], starts[s + 1]);
+            let mut acc = identity;
+            for &v in &values[lo..hi] {
+                acc = op(acc, v);
+            }
+            ok.write(s, keys[lo]);
+            ov.write(s, acc);
+        });
+    }
+    SegmentedReduce { keys: out_keys, values: out_vals }
+}
+
+#[inline]
+fn launch_with_seg_grain<F: Fn(usize) + Send + Sync>(n_segs: usize, body: F) {
+    // Segments vary in size; small grain levels the imbalance.
+    super::executor::launch_with_grain(n_segs, 16, body)
+}
+
+/// Argmax-by-key: returns, per segment, the (global index, value) of the
+/// element with maximal `score`. Used by batched ACA pivoting (§5.4.1).
+pub fn argmax_by_key<K, S>(keys: &[K], scores: &[S]) -> SegmentedReduce<K, (usize, S)>
+where
+    K: Copy + PartialEq + Send + Sync,
+    S: Copy + PartialOrd + Send + Sync,
+{
+    let idx_scores: Vec<(usize, S)> = scores.iter().copied().enumerate().collect();
+    // identity: usize::MAX marks "empty" (never survives a comparison against
+    // a real element because we special-case it in the op).
+    let first = idx_scores.first().copied().unwrap_or((usize::MAX, scores[0]));
+    reduce_by_key(keys, &idx_scores, (usize::MAX, first.1), |a, b| {
+        if a.0 == usize::MAX {
+            b
+        } else if b.0 == usize::MAX {
+            a
+        } else if b.1 > a.1 {
+            b
+        } else {
+            a
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduce_sum_matches() {
+        let v: Vec<u64> = (0..100_000).collect();
+        assert_eq!(reduce(&v, 0, |a, b| a + b), 100_000 * 99_999 / 2);
+    }
+
+    #[test]
+    fn reduce_empty_gives_identity() {
+        assert_eq!(reduce::<u64, _>(&[], 42, |a, b| a + b), 42);
+    }
+
+    #[test]
+    fn reduce_by_key_basic() {
+        // Fig 3 of the paper: max-reduce per key segment.
+        let keys = [1u32, 1, 1, 2, 2, 3, 3, 3, 3];
+        let vals = [4.0f64, 7.0, 1.0, 2.0, 9.0, 3.0, 3.0, 8.0, 0.0];
+        let r = reduce_by_key(&keys, &vals, f64::NEG_INFINITY, f64::max);
+        assert_eq!(r.keys, vec![1, 2, 3]);
+        assert_eq!(r.values, vec![7.0, 9.0, 8.0]);
+    }
+
+    #[test]
+    fn reduce_by_key_nonsorted_runs() {
+        // Runs, not global sort, define segments.
+        let keys = [5u32, 5, 1, 1, 5];
+        let vals = [1u64, 2, 3, 4, 5];
+        let r = reduce_by_key(&keys, &vals, 0, |a, b| a + b);
+        assert_eq!(r.keys, vec![5, 1, 5]);
+        assert_eq!(r.values, vec![3, 7, 5]);
+    }
+
+    #[test]
+    fn reduce_by_key_few_fat_segments() {
+        let n = 1 << 18;
+        let keys: Vec<u32> = (0..n).map(|i| (i >= n / 2) as u32).collect();
+        let vals = vec![1u64; n];
+        let r = reduce_by_key(&keys, &vals, 0, |a, b| a + b);
+        assert_eq!(r.values, vec![(n / 2) as u64, (n / 2) as u64]);
+    }
+
+    #[test]
+    fn reduce_by_key_many_tiny_segments() {
+        let n = 100_000;
+        let keys: Vec<u32> = (0..n as u32).collect();
+        let vals = vec![2u64; n];
+        let r = reduce_by_key(&keys, &vals, 0, |a, b| a + b);
+        assert_eq!(r.keys.len(), n);
+        assert!(r.values.iter().all(|&v| v == 2));
+    }
+
+    #[test]
+    fn argmax_by_key_finds_positions() {
+        let keys = [0u32, 0, 0, 1, 1];
+        let scores = [0.5f64, 2.5, 1.0, 3.0, 0.1];
+        let r = argmax_by_key(&keys, &scores);
+        assert_eq!(r.values[0].0, 1);
+        assert_eq!(r.values[1].0, 3);
+    }
+}

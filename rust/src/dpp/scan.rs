@@ -1,0 +1,146 @@
+//! Parallel prefix sums (exclusive / inclusive scan).
+//!
+//! The classic two-phase blocked scan: (1) per-block partial sums in
+//! parallel, (2) a (short) sequential scan over the block sums, (3) per-block
+//! local scans offset by the block prefix. This is the same decomposition
+//! Thrust / CUB use and runs in O(n / P + P).
+//!
+//! Scans are the workhorse of the paper's patterns: child offsets in the
+//! level-wise tree traversal (Alg 4), key generation for batching (Alg 5),
+//! and the bbox map construction (Alg 8).
+
+use super::executor::{auto_grain, launch_blocked, GlobalMem};
+
+/// Element trait for scans: addition with a zero.
+pub trait ScanElem: Copy + Send + Sync {
+    const ZERO: Self;
+    fn add(self, other: Self) -> Self;
+}
+
+macro_rules! impl_scan_elem {
+    ($($t:ty),*) => {$(
+        impl ScanElem for $t {
+            const ZERO: Self = 0 as $t;
+            #[inline]
+            fn add(self, other: Self) -> Self { self + other }
+        }
+    )*};
+}
+impl_scan_elem!(usize, u32, u64, i64, f64);
+
+/// Exclusive scan of `input` into a fresh vector of length `input.len() + 1`;
+/// the final element is the total (the paper's Alg 4 uses precisely this
+/// "one extra slot" form to read off |V(l+1)|).
+pub fn exclusive_scan<T: ScanElem>(input: &[T]) -> Vec<T> {
+    let n = input.len();
+    let mut out = vec![T::ZERO; n + 1];
+    if n == 0 {
+        return out;
+    }
+    let grain = auto_grain(n, 8192);
+    let n_blocks = n.div_ceil(grain);
+    let mut block_sums = vec![T::ZERO; n_blocks];
+    {
+        let bs = GlobalMem::new(&mut block_sums);
+        launch_blocked(n, grain, |lo, hi| {
+            let mut acc = T::ZERO;
+            for &v in &input[lo..hi] {
+                acc = acc.add(v);
+            }
+            bs.write(lo / grain, acc);
+        });
+    }
+    // Sequential scan over block sums (n_blocks ~ 4 * width, tiny).
+    let mut acc = T::ZERO;
+    let mut block_offsets = Vec::with_capacity(n_blocks);
+    for &s in &block_sums {
+        block_offsets.push(acc);
+        acc = acc.add(s);
+    }
+    out[n] = acc;
+    {
+        let o = GlobalMem::new(&mut out[..n]);
+        launch_blocked(n, grain, |lo, hi| {
+            let mut acc = block_offsets[lo / grain];
+            for i in lo..hi {
+                o.write(i, acc);
+                acc = acc.add(input[i]);
+            }
+        });
+    }
+    out
+}
+
+/// In-place exclusive scan; returns the total.
+pub fn exclusive_scan_in_place<T: ScanElem>(data: &mut [T]) -> T {
+    let scanned = exclusive_scan(data);
+    let total = scanned[data.len()];
+    data.copy_from_slice(&scanned[..data.len()]);
+    total
+}
+
+/// In-place inclusive scan; returns the total (= last element).
+pub fn inclusive_scan_in_place<T: ScanElem>(data: &mut [T]) -> T {
+    let n = data.len();
+    if n == 0 {
+        return T::ZERO;
+    }
+    let scanned = exclusive_scan(data);
+    let total = scanned[n];
+    {
+        let d = GlobalMem::new(data);
+        launch_blocked(n, auto_grain(n, 8192), |lo, hi| {
+            for i in lo..hi {
+                d.write(i, scanned[i].add(d.read(i)));
+            }
+        });
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_exclusive(input: &[u64]) -> Vec<u64> {
+        let mut out = Vec::with_capacity(input.len() + 1);
+        let mut acc = 0;
+        for &v in input {
+            out.push(acc);
+            acc += v;
+        }
+        out.push(acc);
+        out
+    }
+
+    #[test]
+    fn exclusive_scan_matches_naive() {
+        for n in [0usize, 1, 2, 1000, 65537] {
+            let input: Vec<u64> = (0..n as u64).map(|i| (i * 7 + 3) % 11).collect();
+            assert_eq!(exclusive_scan(&input), naive_exclusive(&input), "n={n}");
+        }
+    }
+
+    #[test]
+    fn exclusive_scan_in_place_returns_total() {
+        let mut v = vec![1u64, 2, 3, 4];
+        let total = exclusive_scan_in_place(&mut v);
+        assert_eq!(total, 10);
+        assert_eq!(v, vec![0, 1, 3, 6]);
+    }
+
+    #[test]
+    fn inclusive_scan_in_place_matches() {
+        let mut v = vec![1u64, 2, 3, 4];
+        let total = inclusive_scan_in_place(&mut v);
+        assert_eq!(total, 10);
+        assert_eq!(v, vec![1, 3, 6, 10]);
+    }
+
+    #[test]
+    fn scan_f64_works() {
+        let v = vec![0.5f64; 1000];
+        let s = exclusive_scan(&v);
+        assert!((s[1000] - 500.0).abs() < 1e-9);
+    }
+}

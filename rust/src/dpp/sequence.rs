@@ -1,0 +1,69 @@
+//! Iota / gather / scatter / permute helpers (Thrust's `sequence`,
+//! `gather`, `scatter`).
+
+use super::executor::{launch, GlobalMem};
+
+/// `[start, start+1, ..., start+n-1]` produced in parallel.
+pub fn sequence(n: usize, start: usize) -> Vec<usize> {
+    let mut out = vec![0usize; n];
+    let o = GlobalMem::new(&mut out);
+    launch(n, |i| o.write(i, start + i));
+    out
+}
+
+/// `out[i] = data[indices[i]]`.
+pub fn gather<T: Copy + Send + Sync>(data: &[T], indices: &[u32]) -> Vec<T> {
+    let n = indices.len();
+    let mut out: Vec<T> = Vec::with_capacity(n);
+    unsafe { out.set_len(n) };
+    {
+        let o = GlobalMem::new(&mut out);
+        launch(n, |i| o.write(i, data[indices[i] as usize]));
+    }
+    out
+}
+
+/// `out[indices[i]] = data[i]`; `indices` must be a permutation or at least
+/// collision-free (§3.1 write rule).
+pub fn scatter<T: Copy + Send + Sync>(data: &[T], indices: &[u32], out: &mut [T]) {
+    let n = data.len();
+    assert_eq!(n, indices.len());
+    let o = GlobalMem::new(out);
+    launch(n, |i| o.write(indices[i] as usize, data[i]));
+}
+
+/// In-place permute: `data[i] <- data[perm[i]]` (via a temporary gather).
+pub fn permute_in_place<T: Copy + Send + Sync>(data: &mut Vec<T>, perm: &[u32]) {
+    assert_eq!(data.len(), perm.len());
+    let gathered = gather(data, perm);
+    *data = gathered;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequence_is_iota() {
+        assert_eq!(sequence(5, 10), vec![10, 11, 12, 13, 14]);
+        assert!(sequence(0, 0).is_empty());
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let data = vec![10.0f64, 20.0, 30.0, 40.0];
+        let perm = vec![2u32, 0, 3, 1];
+        let g = gather(&data, &perm);
+        assert_eq!(g, vec![30.0, 10.0, 40.0, 20.0]);
+        let mut back = vec![0.0; 4];
+        scatter(&g, &perm, &mut back);
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn permute_in_place_matches_gather() {
+        let mut data = vec![1u64, 2, 3, 4, 5];
+        permute_in_place(&mut data, &[4, 3, 2, 1, 0]);
+        assert_eq!(data, vec![5, 4, 3, 2, 1]);
+    }
+}

@@ -1,0 +1,143 @@
+//! Parallel stable LSD radix sort for `u64` keys (with `u32` payload).
+//!
+//! The paper assumes a vendor `stable_sort` (Thrust's radix sort) for
+//! ordering points by Morton code (§4.4) and index bounds (Alg 7/8). This
+//! is the textbook parallel LSD radix: per pass, (1) per-block digit
+//! histograms, (2) an exclusive scan over the (digit-major) histogram matrix
+//! yielding stable global scatter offsets, (3) per-block ordered scatter.
+//! 8 bits per pass; passes beyond the maximum set bit are skipped.
+
+use super::executor::{auto_grain, launch_blocked, GlobalMem};
+use crate::metrics;
+
+const RADIX_BITS: usize = 8;
+const RADIX: usize = 1 << RADIX_BITS;
+
+/// Sort `keys` ascending (stable), permuting `vals` alongside.
+pub fn sort_pairs_u64(keys: &mut Vec<u64>, vals: &mut Vec<u32>) {
+    let n = keys.len();
+    assert_eq!(n, vals.len());
+    if n <= 1 {
+        return;
+    }
+    metrics::count_launch(n); // account the sort as one aggregate operation
+    // Skip passes above the highest set bit.
+    let max_key = crate::dpp::reduce::reduce(keys, 0u64, u64::max);
+    let significant_bits = 64 - max_key.leading_zeros() as usize;
+    let passes = significant_bits.div_ceil(RADIX_BITS).max(1);
+
+    let grain = auto_grain(n, 16384);
+    let n_blocks = n.div_ceil(grain);
+
+    let mut keys_tmp = vec![0u64; n];
+    let mut vals_tmp = vec![0u32; n];
+    // histogram matrix: digit-major [digit][block] for a single scan to give
+    // stable offsets (all blocks of digit d, in block order, then digit d+1).
+    let mut hist = vec![0usize; RADIX * n_blocks];
+
+    for pass in 0..passes {
+        let shift = pass * RADIX_BITS;
+        // 1. per-block histograms
+        hist.iter_mut().for_each(|h| *h = 0);
+        {
+            let h = GlobalMem::new(&mut hist);
+            launch_blocked(n, grain, |lo, hi| {
+                let b = lo / grain;
+                for &k in &keys[lo..hi] {
+                    let d = ((k >> shift) as usize) & (RADIX - 1);
+                    *h.get_mut(d * n_blocks + b) += 1;
+                }
+            });
+        }
+        // 2. exclusive scan over digit-major histogram
+        super::scan::exclusive_scan_in_place(&mut hist);
+        // 3. stable per-block scatter
+        {
+            let kt = GlobalMem::new(&mut keys_tmp);
+            let vt = GlobalMem::new(&mut vals_tmp);
+            let h = GlobalMem::new(&mut hist);
+            launch_blocked(n, grain, |lo, hi| {
+                let b = lo / grain;
+                // local running offsets per digit for this block
+                let mut offs = [0usize; RADIX];
+                for d in 0..RADIX {
+                    offs[d] = h.read(d * n_blocks + b);
+                }
+                for i in lo..hi {
+                    let k = keys[i];
+                    let d = ((k >> shift) as usize) & (RADIX - 1);
+                    let dst = offs[d];
+                    offs[d] += 1;
+                    kt.write(dst, k);
+                    vt.write(dst, vals[i]);
+                }
+            });
+        }
+        std::mem::swap(keys, &mut keys_tmp);
+        std::mem::swap(vals, &mut vals_tmp);
+    }
+}
+
+/// Sort keys ascending (stable); convenience wrapper.
+pub fn sort_u64(keys: &mut Vec<u64>) {
+    let mut dummy: Vec<u32> = vec![0; keys.len()];
+    sort_pairs_u64(keys, &mut dummy);
+}
+
+/// Sort and return the applied permutation `perm` such that
+/// `sorted[i] = original[perm[i]]` (the paper's Alg 8 keeps this
+/// permutation to map results back).
+pub fn sort_with_permutation_u64(keys: &mut Vec<u64>) -> Vec<u32> {
+    let mut perm: Vec<u32> = (0..keys.len() as u32).collect();
+    sort_pairs_u64(keys, &mut perm);
+    perm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn sorts_random_keys() {
+        let mut rng = Xoshiro256::seed(7);
+        for n in [0usize, 1, 2, 255, 256, 10_000, 200_000] {
+            let mut keys: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            let mut expect = keys.clone();
+            expect.sort();
+            sort_u64(&mut keys);
+            assert_eq!(keys, expect, "n={n}");
+        }
+    }
+
+    #[test]
+    fn stable_for_equal_keys() {
+        // Equal keys must keep payload order (stability).
+        let mut keys = vec![3u64, 1, 3, 1, 3];
+        let mut vals = vec![0u32, 1, 2, 3, 4];
+        sort_pairs_u64(&mut keys, &mut vals);
+        assert_eq!(keys, vec![1, 1, 3, 3, 3]);
+        assert_eq!(vals, vec![1, 3, 0, 2, 4]);
+    }
+
+    #[test]
+    fn payload_follows_keys() {
+        let mut rng = Xoshiro256::seed(11);
+        let n = 50_000;
+        let orig: Vec<u64> = (0..n).map(|_| rng.next_u64() % 1000).collect();
+        let mut keys = orig.clone();
+        let perm = sort_with_permutation_u64(&mut keys);
+        for i in 0..n {
+            assert_eq!(keys[i], orig[perm[i] as usize]);
+        }
+    }
+
+    #[test]
+    fn small_key_range_few_passes() {
+        let mut keys: Vec<u64> = (0..100_000u64).map(|i| i % 7).collect();
+        let mut expect = keys.clone();
+        expect.sort();
+        sort_u64(&mut keys);
+        assert_eq!(keys, expect);
+    }
+}

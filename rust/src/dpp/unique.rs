@@ -1,0 +1,62 @@
+//! Parallel `unique` on sorted input (flag heads → scan → scatter), as used
+//! by Alg 7 to find the set of distinct clusters on a tree level.
+
+use super::executor::{launch, GlobalMem};
+use super::scan::exclusive_scan;
+
+/// Deduplicate runs of equal consecutive elements (i.e. `unique` on sorted
+/// data). Returns the compacted vector.
+pub fn unique_sorted<T: Copy + PartialEq + Send + Sync>(data: &[T]) -> Vec<T> {
+    let n = data.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut flags = vec![0usize; n];
+    {
+        let f = GlobalMem::new(&mut flags);
+        launch(n, |i| {
+            f.write(i, (i == 0 || data[i] != data[i - 1]) as usize);
+        });
+    }
+    let offsets = exclusive_scan(&flags);
+    let m = offsets[n];
+    let mut out: Vec<T> = Vec::with_capacity(m);
+    unsafe { out.set_len(m) };
+    {
+        let o = GlobalMem::new(&mut out);
+        launch(n, |i| {
+            if flags[i] == 1 {
+                o.write(offsets[i], data[i]);
+            }
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dedups_sorted_runs() {
+        let data = vec![1u64, 1, 2, 2, 2, 5, 9, 9];
+        assert_eq!(unique_sorted(&data), vec![1, 2, 5, 9]);
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        assert_eq!(unique_sorted::<u64>(&[]), Vec::<u64>::new());
+        assert_eq!(unique_sorted(&[7u64]), vec![7]);
+    }
+
+    #[test]
+    fn all_equal_collapses_to_one() {
+        assert_eq!(unique_sorted(&vec![3u32; 100_000]), vec![3]);
+    }
+
+    #[test]
+    fn pairs_are_supported() {
+        let data = vec![(0usize, 4usize), (0, 4), (4, 8), (4, 8), (8, 16)];
+        assert_eq!(unique_sorted(&data), vec![(0, 4), (4, 8), (8, 16)]);
+    }
+}

@@ -1,0 +1,80 @@
+//! Halton quasi-Monte-Carlo sequences — the paper's model point
+//! distribution on the unit square / cube (§6.2).
+
+use crate::dpp::executor::{launch, GlobalMem};
+use crate::geometry::points::PointSet;
+
+const PRIMES: [u64; 8] = [2, 3, 5, 7, 11, 13, 17, 19];
+
+/// The `i`-th element (1-based internally; pass 0-based index) of the van
+/// der Corput sequence in base `b`: radical inverse of `i+1`.
+#[inline]
+pub fn van_der_corput(index: usize, base: u64) -> f64 {
+    let mut i = (index + 1) as u64;
+    let mut f = 1.0;
+    let mut r = 0.0;
+    let bf = base as f64;
+    while i > 0 {
+        f /= bf;
+        r += f * (i % base) as f64;
+        i /= base;
+    }
+    r
+}
+
+/// `n` Halton points in `[0,1]^d` (bases = first d primes), generated in
+/// parallel (one virtual thread per point).
+pub fn halton_points(n: usize, d: usize) -> PointSet {
+    assert!(d <= PRIMES.len(), "halton supports d <= {}", PRIMES.len());
+    let mut coords = vec![0.0f64; n * d];
+    {
+        let c = GlobalMem::new(&mut coords);
+        launch(n, |i| {
+            for (k, &p) in PRIMES[..d].iter().enumerate() {
+                c.write(k * n + i, van_der_corput(i, p));
+            }
+        });
+    }
+    PointSet::from_dim_major(coords, n, d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn van_der_corput_base2_prefix() {
+        // 1/2, 1/4, 3/4, 1/8, 5/8, ...
+        let expect = [0.5, 0.25, 0.75, 0.125, 0.625];
+        for (i, &e) in expect.iter().enumerate() {
+            assert!((van_der_corput(i, 2) - e).abs() < 1e-15, "i={i}");
+        }
+    }
+
+    #[test]
+    fn points_in_unit_cube() {
+        let p = halton_points(5000, 3);
+        for i in 0..p.len() {
+            for k in 0..3 {
+                let c = p.coord(k, i);
+                assert!((0.0..1.0).contains(&c));
+            }
+        }
+    }
+
+    #[test]
+    fn low_discrepancy_beats_worst_case() {
+        // Crude uniformity check: each of the 4 quadrants of [0,1]^2 gets
+        // roughly a quarter of the points.
+        let n = 4096;
+        let p = halton_points(n, 2);
+        let mut counts = [0usize; 4];
+        for i in 0..n {
+            let q = (p.coord(0, i) >= 0.5) as usize + 2 * ((p.coord(1, i) >= 0.5) as usize);
+            counts[q] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - n as f64 / 4.0).abs() < n as f64 * 0.02, "{counts:?}");
+        }
+    }
+}

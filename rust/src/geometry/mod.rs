@@ -1,0 +1,9 @@
+//! Geometry substrate: point sets (SoA, dim-major — the paper's `point_set`
+//! struct), Halton quasi-Monte-Carlo sequences (the paper's model workload,
+//! §6.2), kernel functions φ (Gaussian, Matérn, exponential) and the
+//! modified Bessel function K₁ the Matérn kernel needs.
+
+pub mod bessel;
+pub mod halton;
+pub mod kernel;
+pub mod points;

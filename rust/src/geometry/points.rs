@@ -1,0 +1,185 @@
+//! Point sets in structure-of-arrays, dimension-major layout.
+//!
+//! `coords[dim * n + i]` is coordinate `dim` of point `i` — the paper's
+//! `coords[i][t]` layout, chosen so per-dimension batched reductions
+//! (bounding boxes, Alg 7) stream contiguously.
+
+use crate::dpp::executor::{launch, GlobalMem};
+use crate::dpp::reduce::reduce;
+use crate::dpp::sequence::gather;
+
+#[derive(Clone)]
+pub struct PointSet {
+    coords: Vec<f64>,
+    n: usize,
+    d: usize,
+}
+
+impl PointSet {
+    /// From dim-major coordinates (`coords.len() == n * d`).
+    pub fn from_dim_major(coords: Vec<f64>, n: usize, d: usize) -> Self {
+        assert_eq!(coords.len(), n * d);
+        PointSet { coords, n, d }
+    }
+
+    /// From point-major rows `[x0, y0, x1, y1, ...]`.
+    pub fn from_rows(rows: &[f64], d: usize) -> Self {
+        assert_eq!(rows.len() % d, 0);
+        let n = rows.len() / d;
+        let mut coords = vec![0.0; n * d];
+        {
+            let c = GlobalMem::new(&mut coords);
+            launch(n, |i| {
+                for k in 0..d {
+                    c.write(k * n + i, rows[i * d + k]);
+                }
+            });
+        }
+        PointSet { coords, n, d }
+    }
+
+    /// Halton sequence of `n` points in `[0,1]^d` (the paper's workload).
+    pub fn halton(n: usize, d: usize) -> Self {
+        crate::geometry::halton::halton_points(n, d)
+    }
+
+    /// Uniform random points in `[0,1]^d`.
+    pub fn random(n: usize, d: usize, seed: u64) -> Self {
+        let mut rng = crate::util::prng::Xoshiro256::seed(seed);
+        let coords: Vec<f64> = (0..n * d).map(|_| rng.next_f64()).collect();
+        PointSet { coords, n, d }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Coordinate `k` of point `i`.
+    #[inline]
+    pub fn coord(&self, k: usize, i: usize) -> f64 {
+        self.coords[k * self.n + i]
+    }
+
+    /// The contiguous slice of dimension `k`.
+    #[inline]
+    pub fn dim_slice(&self, k: usize) -> &[f64] {
+        &self.coords[k * self.n..(k + 1) * self.n]
+    }
+
+    /// Point `i` as a small vector.
+    pub fn point(&self, i: usize) -> Vec<f64> {
+        (0..self.d).map(|k| self.coord(k, i)).collect()
+    }
+
+    /// Squared Euclidean distance between points `i` and `j`.
+    #[inline]
+    pub fn dist2(&self, i: usize, j: usize) -> f64 {
+        let mut acc = 0.0;
+        for k in 0..self.d {
+            let diff = self.coord(k, i) - self.coord(k, j);
+            acc += diff * diff;
+        }
+        acc
+    }
+
+    #[inline]
+    pub fn dist(&self, i: usize, j: usize) -> f64 {
+        self.dist2(i, j).sqrt()
+    }
+
+    /// Per-dimension global (min, max) — parallel reductions.
+    pub fn global_bounds(&self) -> (Vec<f64>, Vec<f64>) {
+        let mut los = Vec::with_capacity(self.d);
+        let mut his = Vec::with_capacity(self.d);
+        for k in 0..self.d {
+            let s = self.dim_slice(k);
+            los.push(reduce(s, f64::INFINITY, f64::min));
+            his.push(reduce(s, f64::NEG_INFINITY, f64::max));
+        }
+        (los, his)
+    }
+
+    /// Reorder points: `new[i] = old[perm[i]]` (parallel gather per dim).
+    pub fn permute(&mut self, perm: &[u32]) {
+        assert_eq!(perm.len(), self.n);
+        let mut out = vec![0.0; self.n * self.d];
+        for k in 0..self.d {
+            let g = gather(self.dim_slice(k), perm);
+            out[k * self.n..(k + 1) * self.n].copy_from_slice(&g);
+        }
+        self.coords = out;
+    }
+
+    /// Copy the points of `idx range [lo, hi)` into a point-major buffer
+    /// `[p0_x, p0_y, ..., p1_x, ...]` appended to `out` (used to marshal
+    /// batched blocks to the XLA runtime).
+    pub fn extract_rows(&self, lo: usize, hi: usize, out: &mut Vec<f64>) {
+        for i in lo..hi {
+            for k in 0..self.d {
+                out.push(self.coord(k, i));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_rows_layout() {
+        let p = PointSet::from_rows(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2);
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.coord(0, 0), 1.0);
+        assert_eq!(p.coord(1, 0), 2.0);
+        assert_eq!(p.coord(0, 2), 5.0);
+        assert_eq!(p.dim_slice(0), &[1.0, 3.0, 5.0]);
+    }
+
+    #[test]
+    fn distances() {
+        let p = PointSet::from_rows(&[0.0, 0.0, 3.0, 4.0], 2);
+        assert!((p.dist(0, 1) - 5.0).abs() < 1e-15);
+        assert_eq!(p.dist2(0, 0), 0.0);
+    }
+
+    #[test]
+    fn global_bounds_match_naive() {
+        let p = PointSet::random(10_000, 3, 9);
+        let (los, his) = p.global_bounds();
+        for k in 0..3 {
+            let s = p.dim_slice(k);
+            let lo = s.iter().copied().fold(f64::INFINITY, f64::min);
+            let hi = s.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+            assert_eq!(los[k], lo);
+            assert_eq!(his[k], hi);
+        }
+    }
+
+    #[test]
+    fn permute_reorders() {
+        let mut p = PointSet::from_rows(&[0.0, 0.0, 1.0, 1.0, 2.0, 2.0], 2);
+        p.permute(&[2, 0, 1]);
+        assert_eq!(p.point(0), vec![2.0, 2.0]);
+        assert_eq!(p.point(1), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn extract_rows_point_major() {
+        let p = PointSet::from_rows(&[1.0, 2.0, 3.0, 4.0], 2);
+        let mut out = Vec::new();
+        p.extract_rows(0, 2, &mut out);
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+}

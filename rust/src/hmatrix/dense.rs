@@ -1,0 +1,154 @@
+//! Batched dense sub-matrix mat-vec (§5.4.2).
+//!
+//! The native engine fuses assembly and GEMV: one kernel over all batched
+//! rows, each virtual thread evaluating its row's kernel entries against
+//! the block's σ-columns and accumulating into z atomically (different
+//! blocks may share τ rows). The XLA engine instead materializes the padded
+//! batch through the Pallas assembly kernel and runs a batched GEMV —
+//! the paper's MAGMA `dgemv_vbatched` path; both are exposed so the
+//! Fig 15 ablation can compare.
+
+use crate::dpp::executor::{launch, GlobalMem};
+use crate::dpp::scan::exclusive_scan;
+use crate::geometry::kernel::Kernel;
+use crate::geometry::points::PointSet;
+use crate::tree::block::WorkItem;
+use crate::util::atomic::AtomicF64Vec;
+
+/// z|τ_b += A_b x|σ_b for every block of the batch, with A_b assembled on
+/// the fly (NP storage discipline, §5.4).
+pub fn batched_dense_matvec(
+    points: &PointSet,
+    kernel: Kernel,
+    blocks: &[WorkItem],
+    x: &[f64],
+    z: &AtomicF64Vec,
+) {
+    let nb = blocks.len();
+    if nb == 0 {
+        return;
+    }
+    let rows: Vec<usize> = blocks.iter().map(|w| w.rows()).collect();
+    let row_offsets = exclusive_scan(&rows);
+    let total_m = row_offsets[nb];
+    // flat row -> block map
+    let mut row_block = vec![0u32; total_m];
+    {
+        let rb = GlobalMem::new(&mut row_block);
+        launch(nb, |b| {
+            for f in row_offsets[b]..row_offsets[b + 1] {
+                rb.write(f, b as u32);
+            }
+        });
+    }
+    launch(total_m, |fr| {
+        let b = row_block[fr] as usize;
+        let w = &blocks[b];
+        let i = w.tau.lo + (fr - row_offsets[b]);
+        // fused assemble+dot row kernel (chunked, vectorized φ — §Perf)
+        let acc = kernel.row_dot(points, i, w.sigma.lo, w.sigma.hi, x);
+        z.add(i, acc);
+    });
+}
+
+/// Assemble the blocks into a padded batched buffer
+/// `[total_m × max_cols]` row-major, zero-padded columns (§5.4.2's storage
+/// scheme; what the XLA path sends through the Pallas assembly kernel).
+/// Returns `(buffer, row_offsets, max_cols)`.
+pub fn assemble_padded_batch(
+    points: &PointSet,
+    kernel: Kernel,
+    blocks: &[WorkItem],
+) -> (Vec<f64>, Vec<usize>, usize) {
+    let nb = blocks.len();
+    let rows: Vec<usize> = blocks.iter().map(|w| w.rows()).collect();
+    let row_offsets = exclusive_scan(&rows);
+    let total_m = row_offsets[nb];
+    let max_cols = blocks.iter().map(|w| w.cols()).max().unwrap_or(0);
+    let mut row_block = vec![0u32; total_m];
+    {
+        let rb = GlobalMem::new(&mut row_block);
+        launch(nb, |b| {
+            for f in row_offsets[b]..row_offsets[b + 1] {
+                rb.write(f, b as u32);
+            }
+        });
+    }
+    let mut buf = vec![0.0f64; total_m * max_cols];
+    {
+        let bf = GlobalMem::new(&mut buf);
+        launch(total_m, |fr| {
+            let b = row_block[fr] as usize;
+            let w = &blocks[b];
+            let i = w.tau.lo + (fr - row_offsets[b]);
+            for (jj, j) in (w.sigma.lo..w.sigma.hi).enumerate() {
+                bf.write(fr * max_cols + jj, kernel.eval(points, i, points, j));
+            }
+        });
+    }
+    (buf, row_offsets, max_cols)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::morton::morton_sort;
+    use crate::tree::block::build_block_tree;
+
+    fn setup(n: usize) -> (PointSet, Vec<WorkItem>) {
+        let mut pts = PointSet::halton(n, 2);
+        morton_sort(&mut pts);
+        let t = build_block_tree(&pts, 1.5, 32);
+        (pts, t.dense)
+    }
+
+    #[test]
+    fn batched_matches_naive() {
+        let (pts, blocks) = setup(512);
+        let kern = Kernel::gaussian();
+        let mut rng = crate::util::prng::Xoshiro256::seed(8);
+        let x = rng.vector(pts.len());
+        let z = AtomicF64Vec::zeros(pts.len());
+        batched_dense_matvec(&pts, kern, &blocks, &x, &z);
+        let got = z.into_vec();
+        let mut want = vec![0.0; pts.len()];
+        for w in &blocks {
+            for i in w.tau.lo..w.tau.hi {
+                for j in w.sigma.lo..w.sigma.hi {
+                    want[i] += kern.eval(&pts, i, &pts, j) * x[j];
+                }
+            }
+        }
+        let err = crate::util::rel_err(&got, &want);
+        assert!(err < 1e-12, "rel err {err}");
+    }
+
+    #[test]
+    fn padded_batch_layout_is_correct() {
+        let (pts, blocks) = setup(256);
+        let take = blocks.len().min(5);
+        let kern = Kernel::gaussian();
+        let (buf, row_offsets, max_cols) = assemble_padded_batch(&pts, kern, &blocks[..take]);
+        for (b, w) in blocks[..take].iter().enumerate() {
+            for (ii, i) in (w.tau.lo..w.tau.hi).enumerate() {
+                let fr = row_offsets[b] + ii;
+                for (jj, j) in (w.sigma.lo..w.sigma.hi).enumerate() {
+                    let want = kern.eval(&pts, i, &pts, j);
+                    assert_eq!(buf[fr * max_cols + jj], want);
+                }
+                // padding is zero
+                for jj in w.cols()..max_cols {
+                    assert_eq!(buf[fr * max_cols + jj], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_block_list_is_noop() {
+        let pts = PointSet::halton(16, 2);
+        let z = AtomicF64Vec::zeros(16);
+        batched_dense_matvec(&pts, Kernel::gaussian(), &[], &vec![1.0; 16], &z);
+        assert!(z.into_vec().iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,321 @@
+//! The H-matrix: construction pipeline and fast mat-vec (§2.5, §5).
+//!
+//! [`HMatrix::build`] runs the full many-core pipeline: Morton sort →
+//! level-wise block-cluster-tree traversal (leaf work queues) → batch
+//! planning under `bs_dense` / `bs_ACA` → optional pre-computation of the
+//! ACA factors (P mode). [`HMatrix::matvec`] executes the batched dense
+//! and low-rank products through the configured [`crate::coordinator`]
+//! engine (native many-core kernels or XLA/PJRT artifacts).
+
+pub mod dense;
+
+use crate::aca::batched::AcaFactors;
+use crate::batch::plan::{plan_batches, BatchBudget, BatchPlan, BlockShape};
+use crate::config::HmxConfig;
+use crate::coordinator::{make_engine, BatchEngine};
+use crate::dpp::sequence::gather;
+use crate::geometry::kernel::Kernel;
+use crate::geometry::points::PointSet;
+use crate::metrics::timed;
+use crate::morton::morton_sort;
+use crate::tree::block::{build_block_tree, WorkItem};
+use crate::util::atomic::AtomicF64Vec;
+use crate::Result;
+
+/// Statistics of a construction run (the paper's Fig 12/16 phases).
+#[derive(Clone, Debug, Default)]
+pub struct BuildStats {
+    pub n: usize,
+    pub admissible_blocks: usize,
+    pub dense_blocks: usize,
+    pub tree_levels: usize,
+    pub nodes_visited: usize,
+    pub aca_batches: usize,
+    pub dense_batches: usize,
+    /// P-mode factor storage in bytes (0 in NP mode).
+    pub factor_bytes: usize,
+}
+
+/// A truncated kernel matrix in H-matrix form.
+pub struct HMatrix {
+    /// Points in Morton order.
+    pub points: PointSet,
+    /// `perm[i]` = original index of the point at Morton position i.
+    pub perm: Vec<u32>,
+    pub kernel: Kernel,
+    pub cfg: HmxConfig,
+    /// Admissible leaves, in batch-plan order.
+    pub admissible: Vec<WorkItem>,
+    /// Dense leaves, in batch-plan order.
+    pub dense: Vec<WorkItem>,
+    pub aca_plan: BatchPlan,
+    pub dense_plan: BatchPlan,
+    /// P mode: factors per ACA batch.
+    factors: Option<Vec<AcaFactors>>,
+    engine: Box<dyn BatchEngine>,
+    pub stats: BuildStats,
+}
+
+impl HMatrix {
+    /// Construct the H-matrix (the paper's "setup" phase).
+    pub fn build(mut points: PointSet, cfg: &HmxConfig) -> Result<Self> {
+        cfg.validate()?;
+        assert_eq!(points.len(), cfg.n, "config n must match point count");
+        assert_eq!(points.dim(), cfg.dim, "config dim must match points");
+        let kernel = cfg.kernel();
+
+        // Phase 1: spatial data structure (Morton codes + sort), Fig 12 L.
+        let (_codes, perm) = timed("build.morton", || morton_sort(&mut points));
+
+        // Phase 2: block cluster tree traversal, Fig 12 R.
+        let tree = timed("build.block_tree", || build_block_tree(&points, cfg.eta, cfg.c_leaf));
+
+        // Phase 3: batch planning (§5.4 heuristics).
+        let admissible = tree.admissible;
+        let dense = tree.dense;
+        let aca_budget = if cfg.batching {
+            BatchBudget::AcaTotalRows { bs: cfg.bs_aca }
+        } else {
+            BatchBudget::Unbatched
+        };
+        let dense_budget = if cfg.batching {
+            BatchBudget::DensePaddedElems { bs: cfg.bs_dense }
+        } else {
+            BatchBudget::Unbatched
+        };
+        let aca_shapes: Vec<BlockShape> =
+            admissible.iter().map(|w| BlockShape { rows: w.rows(), cols: w.cols() }).collect();
+        let dense_shapes: Vec<BlockShape> =
+            dense.iter().map(|w| BlockShape { rows: w.rows(), cols: w.cols() }).collect();
+        let aca_plan = plan_batches(&aca_shapes, aca_budget);
+        let dense_plan = plan_batches(&dense_shapes, dense_budget);
+
+        let engine = make_engine(cfg)?;
+
+        // Phase 4 (P mode): pre-compute ACA factors per batch, optionally
+        // recompressed (Bebendorf–Kunis) to shrink the factor storage.
+        let factors = if cfg.precompute {
+            let mut f: Vec<AcaFactors> = timed("build.precompute_aca", || {
+                aca_plan
+                    .batches
+                    .iter()
+                    .map(|&(s, e)| {
+                        engine.aca_factors(&points, kernel, cfg.k, &admissible[s..e])
+                    })
+                    .collect()
+            });
+            if let Some(eps) = cfg.recompress_eps {
+                timed("build.recompress", || {
+                    for (fac, &(s, e)) in f.iter_mut().zip(&aca_plan.batches) {
+                        crate::aca::recompress::recompress(
+                            fac,
+                            &admissible[s..e],
+                            crate::aca::recompress::Truncation::Relative(eps),
+                        );
+                    }
+                });
+            }
+            Some(f)
+        } else {
+            None
+        };
+
+        let stats = BuildStats {
+            n: cfg.n,
+            admissible_blocks: admissible.len(),
+            dense_blocks: dense.len(),
+            tree_levels: tree.levels,
+            nodes_visited: tree.nodes_visited,
+            aca_batches: aca_plan.n_batches(),
+            dense_batches: dense_plan.n_batches(),
+            factor_bytes: factors
+                .as_ref()
+                .map(|fs| fs.iter().map(|f| f.storage_bytes()).sum())
+                .unwrap_or(0),
+        };
+
+        Ok(HMatrix {
+            points,
+            perm,
+            kernel,
+            cfg: cfg.clone(),
+            admissible,
+            dense,
+            aca_plan,
+            dense_plan,
+            factors,
+            engine,
+            stats,
+        })
+    }
+
+    /// Fast mat-vec `y = H x` with `x`, `y` in the *original* point order
+    /// (internally permuted to/from Morton order, §5.1).
+    pub fn matvec(&self, x: &[f64]) -> Result<Vec<f64>> {
+        assert_eq!(x.len(), self.points.len());
+        let x_m = gather(x, &self.perm);
+        let z_m = self.matvec_morton(&x_m)?;
+        // scatter back: y[perm[i]] = z[i]
+        let mut y = vec![0.0; x.len()];
+        crate::dpp::sequence::scatter(&z_m, &self.perm, &mut y);
+        Ok(y)
+    }
+
+    /// Mat-vec in Morton order (what iterative solvers should call to skip
+    /// the permutations; permute once outside the loop instead).
+    pub fn matvec_morton(&self, x_m: &[f64]) -> Result<Vec<f64>> {
+        let z = AtomicF64Vec::zeros(x_m.len());
+        // batched dense products (§5.4.2)
+        timed("matvec.dense", || {
+            for &(s, e) in &self.dense_plan.batches {
+                self.engine.dense_matvec(&self.points, self.kernel, &self.dense[s..e], x_m, &z);
+            }
+        });
+        // batched low-rank products (§5.4.1): P applies stored factors,
+        // NP recomputes them on the fly.
+        timed("matvec.aca", || match &self.factors {
+            Some(fs) => {
+                for (f, &(s, e)) in fs.iter().zip(&self.aca_plan.batches) {
+                    f.apply(&self.admissible[s..e], x_m, &z);
+                }
+            }
+            None => {
+                for &(s, e) in &self.aca_plan.batches {
+                    self.engine.aca_matvec(
+                        &self.points,
+                        self.kernel,
+                        self.cfg.k,
+                        &self.admissible[s..e],
+                        x_m,
+                        &z,
+                    );
+                }
+            }
+        });
+        Ok(z.into_vec())
+    }
+
+    /// The engine actually in use (XLA configs fall back to native when
+    /// artifacts are missing — see [`crate::coordinator`]).
+    pub fn engine_name(&self) -> &'static str {
+        self.engine.name()
+    }
+
+    /// Compression ratio: H-matrix storage / dense storage (uses the
+    /// would-be storage in NP mode).
+    pub fn compression_ratio(&self) -> f64 {
+        let dense_elems: usize = self.dense.iter().map(|w| w.elems()).sum();
+        let lowrank_elems: usize =
+            self.admissible.iter().map(|w| self.cfg.k * (w.rows() + w.cols())).sum();
+        (dense_elems + lowrank_elems) as f64 / (self.cfg.n as f64 * self.cfg.n as f64)
+    }
+
+    /// True if this instance holds pre-computed factors (P mode).
+    pub fn is_precomputed(&self) -> bool {
+        self.factors.is_some()
+    }
+}
+
+impl std::fmt::Debug for HMatrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("HMatrix")
+            .field("n", &self.cfg.n)
+            .field("dim", &self.cfg.dim)
+            .field("kernel", &self.kernel.name())
+            .field("engine", &self.engine_name())
+            .field("stats", &self.stats)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::dense::DenseOperator;
+    use crate::config::KernelKind;
+
+    fn cfg(n: usize) -> HmxConfig {
+        HmxConfig { n, dim: 2, c_leaf: 64, k: 12, ..HmxConfig::default() }
+    }
+
+    #[test]
+    fn build_produces_blocks_and_batches() {
+        let c = cfg(1024);
+        let h = HMatrix::build(PointSet::halton(c.n, c.dim), &c).unwrap();
+        assert!(h.stats.admissible_blocks > 0);
+        assert!(h.stats.dense_blocks > 0);
+        assert!(h.stats.aca_batches >= 1);
+        assert_eq!(h.engine_name(), "native");
+        assert!(h.compression_ratio() < 1.0, "H-matrix should compress");
+    }
+
+    #[test]
+    fn matvec_approximates_dense_product() {
+        let c = cfg(2048);
+        let pts = PointSet::halton(c.n, c.dim);
+        let exact = DenseOperator::new(pts.clone(), c.kernel());
+        let h = HMatrix::build(pts, &c).unwrap();
+        let mut rng = crate::util::prng::Xoshiro256::seed(1);
+        let x = rng.vector(c.n);
+        let y = h.matvec(&x).unwrap();
+        let want = exact.matvec(&x);
+        let err = crate::util::rel_err(&y, &want);
+        assert!(err < 1e-6, "H-matvec error too large: {err}");
+    }
+
+    #[test]
+    fn precompute_mode_matches_np_mode() {
+        let base = cfg(1024);
+        let pts = PointSet::halton(base.n, base.dim);
+        let np = HMatrix::build(pts.clone(), &base).unwrap();
+        let p_cfg = HmxConfig { precompute: true, ..base.clone() };
+        let p = HMatrix::build(pts, &p_cfg).unwrap();
+        assert!(p.is_precomputed());
+        assert!(p.stats.factor_bytes > 0);
+        let mut rng = crate::util::prng::Xoshiro256::seed(9);
+        let x = rng.vector(base.n);
+        let y_np = np.matvec(&x).unwrap();
+        let y_p = p.matvec(&x).unwrap();
+        let err = crate::util::rel_err(&y_p, &y_np);
+        assert!(err < 1e-12, "P and NP must agree exactly: {err}");
+    }
+
+    #[test]
+    fn unbatched_matches_batched() {
+        let b = cfg(512);
+        let pts = PointSet::halton(b.n, b.dim);
+        let batched = HMatrix::build(pts.clone(), &b).unwrap();
+        let u_cfg = HmxConfig { batching: false, ..b.clone() };
+        let unbatched = HMatrix::build(pts, &u_cfg).unwrap();
+        assert!(unbatched.stats.aca_batches >= batched.stats.aca_batches);
+        let mut rng = crate::util::prng::Xoshiro256::seed(4);
+        let x = rng.vector(b.n);
+        let y1 = batched.matvec(&x).unwrap();
+        let y2 = unbatched.matvec(&x).unwrap();
+        assert!(crate::util::rel_err(&y1, &y2) < 1e-12);
+    }
+
+    #[test]
+    fn matern_kernel_end_to_end() {
+        let c = HmxConfig { kernel: KernelKind::Matern, ..cfg(1024) };
+        let pts = PointSet::halton(c.n, c.dim);
+        let exact = DenseOperator::new(pts.clone(), c.kernel());
+        let h = HMatrix::build(pts, &c).unwrap();
+        let mut rng = crate::util::prng::Xoshiro256::seed(2);
+        let x = rng.vector(c.n);
+        let err = crate::util::rel_err(&h.matvec(&x).unwrap(), &exact.matvec(&x));
+        assert!(err < 1e-4, "Matérn H-matvec error: {err}");
+    }
+
+    #[test]
+    fn three_d_end_to_end() {
+        let c = HmxConfig { dim: 3, ..cfg(1024) };
+        let pts = PointSet::halton(c.n, 3);
+        let exact = DenseOperator::new(pts.clone(), c.kernel());
+        let h = HMatrix::build(pts, &c).unwrap();
+        let mut rng = crate::util::prng::Xoshiro256::seed(6);
+        let x = rng.vector(c.n);
+        let err = crate::util::rel_err(&h.matvec(&x).unwrap(), &exact.matvec(&x));
+        assert!(err < 1e-4, "3D H-matvec error: {err}");
+    }
+}

@@ -1,0 +1,85 @@
+//! # hmx — many-core algorithmic patterns for hierarchical (H-) matrices
+//!
+//! A reproduction of *"Algorithmic patterns for H-matrices on many-core
+//! processors"* (Peter Zaspel, 2017 — the `hmglib` paper) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's contribution: a BSP-style many-core
+//!   execution model ([`dpp`]), Z-order spatial data structures ([`morton`]),
+//!   level-wise parallel tree traversal ([`tree`]), batched bounding-box
+//!   computation ([`bbox`]), batched adaptive cross approximation ([`aca`])
+//!   and the H-matrix construction / mat-vec pipeline ([`hmatrix`]) driven by
+//!   a batching [`coordinator`].
+//! * **L2/L1 (python/, build-time only)** — JAX batched linear algebra with a
+//!   Pallas kernel-matrix assembly kernel, AOT-lowered to HLO text and
+//!   executed from Rust via PJRT ([`runtime`]).
+//!
+//! The crate also ships the comparison substrates the paper evaluates
+//! against: a sequential, recursive, fully-precomputing H-matrix
+//! implementation in the style of H2Lib ([`baseline`]) and an exact dense
+//! operator, plus a CG solver ([`solver`]) for the kernel ridge regression
+//! end-to-end example.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use hmx::prelude::*;
+//!
+//! let cfg = HmxConfig { n: 1 << 14, dim: 2, k: 16, ..HmxConfig::default() };
+//! let points = PointSet::halton(cfg.n, cfg.dim);
+//! let h = HMatrix::build(points, &cfg).unwrap();
+//! let x = vec![1.0; cfg.n];
+//! let y = h.matvec(&x).unwrap();
+//! println!("|y|_2 = {}", hmx::util::norm2(&y));
+//! ```
+
+pub mod aca;
+pub mod baseline;
+pub mod batch;
+pub mod bbox;
+pub mod config;
+pub mod coordinator;
+pub mod dpp;
+pub mod geometry;
+pub mod hmatrix;
+pub mod metrics;
+pub mod morton;
+pub mod runtime;
+pub mod solver;
+pub mod tree;
+pub mod util;
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::aca::seq::{aca_fixed_rank, aca_with_tolerance};
+    pub use crate::baseline::dense::DenseOperator;
+    pub use crate::baseline::h2lib_like::SequentialHMatrix;
+    pub use crate::config::{EngineKind, HmxConfig, KernelKind};
+    pub use crate::geometry::kernel::Kernel;
+    pub use crate::geometry::points::PointSet;
+    pub use crate::hmatrix::HMatrix;
+    pub use crate::solver::cg::{cg_solve, CgOptions, LinOp};
+}
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("configuration error: {0}")]
+    Config(String),
+    #[error("runtime (PJRT/XLA) error: {0}")]
+    Runtime(String),
+    #[error("artifact error: {0}")]
+    Artifact(String),
+    #[error("numerical error: {0}")]
+    Numerics(String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

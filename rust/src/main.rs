@@ -1,0 +1,165 @@
+//! `hmx` — CLI driver for the many-core H-matrix library.
+//!
+//! Subcommands:
+//!   construct  build an H-matrix and print setup statistics
+//!   matvec     build + run mat-vecs, report timing and error vs dense
+//!   solve      regularized kernel system solve via CG (end-to-end)
+//!   phases     like matvec, but dump the per-phase timing breakdown
+//!
+//! Common flags: --n, --d, --kernel {gaussian,matern,exponential}, --k,
+//! --c-leaf, --eta, --bs-dense, --bs-aca, --engine {native,xla},
+//! --precompute, --no-batching, --artifacts DIR, --seed, --trials.
+
+use hmx::config::{EngineKind, HmxConfig, KernelKind};
+use hmx::prelude::*;
+use hmx::solver::cg::RegularizedHOp;
+use hmx::util::cli::Args;
+use hmx::util::prng::Xoshiro256;
+use std::time::Instant;
+
+fn config_from(args: &Args) -> HmxConfig {
+    let dim = args.get("d", 2usize);
+    let mut cfg = HmxConfig {
+        n: args.get("n", 1usize << 14),
+        dim,
+        k: args.get("k", 16usize),
+        c_leaf: args.get("c-leaf", 256usize),
+        eta: args.get("eta", 1.5f64),
+        bs_dense: args.get("bs-dense", 1usize << 22),
+        bs_aca: args.get("bs-aca", 1usize << 20),
+        seed: args.get("seed", 42u64),
+        precompute: args.has("precompute"),
+        batching: !args.has("no-batching"),
+        artifacts_dir: args.get_str("artifacts", "artifacts"),
+        ..HmxConfig::default()
+    };
+    cfg.kernel = KernelKind::from_name(&args.get_str("kernel", "gaussian"))
+        .unwrap_or(KernelKind::Gaussian);
+    cfg.engine = match args.get_str("engine", "native").as_str() {
+        "xla" => EngineKind::Xla,
+        _ => EngineKind::Native,
+    };
+    cfg
+}
+
+fn cmd_construct(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_from(args);
+    let points = PointSet::halton(cfg.n, cfg.dim);
+    let t0 = Instant::now();
+    let h = HMatrix::build(points, &cfg)?;
+    let dt = t0.elapsed();
+    println!(
+        "construct: n={} d={} kernel={} engine={}",
+        cfg.n,
+        cfg.dim,
+        cfg.kernel.name(),
+        h.engine_name()
+    );
+    println!("  setup time          {:.3} s", dt.as_secs_f64());
+    println!("  admissible blocks   {}", h.stats.admissible_blocks);
+    println!("  dense blocks        {}", h.stats.dense_blocks);
+    println!("  tree levels         {}", h.stats.tree_levels);
+    println!("  aca batches         {}", h.stats.aca_batches);
+    println!("  dense batches       {}", h.stats.dense_batches);
+    println!("  compression ratio   {:.4}", h.compression_ratio());
+    if h.is_precomputed() {
+        println!(
+            "  factor storage      {:.1} MiB",
+            h.stats.factor_bytes as f64 / (1 << 20) as f64
+        );
+    }
+    Ok(())
+}
+
+fn cmd_matvec(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_from(args);
+    let trials = args.get("trials", 5usize);
+    let points = PointSet::halton(cfg.n, cfg.dim);
+    let check = args.has("check") && cfg.n <= 1 << 15;
+    let exact = check.then(|| DenseOperator::new(points.clone(), cfg.kernel()));
+    let h = HMatrix::build(points, &cfg)?;
+    let mut rng = Xoshiro256::seed(cfg.seed);
+    let meas = hmx::metrics::measure(trials, || {
+        let x = rng.vector(cfg.n);
+        h.matvec(&x).unwrap()
+    });
+    println!(
+        "matvec: n={} kernel={} k={} engine={} precompute={}",
+        cfg.n,
+        cfg.kernel.name(),
+        cfg.k,
+        h.engine_name(),
+        h.is_precomputed()
+    );
+    println!(
+        "  median {:.4} s  (mean {:.4}, min {:.4}, max {:.4}, {} trials)",
+        meas.median.as_secs_f64(),
+        meas.mean.as_secs_f64(),
+        meas.min.as_secs_f64(),
+        meas.max.as_secs_f64(),
+        trials
+    );
+    if let Some(exact) = exact {
+        let x = Xoshiro256::seed(cfg.seed + 1).vector(cfg.n);
+        let err = hmx::util::rel_err(&h.matvec(&x)?, &exact.matvec(&x));
+        println!("  rel error vs dense  {err:.3e}");
+    }
+    Ok(())
+}
+
+fn cmd_solve(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_from(args);
+    let sigma2 = args.get("sigma2", 1e-4f64);
+    let points = PointSet::halton(cfg.n, cfg.dim);
+    let h = HMatrix::build(points, &cfg)?;
+    // synthetic regression targets
+    let mut rng = Xoshiro256::seed(cfg.seed);
+    let b: Vec<f64> = (0..cfg.n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let op = RegularizedHOp::new(&h, sigma2);
+    let t0 = Instant::now();
+    let res = cg_solve(
+        &op,
+        &b,
+        CgOptions { max_iter: args.get("max-iter", 200usize), tol: args.get("tol", 1e-6f64) },
+    );
+    println!(
+        "solve: n={} sigma2={sigma2} converged={} iters={} residual={:.3e} time={:.3}s",
+        cfg.n,
+        res.converged,
+        res.iterations,
+        res.residual,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_phases(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_from(args);
+    let points = PointSet::halton(cfg.n, cfg.dim);
+    let h = HMatrix::build(points, &cfg)?;
+    let mut rng = Xoshiro256::seed(cfg.seed);
+    let x = rng.vector(cfg.n);
+    let _ = h.matvec(&x)?;
+    println!("phase breakdown (cumulative):");
+    for (phase, total, count) in hmx::metrics::RECORDER.snapshot() {
+        println!("  {phase:<28} {:>10.4} s  ({count}x)", total.as_secs_f64());
+    }
+    let (launches, threads) = hmx::metrics::launch_stats();
+    println!("  kernel launches: {launches}, virtual threads: {threads}");
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("construct") => cmd_construct(&args),
+        Some("matvec") => cmd_matvec(&args),
+        Some("solve") => cmd_solve(&args),
+        Some("phases") => cmd_phases(&args),
+        _ => {
+            eprintln!("usage: hmx <construct|matvec|solve|phases> [--n N] [--d D] [--kernel K] ...");
+            eprintln!("see rust/src/main.rs header for the full flag list");
+            std::process::exit(2);
+        }
+    }
+}

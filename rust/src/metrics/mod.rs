@@ -1,0 +1,165 @@
+//! Instrumentation: kernel-launch counters, phase timers, table printing.
+//!
+//! The paper's evaluation (§6) reports per-phase runtimes (spatial data
+//! structure, tree traversal, batched ACA, batched dense mat-vec, …). The
+//! global [`Recorder`] collects those phases; benches drain it to print the
+//! same series the paper plots.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+static KERNEL_LAUNCHES: AtomicU64 = AtomicU64::new(0);
+static VIRTUAL_THREADS: AtomicU64 = AtomicU64::new(0);
+
+/// Record one BSP kernel launch of `n` virtual threads.
+#[inline]
+pub fn count_launch(n: usize) {
+    KERNEL_LAUNCHES.fetch_add(1, Ordering::Relaxed);
+    VIRTUAL_THREADS.fetch_add(n as u64, Ordering::Relaxed);
+}
+
+/// (launches, virtual threads) since process start.
+pub fn launch_stats() -> (u64, u64) {
+    (KERNEL_LAUNCHES.load(Ordering::Relaxed), VIRTUAL_THREADS.load(Ordering::Relaxed))
+}
+
+/// A named wall-clock phase accumulator.
+#[derive(Default)]
+pub struct Recorder {
+    phases: Mutex<HashMap<String, (Duration, u64)>>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Recorder::default()
+    }
+
+    pub fn add(&self, phase: &str, d: Duration) {
+        let mut m = self.phases.lock().unwrap();
+        let e = m.entry(phase.to_string()).or_insert((Duration::ZERO, 0));
+        e.0 += d;
+        e.1 += 1;
+    }
+
+    /// Time `f` under `phase`.
+    pub fn time<T>(&self, phase: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(phase, t0.elapsed());
+        out
+    }
+
+    /// Total accumulated duration for `phase` (zero if never recorded).
+    pub fn total(&self, phase: &str) -> Duration {
+        self.phases.lock().unwrap().get(phase).map(|e| e.0).unwrap_or(Duration::ZERO)
+    }
+
+    /// Snapshot of `(phase, total, count)` sorted by total descending.
+    pub fn snapshot(&self) -> Vec<(String, Duration, u64)> {
+        let m = self.phases.lock().unwrap();
+        let mut v: Vec<_> = m.iter().map(|(k, &(d, c))| (k.clone(), d, c)).collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1));
+        v
+    }
+
+    pub fn reset(&self) {
+        self.phases.lock().unwrap().clear();
+    }
+}
+
+/// Global phase recorder used by the H-matrix pipeline.
+pub static RECORDER: once_cell::sync::Lazy<Recorder> =
+    once_cell::sync::Lazy::new(Recorder::new);
+
+/// Convenience: time a closure under the global recorder.
+pub fn timed<T>(phase: &str, f: impl FnOnce() -> T) -> T {
+    RECORDER.time(phase, f)
+}
+
+/// Median-of-`trials` wall-clock measurement of `f` (paper: averaged over
+/// five trials; we report the median, which is robust on shared machines,
+/// and the mean alongside).
+pub fn measure<T>(trials: usize, mut f: impl FnMut() -> T) -> Measurement {
+    assert!(trials >= 1);
+    let mut samples = Vec::with_capacity(trials);
+    for _ in 0..trials {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+    Measurement { median, mean, min: samples[0], max: *samples.last().unwrap(), trials }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Measurement {
+    pub median: Duration,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub trials: usize,
+}
+
+impl Measurement {
+    pub fn secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+}
+
+/// Print a CSV header + row helper used by every bench binary so output is
+/// uniform and grep-able (`hmx-bench` prefix).
+pub struct CsvTable {
+    name: &'static str,
+    columns: &'static [&'static str],
+    header_printed: std::cell::Cell<bool>,
+}
+
+impl CsvTable {
+    pub const fn new(name: &'static str, columns: &'static [&'static str]) -> Self {
+        CsvTable { name, columns, header_printed: std::cell::Cell::new(false) }
+    }
+
+    pub fn row(&self, values: &[String]) {
+        if !self.header_printed.get() {
+            println!("hmx-bench,{},{}", self.name, self.columns.join(","));
+            self.header_printed.set(true);
+        }
+        assert_eq!(values.len(), self.columns.len());
+        println!("hmx-bench,{},{}", self.name, values.join(","));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recorder_accumulates() {
+        let r = Recorder::new();
+        r.add("x", Duration::from_millis(2));
+        r.add("x", Duration::from_millis(3));
+        assert_eq!(r.total("x"), Duration::from_millis(5));
+        let snap = r.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].2, 2);
+    }
+
+    #[test]
+    fn measure_returns_ordered_stats() {
+        let m = measure(5, || std::thread::sleep(Duration::from_micros(50)));
+        assert!(m.min <= m.median && m.median <= m.max);
+        assert_eq!(m.trials, 5);
+    }
+
+    #[test]
+    fn launch_counter_monotone() {
+        let (l0, t0) = launch_stats();
+        count_launch(10);
+        let (l1, t1) = launch_stats();
+        assert!(l1 > l0 && t1 >= t0 + 10);
+    }
+}

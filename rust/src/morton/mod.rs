@@ -1,0 +1,219 @@
+//! Z-order (Morton) space-filling curve (§4.4, Alg 6).
+//!
+//! Each point gets a Morton code: per dimension the coordinate is converted
+//! to a fixed-point representation, its bits are stretched (spread with
+//! zero gaps), and the per-dimension bit streams are interleaved. Sorting
+//! by code linearizes the point set so that index-range splits of the
+//! sorted array are geometrically meaningful clusters — "spatial operations
+//! get reduced to array operations".
+//!
+//! Bit budgets: d=2 → 31 bits/dim (62-bit codes), d=3 → 21 bits/dim
+//! (63-bit codes). Higher d uses `floor(63/d)` bits per dimension.
+
+use crate::dpp::executor::{launch, GlobalMem};
+use crate::dpp::sort::sort_pairs_u64;
+use crate::geometry::points::PointSet;
+
+/// Bits of fixed-point precision per dimension for dimension count `d`
+/// (capped at 52 — the f64 mantissa — so the fixed-point conversion is
+/// exact and never overflows).
+pub fn bits_per_dim(d: usize) -> u32 {
+    ((63 / d.max(1)) as u32).min(52)
+}
+
+/// Spread the low `bits` bits of `v`, inserting `d - 1` zero bits between
+/// consecutive bits (the paper's STRETCH_BITS).
+#[inline]
+pub fn stretch_bits(v: u64, bits: u32, d: usize) -> u64 {
+    match d {
+        1 => v & ((1u64 << bits) - 1),
+        2 => part1by1(v & ((1u64 << bits) - 1)),
+        3 => part1by2(v & ((1u64 << bits) - 1)),
+        _ => {
+            // generic (slow) path for d > 3
+            let mut out = 0u64;
+            for b in 0..bits as u64 {
+                out |= ((v >> b) & 1) << (b * d as u64);
+            }
+            out
+        }
+    }
+}
+
+/// Classic magic-number bit spreading: insert one zero between bits
+/// (supports up to 32 source bits).
+#[inline]
+fn part1by1(mut x: u64) -> u64 {
+    x &= 0xFFFF_FFFF;
+    x = (x | (x << 16)) & 0x0000_FFFF_0000_FFFF;
+    x = (x | (x << 8)) & 0x00FF_00FF_00FF_00FF;
+    x = (x | (x << 4)) & 0x0F0F_0F0F_0F0F_0F0F;
+    x = (x | (x << 2)) & 0x3333_3333_3333_3333;
+    x = (x | (x << 1)) & 0x5555_5555_5555_5555;
+    x
+}
+
+/// Insert two zeros between bits (supports up to 21 source bits).
+#[inline]
+fn part1by2(mut x: u64) -> u64 {
+    x &= 0x1F_FFFF;
+    x = (x | (x << 32)) & 0x001F_0000_0000_FFFF;
+    x = (x | (x << 16)) & 0x001F_0000_FF00_00FF;
+    x = (x | (x << 8)) & 0x100F_00F0_0F00_F00F;
+    x = (x | (x << 4)) & 0x10C3_0C30_C30C_30C3;
+    x = (x | (x << 2)) & 0x1249_2492_4924_9249;
+    x
+}
+
+/// Fixed-point representation of `x` relative to `[lo, hi]` with `bits`
+/// bits (the paper's COMPUTE_FIXED_POINT_REPRESENTATION).
+#[inline]
+pub fn fixed_point(x: f64, lo: f64, hi: f64, bits: u32) -> u64 {
+    debug_assert!(bits <= 52);
+    let max = (1u64 << bits) - 1;
+    let scale = (1u64 << bits) as f64;
+    let t = if hi > lo { ((x - lo) / (hi - lo)).clamp(0.0, 1.0) } else { 0.0 };
+    // f64 -> u64 casts saturate in Rust, so this is branch-safe
+    ((t * scale) as u64).min(max)
+}
+
+/// Morton code of a single point (coords slice of length d) within the
+/// global bounding box given by `los`/`his`.
+#[inline]
+pub fn morton_code(coords: &[f64], los: &[f64], his: &[f64]) -> u64 {
+    let d = coords.len();
+    let bits = bits_per_dim(d);
+    let mut code = 0u64;
+    for (i, &c) in coords.iter().enumerate() {
+        let fp = fixed_point(c, los[i], his[i], bits);
+        code |= stretch_bits(fp, bits, d) << i; // INTERLEAVE: dim i occupies bit lanes i, i+d, ...
+    }
+    code
+}
+
+/// Parallel COMPUTE_MORTON_CODES (Alg 6): one virtual thread per point.
+pub fn compute_morton_codes(points: &PointSet) -> Vec<u64> {
+    let n = points.len();
+    let d = points.dim();
+    let bits = bits_per_dim(d);
+    // global bounding box of the set (a parallel min/max reduce per dim)
+    let (los, his) = points.global_bounds();
+    let mut codes = vec![0u64; n];
+    {
+        let out = GlobalMem::new(&mut codes);
+        launch(n, |t| {
+            let mut code = 0u64;
+            for i in 0..d {
+                let fp = fixed_point(points.coord(i, t), los[i], his[i], bits);
+                code |= stretch_bits(fp, bits, d) << i;
+            }
+            out.write(t, code);
+        });
+    }
+    codes
+}
+
+/// Order `points` along the Z-curve in place. Returns `(codes, perm)` where
+/// `perm[i]` is the original index of the point now at sorted position `i`
+/// (needed to permute mat-vec vectors between original and Morton order).
+pub fn morton_sort(points: &mut PointSet) -> (Vec<u64>, Vec<u32>) {
+    let mut codes = compute_morton_codes(points);
+    let mut perm: Vec<u32> = (0..points.len() as u32).collect();
+    sort_pairs_u64(&mut codes, &mut perm);
+    points.permute(&perm);
+    (codes, perm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::points::PointSet;
+
+    #[test]
+    fn stretch_bits_interleaves_2d() {
+        // 0b11 stretched by 2 -> 0b0101
+        assert_eq!(stretch_bits(0b11, 2, 2), 0b0101);
+        assert_eq!(stretch_bits(0b10, 2, 2), 0b0100);
+    }
+
+    #[test]
+    fn stretch_bits_interleaves_3d() {
+        assert_eq!(stretch_bits(0b11, 2, 3), 0b001001);
+        assert_eq!(stretch_bits(0b101, 3, 3), 0b001000001);
+    }
+
+    #[test]
+    fn generic_stretch_matches_magic() {
+        for v in [0u64, 1, 2, 3, 0b1011, 0x1F_FFFF] {
+            let mut generic2 = 0u64;
+            for b in 0..31 {
+                generic2 |= ((v >> b) & 1) << (b * 2);
+            }
+            assert_eq!(stretch_bits(v, 31, 2), generic2 & stretch_mask(31, 2));
+            let mut generic3 = 0u64;
+            for b in 0..21 {
+                generic3 |= ((v >> b) & 1) << (b * 3);
+            }
+            assert_eq!(stretch_bits(v, 21, 3), generic3);
+        }
+    }
+
+    fn stretch_mask(bits: u32, d: usize) -> u64 {
+        let mut m = 0u64;
+        for b in 0..bits as u64 {
+            m |= 1 << (b * d as u64);
+        }
+        m
+    }
+
+    #[test]
+    fn fixed_point_clamps_and_scales() {
+        assert_eq!(fixed_point(0.0, 0.0, 1.0, 4), 0);
+        assert_eq!(fixed_point(1.0, 0.0, 1.0, 4), 15);
+        assert_eq!(fixed_point(-3.0, 0.0, 1.0, 4), 0);
+        assert_eq!(fixed_point(0.5, 0.0, 1.0, 4), 8);
+    }
+
+    #[test]
+    fn morton_quadrant_order_2d() {
+        // In a unit square the Z-curve visits quadrants in the order
+        // (low,low), (high,low), (low,high), (high,high) given x = dim 0
+        // occupies the low bit lane.
+        let los = [0.0, 0.0];
+        let his = [1.0, 1.0];
+        let c00 = morton_code(&[0.1, 0.1], &los, &his);
+        let c10 = morton_code(&[0.9, 0.1], &los, &his);
+        let c01 = morton_code(&[0.1, 0.9], &los, &his);
+        let c11 = morton_code(&[0.9, 0.9], &los, &his);
+        assert!(c00 < c10 && c10 < c01 && c01 < c11);
+    }
+
+    #[test]
+    fn morton_sort_orders_codes() {
+        let mut pts = PointSet::halton(1000, 2);
+        let (codes, perm) = morton_sort(&mut pts);
+        assert!(codes.windows(2).all(|w| w[0] <= w[1]));
+        let mut sorted_perm = perm.clone();
+        sorted_perm.sort();
+        assert_eq!(sorted_perm, (0..1000u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn morton_sort_improves_locality() {
+        // Consecutive points in Morton order should on average be much
+        // closer than consecutive points in arbitrary order.
+        let mut pts = PointSet::halton(4096, 2);
+        let before = avg_consecutive_dist(&pts);
+        morton_sort(&mut pts);
+        let after = avg_consecutive_dist(&pts);
+        assert!(after < before * 0.5, "before={before} after={after}");
+    }
+
+    fn avg_consecutive_dist(p: &PointSet) -> f64 {
+        let mut acc = 0.0;
+        for i in 1..p.len() {
+            acc += p.dist(i - 1, i);
+        }
+        acc / (p.len() - 1) as f64
+    }
+}

@@ -1,0 +1,142 @@
+//! Artifact manifest: maps operation signatures to AOT-compiled HLO files.
+//!
+//! `artifacts/manifest.tsv` is written by `python/compile/aot.py`, one
+//! artifact per line:
+//!
+//! ```text
+//! name <TAB> file <TAB> op <TAB> kernel <TAB> d <TAB> m <TAB> n <TAB> k <TAB> b
+//! ```
+//!
+//! `op ∈ {dense_mv, aca_mv, aca_factors}`; `m`/`n` are the padded block
+//! bucket sides, `b` the fixed batch width, `k` the ACA rank (0 for
+//! dense_mv).
+
+use crate::{Error, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Artifact {
+    pub name: String,
+    pub file: PathBuf,
+    pub op: String,
+    pub kernel: String,
+    pub d: usize,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub b: usize,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<Artifact>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.tsv`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {path:?}: {e}. Run `make artifacts` first, or use the native engine."
+            ))
+        })?;
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 9 {
+                return Err(Error::Artifact(format!(
+                    "manifest line {} has {} columns, want 9",
+                    lineno + 1,
+                    cols.len()
+                )));
+            }
+            let parse = |s: &str, what: &str| -> Result<usize> {
+                s.parse().map_err(|_| {
+                    Error::Artifact(format!("manifest line {}: bad {what} `{s}`", lineno + 1))
+                })
+            };
+            artifacts.push(Artifact {
+                name: cols[0].to_string(),
+                file: dir.join(cols[1]),
+                op: cols[2].to_string(),
+                kernel: cols[3].to_string(),
+                d: parse(cols[4], "d")?,
+                m: parse(cols[5], "m")?,
+                n: parse(cols[6], "n")?,
+                k: parse(cols[7], "k")?,
+                b: parse(cols[8], "b")?,
+            });
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    /// Find the smallest-bucket artifact for `op`/`kernel`/`d` (and `k` for
+    /// ACA ops) whose block bucket covers `(m, n)`.
+    pub fn find(&self, op: &str, kernel: &str, d: usize, k: usize, m: usize, n: usize) -> Option<&Artifact> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.op == op
+                    && a.kernel == kernel
+                    && a.d == d
+                    && (op == "dense_mv" || a.k == k)
+                    && a.m >= m
+                    && a.n >= n
+            })
+            .min_by_key(|a| a.m * a.n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.tsv"), body).unwrap();
+    }
+
+    #[test]
+    fn parses_and_finds_buckets() {
+        let dir = std::env::temp_dir().join("hmx_manifest_test");
+        write_manifest(
+            &dir,
+            "# comment\n\
+             dense_mv_gaussian_d2_m256\tdense_mv_gaussian_d2_m256.hlo.txt\tdense_mv\tgaussian\t2\t256\t256\t0\t16\n\
+             aca_mv_gaussian_d2_m512_k16\taca.hlo.txt\taca_mv\tgaussian\t2\t512\t512\t16\t16\n\
+             aca_mv_gaussian_d2_m1024_k16\taca2.hlo.txt\taca_mv\tgaussian\t2\t1024\t1024\t16\t16\n",
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        let a = m.find("aca_mv", "gaussian", 2, 16, 300, 400).unwrap();
+        assert_eq!(a.m, 512, "smallest covering bucket");
+        let a = m.find("aca_mv", "gaussian", 2, 16, 600, 600).unwrap();
+        assert_eq!(a.m, 1024);
+        assert!(m.find("aca_mv", "gaussian", 2, 16, 2000, 2000).is_none());
+        assert!(m.find("aca_mv", "matern", 2, 16, 100, 100).is_none());
+        assert!(m.find("dense_mv", "gaussian", 2, 0, 200, 200).is_some());
+        // dense lookup ignores k
+        assert!(m.find("dense_mv", "gaussian", 2, 99, 200, 200).is_some());
+    }
+
+    #[test]
+    fn missing_manifest_is_an_error() {
+        let dir = std::env::temp_dir().join("hmx_manifest_missing");
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn malformed_line_is_an_error() {
+        let dir = std::env::temp_dir().join("hmx_manifest_bad");
+        write_manifest(&dir, "too\tfew\tcolumns\n");
+        assert!(Manifest::load(&dir).is_err());
+        write_manifest(&dir, "a\tb\tc\td\tX\t1\t1\t1\t1\n");
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

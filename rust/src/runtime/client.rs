@@ -1,0 +1,25 @@
+//! PJRT CPU client creation and HLO-text compilation.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-backed (not `Send`), so the
+//! client is owned by the engine instance that uses it (single-threaded
+//! dispatch; the many-core parallelism lives *inside* the XLA executables
+//! and in the native dpp kernels, not across engine calls).
+
+use crate::{Error, Result};
+
+/// Create a PJRT CPU client.
+pub fn pjrt_client() -> Result<xla::PjRtClient> {
+    xla::PjRtClient::cpu().map_err(Error::from)
+}
+
+/// Load an HLO text file and compile it on `client`.
+pub fn compile_hlo_file(
+    client: &xla::PjRtClient,
+    path: &std::path::Path,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| Error::Artifact(format!("bad path {path:?}")))?,
+    )?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).map_err(Error::from)
+}

@@ -1,0 +1,443 @@
+//! The XLA batch engine: executes the batched linear algebra of §5.4 as
+//! AOT-compiled XLA programs (JAX/Pallas-authored, PJRT-loaded).
+//!
+//! Blocks are padded into fixed shape buckets `[B, M, N]` matching the
+//! artifact set (the paper's §5.4.2 zero-padding for `dgemv_vbatched`,
+//! generalized to square power-of-two buckets). Padding rows replicate the
+//! block's first point so kernel evaluations stay finite; padded columns
+//! are neutralized with zeroed `x` entries and 0/1 masks. Shapes without a
+//! matching artifact fall back to the native engine.
+
+use crate::aca::batched::AcaFactors;
+use crate::coordinator::{BatchEngine, NativeEngine};
+use crate::geometry::kernel::Kernel;
+use crate::geometry::points::PointSet;
+use crate::runtime::artifacts::{Artifact, Manifest};
+use crate::runtime::client::{compile_hlo_file, pjrt_client};
+use crate::tree::block::WorkItem;
+use crate::util::atomic::AtomicF64Vec;
+use crate::{Error, Result};
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+
+pub struct XlaEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    fallback: NativeEngine,
+    kernel_name: String,
+    dim: usize,
+    k: usize,
+    /// Batches executed via XLA vs. via the native fallback.
+    pub xla_batches: Cell<usize>,
+    pub fallback_batches: Cell<usize>,
+}
+
+impl XlaEngine {
+    pub fn new(artifacts_dir: &str, kernel_name: &str, dim: usize, k: usize) -> Result<Self> {
+        let manifest = Manifest::load(std::path::Path::new(artifacts_dir))?;
+        let client = pjrt_client()?;
+        Ok(XlaEngine {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            fallback: NativeEngine,
+            kernel_name: kernel_name.to_string(),
+            dim,
+            k,
+            xla_batches: Cell::new(0),
+            fallback_batches: Cell::new(0),
+        })
+    }
+
+    /// Compile-or-fetch the executable for `artifact`.
+    fn executable(&self, artifact: &Artifact) -> Result<()> {
+        if !self.cache.borrow().contains_key(&artifact.name) {
+            let exe = crate::metrics::timed("xla.compile", || compile_hlo_file(&self.client, &artifact.file))?;
+            self.cache.borrow_mut().insert(artifact.name.clone(), exe);
+        }
+        Ok(())
+    }
+
+    fn run(&self, artifact: &Artifact, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        self.executable(artifact)?;
+        let cache = self.cache.borrow();
+        let exe = cache.get(&artifact.name).unwrap();
+        let result = exe.execute::<xla::Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit)
+    }
+
+    /// Marshal a group of ≤ B blocks into padded `[B, S, d]` point buffers.
+    /// Padding rows replicate the first point; absent blocks use the
+    /// origin (finite kernel values either way).
+    fn marshal_points(
+        &self,
+        points: &PointSet,
+        blocks: &[WorkItem],
+        side: Side,
+        bucket: usize,
+        b: usize,
+    ) -> Vec<f64> {
+        let d = self.dim;
+        let mut buf = vec![0.0f64; b * bucket * d];
+        for (bi, w) in blocks.iter().enumerate() {
+            let c = match side {
+                Side::Tau => w.tau,
+                Side::Sigma => w.sigma,
+            };
+            let base = bi * bucket * d;
+            for (ii, i) in (c.lo..c.hi).enumerate() {
+                for kk in 0..d {
+                    buf[base + ii * d + kk] = points.coord(kk, i);
+                }
+            }
+            // replicate first point into padding rows
+            for ii in c.len()..bucket {
+                for kk in 0..d {
+                    buf[base + ii * d + kk] = points.coord(kk, c.lo);
+                }
+            }
+        }
+        buf
+    }
+
+    fn marshal_x(&self, blocks: &[WorkItem], x: &[f64], bucket: usize, b: usize) -> Vec<f64> {
+        let mut buf = vec![0.0f64; b * bucket];
+        for (bi, w) in blocks.iter().enumerate() {
+            for (jj, j) in (w.sigma.lo..w.sigma.hi).enumerate() {
+                buf[bi * bucket + jj] = x[j];
+            }
+        }
+        buf
+    }
+
+    fn marshal_mask(&self, blocks: &[WorkItem], side: Side, bucket: usize, b: usize) -> Vec<f64> {
+        let mut buf = vec![0.0f64; b * bucket];
+        for (bi, w) in blocks.iter().enumerate() {
+            let len = match side {
+                Side::Tau => w.rows(),
+                Side::Sigma => w.cols(),
+            };
+            for slot in &mut buf[bi * bucket..bi * bucket + len] {
+                *slot = 1.0;
+            }
+        }
+        buf
+    }
+
+    fn literal(&self, data: &[f64], dims: &[i64]) -> Result<xla::Literal> {
+        xla::Literal::vec1(data).reshape(dims).map_err(Error::from)
+    }
+
+    /// Execute one ≤B group of dense blocks; returns false if no artifact
+    /// covers the group (caller falls back).
+    fn try_dense_group(
+        &self,
+        points: &PointSet,
+        blocks: &[WorkItem],
+        x: &[f64],
+        z: &AtomicF64Vec,
+    ) -> Result<bool> {
+        let max_m = blocks.iter().map(|w| w.rows()).max().unwrap();
+        let max_n = blocks.iter().map(|w| w.cols()).max().unwrap();
+        let Some(artifact) =
+            self.manifest.find("dense_mv", &self.kernel_name, self.dim, 0, max_m, max_n).cloned()
+        else {
+            return Ok(false);
+        };
+        let (bucket_m, bucket_n, b) = (artifact.m, artifact.n, artifact.b);
+        if blocks.len() > b {
+            return Ok(false); // caller chunks to ≤ b; defensive
+        }
+        let tau = self.marshal_points(points, blocks, Side::Tau, bucket_m, b);
+        let sigma = self.marshal_points(points, blocks, Side::Sigma, bucket_n, b);
+        let xb = self.marshal_x(blocks, x, bucket_n, b);
+        let d = self.dim as i64;
+        let out = self.run(
+            &artifact,
+            &[
+                self.literal(&tau, &[b as i64, bucket_m as i64, d])?,
+                self.literal(&sigma, &[b as i64, bucket_n as i64, d])?,
+                self.literal(&xb, &[b as i64, bucket_n as i64])?,
+            ],
+        )?;
+        let y = out.to_tuple1()?.to_vec::<f64>()?;
+        for (bi, w) in blocks.iter().enumerate() {
+            for (ii, i) in (w.tau.lo..w.tau.hi).enumerate() {
+                z.add(i, y[bi * bucket_m + ii]);
+            }
+        }
+        Ok(true)
+    }
+
+    /// Execute one ≤B group of admissible blocks through the fused
+    /// ACA+apply artifact.
+    fn try_aca_group(
+        &self,
+        points: &PointSet,
+        blocks: &[WorkItem],
+        x: &[f64],
+        z: &AtomicF64Vec,
+    ) -> Result<bool> {
+        let max_m = blocks.iter().map(|w| w.rows()).max().unwrap();
+        let max_n = blocks.iter().map(|w| w.cols()).max().unwrap();
+        let Some(artifact) = self
+            .manifest
+            .find("aca_mv", &self.kernel_name, self.dim, self.k, max_m, max_n)
+            .cloned()
+        else {
+            return Ok(false);
+        };
+        let (bucket_m, bucket_n, b) = (artifact.m, artifact.n, artifact.b);
+        if blocks.len() > b {
+            return Ok(false);
+        }
+        let tau = self.marshal_points(points, blocks, Side::Tau, bucket_m, b);
+        let sigma = self.marshal_points(points, blocks, Side::Sigma, bucket_n, b);
+        let xb = self.marshal_x(blocks, x, bucket_n, b);
+        let row_mask = self.marshal_mask(blocks, Side::Tau, bucket_m, b);
+        let col_mask = self.marshal_mask(blocks, Side::Sigma, bucket_n, b);
+        let d = self.dim as i64;
+        let out = self.run(
+            &artifact,
+            &[
+                self.literal(&tau, &[b as i64, bucket_m as i64, d])?,
+                self.literal(&sigma, &[b as i64, bucket_n as i64, d])?,
+                self.literal(&xb, &[b as i64, bucket_n as i64])?,
+                self.literal(&row_mask, &[b as i64, bucket_m as i64])?,
+                self.literal(&col_mask, &[b as i64, bucket_n as i64])?,
+            ],
+        )?;
+        let y = out.to_tuple1()?.to_vec::<f64>()?;
+        for (bi, w) in blocks.iter().enumerate() {
+            for (ii, i) in (w.tau.lo..w.tau.hi).enumerate() {
+                z.add(i, y[bi * bucket_m + ii]);
+            }
+        }
+        Ok(true)
+    }
+
+    /// P-mode factors through the factors-only artifact. Returns None if no
+    /// artifact covers the group.
+    fn try_aca_factors_group(
+        &self,
+        points: &PointSet,
+        blocks: &[WorkItem],
+    ) -> Result<Option<(Vec<f64>, Vec<f64>, usize, usize)>> {
+        let max_m = blocks.iter().map(|w| w.rows()).max().unwrap();
+        let max_n = blocks.iter().map(|w| w.cols()).max().unwrap();
+        let Some(artifact) = self
+            .manifest
+            .find("aca_factors", &self.kernel_name, self.dim, self.k, max_m, max_n)
+            .cloned()
+        else {
+            return Ok(None);
+        };
+        let (bucket_m, bucket_n, b) = (artifact.m, artifact.n, artifact.b);
+        if blocks.len() > b {
+            return Ok(None);
+        }
+        let tau = self.marshal_points(points, blocks, Side::Tau, bucket_m, b);
+        let sigma = self.marshal_points(points, blocks, Side::Sigma, bucket_n, b);
+        let row_mask = self.marshal_mask(blocks, Side::Tau, bucket_m, b);
+        let col_mask = self.marshal_mask(blocks, Side::Sigma, bucket_n, b);
+        let d = self.dim as i64;
+        let out = self.run(
+            &artifact,
+            &[
+                self.literal(&tau, &[b as i64, bucket_m as i64, d])?,
+                self.literal(&sigma, &[b as i64, bucket_n as i64, d])?,
+                self.literal(&row_mask, &[b as i64, bucket_m as i64])?,
+                self.literal(&col_mask, &[b as i64, bucket_n as i64])?,
+            ],
+        )?;
+        let (u_lit, v_lit) = out.to_tuple2()?;
+        let u = u_lit.to_vec::<f64>()?; // [b, bucket_m, k]
+        let v = v_lit.to_vec::<f64>()?; // [b, bucket_n, k]
+        Ok(Some((u, v, bucket_m, bucket_n)))
+    }
+}
+
+#[derive(Clone, Copy)]
+enum Side {
+    Tau,
+    Sigma,
+}
+
+/// Fixed group width: chunk planned batches into ≤B-block artifact calls.
+fn groups(blocks: &[WorkItem], b: usize) -> impl Iterator<Item = &[WorkItem]> {
+    blocks.chunks(b.max(1))
+}
+
+impl BatchEngine for XlaEngine {
+    fn dense_matvec(
+        &self,
+        points: &PointSet,
+        kernel: Kernel,
+        blocks: &[WorkItem],
+        x: &[f64],
+        z: &AtomicF64Vec,
+    ) {
+        let b = self
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| a.op == "dense_mv")
+            .map(|a| a.b)
+            .unwrap_or(16);
+        for group in groups(blocks, b) {
+            match self.try_dense_group(points, group, x, z) {
+                Ok(true) => self.xla_batches.set(self.xla_batches.get() + 1),
+                Ok(false) => {
+                    self.fallback_batches.set(self.fallback_batches.get() + 1);
+                    self.fallback.dense_matvec(points, kernel, group, x, z);
+                }
+                Err(e) => {
+                    // artifact exists but execution failed: surface loudly
+                    // once, then fall back so the mat-vec still completes.
+                    eprintln!("hmx: XLA dense_mv failed ({e}); falling back to native");
+                    self.fallback_batches.set(self.fallback_batches.get() + 1);
+                    self.fallback.dense_matvec(points, kernel, group, x, z);
+                }
+            }
+        }
+    }
+
+    fn aca_matvec(
+        &self,
+        points: &PointSet,
+        kernel: Kernel,
+        k: usize,
+        blocks: &[WorkItem],
+        x: &[f64],
+        z: &AtomicF64Vec,
+    ) {
+        let b = self
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| a.op == "aca_mv")
+            .map(|a| a.b)
+            .unwrap_or(16);
+        for group in groups(blocks, b) {
+            match self.try_aca_group(points, group, x, z) {
+                Ok(true) => self.xla_batches.set(self.xla_batches.get() + 1),
+                Ok(false) => {
+                    self.fallback_batches.set(self.fallback_batches.get() + 1);
+                    self.fallback.aca_matvec(points, kernel, k, group, x, z);
+                }
+                Err(e) => {
+                    eprintln!("hmx: XLA aca_mv failed ({e}); falling back to native");
+                    self.fallback_batches.set(self.fallback_batches.get() + 1);
+                    self.fallback.aca_matvec(points, kernel, k, group, x, z);
+                }
+            }
+        }
+    }
+
+    fn aca_factors(
+        &self,
+        points: &PointSet,
+        kernel: Kernel,
+        k: usize,
+        blocks: &[WorkItem],
+    ) -> AcaFactors {
+        // Assemble the Fig 10 flat layout from per-group XLA results;
+        // groups without artifacts use native factors.
+        let nb = blocks.len();
+        let rows: Vec<usize> = blocks.iter().map(|w| w.rows()).collect();
+        let cols: Vec<usize> = blocks.iter().map(|w| w.cols()).collect();
+        let row_offsets = crate::dpp::scan::exclusive_scan(&rows);
+        let col_offsets = crate::dpp::scan::exclusive_scan(&cols);
+        let total_m = row_offsets[nb];
+        let total_n = col_offsets[nb];
+        let mut u_all = vec![0.0f64; k * total_m];
+        let mut v_all = vec![0.0f64; k * total_n];
+        let mut ranks = vec![0usize; nb];
+
+        let b = self
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| a.op == "aca_factors")
+            .map(|a| a.b)
+            .unwrap_or(16);
+        let mut base = 0usize;
+        for group in groups(blocks, b) {
+            let got = match self.try_aca_factors_group(points, group) {
+                Ok(v) => v,
+                Err(e) => {
+                    eprintln!("hmx: XLA aca_factors failed ({e}); falling back to native");
+                    None
+                }
+            };
+            match got {
+                Some((u, v, bucket_m, bucket_n)) => {
+                    self.xla_batches.set(self.xla_batches.get() + 1);
+                    for (bi, w) in group.iter().enumerate() {
+                        let g = base + bi;
+                        ranks[g] = k.min(w.rows()).min(w.cols());
+                        for r in 0..k {
+                            for i in 0..w.rows() {
+                                // artifact layout: u[b, m, k]
+                                u_all[r * total_m + row_offsets[g] + i] =
+                                    u[bi * bucket_m * k + i * k + r];
+                            }
+                            for j in 0..w.cols() {
+                                v_all[r * total_n + col_offsets[g] + j] =
+                                    v[bi * bucket_n * k + j * k + r];
+                            }
+                        }
+                    }
+                }
+                None => {
+                    self.fallback_batches.set(self.fallback_batches.get() + 1);
+                    let f = self.fallback.aca_factors(points, kernel, k, group);
+                    let g_total_m = *f.row_offsets.last().unwrap();
+                    let g_total_n = *f.col_offsets.last().unwrap();
+                    for (bi, w) in group.iter().enumerate() {
+                        let g = base + bi;
+                        ranks[g] = f.ranks[bi];
+                        for r in 0..k {
+                            for i in 0..w.rows() {
+                                u_all[r * total_m + row_offsets[g] + i] =
+                                    f.u_all[r * g_total_m + f.row_offsets[bi] + i];
+                            }
+                            for j in 0..w.cols() {
+                                v_all[r * total_n + col_offsets[g] + j] =
+                                    f.v_all[r * g_total_n + f.col_offsets[bi] + j];
+                            }
+                        }
+                    }
+                }
+            }
+            base += group.len();
+        }
+        AcaFactors { u_all, v_all, row_offsets, col_offsets, ranks, k }
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn groups_chunk_correctly() {
+        use crate::tree::cluster::Cluster;
+        let w = WorkItem { tau: Cluster::new(0, 4), sigma: Cluster::new(4, 8) };
+        let blocks = vec![w; 37];
+        let sizes: Vec<usize> = groups(&blocks, 16).map(|g| g.len()).collect();
+        assert_eq!(sizes, vec![16, 16, 5]);
+    }
+
+    #[test]
+    fn engine_requires_manifest() {
+        let r = XlaEngine::new("/nonexistent/dir", "gaussian", 2, 16);
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! XLA/PJRT runtime: load AOT-compiled HLO-text artifacts (produced once by
+//! `python/compile/aot.py`) and execute them from the Rust hot path.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 serializes protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+pub mod artifacts;
+pub mod client;
+pub mod engine;
+
+pub use artifacts::{Artifact, Manifest};
+pub use client::{compile_hlo_file, pjrt_client};
+pub use engine::XlaEngine;

@@ -1,0 +1,167 @@
+//! BiCGSTAB for non-symmetric systems. The H-matrix approximation of a
+//! symmetric kernel matrix is only approximately symmetric (ACA breaks
+//! exact symmetry); BiCGSTAB is robust to that, and also covers
+//! collocation matrices A_{φ,Y₁×Y₂} with Y₁ ≠ Y₂.
+
+use super::cg::LinOp;
+use crate::util::{axpy, dot, norm2};
+
+#[derive(Clone, Copy, Debug)]
+pub struct BiCgStabOptions {
+    pub max_iter: usize,
+    pub tol: f64,
+}
+
+impl Default for BiCgStabOptions {
+    fn default() -> Self {
+        BiCgStabOptions { max_iter: 500, tol: 1e-8 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BiCgStabResult {
+    pub x: Vec<f64>,
+    pub iterations: usize,
+    pub residual: f64,
+    pub converged: bool,
+}
+
+/// Solve A x = b with (unpreconditioned) BiCGSTAB.
+pub fn bicgstab_solve(op: &dyn LinOp, b: &[f64], opts: BiCgStabOptions) -> BiCgStabResult {
+    let n = op.dim();
+    assert_eq!(b.len(), n);
+    let b_norm = norm2(b).max(f64::MIN_POSITIVE);
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec();
+    let r_hat = r.clone();
+    let mut rho = 1.0f64;
+    let mut alpha = 1.0f64;
+    let mut omega = 1.0f64;
+    let mut v = vec![0.0; n];
+    let mut p = vec![0.0; n];
+    for it in 0..opts.max_iter {
+        let rel = norm2(&r) / b_norm;
+        if rel <= opts.tol {
+            return BiCgStabResult { x, iterations: it, residual: rel, converged: true };
+        }
+        let rho_new = dot(&r_hat, &r);
+        if rho_new.abs() < 1e-300 {
+            // breakdown; return the best iterate so far
+            return BiCgStabResult { x, iterations: it, residual: rel, converged: false };
+        }
+        let beta = (rho_new / rho) * (alpha / omega);
+        rho = rho_new;
+        // p = r + beta (p - omega v)
+        for i in 0..n {
+            p[i] = r[i] + beta * (p[i] - omega * v[i]);
+        }
+        v = op.apply(&p);
+        let denom = dot(&r_hat, &v);
+        if denom.abs() < 1e-300 {
+            return BiCgStabResult { x, iterations: it, residual: rel, converged: false };
+        }
+        alpha = rho / denom;
+        // s = r - alpha v
+        let mut s = r.clone();
+        axpy(-alpha, &v, &mut s);
+        if norm2(&s) / b_norm <= opts.tol {
+            axpy(alpha, &p, &mut x);
+            return BiCgStabResult {
+                x,
+                iterations: it + 1,
+                residual: norm2(&s) / b_norm,
+                converged: true,
+            };
+        }
+        let t = op.apply(&s);
+        let tt = dot(&t, &t);
+        omega = if tt > 1e-300 { dot(&t, &s) / tt } else { 0.0 };
+        // x += alpha p + omega s
+        axpy(alpha, &p, &mut x);
+        axpy(omega, &s, &mut x);
+        // r = s - omega t
+        r = s;
+        axpy(-omega, &t, &mut r);
+        if omega.abs() < 1e-300 {
+            let rel = norm2(&r) / b_norm;
+            return BiCgStabResult { x, iterations: it + 1, residual: rel, converged: rel <= opts.tol };
+        }
+    }
+    let rel = norm2(&r) / b_norm;
+    BiCgStabResult { x, iterations: opts.max_iter, residual: rel, converged: rel <= opts.tol }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+
+    struct DenseOp {
+        a: Vec<f64>,
+        n: usize,
+    }
+
+    impl LinOp for DenseOp {
+        fn apply(&self, x: &[f64]) -> Vec<f64> {
+            (0..self.n)
+                .map(|i| (0..self.n).map(|j| self.a[i * self.n + j] * x[j]).sum())
+                .collect()
+        }
+
+        fn dim(&self) -> usize {
+            self.n
+        }
+    }
+
+    #[test]
+    fn solves_nonsymmetric_system() {
+        let n = 40;
+        let mut rng = Xoshiro256::seed(1);
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                a[i * n + j] = rng.range_f64(-0.5, 0.5) / n as f64;
+            }
+            a[i * n + i] += 2.0; // diagonally dominant, non-symmetric
+        }
+        let op = DenseOp { a, n };
+        let x_true = rng.vector(n);
+        let b = op.apply(&x_true);
+        let res = bicgstab_solve(&op, &b, BiCgStabOptions { max_iter: 300, tol: 1e-12 });
+        assert!(res.converged, "residual {}", res.residual);
+        assert!(crate::util::rel_err(&res.x, &x_true) < 1e-8);
+    }
+
+    #[test]
+    fn works_on_hmatrix_operator() {
+        use crate::config::HmxConfig;
+        use crate::prelude::*;
+        use crate::solver::cg::RegularizedHOp;
+        let cfg = HmxConfig { n: 512, dim: 2, c_leaf: 64, k: 12, ..HmxConfig::default() };
+        let pts = PointSet::halton(cfg.n, cfg.dim);
+        let h = HMatrix::build(pts, &cfg).unwrap();
+        let op = RegularizedHOp::new(&h, 1e-2);
+        let b = Xoshiro256::seed(2).vector(cfg.n);
+        let res = bicgstab_solve(&op, &b, BiCgStabOptions { max_iter: 400, tol: 1e-9 });
+        assert!(res.converged, "residual {}", res.residual);
+        // verify: apply A to the solution reproduces b
+        let back = op.apply(&res.x);
+        assert!(crate::util::rel_err(&back, &b) < 1e-7);
+    }
+
+    #[test]
+    fn respects_iteration_cap() {
+        let n = 16;
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            a[i * n + i] = (i + 1) as f64 * 100.0; // wide spectrum
+            if i + 1 < n {
+                a[i * n + i + 1] = 50.0;
+            }
+        }
+        let op = DenseOp { a, n };
+        let b = vec![1.0; n];
+        let res = bicgstab_solve(&op, &b, BiCgStabOptions { max_iter: 1, tol: 1e-16 });
+        assert!(!res.converged);
+    }
+}

@@ -1,0 +1,6 @@
+//! Iterative solvers on top of the fast H-mat-vec (the MPLA role in the
+//! paper's ecosystem): conjugate gradients for the SPD systems
+//! (A + σ²I)x = b of kernel ridge regression / GPR.
+
+pub mod bicgstab;
+pub mod cg;

@@ -1,0 +1,127 @@
+//! Bounding boxes and the bounding-box admissibility condition (§2.2):
+//!
+//! min(diam(Q_τ), diam(Q_σ)) ≤ η · dist(Q_τ, Q_σ).
+
+/// Axis-aligned bounding box with a fixed max dimension (avoids per-box
+/// allocations inside kernels). Only the first `d` lanes are meaningful.
+#[derive(Clone, Copy, Debug)]
+pub struct BBox {
+    pub lo: [f64; 8],
+    pub hi: [f64; 8],
+}
+
+impl BBox {
+    pub fn empty() -> Self {
+        BBox { lo: [f64::INFINITY; 8], hi: [f64::NEG_INFINITY; 8] }
+    }
+
+    pub fn from_bounds(lo: &[f64], hi: &[f64]) -> Self {
+        let mut b = BBox::empty();
+        b.lo[..lo.len()].copy_from_slice(lo);
+        b.hi[..hi.len()].copy_from_slice(hi);
+        b
+    }
+
+    /// Grow to include the point with coordinates `p[..d]`.
+    #[inline]
+    pub fn include(&mut self, p: &[f64]) {
+        for (k, &x) in p.iter().enumerate() {
+            self.lo[k] = self.lo[k].min(x);
+            self.hi[k] = self.hi[k].max(x);
+        }
+    }
+
+    /// diam(Q) = ‖hi − lo‖₂ (§2.2).
+    #[inline]
+    pub fn diam(&self, d: usize) -> f64 {
+        let mut acc = 0.0;
+        for k in 0..d {
+            let e = self.hi[k] - self.lo[k];
+            acc += e * e;
+        }
+        acc.sqrt()
+    }
+
+    /// dist(Q_a, Q_b) per the paper's componentwise formula (§2.2).
+    #[inline]
+    pub fn dist(&self, other: &BBox, d: usize) -> f64 {
+        let mut acc = 0.0;
+        for k in 0..d {
+            let g1 = (self.lo[k] - other.hi[k]).max(0.0);
+            let g2 = (other.lo[k] - self.hi[k]).max(0.0);
+            acc += g1 * g1 + g2 * g2;
+        }
+        acc.sqrt()
+    }
+}
+
+/// The admissibility condition (3): min diam ≤ η·dist.
+#[inline]
+pub fn is_admissible(a: &BBox, b: &BBox, d: usize, eta: f64) -> bool {
+    let min_diam = a.diam(d).min(b.diam(d));
+    min_diam <= eta * a.dist(b, d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bb(lo: &[f64], hi: &[f64]) -> BBox {
+        BBox::from_bounds(lo, hi)
+    }
+
+    #[test]
+    fn diam_is_diagonal_length() {
+        let b = bb(&[0.0, 0.0], &[3.0, 4.0]);
+        assert!((b.diam(2) - 5.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn dist_zero_when_overlapping() {
+        let a = bb(&[0.0, 0.0], &[1.0, 1.0]);
+        let b = bb(&[0.5, 0.5], &[2.0, 2.0]);
+        assert_eq!(a.dist(&b, 2), 0.0);
+        // touching boxes also have distance 0
+        let c = bb(&[1.0, 0.0], &[2.0, 1.0]);
+        assert_eq!(a.dist(&c, 2), 0.0);
+    }
+
+    #[test]
+    fn dist_separated_boxes() {
+        let a = bb(&[0.0, 0.0], &[1.0, 1.0]);
+        let b = bb(&[4.0, 4.0], &[5.0, 5.0]);
+        // gap of 3 in each dim
+        assert!((a.dist(&b, 2) - (18.0f64).sqrt()).abs() < 1e-15);
+        assert_eq!(a.dist(&b, 2), b.dist(&a, 2));
+    }
+
+    #[test]
+    fn admissibility_far_yes_near_no() {
+        let a = bb(&[0.0, 0.0], &[1.0, 1.0]);
+        let far = bb(&[10.0, 10.0], &[11.0, 11.0]);
+        let near = bb(&[1.1, 0.0], &[2.1, 1.0]);
+        assert!(is_admissible(&a, &far, 2, 1.5));
+        assert!(!is_admissible(&a, &near, 2, 1.5));
+        // overlapping boxes are never admissible for finite diam
+        let overlap = bb(&[0.5, 0.5], &[1.5, 1.5]);
+        assert!(!is_admissible(&a, &overlap, 2, 1.5));
+    }
+
+    #[test]
+    fn eta_zero_requires_point_boxes() {
+        let a = bb(&[0.0], &[0.0]);
+        let b = bb(&[5.0], &[6.0]);
+        // min diam = 0 <= 0 * dist
+        assert!(is_admissible(&a, &b, 1, 0.0));
+    }
+
+    #[test]
+    fn include_grows_box() {
+        let mut b = BBox::empty();
+        b.include(&[1.0, 2.0]);
+        b.include(&[-1.0, 5.0]);
+        assert_eq!(b.lo[0], -1.0);
+        assert_eq!(b.hi[1], 5.0);
+        assert!((b.diam(2) - (4.0f64 + 9.0).sqrt()).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,254 @@
+//! Block cluster tree construction by level-wise parallel traversal
+//! (Alg 1 semantics executed with the Alg 4 pattern, specialized per §5.2).
+//!
+//! Per level: build the bounding-box lookup table + maps for the clusters
+//! referenced on this level (Alg 7/8), evaluate admissibility in the
+//! COMPUTE_CHILD_COUNT kernel, exclusive-scan the counts into child
+//! offsets, then COMPUTE_CHILDREN either splits a node 2×2 or emits it as
+//! an admissible / dense leaf into a parallel output queue (§4.3).
+
+use crate::bbox::lookup::compute_bbox_lookup_table;
+use crate::bbox::map::create_map_for_bounding_boxes;
+use crate::dpp::executor::{launch, GlobalMem};
+use crate::dpp::queue::OutputQueue;
+use crate::dpp::scan::exclusive_scan;
+use crate::geometry::points::PointSet;
+use crate::tree::admissibility::is_admissible;
+use crate::tree::cluster::Cluster;
+
+/// A block-cluster-tree node: the index block τ × σ (§5.1's `work_item`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorkItem {
+    pub tau: Cluster,
+    pub sigma: Cluster,
+}
+
+impl WorkItem {
+    pub fn rows(&self) -> usize {
+        self.tau.len()
+    }
+
+    pub fn cols(&self) -> usize {
+        self.sigma.len()
+    }
+
+    pub fn elems(&self) -> usize {
+        self.rows() * self.cols()
+    }
+}
+
+/// Result of the traversal: the two leaf work queues plus statistics.
+pub struct BlockTree {
+    /// Admissible leaves (→ low-rank / ACA).
+    pub admissible: Vec<WorkItem>,
+    /// Non-admissible leaves (→ dense evaluation).
+    pub dense: Vec<WorkItem>,
+    /// Number of levels processed.
+    pub levels: usize,
+    /// Total nodes visited across all levels.
+    pub nodes_visited: usize,
+}
+
+/// Node fate decided by the child-count kernel.
+const FATE_SPLIT: usize = 0;
+const FATE_ADMISSIBLE: usize = 1;
+const FATE_DENSE: usize = 2;
+
+/// Build the block cluster tree over Morton-ordered `points`.
+pub fn build_block_tree(points: &PointSet, eta: f64, c_leaf: usize) -> BlockTree {
+    let n = points.len();
+    let d = points.dim();
+    let root = WorkItem { tau: Cluster::new(0, n), sigma: Cluster::new(0, n) };
+    let mut level: Vec<WorkItem> = vec![root];
+    let mut admissible: Vec<WorkItem> = Vec::new();
+    let mut dense: Vec<WorkItem> = Vec::new();
+    let mut levels = 0usize;
+    let mut nodes_visited = 0usize;
+
+    while !level.is_empty() {
+        let m = level.len();
+        nodes_visited += m;
+        levels += 1;
+
+        // Alg 7/8 on the concatenated τ- and σ-cluster keys of this level.
+        let mut cluster_keys = Vec::with_capacity(2 * m);
+        cluster_keys.extend(level.iter().map(|w| w.tau.key()));
+        cluster_keys.extend(level.iter().map(|w| w.sigma.key()));
+        let table = crate::metrics::timed("block_tree.bbox_table", || {
+            compute_bbox_lookup_table(&cluster_keys, points)
+        });
+        let map = crate::metrics::timed("block_tree.bbox_map", || {
+            create_map_for_bounding_boxes(&cluster_keys)
+        });
+
+        // COMPUTE_CHILD_COUNT (specialized §5.2): admissibility from the
+        // precomputed boxes decides split vs leaf-kind.
+        let mut fate = vec![0usize; m];
+        let mut counts = vec![0usize; m];
+        {
+            let f = GlobalMem::new(&mut fate);
+            let c = GlobalMem::new(&mut counts);
+            launch(m, |i| {
+                let w = &level[i];
+                let bb_tau = &table.boxes[map[i]];
+                let bb_sigma = &table.boxes[map[m + i]];
+                if is_admissible(bb_tau, bb_sigma, d, eta) {
+                    f.write(i, FATE_ADMISSIBLE);
+                    c.write(i, 0);
+                } else if w.tau.len() > c_leaf && w.sigma.len() > c_leaf {
+                    f.write(i, FATE_SPLIT);
+                    c.write(i, 4);
+                } else {
+                    f.write(i, FATE_DENSE);
+                    c.write(i, 0);
+                }
+            });
+        }
+
+        // EXCLUSIVE_SCAN → child offsets and |V(l+1)|.
+        let offsets = exclusive_scan(&counts);
+        let total_children = offsets[m];
+
+        // COMPUTE_CHILDREN: split 2×2 or enqueue as leaf (parallel output
+        // queues; capacity = m because each node emits at most one leaf).
+        let mut next: Vec<WorkItem> = vec![root; total_children];
+        let adm_queue = OutputQueue::with_capacity(m);
+        let dense_queue = OutputQueue::with_capacity(m);
+        {
+            let nx = GlobalMem::new(&mut next);
+            launch(m, |i| {
+                let w = level[i];
+                match fate[i] {
+                    FATE_SPLIT => {
+                        let (t1, t2) = w.tau.split();
+                        let (s1, s2) = w.sigma.split();
+                        let base = offsets[i];
+                        nx.write(base, WorkItem { tau: t1, sigma: s1 });
+                        nx.write(base + 1, WorkItem { tau: t1, sigma: s2 });
+                        nx.write(base + 2, WorkItem { tau: t2, sigma: s1 });
+                        nx.write(base + 3, WorkItem { tau: t2, sigma: s2 });
+                    }
+                    FATE_ADMISSIBLE => {
+                        adm_queue.put(w);
+                    }
+                    _ => {
+                        dense_queue.put(w);
+                    }
+                }
+            });
+        }
+        admissible.extend(adm_queue.into_vec());
+        dense.extend(dense_queue.into_vec());
+        level = next;
+    }
+
+    BlockTree { admissible, dense, levels, nodes_visited }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::morton::morton_sort;
+
+    fn tree_for(n: usize, d: usize, eta: f64, c_leaf: usize) -> (BlockTree, PointSet) {
+        let mut pts = PointSet::halton(n, d);
+        morton_sort(&mut pts);
+        (build_block_tree(&pts, eta, c_leaf), pts)
+    }
+
+    /// The leaves must partition I × I (disjoint cover) — the fundamental
+    /// block-cluster-tree invariant (§2.3).
+    #[test]
+    fn leaves_partition_i_times_i() {
+        for (n, c_leaf) in [(256usize, 32usize), (1000, 64), (777, 16)] {
+            let (t, _) = tree_for(n, 2, 1.5, c_leaf);
+            let total: usize =
+                t.admissible.iter().chain(&t.dense).map(|w| w.elems()).sum();
+            assert_eq!(total, n * n, "covering area n={n}");
+            // disjointness via an n×n bitmap (sizes here are small)
+            let mut seen = vec![false; n * n];
+            for w in t.admissible.iter().chain(&t.dense) {
+                for r in w.tau.lo..w.tau.hi {
+                    for c in w.sigma.lo..w.sigma.hi {
+                        assert!(!seen[r * n + c], "overlap at ({r},{c})");
+                        seen[r * n + c] = true;
+                    }
+                }
+            }
+            assert!(seen.iter().all(|&b| b));
+        }
+    }
+
+    /// Admissible leaves really satisfy the admissibility condition and
+    /// dense leaves are small (≤ C_leaf on a side) and non-admissible.
+    #[test]
+    fn leaf_classification_is_correct() {
+        let (t, pts) = tree_for(512, 2, 1.5, 32);
+        let d = 2;
+        assert!(!t.admissible.is_empty(), "expect admissible blocks");
+        assert!(!t.dense.is_empty(), "expect dense blocks");
+        let naive_box = |c: Cluster| {
+            let mut b = crate::tree::admissibility::BBox::empty();
+            for i in c.lo..c.hi {
+                b.include(&pts.point(i));
+            }
+            b
+        };
+        for w in &t.admissible {
+            let bt = naive_box(w.tau);
+            let bs = naive_box(w.sigma);
+            assert!(is_admissible(&bt, &bs, d, 1.5), "admissible leaf fails condition: {w:?}");
+        }
+        for w in &t.dense {
+            assert!(w.tau.len() <= 32 || w.sigma.len() <= 32, "dense leaf too large: {w:?}");
+            let bt = naive_box(w.tau);
+            let bs = naive_box(w.sigma);
+            assert!(!is_admissible(&bt, &bs, d, 1.5), "dense leaf would be admissible: {w:?}");
+        }
+    }
+
+    /// η = 0 disables low-rank approximation for non-degenerate boxes;
+    /// every leaf must be dense and the matvec falls back to near-exact.
+    #[test]
+    fn eta_zero_gives_only_dense_blocks() {
+        let (t, _) = tree_for(128, 2, 1.5, 16);
+        assert!(!t.admissible.is_empty());
+        let (t0, _) = tree_for(128, 2, 0.0, 16);
+        assert!(t0.admissible.is_empty());
+        let total: usize = t0.dense.iter().map(|w| w.elems()).sum();
+        assert_eq!(total, 128 * 128);
+    }
+
+    /// Number of blocks grows ~ O(N log N) — sanity check the complexity
+    /// claim on a doubling sweep (ratio of blocks should stay near 2x).
+    #[test]
+    fn block_count_growth_is_loglinear() {
+        let counts: Vec<usize> = [1usize << 10, 1 << 11, 1 << 12]
+            .iter()
+            .map(|&n| {
+                let (t, _) = tree_for(n, 2, 1.5, 64);
+                t.admissible.len() + t.dense.len()
+            })
+            .collect();
+        let r1 = counts[1] as f64 / counts[0] as f64;
+        let r2 = counts[2] as f64 / counts[1] as f64;
+        assert!(r1 < 3.5 && r2 < 3.5, "superlinear block growth: {counts:?}");
+        assert!(r1 > 1.5 && r2 > 1.5, "sublinear block growth: {counts:?}");
+    }
+
+    #[test]
+    fn three_dimensional_points_work() {
+        let (t, _) = tree_for(512, 3, 1.5, 64);
+        let total: usize = t.admissible.iter().chain(&t.dense).map(|w| w.elems()).sum();
+        assert_eq!(total, 512 * 512);
+    }
+
+    #[test]
+    fn tiny_problem_single_dense_block() {
+        let (t, _) = tree_for(8, 2, 1.5, 16);
+        // 8 <= C_leaf: root cannot split; root block τ=σ has dist 0 → dense
+        assert_eq!(t.admissible.len(), 0);
+        assert_eq!(t.dense.len(), 1);
+        assert_eq!(t.dense[0].elems(), 64);
+    }
+}

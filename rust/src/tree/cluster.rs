@@ -1,0 +1,189 @@
+//! Clusters as index ranges + the level-wise cluster tree.
+//!
+//! With points sorted along the Z-curve, cardinality-based clustering
+//! (§2.1) is pure array arithmetic: a cluster `[lo, hi)` splits into the
+//! two halves `[lo, mid)`, `[mid, hi)` (Fig 6 right). The cluster tree is
+//! materialized level-wise with the parallel traversal pattern of Alg 4 —
+//! mostly needed for the C1–C4 property tests and ablations; the block
+//! cluster tree construction (the hot path) splits ranges on the fly.
+
+use crate::dpp::executor::{launch, GlobalMem};
+use crate::dpp::scan::exclusive_scan;
+
+/// A cluster τ ⊂ I as a half-open range over the Morton-sorted point array.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Cluster {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Cluster {
+    #[inline]
+    pub fn new(lo: usize, hi: usize) -> Self {
+        debug_assert!(lo < hi);
+        Cluster { lo, hi }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.hi <= self.lo
+    }
+
+    /// Cardinality-based split into two near-equal halves (C4).
+    #[inline]
+    pub fn split(&self) -> (Cluster, Cluster) {
+        debug_assert!(self.len() >= 2);
+        let mid = self.lo + self.len() / 2;
+        (Cluster::new(self.lo, mid), Cluster::new(mid, self.hi))
+    }
+
+    /// Pack as a sortable u64 key (lo in the high bits so sorting by key
+    /// sorts by lo; n < 2^32 assumed).
+    #[inline]
+    pub fn key(&self) -> u64 {
+        ((self.lo as u64) << 32) | self.hi as u64
+    }
+
+    #[inline]
+    pub fn from_key(key: u64) -> Self {
+        Cluster { lo: (key >> 32) as usize, hi: (key & 0xFFFF_FFFF) as usize }
+    }
+}
+
+/// Level-wise cluster tree: `levels[l]` holds the clusters of level l.
+pub struct ClusterTree {
+    pub levels: Vec<Vec<Cluster>>,
+    pub c_leaf: usize,
+    pub n: usize,
+}
+
+impl ClusterTree {
+    /// Build with the parallel level-wise traversal (Alg 4): per level,
+    /// a child-count kernel, an exclusive scan for offsets, and a
+    /// child-construction kernel.
+    pub fn build(n: usize, c_leaf: usize) -> Self {
+        assert!(n > 0 && c_leaf > 0);
+        let mut levels = vec![vec![Cluster::new(0, n)]];
+        loop {
+            let cur = levels.last().unwrap();
+            let m = cur.len();
+            // COMPUTE_CHILD_COUNT: 2 children iff |τ| > C_leaf.
+            let mut counts = vec![0usize; m];
+            {
+                let c = GlobalMem::new(&mut counts);
+                launch(m, |i| c.write(i, if cur[i].len() > c_leaf { 2 } else { 0 }));
+            }
+            let offsets = exclusive_scan(&counts);
+            let total = offsets[m];
+            if total == 0 {
+                break;
+            }
+            // COMPUTE_CHILDREN
+            let mut next: Vec<Cluster> = vec![Cluster { lo: 0, hi: 1 }; total];
+            {
+                let nx = GlobalMem::new(&mut next);
+                launch(m, |i| {
+                    if counts[i] == 2 {
+                        let (a, b) = cur[i].split();
+                        nx.write(offsets[i], a);
+                        nx.write(offsets[i] + 1, b);
+                    }
+                });
+            }
+            levels.push(next);
+        }
+        ClusterTree { levels, c_leaf, n }
+    }
+
+    pub fn height(&self) -> usize {
+        self.levels.len() - 1
+    }
+
+    /// All leaves: clusters with |τ| ≤ C_leaf on any level.
+    pub fn leaves(&self) -> Vec<Cluster> {
+        let mut out = Vec::new();
+        for level in &self.levels {
+            for c in level {
+                if c.len() <= self.c_leaf {
+                    out.push(*c);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_halves() {
+        let c = Cluster::new(0, 10);
+        let (a, b) = c.split();
+        assert_eq!((a.lo, a.hi, b.lo, b.hi), (0, 5, 5, 10));
+        let c = Cluster::new(3, 6); // odd length
+        let (a, b) = c.split();
+        assert_eq!(a.len() + b.len(), 3);
+        assert_eq!(a.hi, b.lo);
+    }
+
+    #[test]
+    fn key_roundtrip() {
+        let c = Cluster::new(123, 99999);
+        assert_eq!(Cluster::from_key(c.key()), c);
+    }
+
+    /// Cluster-tree axioms C1–C4 (§2.1).
+    #[test]
+    fn tree_axioms_hold() {
+        for (n, c_leaf) in [(1000usize, 32usize), (1, 1), (17, 4), (4096, 256)] {
+            let t = ClusterTree::build(n, c_leaf);
+            // C2: root is I
+            assert_eq!(t.levels[0], vec![Cluster::new(0, n)]);
+            for (l, level) in t.levels.iter().enumerate() {
+                for c in level {
+                    // C1: non-empty
+                    assert!(c.len() > 0, "empty cluster at level {l}");
+                }
+            }
+            // C3 + C4: every non-leaf splits into exactly two children that
+            // disjointly cover it; leaves are <= C_leaf.
+            for l in 0..t.height() {
+                let children = &t.levels[l + 1];
+                let mut child_iter = children.iter();
+                for c in &t.levels[l] {
+                    if c.len() > c_leaf {
+                        let a = child_iter.next().unwrap();
+                        let b = child_iter.next().unwrap();
+                        assert_eq!((a.lo, b.hi), (c.lo, c.hi));
+                        assert_eq!(a.hi, b.lo);
+                    }
+                }
+                assert!(child_iter.next().is_none());
+            }
+            // leaves partition I
+            let mut leaves = t.leaves();
+            leaves.sort();
+            assert_eq!(leaves[0].lo, 0);
+            assert_eq!(leaves.last().unwrap().hi, n);
+            for w in leaves.windows(2) {
+                assert_eq!(w[0].hi, w[1].lo, "leaves must tile I");
+            }
+            for leaf in &leaves {
+                assert!(leaf.len() <= c_leaf);
+            }
+        }
+    }
+
+    #[test]
+    fn height_is_logarithmic() {
+        let t = ClusterTree::build(1 << 16, 256);
+        assert_eq!(t.height(), 8); // 2^16 / 256 = 2^8 leaves
+    }
+}

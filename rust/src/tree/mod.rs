@@ -1,0 +1,16 @@
+//! Cluster tree and block cluster tree (§2.1–2.3, §4.1, §5.2).
+//!
+//! Clusters are index *ranges* over the Morton-sorted point array (§5.1):
+//! cardinality-based clustering along the Z-curve reduces all spatial
+//! splitting to array halving. The block cluster tree is built with the
+//! level-wise parallel traversal of Alg 4, with the bounding-box lookup
+//! table (Alg 7/8) evaluated per level and leaves emitted to a parallel
+//! output queue (§4.3).
+
+pub mod admissibility;
+pub mod block;
+pub mod cluster;
+
+pub use admissibility::BBox;
+pub use block::{build_block_tree, BlockTree, WorkItem};
+pub use cluster::{Cluster, ClusterTree};

@@ -1,0 +1,83 @@
+//! Atomic f64 accumulation via CAS on the bit pattern.
+//!
+//! The H-mat-vec accumulates block contributions `z|_tau += ...` from many
+//! batched blocks in parallel; different blocks can share rows of `tau`, so
+//! the scatter-add must be atomic (the paper performs the equivalent
+//! atomic adds on the GPU).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A shared output vector supporting atomic `+=` per element.
+pub struct AtomicF64Vec {
+    bits: Vec<AtomicU64>,
+}
+
+impl AtomicF64Vec {
+    pub fn zeros(n: usize) -> Self {
+        let mut bits = Vec::with_capacity(n);
+        bits.resize_with(n, || AtomicU64::new(0f64.to_bits()));
+        AtomicF64Vec { bits }
+    }
+
+    pub fn from_slice(v: &[f64]) -> Self {
+        AtomicF64Vec { bits: v.iter().map(|x| AtomicU64::new(x.to_bits())).collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.bits.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bits.is_empty()
+    }
+
+    /// Atomically `self[i] += v`.
+    #[inline]
+    pub fn add(&self, i: usize, v: f64) {
+        let cell = &self.bits[i];
+        let mut cur = cell.load(Ordering::Relaxed);
+        loop {
+            let new = (f64::from_bits(cur) + v).to_bits();
+            match cell.compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> f64 {
+        f64::from_bits(self.bits[i].load(Ordering::Relaxed))
+    }
+
+    pub fn into_vec(self) -> Vec<f64> {
+        self.bits.into_iter().map(|b| f64::from_bits(b.into_inner())).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpp::executor::launch;
+
+    #[test]
+    fn concurrent_adds_sum_correctly() {
+        let v = AtomicF64Vec::zeros(16);
+        let n = 100_000;
+        launch(n, |tid| v.add(tid % 16, 1.0));
+        let out = v.into_vec();
+        let total: f64 = out.iter().sum();
+        assert!((total - n as f64).abs() < 1e-9);
+        for slot in &out {
+            assert!((*slot - (n / 16) as f64).abs() < 1.5);
+        }
+    }
+
+    #[test]
+    fn from_slice_roundtrip() {
+        let v = AtomicF64Vec::from_slice(&[1.5, -2.5]);
+        v.add(0, 0.5);
+        assert_eq!(v.get(0), 2.0);
+        assert_eq!(v.into_vec(), vec![2.0, -2.5]);
+    }
+}

@@ -1,0 +1,84 @@
+//! Minimal `--flag value` argument parser for the `hmx` binary, the
+//! examples and the bench harnesses (clap is unavailable offline).
+
+use std::collections::HashMap;
+
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    present: Vec<String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()` (skipping argv[0]); `--key value` and
+    /// `--switch` (boolean) styles; `--key=value` also accepted.
+    pub fn parse() -> Self {
+        Self::from_iter(std::env::args().skip(1))
+    }
+
+    pub fn from_iter(iter: impl IntoIterator<Item = String>) -> Self {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut present = Vec::new();
+        let mut items = iter.into_iter().peekable();
+        while let Some(arg) = items.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                    present.push(k.to_string());
+                } else {
+                    // value-taking if next token is not a flag
+                    match items.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = items.next().unwrap();
+                            flags.insert(stripped.to_string(), v);
+                        }
+                        _ => {}
+                    }
+                    present.push(stripped.to_string());
+                }
+            } else {
+                positional.push(arg);
+            }
+        }
+        Args { positional, flags, present }
+    }
+
+    pub fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.present.iter().any(|k| k == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        Args::from_iter(s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn parses_key_value_and_switches() {
+        let a = args(&["construct", "--n", "1024", "--full", "--kernel=matern"]);
+        assert_eq!(a.positional, vec!["construct"]);
+        assert_eq!(a.get("n", 0usize), 1024);
+        assert!(a.has("full"));
+        assert_eq!(a.get_str("kernel", "gaussian"), "matern");
+        assert_eq!(a.get("missing", 7u32), 7);
+    }
+
+    #[test]
+    fn switch_before_value_flag() {
+        let a = args(&["--flag", "--n", "8"]);
+        assert!(a.has("flag"));
+        assert_eq!(a.get("n", 0usize), 8);
+    }
+}

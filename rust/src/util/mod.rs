@@ -1,0 +1,59 @@
+//! Small shared utilities: deterministic PRNG, atomic f64 accumulation,
+//! vector helpers, a mini property-testing harness and a hand-rolled CLI
+//! argument parser (no external crates are available offline).
+
+pub mod atomic;
+pub mod cli;
+pub mod fastmath;
+pub mod prng;
+pub mod prop;
+
+/// Euclidean norm.
+pub fn norm2(v: &[f64]) -> f64 {
+    v.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+/// `||a - b||_2 / ||b||_2` — the paper's relative error (§6.4).
+pub fn rel_err(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let diff: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+    diff.sqrt() / norm2(b).max(f64::MIN_POSITIVE)
+}
+
+/// Dot product.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// `y += alpha * x`.
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Next power of two >= x (min 1).
+pub fn next_pow2(x: usize) -> usize {
+    x.max(1).next_power_of_two()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norms_and_errors() {
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+        assert!(rel_err(&[1.0, 0.0], &[1.0, 0.0]) < 1e-15);
+        assert!((rel_err(&[2.0], &[1.0]) - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn pow2_rounding() {
+        assert_eq!(next_pow2(0), 1);
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(3), 4);
+        assert_eq!(next_pow2(1024), 1024);
+        assert_eq!(next_pow2(1025), 2048);
+    }
+}

@@ -1,0 +1,217 @@
+//! Cross-module integration tests: full pipeline against exact dense
+//! products, solver round-trips, engine/mode equivalences, and the
+//! paper's qualitative claims at test scale.
+
+use hmx::baseline::h2lib_like::SequentialHMatrix;
+use hmx::config::{HmxConfig, KernelKind};
+use hmx::prelude::*;
+use hmx::solver::cg::RegularizedHOp;
+use hmx::util::prng::Xoshiro256;
+
+fn cfg(n: usize) -> HmxConfig {
+    HmxConfig { n, dim: 2, c_leaf: 64, k: 16, ..HmxConfig::default() }
+}
+
+/// Fig 11 in miniature: error decays exponentially with rank k.
+#[test]
+fn convergence_in_rank_all_kernels() {
+    let n = 2048;
+    for kernel in [KernelKind::Gaussian, KernelKind::Matern] {
+        for dim in [2usize, 3] {
+            let base = HmxConfig { n, dim, kernel, c_leaf: 128, ..HmxConfig::default() };
+            let pts = PointSet::halton(n, dim);
+            let exact = DenseOperator::new(pts.clone(), base.kernel());
+            let x = Xoshiro256::seed(1).vector(n);
+            let want = exact.matvec(&x);
+            let mut errs = Vec::new();
+            for k in [2usize, 4, 8, 16] {
+                let c = HmxConfig { k, ..base.clone() };
+                let h = HMatrix::build(pts.clone(), &c).unwrap();
+                errs.push(hmx::util::rel_err(&h.matvec(&x).unwrap(), &want));
+            }
+            // decaying over 4 doublings and small at k=16
+            for w in errs.windows(2) {
+                assert!(
+                    w[1] <= w[0] * 1.5 + 1e-12,
+                    "non-decaying: {errs:?} kernel={kernel:?} d={dim}"
+                );
+            }
+            assert!(
+                errs.last().unwrap() < &1e-4,
+                "k=16 error too large: {errs:?} kernel={kernel:?} d={dim}"
+            );
+        }
+    }
+}
+
+/// H-matrix construction + matvec agree between the parallel engine and
+/// the sequential H2Lib-style baseline (both approximate the same matrix).
+#[test]
+fn parallel_and_baseline_agree() {
+    let c = cfg(2048);
+    let pts = PointSet::halton(c.n, c.dim);
+    let h = HMatrix::build(pts.clone(), &c).unwrap();
+    let seq = SequentialHMatrix::build(pts.clone(), c.kernel(), c.eta, c.c_leaf, c.k);
+    let exact = DenseOperator::new(pts, c.kernel());
+    let x = Xoshiro256::seed(2).vector(c.n);
+    let want = exact.matvec(&x);
+    let err_par = hmx::util::rel_err(&h.matvec(&x).unwrap(), &want);
+    let err_seq = hmx::util::rel_err(&seq.matvec(&x), &want);
+    assert!(err_par < 1e-5, "parallel err {err_par}");
+    assert!(err_seq < 1e-5, "baseline err {err_seq}");
+}
+
+/// KRR end-to-end: solve (A + σ²I)α = y via CG on the H-operator and
+/// check the solution against a dense-operator CG solve.
+#[test]
+fn krr_solve_matches_dense_solve() {
+    let c = cfg(1024);
+    let sigma2 = 1e-2;
+    let pts = PointSet::halton(c.n, c.dim);
+    let h = HMatrix::build(pts.clone(), &c).unwrap();
+    let exact = DenseOperator::new(pts, c.kernel());
+    let b = Xoshiro256::seed(3).vector(c.n);
+
+    let h_op = RegularizedHOp::new(&h, sigma2);
+    let opts = CgOptions { max_iter: 400, tol: 1e-10 };
+    let res_h = cg_solve(&h_op, &b, opts);
+    assert!(res_h.converged, "H-CG residual {}", res_h.residual);
+
+    let dense_op = (c.n, |x: &[f64]| {
+        let mut y = exact.matvec(x);
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += sigma2 * xi;
+        }
+        y
+    });
+    let res_d = cg_solve(&dense_op, &b, opts);
+    assert!(res_d.converged);
+    let err = hmx::util::rel_err(&res_h.x, &res_d.x);
+    assert!(err < 1e-3, "KRR solutions diverge: {err}");
+}
+
+/// The mat-vec must be (numerically) linear: H(ax + by) = aHx + bHy.
+#[test]
+fn matvec_is_linear() {
+    let c = cfg(1024);
+    let h = HMatrix::build(PointSet::halton(c.n, c.dim), &c).unwrap();
+    let mut rng = Xoshiro256::seed(5);
+    let x = rng.vector(c.n);
+    let y = rng.vector(c.n);
+    let (a, b) = (2.5, -0.75);
+    let combo: Vec<f64> = x.iter().zip(&y).map(|(xi, yi)| a * xi + b * yi).collect();
+    let lhs = h.matvec(&combo).unwrap();
+    let hx = h.matvec(&x).unwrap();
+    let hy = h.matvec(&y).unwrap();
+    let rhs: Vec<f64> = hx.iter().zip(&hy).map(|(p, q)| a * p + b * q).collect();
+    assert!(hmx::util::rel_err(&lhs, &rhs) < 1e-12);
+}
+
+/// Symmetric kernels on τ = σ = Y give a symmetric operator: xᵀHy = yᵀHx.
+#[test]
+fn matvec_is_symmetric_bilinear_form() {
+    let c = cfg(1024);
+    let h = HMatrix::build(PointSet::halton(c.n, c.dim), &c).unwrap();
+    let mut rng = Xoshiro256::seed(6);
+    let x = rng.vector(c.n);
+    let y = rng.vector(c.n);
+    let hx = h.matvec(&x).unwrap();
+    let hy = h.matvec(&y).unwrap();
+    let xhy = hmx::util::dot(&x, &hy);
+    let yhx = hmx::util::dot(&y, &hx);
+    // ACA approximations are not exactly symmetric; tolerance reflects the
+    // k=16 truncation error, not machine precision.
+    assert!(
+        (xhy - yhx).abs() / xhy.abs().max(1.0) < 1e-6,
+        "asymmetry: {xhy} vs {yhx}"
+    );
+}
+
+/// Degenerate workloads: duplicated points, collinear points, tiny n.
+#[test]
+fn degenerate_point_sets_are_handled() {
+    // duplicated points (distance 0 between different indices)
+    let mut rows = Vec::new();
+    for i in 0..256 {
+        let v = (i / 4) as f64 / 64.0; // every point duplicated 4x
+        rows.extend_from_slice(&[v, 1.0 - v]);
+    }
+    let pts = PointSet::from_rows(&rows, 2);
+    let c = HmxConfig { n: 256, dim: 2, c_leaf: 16, k: 8, ..HmxConfig::default() };
+    let exact = DenseOperator::new(pts.clone(), c.kernel());
+    let h = HMatrix::build(pts, &c).unwrap();
+    let x = Xoshiro256::seed(7).vector(256);
+    let err = hmx::util::rel_err(&h.matvec(&x).unwrap(), &exact.matvec(&x));
+    // duplicate columns consume retry iterations, costing a little rank
+    assert!(err < 1e-5, "duplicated points: {err}");
+
+    // collinear points in 3D
+    let rows: Vec<f64> = (0..128).flat_map(|i| vec![i as f64 / 128.0, 0.5, 0.5]).collect();
+    let pts = PointSet::from_rows(&rows, 3);
+    let c = HmxConfig { n: 128, dim: 3, c_leaf: 16, k: 8, ..HmxConfig::default() };
+    let exact = DenseOperator::new(pts.clone(), c.kernel());
+    let h = HMatrix::build(pts, &c).unwrap();
+    let x = Xoshiro256::seed(8).vector(128);
+    let err = hmx::util::rel_err(&h.matvec(&x).unwrap(), &exact.matvec(&x));
+    assert!(err < 1e-6, "collinear points: {err}");
+
+    // tiny n (single dense block)
+    let c = HmxConfig { n: 4, dim: 2, c_leaf: 16, k: 4, ..HmxConfig::default() };
+    let pts = PointSet::halton(4, 2);
+    let exact = DenseOperator::new(pts.clone(), c.kernel());
+    let h = HMatrix::build(pts, &c).unwrap();
+    let x = vec![1.0, -1.0, 0.5, 0.25];
+    let err = hmx::util::rel_err(&h.matvec(&x).unwrap(), &exact.matvec(&x));
+    assert!(err < 1e-12, "tiny n must be exact: {err}");
+}
+
+/// Exponential kernel (rougher decay) still works.
+#[test]
+fn exponential_kernel_end_to_end() {
+    let c = HmxConfig { kernel: KernelKind::Exponential, ..cfg(1024) };
+    let pts = PointSet::halton(c.n, c.dim);
+    let exact = DenseOperator::new(pts.clone(), c.kernel());
+    let h = HMatrix::build(pts, &c).unwrap();
+    let x = Xoshiro256::seed(9).vector(c.n);
+    let err = hmx::util::rel_err(&h.matvec(&x).unwrap(), &exact.matvec(&x));
+    assert!(err < 1e-3, "exponential kernel err: {err}");
+}
+
+/// C_leaf sweep: every leaf size must give a correct product (the paper
+/// tunes C_leaf per architecture; correctness must be invariant).
+#[test]
+fn c_leaf_sweep_correctness() {
+    let n = 1024;
+    let pts = PointSet::halton(n, 2);
+    let exact = DenseOperator::new(pts.clone(), Kernel::gaussian());
+    let x = Xoshiro256::seed(10).vector(n);
+    let want = exact.matvec(&x);
+    for c_leaf in [16usize, 64, 256, 2048] {
+        let c = HmxConfig { n, dim: 2, c_leaf, k: 16, ..HmxConfig::default() };
+        let h = HMatrix::build(pts.clone(), &c).unwrap();
+        let err = hmx::util::rel_err(&h.matvec(&x).unwrap(), &want);
+        assert!(err < 1e-5, "c_leaf={c_leaf}: {err}");
+    }
+}
+
+/// Batch-size thresholds only change the schedule, never the numbers.
+#[test]
+fn batch_size_invariance() {
+    let c = cfg(1024);
+    let pts = PointSet::halton(c.n, c.dim);
+    let x = Xoshiro256::seed(11).vector(c.n);
+    let reference = {
+        let h = HMatrix::build(pts.clone(), &c).unwrap();
+        h.matvec(&x).unwrap()
+    };
+    for (bs_dense, bs_aca) in [(1usize << 10, 1usize << 8), (1 << 16, 1 << 14), (1 << 26, 1 << 24)]
+    {
+        let c2 = HmxConfig { bs_dense, bs_aca, ..c.clone() };
+        let h = HMatrix::build(pts.clone(), &c2).unwrap();
+        let got = h.matvec(&x).unwrap();
+        assert!(
+            hmx::util::rel_err(&got, &reference) < 1e-12,
+            "bs=({bs_dense},{bs_aca}) changed results"
+        );
+    }
+}

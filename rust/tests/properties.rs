@@ -1,0 +1,340 @@
+//! Property-based tests over the coordinator invariants: the dpp
+//! primitives, the spatial data structure, the tree partition axioms, the
+//! batching plans and the ACA approximation — randomized with the in-crate
+//! mini property harness (`hmx::util::prop`; proptest is unavailable in
+//! this offline environment, see DESIGN.md).
+
+use hmx::batch::plan::{plan_batches, BatchBudget, BlockShape};
+use hmx::dpp;
+use hmx::geometry::points::PointSet;
+use hmx::morton;
+use hmx::prelude::*;
+use hmx::tree::block::build_block_tree;
+use hmx::tree::cluster::Cluster;
+use hmx::util::prop::check;
+
+// ---------- dpp primitives ----------
+
+#[test]
+fn prop_exclusive_scan_matches_naive() {
+    check(
+        "scan-naive",
+        40,
+        |g| {
+            let n = g.usize_in(0, g.size * 8);
+            g.vec_u64(n, 1000)
+        },
+        |v| {
+            let got = dpp::exclusive_scan(v);
+            let mut acc = 0u64;
+            for (i, &x) in v.iter().enumerate() {
+                if got[i] != acc {
+                    return Err(format!("mismatch at {i}: {} != {acc}", got[i]));
+                }
+                acc += x;
+            }
+            (got[v.len()] == acc).then_some(()).ok_or("bad total".to_string())
+        },
+    );
+}
+
+#[test]
+fn prop_sort_pairs_is_stable_permutation() {
+    check(
+        "radix-sort",
+        30,
+        |g| {
+            let n = g.usize_in(0, g.size * 16);
+            g.vec_u64(n, 64) // many duplicate keys
+        },
+        |keys| {
+            let mut k = keys.clone();
+            let mut v: Vec<u32> = (0..keys.len() as u32).collect();
+            dpp::sort_pairs_u64(&mut k, &mut v);
+            // sorted
+            if !k.windows(2).all(|w| w[0] <= w[1]) {
+                return Err("not sorted".into());
+            }
+            // permutation consistency
+            for (i, &vi) in v.iter().enumerate() {
+                if keys[vi as usize] != k[i] {
+                    return Err(format!("payload mismatch at {i}"));
+                }
+            }
+            // stability: equal keys keep original payload order
+            for w in k.windows(2).zip(v.windows(2)) {
+                let (kw, vw) = w;
+                if kw[0] == kw[1] && vw[0] > vw[1] {
+                    return Err("instability detected".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_reduce_by_key_partitions_sum() {
+    check(
+        "reduce-by-key-sum",
+        30,
+        |g| {
+            let n = g.usize_in(1, g.size * 4);
+            let keys: Vec<u64> = (0..n).map(|_| g.usize_in(0, 5) as u64).collect();
+            let vals = g.vec_f64(n, -10.0, 10.0);
+            (keys, vals)
+        },
+        |(keys, vals)| {
+            let r = dpp::reduce_by_key(keys, vals, 0.0, |a, b| a + b);
+            let total_in: f64 = vals.iter().sum();
+            let total_out: f64 = r.values.iter().sum();
+            if (total_in - total_out).abs() > 1e-9 {
+                return Err(format!("sum not preserved: {total_in} vs {total_out}"));
+            }
+            // segment count equals number of key runs
+            let runs = 1 + keys.windows(2).filter(|w| w[0] != w[1]).count();
+            (r.keys.len() == runs).then_some(()).ok_or("wrong segment count".into())
+        },
+    );
+}
+
+#[test]
+fn prop_unique_sorted_equals_dedup() {
+    check(
+        "unique-dedup",
+        30,
+        |g| {
+            let n = g.usize_in(0, g.size * 4);
+            let mut v = g.vec_u64(n, 32);
+            v.sort();
+            v
+        },
+        |v| {
+            let got = dpp::unique_sorted(v);
+            let mut want = v.clone();
+            want.dedup();
+            (got == want).then_some(()).ok_or("unique mismatch".into())
+        },
+    );
+}
+
+// ---------- Morton / spatial structure ----------
+
+#[test]
+fn prop_morton_sort_is_permutation_preserving_codes() {
+    check(
+        "morton-perm",
+        20,
+        |g| {
+            let n = g.usize_in(2, g.size * 4);
+            let d = g.usize_in(1, 3);
+            (n, d, g.rng.next_u64())
+        },
+        |&(n, d, seed)| {
+            let mut pts = PointSet::random(n, d, seed);
+            let before: Vec<Vec<f64>> = (0..n).map(|i| pts.point(i)).collect();
+            let (codes, perm) = morton::morton_sort(&mut pts);
+            if !codes.windows(2).all(|w| w[0] <= w[1]) {
+                return Err("codes not sorted".into());
+            }
+            // permutation maps sorted points back to originals
+            for i in 0..n {
+                if pts.point(i) != before[perm[i] as usize] {
+                    return Err(format!("perm broken at {i}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------- tree invariants ----------
+
+#[test]
+fn prop_block_tree_leaves_partition() {
+    check(
+        "block-tree-partition",
+        12,
+        |g| {
+            let n = g.usize_in(8, (g.size * 4).max(16));
+            let c_leaf = 1 << g.usize_in(2, 6);
+            let eta = g.f64_in(0.3, 3.0);
+            let d = g.usize_in(1, 3);
+            (n, c_leaf, eta, d, g.rng.next_u64())
+        },
+        |&(n, c_leaf, eta, d, seed)| {
+            let mut pts = PointSet::random(n, d, seed);
+            morton::morton_sort(&mut pts);
+            let t = build_block_tree(&pts, eta, c_leaf);
+            // total area covers I × I exactly
+            let total: usize = t.admissible.iter().chain(&t.dense).map(|w| w.elems()).sum();
+            if total != n * n {
+                return Err(format!("area {total} != {}", n * n));
+            }
+            // clusters are valid ranges
+            for w in t.admissible.iter().chain(&t.dense) {
+                if w.tau.lo >= w.tau.hi || w.tau.hi > n || w.sigma.lo >= w.sigma.hi || w.sigma.hi > n {
+                    return Err(format!("bad cluster {w:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cluster_tree_axioms() {
+    check(
+        "cluster-tree-axioms",
+        20,
+        |g| (g.usize_in(1, g.size * 8), 1 << g.usize_in(0, 8)),
+        |&(n, c_leaf)| {
+            let t = hmx::tree::cluster::ClusterTree::build(n, c_leaf);
+            let mut leaves = t.leaves();
+            leaves.sort();
+            if leaves[0].lo != 0 || leaves.last().unwrap().hi != n {
+                return Err("leaves don't span I".into());
+            }
+            for w in leaves.windows(2) {
+                if w[0].hi != w[1].lo {
+                    return Err("leaves don't tile I".into());
+                }
+            }
+            for l in &leaves {
+                if l.len() > c_leaf {
+                    return Err(format!("leaf too big: {}", l.len()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------- batching ----------
+
+#[test]
+fn prop_batch_plans_cover_in_order_under_budget() {
+    check(
+        "batch-plan",
+        30,
+        |g| {
+            let shapes: Vec<BlockShape> = (0..g.usize_in(0, g.size))
+                .map(|_| BlockShape { rows: g.usize_in(1, 512), cols: g.usize_in(1, 512) })
+                .collect();
+            let bs = g.usize_in(64, 1 << 16);
+            (shapes, bs)
+        },
+        |(shapes, bs)| {
+            for budget in
+                [BatchBudget::AcaTotalRows { bs: *bs }, BatchBudget::DensePaddedElems { bs: *bs }]
+            {
+                let p = plan_batches(shapes, budget);
+                if p.n_blocks() != shapes.len() {
+                    return Err("plan drops blocks".into());
+                }
+                let mut pos = 0;
+                for &(s, e) in &p.batches {
+                    if s != pos || e <= s {
+                        return Err("plan not contiguous".into());
+                    }
+                    pos = e;
+                    // budget respected unless singleton
+                    if e - s > 1 {
+                        match budget {
+                            BatchBudget::AcaTotalRows { bs } => {
+                                let rows: usize = shapes[s..e].iter().map(|x| x.rows).sum();
+                                if rows > bs {
+                                    return Err(format!("aca budget exceeded: {rows} > {bs}"));
+                                }
+                            }
+                            BatchBudget::DensePaddedElems { bs } => {
+                                let rows: usize = shapes[s..e].iter().map(|x| x.rows).sum();
+                                let mc = shapes[s..e].iter().map(|x| x.cols).max().unwrap();
+                                if rows * mc > bs {
+                                    return Err("dense budget exceeded".into());
+                                }
+                            }
+                            _ => {}
+                        }
+                    }
+                }
+                if pos != shapes.len() {
+                    return Err("plan incomplete".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------- end-to-end numerical property ----------
+
+#[test]
+fn prop_hmatvec_close_to_dense_random_configs() {
+    check(
+        "hmatvec-vs-dense",
+        6,
+        |g| {
+            let n = g.usize_in(64, 512.min(g.size * 8).max(64));
+            let c_leaf = 1 << g.usize_in(4, 6);
+            let d = g.usize_in(2, 3);
+            (n, c_leaf, d, g.rng.next_u64())
+        },
+        |&(n, c_leaf, d, seed)| {
+            let cfg = hmx::config::HmxConfig {
+                n,
+                dim: d,
+                c_leaf,
+                k: 16,
+                ..hmx::config::HmxConfig::default()
+            };
+            let pts = PointSet::random(n, d, seed);
+            let exact = DenseOperator::new(pts.clone(), cfg.kernel());
+            let h = HMatrix::build(pts, &cfg).map_err(|e| e.to_string())?;
+            let x = hmx::util::prng::Xoshiro256::seed(seed ^ 1).vector(n);
+            let err = hmx::util::rel_err(&h.matvec(&x).map_err(|e| e.to_string())?, &exact.matvec(&x));
+            (err < 1e-4).then_some(()).ok_or(format!("err {err} (n={n} c_leaf={c_leaf} d={d})"))
+        },
+    );
+}
+
+// ---------- output queue under adversarial sizes ----------
+
+#[test]
+fn prop_output_queue_collects_exactly_the_puts() {
+    check(
+        "output-queue",
+        20,
+        |g| (g.usize_in(0, g.size * 16), g.usize_in(1, 7)),
+        |&(n, modulo)| {
+            let q = dpp::OutputQueue::with_capacity(n);
+            hmx::dpp::launch(n, |tid| {
+                if tid % modulo == 0 {
+                    q.put(tid);
+                }
+            });
+            let mut got = q.into_vec();
+            got.sort();
+            let want: Vec<usize> = (0..n).filter(|t| t % modulo == 0).collect();
+            (got == want).then_some(()).ok_or("queue contents wrong".into())
+        },
+    );
+}
+
+// ---------- Cluster key packing roundtrip ----------
+
+#[test]
+fn prop_cluster_key_roundtrip() {
+    check(
+        "cluster-key",
+        50,
+        |g| {
+            let lo = g.usize_in(0, 1 << 20);
+            (lo, lo + g.usize_in(1, 1 << 20))
+        },
+        |&(lo, hi)| {
+            let c = Cluster::new(lo, hi);
+            (Cluster::from_key(c.key()) == c).then_some(()).ok_or("roundtrip failed".into())
+        },
+    );
+}

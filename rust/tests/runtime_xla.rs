@@ -1,0 +1,173 @@
+//! XLA/PJRT runtime integration: load the AOT artifacts and verify the
+//! XLA engine agrees with the native engine end-to-end.
+//!
+//! These tests require `make artifacts` to have run; they are skipped
+//! (with a notice) when the manifest is missing so `cargo test` works in a
+//! fresh checkout.
+
+use hmx::config::{EngineKind, HmxConfig, KernelKind};
+use hmx::coordinator::BatchEngine;
+use hmx::prelude::*;
+use hmx::runtime::XlaEngine;
+use hmx::tree::block::build_block_tree;
+use hmx::util::atomic::AtomicF64Vec;
+use hmx::util::prng::Xoshiro256;
+use std::path::Path;
+
+fn artifacts_dir() -> Option<String> {
+    for dir in ["artifacts", "../artifacts"] {
+        if Path::new(dir).join("manifest.tsv").exists() {
+            return Some(dir.to_string());
+        }
+    }
+    eprintln!("runtime_xla: artifacts/manifest.tsv missing; run `make artifacts` — skipping");
+    None
+}
+
+fn setup(n: usize, d: usize, c_leaf: usize) -> (hmx::geometry::points::PointSet, hmx::tree::block::BlockTree) {
+    let mut pts = PointSet::halton(n, d);
+    hmx::morton::morton_sort(&mut pts);
+    let t = build_block_tree(&pts, 1.5, c_leaf);
+    (pts, t)
+}
+
+#[test]
+fn xla_dense_matvec_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (pts, tree) = setup(2048, 2, 64);
+    let engine = XlaEngine::new(&dir, "gaussian", 2, 16).unwrap();
+    let native = hmx::coordinator::NativeEngine;
+    let kern = Kernel::gaussian();
+    let x = Xoshiro256::seed(1).vector(pts.len());
+    let zx = AtomicF64Vec::zeros(pts.len());
+    let zn = AtomicF64Vec::zeros(pts.len());
+    engine.dense_matvec(&pts, kern, &tree.dense, &x, &zx);
+    native.dense_matvec(&pts, kern, &tree.dense, &x, &zn);
+    assert!(engine.xla_batches.get() > 0, "XLA path was never exercised");
+    let err = hmx::util::rel_err(&zx.into_vec(), &zn.into_vec());
+    assert!(err < 1e-10, "XLA dense vs native: {err}");
+}
+
+#[test]
+fn xla_aca_matvec_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (pts, tree) = setup(2048, 2, 64);
+    let engine = XlaEngine::new(&dir, "gaussian", 2, 16).unwrap();
+    let native = hmx::coordinator::NativeEngine;
+    let kern = Kernel::gaussian();
+    let x = Xoshiro256::seed(2).vector(pts.len());
+    let zx = AtomicF64Vec::zeros(pts.len());
+    let zn = AtomicF64Vec::zeros(pts.len());
+    engine.aca_matvec(&pts, kern, 16, &tree.admissible, &x, &zx);
+    native.aca_matvec(&pts, kern, 16, &tree.admissible, &x, &zn);
+    assert!(engine.xla_batches.get() > 0, "XLA path was never exercised");
+    // both run the same deterministic pivoting; differences are fp-order only
+    let err = hmx::util::rel_err(&zx.into_vec(), &zn.into_vec());
+    assert!(err < 1e-8, "XLA aca vs native: {err}");
+}
+
+#[test]
+fn xla_aca_factors_match_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (pts, tree) = setup(1024, 2, 64);
+    let engine = XlaEngine::new(&dir, "gaussian", 2, 16).unwrap();
+    let native = hmx::coordinator::NativeEngine;
+    let kern = Kernel::gaussian();
+    let blocks = &tree.admissible[..tree.admissible.len().min(20)];
+    let fx = engine.aca_factors(&pts, kern, 16, blocks);
+    let fn_ = native.aca_factors(&pts, kern, 16, blocks);
+    // same flat layout; compare the *products* via apply on a random x
+    let x = Xoshiro256::seed(3).vector(pts.len());
+    let zx = AtomicF64Vec::zeros(pts.len());
+    let zn = AtomicF64Vec::zeros(pts.len());
+    fx.apply(blocks, &x, &zx);
+    fn_.apply(blocks, &x, &zn);
+    let err = hmx::util::rel_err(&zx.into_vec(), &zn.into_vec());
+    assert!(err < 1e-8, "XLA factors vs native: {err}");
+}
+
+#[test]
+fn full_hmatrix_with_xla_engine() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = HmxConfig {
+        n: 2048,
+        dim: 2,
+        c_leaf: 64,
+        k: 16,
+        engine: EngineKind::Xla,
+        artifacts_dir: dir,
+        ..HmxConfig::default()
+    };
+    let pts = PointSet::halton(cfg.n, cfg.dim);
+    let exact = DenseOperator::new(pts.clone(), cfg.kernel());
+    let h = HMatrix::build(pts, &cfg).unwrap();
+    assert_eq!(h.engine_name(), "xla");
+    let x = Xoshiro256::seed(4).vector(cfg.n);
+    let err = hmx::util::rel_err(&h.matvec(&x).unwrap(), &exact.matvec(&x));
+    assert!(err < 1e-5, "XLA H-matvec error: {err}");
+}
+
+#[test]
+fn xla_engine_matern_3d() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = HmxConfig {
+        n: 1024,
+        dim: 3,
+        c_leaf: 64,
+        k: 16,
+        kernel: KernelKind::Matern,
+        engine: EngineKind::Xla,
+        artifacts_dir: dir,
+        ..HmxConfig::default()
+    };
+    let pts = PointSet::halton(cfg.n, cfg.dim);
+    let exact = DenseOperator::new(pts.clone(), cfg.kernel());
+    let h = HMatrix::build(pts, &cfg).unwrap();
+    let x = Xoshiro256::seed(5).vector(cfg.n);
+    let err = hmx::util::rel_err(&h.matvec(&x).unwrap(), &exact.matvec(&x));
+    assert!(err < 1e-3, "XLA Matérn 3D error: {err}");
+}
+
+#[test]
+fn xla_engine_p_mode_precompute() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = HmxConfig {
+        n: 1024,
+        dim: 2,
+        c_leaf: 64,
+        k: 16,
+        engine: EngineKind::Xla,
+        precompute: true,
+        artifacts_dir: dir,
+        ..HmxConfig::default()
+    };
+    let pts = PointSet::halton(cfg.n, cfg.dim);
+    let exact = DenseOperator::new(pts.clone(), cfg.kernel());
+    let h = HMatrix::build(pts, &cfg).unwrap();
+    assert!(h.is_precomputed());
+    let x = Xoshiro256::seed(6).vector(cfg.n);
+    let err = hmx::util::rel_err(&h.matvec(&x).unwrap(), &exact.matvec(&x));
+    assert!(err < 1e-5, "XLA P-mode error: {err}");
+}
+
+#[test]
+fn oversized_blocks_fall_back_to_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    // c_leaf = 2048 creates dense blocks far above the largest dense
+    // artifact bucket; everything must fall back and stay correct.
+    let cfg = HmxConfig {
+        n: 4096,
+        dim: 2,
+        c_leaf: 2048,
+        k: 16,
+        engine: EngineKind::Xla,
+        artifacts_dir: dir,
+        ..HmxConfig::default()
+    };
+    let pts = PointSet::halton(cfg.n, cfg.dim);
+    let exact = DenseOperator::new(pts.clone(), cfg.kernel());
+    let h = HMatrix::build(pts, &cfg).unwrap();
+    let x = Xoshiro256::seed(7).vector(cfg.n);
+    let err = hmx::util::rel_err(&h.matvec(&x).unwrap(), &exact.matvec(&x));
+    assert!(err < 1e-5, "fallback path error: {err}");
+}
