@@ -1,0 +1,107 @@
+//! END-TO-END driver: multi-output kernel ridge regression through the
+//! multi-RHS pipeline — the serving-shaped workload the batched mat-mat
+//! engine exists for.
+//!
+//! Pipeline: Halton training inputs + q noisy target functions
+//!   → ONE H-matrix for A_{φ,Y×Y}
+//!   → block-CG solve of (A + σ²I) [α₁ … α_q] = [y₁ … y_q]
+//!     (one batched H-mat-mat per iteration instead of q mat-vecs)
+//!   → per-output train RMSE, plus timing against q single-RHS CG solves.
+//!
+//! Run:  cargo run --release --example multi_rhs_krr -- \
+//!           [--n 8192] [--d 2] [--q 16] [--sigma2 1e-3]
+
+use hmx::config::{HmxConfig, KernelKind};
+use hmx::prelude::*;
+use hmx::solver::cg::RegularizedHOp;
+use hmx::util::cli::Args;
+use hmx::util::prng::Xoshiro256;
+use std::time::Instant;
+
+/// Family of ground-truth functions to regress (one per output channel).
+fn f_true(p: &[f64], channel: usize) -> f64 {
+    let s: f64 = p.iter().sum();
+    let r2: f64 = p.iter().map(|x| (x - 0.5) * (x - 0.5)).sum();
+    let w = 1.0 + channel as f64 * 0.5;
+    (w * 3.0 * s).sin() + (-4.0 * w * r2).exp()
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let n = args.get("n", 1usize << 13);
+    let dim = args.get("d", 2usize);
+    let q = args.get("q", 16usize);
+    let sigma2 = args.get("sigma2", 1e-3f64);
+    let noise = args.get("noise", 1e-2f64);
+    let cfg = HmxConfig {
+        n,
+        dim,
+        k: args.get("k", 16usize),
+        c_leaf: args.get("c-leaf", 256usize),
+        kernel: KernelKind::from_name(&args.get_str("kernel", "gaussian")).unwrap(),
+        precompute: !args.has("no-precompute"),
+        ..HmxConfig::default()
+    };
+
+    // --- dataset: q output channels over shared inputs (column-major) ---
+    let train = PointSet::halton(n, dim);
+    let mut rng = Xoshiro256::seed(args.get("seed", 42u64));
+    let mut b = vec![0.0; n * q];
+    for c in 0..q {
+        for i in 0..n {
+            b[c * n + i] = f_true(&train.point(i), c) + noise * rng.normal();
+        }
+    }
+
+    let t0 = Instant::now();
+    let h = HMatrix::build(train.clone(), &cfg)?;
+    println!(
+        "built H-matrix: n={n} d={dim} engine={} compression={:.4} ({:.2?})",
+        h.engine_name(),
+        h.compression_ratio(),
+        t0.elapsed()
+    );
+
+    // --- block solve: all q channels through one batched operator ---
+    let op = RegularizedHBlockOp::new(&h, sigma2);
+    let opts = BlockCgOptions { max_iter: args.get("max-iter", 500usize), tol: 1e-8 };
+    let t1 = Instant::now();
+    let res = block_cg_solve(&op, &b, q, opts);
+    let t_block = t1.elapsed();
+    println!(
+        "block-CG: q={q} iters={} converged={} worst_rel={:.2e} ({t_block:.2?})",
+        res.iterations,
+        res.converged,
+        res.residuals.iter().cloned().fold(0.0f64, f64::max),
+    );
+
+    // --- contrast: the q single-RHS solves serving did before ---
+    let single_op = RegularizedHOp::new(&h, sigma2);
+    let t2 = Instant::now();
+    let mut single_iters = 0usize;
+    for c in 0..q {
+        let r = cg_solve(&single_op, &b[c * n..(c + 1) * n], CgOptions {
+            max_iter: opts.max_iter,
+            tol: opts.tol,
+        });
+        single_iters += r.iterations;
+    }
+    let t_single = t2.elapsed();
+    println!(
+        "columnwise CG: {single_iters} total iters ({t_single:.2?}); block speedup {:.2}x",
+        t_single.as_secs_f64() / t_block.as_secs_f64().max(f64::MIN_POSITIVE)
+    );
+
+    // --- fit quality: train RMSE per channel, prediction y_hat = A α ---
+    let mut ws = MatvecWorkspace::with_capacity(n, q);
+    let fitted = h.matmat_with(&res.x, q, &mut ws)?;
+    for c in [0, q / 2, q - 1] {
+        let mut se = 0.0;
+        for i in 0..n {
+            let diff = fitted[c * n + i] - b[c * n + i];
+            se += diff * diff;
+        }
+        println!("channel {c}: train RMSE {:.3e}", (se / n as f64).sqrt());
+    }
+    Ok(())
+}

@@ -194,10 +194,21 @@ impl AcaFactors {
     /// One launch over the batch; per block the dot products and the
     /// rank accumulation run over contiguous stripes.
     pub fn apply(&self, blocks: &[WorkItem], x: &[f64], z: &AtomicF64Vec) {
+        self.apply_mat(blocks, x, 1, z);
+    }
+
+    /// Multi-RHS apply: z|τ_b += U_b (V_bᵀ X|σ_b) for every RHS column.
+    /// `x` and `z` are column-major n × nrhs (`x[c * n + j]` is column c).
+    /// Each factor stripe is loaded once per rank level and swept over all
+    /// columns, so the (bandwidth-bound) U/V traffic is amortized across
+    /// the whole RHS block — the Boukaram et al. (2019) blocking win.
+    pub fn apply_mat(&self, blocks: &[WorkItem], x: &[f64], nrhs: usize, z: &AtomicF64Vec) {
         let nb = blocks.len();
-        if nb == 0 {
+        if nb == 0 || nrhs == 0 {
             return;
         }
+        debug_assert_eq!(x.len() % nrhs, 0);
+        let n = x.len() / nrhs;
         let total_m = *self.row_offsets.last().unwrap();
         let total_n = *self.col_offsets.last().unwrap();
         launch_with_grain(nb, 1, |b| {
@@ -209,26 +220,34 @@ impl AcaFactors {
             if rank == 0 {
                 return;
             }
-            let xs = &x[w.sigma.lo..w.sigma.hi];
-            // y = Σ_r (v_r · x) u_r, accumulated locally then scattered
-            // once per row (atomic: blocks may share τ rows).
-            let mut y = vec![0.0f64; m];
+            // y_c = Σ_r (v_r · x_c) u_r, accumulated locally then scattered
+            // once per row per column (atomic: blocks may share τ rows).
+            let mut y = vec![0.0f64; m * nrhs];
+            let mut t = vec![0.0f64; nrhs];
             for l in 0..rank {
                 let vl = &self.v_all[l * total_n + clo..l * total_n + chi];
-                let mut t = 0.0;
-                for (v, xv) in vl.iter().zip(xs) {
-                    t += v * xv;
-                }
-                if t == 0.0 {
-                    continue;
+                for (c, tc) in t.iter_mut().enumerate() {
+                    let xs = &x[c * n + w.sigma.lo..c * n + w.sigma.hi];
+                    let mut acc = 0.0;
+                    for (v, xv) in vl.iter().zip(xs) {
+                        acc += v * xv;
+                    }
+                    *tc = acc;
                 }
                 let ul = &self.u_all[l * total_m + rlo..l * total_m + rhi];
-                for (yi, u) in y.iter_mut().zip(ul) {
-                    *yi += t * u;
+                for (c, &tc) in t.iter().enumerate() {
+                    if tc == 0.0 {
+                        continue;
+                    }
+                    for (yi, u) in y[c * m..(c + 1) * m].iter_mut().zip(ul) {
+                        *yi += tc * u;
+                    }
                 }
             }
-            for (i, yi) in y.iter().enumerate() {
-                z.add(w.tau.lo + i, *yi);
+            for (c, yc) in y.chunks_exact(m).enumerate() {
+                for (i, yi) in yc.iter().enumerate() {
+                    z.add(c * n + w.tau.lo + i, *yi);
+                }
             }
         });
     }
@@ -244,6 +263,14 @@ impl AcaFactors {
 pub fn batched_aca_matvec(batch: &AcaBatch<'_>, x: &[f64], z: &AtomicF64Vec) {
     let factors = batched_aca_factors(batch);
     factors.apply(batch.blocks, x, z);
+}
+
+/// Fused batched ACA + multi-RHS apply. In NP mode this is where blocking
+/// the RHS pays most: the rank-k factors are recomputed ONCE per mat-mat
+/// instead of once per column.
+pub fn batched_aca_matmat(batch: &AcaBatch<'_>, x: &[f64], nrhs: usize, z: &AtomicF64Vec) {
+    let factors = batched_aca_factors(batch);
+    factors.apply_mat(batch.blocks, x, nrhs, z);
 }
 
 #[cfg(test)]
@@ -371,6 +398,30 @@ mod tests {
             }
         }
         assert!(err2.sqrt() < 1e-8, "duplicate-column error {}", err2.sqrt());
+    }
+
+    #[test]
+    fn apply_mat_matches_columnwise_apply() {
+        let (pts, blocks) = setup(1024, 2);
+        let take = blocks.len().min(10);
+        let kern = Kernel::gaussian();
+        let batch = AcaBatch { points: &pts, kernel: kern, blocks: &blocks[..take], k: 10 };
+        let f = batched_aca_factors(&batch);
+        let n = pts.len();
+        for nrhs in [1usize, 2, 7] {
+            let mut rng = crate::util::prng::Xoshiro256::seed(40 + nrhs as u64);
+            let x = rng.vector(n * nrhs);
+            let z = AtomicF64Vec::zeros(n * nrhs);
+            f.apply_mat(&blocks[..take], &x, nrhs, &z);
+            let got = z.into_vec();
+            for c in 0..nrhs {
+                let zc = AtomicF64Vec::zeros(n);
+                f.apply(&blocks[..take], &x[c * n..(c + 1) * n], &zc);
+                let want = zc.into_vec();
+                let err = crate::util::rel_err(&got[c * n..(c + 1) * n], &want);
+                assert!(err < 1e-13, "nrhs={nrhs} col {c}: {err}");
+            }
+        }
     }
 
     #[test]

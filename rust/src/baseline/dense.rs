@@ -34,6 +34,31 @@ impl DenseOperator {
         y
     }
 
+    /// Multi-RHS product `Y = A X`, column-major n × nrhs (exact; mirrors
+    /// [`crate::hmatrix::HMatrix::matmat`] so the fast path is
+    /// cross-checkable). Each parallel row evaluates its kernel entries
+    /// once and dots them against every column.
+    pub fn matmat(&self, x: &[f64], nrhs: usize) -> Vec<f64> {
+        let n = self.points.len();
+        assert!(nrhs >= 1);
+        assert_eq!(x.len(), n * nrhs);
+        let mut y = vec![0.0; n * nrhs];
+        {
+            let out = GlobalMem::new(&mut y);
+            launch(n, |i| {
+                for c in 0..nrhs {
+                    let mut acc = 0.0;
+                    let xs = &x[c * n..(c + 1) * n];
+                    for (j, xv) in xs.iter().enumerate() {
+                        acc += self.kernel.eval(&self.points, i, &self.points, j) * xv;
+                    }
+                    out.write(c * n + i, acc);
+                }
+            });
+        }
+        y
+    }
+
     /// Single matrix entry.
     pub fn entry(&self, i: usize, j: usize) -> f64 {
         self.kernel.eval(&self.points, i, &self.points, j)
@@ -56,6 +81,20 @@ mod tests {
                 want += op.entry(i, j) * x[j];
             }
             assert!((y[i] - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn matmat_matches_columnwise_matvec() {
+        let pts = PointSet::halton(48, 2);
+        let op = DenseOperator::new(pts, Kernel::gaussian());
+        let nrhs = 3;
+        let x: Vec<f64> = (0..48 * nrhs).map(|i| ((i as f64) * 0.17).sin()).collect();
+        let y = op.matmat(&x, nrhs);
+        for c in 0..nrhs {
+            let want = op.matvec(&x[c * 48..(c + 1) * 48]);
+            let err = crate::util::rel_err(&y[c * 48..(c + 1) * 48], &want);
+            assert!(err < 1e-13, "col {c}: {err}");
         }
     }
 

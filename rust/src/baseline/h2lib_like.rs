@@ -110,6 +110,21 @@ impl SequentialHMatrix {
         }
         y
     }
+
+    /// Multi-RHS product `Y = H X`, column-major n × nrhs. Sequential
+    /// column loop over the stored blocks — the baseline mirrors the
+    /// [`crate::hmatrix::HMatrix::matmat`] API for cross-checking, not its
+    /// batching (the contrast is the point, Figs 16/17).
+    pub fn matmat(&self, x: &[f64], nrhs: usize) -> Vec<f64> {
+        let n = self.points.len();
+        assert!(nrhs >= 1);
+        assert_eq!(x.len(), n * nrhs);
+        let mut y = Vec::with_capacity(n * nrhs);
+        for c in 0..nrhs {
+            y.extend(self.matvec(&x[c * n..(c + 1) * n]));
+        }
+        y
+    }
 }
 
 /// Geometric bisection cluster tree (sequential, recursive).
@@ -250,6 +265,21 @@ mod tests {
         // close to each other because both are close to the exact product.
         let err = crate::util::rel_err(&par.matvec(&x).unwrap(), &seq.matvec(&x));
         assert!(err < 1e-5, "baseline vs parallel: {err}");
+    }
+
+    #[test]
+    fn matmat_matches_columnwise_matvec() {
+        let pts = PointSet::halton(256, 2);
+        let kern = Kernel::gaussian();
+        let h = SequentialHMatrix::build(pts, kern, 1.5, 32, 8);
+        let nrhs = 3;
+        let x: Vec<f64> = (0..256 * nrhs).map(|i| ((i as f64) * 0.29).cos()).collect();
+        let y = h.matmat(&x, nrhs);
+        for c in 0..nrhs {
+            let want = h.matvec(&x[c * 256..(c + 1) * 256]);
+            let err = crate::util::rel_err(&y[c * 256..(c + 1) * 256], &want);
+            assert!(err < 1e-14, "col {c}: {err}");
+        }
     }
 
     #[test]

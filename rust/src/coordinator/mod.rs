@@ -12,11 +12,13 @@
 
 pub mod distributed;
 
-use crate::aca::batched::{batched_aca_factors, batched_aca_matvec, AcaBatch, AcaFactors};
+use crate::aca::batched::{
+    batched_aca_factors, batched_aca_matmat, batched_aca_matvec, AcaBatch, AcaFactors,
+};
 use crate::config::{EngineKind, HmxConfig};
 use crate::geometry::kernel::Kernel;
 use crate::geometry::points::PointSet;
-use crate::hmatrix::dense::batched_dense_matvec;
+use crate::hmatrix::dense::{batched_dense_matmat, batched_dense_matvec};
 use crate::tree::block::WorkItem;
 use crate::util::atomic::AtomicF64Vec;
 use crate::Result;
@@ -56,6 +58,58 @@ pub trait BatchEngine {
         k: usize,
         blocks: &[WorkItem],
     ) -> AcaFactors;
+
+    /// Multi-RHS variant of [`BatchEngine::dense_matvec`]: `x` and `z` are
+    /// column-major n × nrhs (`x[c * n + j]` is column c, n = points.len()).
+    ///
+    /// The default loops columns through `dense_matvec` so every engine is
+    /// multi-RHS capable (the XLA engine's artifacts are single-RHS);
+    /// engines with a fused mat-mat kernel override it.
+    fn dense_matmat(
+        &self,
+        points: &PointSet,
+        kernel: Kernel,
+        blocks: &[WorkItem],
+        x: &[f64],
+        nrhs: usize,
+        z: &AtomicF64Vec,
+    ) {
+        let n = points.len();
+        for c in 0..nrhs {
+            let zc = AtomicF64Vec::zeros(n);
+            self.dense_matvec(points, kernel, blocks, &x[c * n..(c + 1) * n], &zc);
+            for (i, v) in zc.into_vec().into_iter().enumerate() {
+                if v != 0.0 {
+                    z.add(c * n + i, v);
+                }
+            }
+        }
+    }
+
+    /// Multi-RHS variant of [`BatchEngine::aca_matvec`] (same column-major
+    /// layout and columnwise default as [`BatchEngine::dense_matmat`]).
+    #[allow(clippy::too_many_arguments)]
+    fn aca_matmat(
+        &self,
+        points: &PointSet,
+        kernel: Kernel,
+        k: usize,
+        blocks: &[WorkItem],
+        x: &[f64],
+        nrhs: usize,
+        z: &AtomicF64Vec,
+    ) {
+        let n = points.len();
+        for c in 0..nrhs {
+            let zc = AtomicF64Vec::zeros(n);
+            self.aca_matvec(points, kernel, k, blocks, &x[c * n..(c + 1) * n], &zc);
+            for (i, v) in zc.into_vec().into_iter().enumerate() {
+                if v != 0.0 {
+                    z.add(c * n + i, v);
+                }
+            }
+        }
+    }
 
     fn name(&self) -> &'static str;
 }
@@ -97,6 +151,32 @@ impl BatchEngine for NativeEngine {
         batched_aca_factors(&AcaBatch { points, kernel, blocks, k })
     }
 
+    fn dense_matmat(
+        &self,
+        points: &PointSet,
+        kernel: Kernel,
+        blocks: &[WorkItem],
+        x: &[f64],
+        nrhs: usize,
+        z: &AtomicF64Vec,
+    ) {
+        batched_dense_matmat(points, kernel, blocks, x, nrhs, z);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn aca_matmat(
+        &self,
+        points: &PointSet,
+        kernel: Kernel,
+        k: usize,
+        blocks: &[WorkItem],
+        x: &[f64],
+        nrhs: usize,
+        z: &AtomicF64Vec,
+    ) {
+        batched_aca_matmat(&AcaBatch { points, kernel, blocks, k }, x, nrhs, z);
+    }
+
     fn name(&self) -> &'static str {
         "native"
     }
@@ -104,7 +184,9 @@ impl BatchEngine for NativeEngine {
 
 /// The paper's *unbatched* execution mode (Fig 15 comparison): every block
 /// is processed by its own sequence of small parallel operations
-/// ([`crate::aca::stepwise`]) instead of fused batch kernels.
+/// ([`crate::aca::stepwise`]) instead of fused batch kernels. Multi-RHS
+/// calls use the columnwise trait defaults — no fusion along the RHS axis
+/// either, which is exactly the contrast the Fig 18 bench measures.
 pub struct UnbatchedEngine;
 
 impl BatchEngine for UnbatchedEngine {

@@ -37,6 +37,6 @@ pub use executor::{launch, launch_with_grain};
 pub use queue::OutputQueue;
 pub use reduce::{reduce, reduce_by_key, SegmentedReduce};
 pub use scan::{exclusive_scan, exclusive_scan_in_place, inclusive_scan_in_place};
-pub use sequence::{gather, permute_in_place, scatter, sequence};
+pub use sequence::{gather, gather_into, permute_in_place, scatter, sequence};
 pub use sort::{sort_pairs_u64, sort_u64};
 pub use unique::unique_sorted;

@@ -16,11 +16,17 @@ pub fn gather<T: Copy + Send + Sync>(data: &[T], indices: &[u32]) -> Vec<T> {
     let n = indices.len();
     let mut out: Vec<T> = Vec::with_capacity(n);
     unsafe { out.set_len(n) };
-    {
-        let o = GlobalMem::new(&mut out);
-        launch(n, |i| o.write(i, data[indices[i] as usize]));
-    }
+    gather_into(data, indices, &mut out);
     out
+}
+
+/// [`gather`] into a caller-provided buffer (no allocation — the mat-vec
+/// workspace path permutes into reused storage).
+pub fn gather_into<T: Copy + Send + Sync>(data: &[T], indices: &[u32], out: &mut [T]) {
+    let n = indices.len();
+    assert_eq!(n, out.len());
+    let o = GlobalMem::new(out);
+    launch(n, |i| o.write(i, data[indices[i] as usize]));
 }
 
 /// `out[indices[i]] = data[i]`; `indices` must be a permutation or at least

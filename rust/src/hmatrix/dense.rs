@@ -15,6 +15,24 @@ use crate::geometry::points::PointSet;
 use crate::tree::block::WorkItem;
 use crate::util::atomic::AtomicF64Vec;
 
+/// Flat batched-row bookkeeping shared by every dense batch kernel:
+/// exclusive row offsets per block plus the flat-row → owning-block map.
+fn flatten_rows(blocks: &[WorkItem]) -> (Vec<usize>, Vec<u32>) {
+    let nb = blocks.len();
+    let rows: Vec<usize> = blocks.iter().map(|w| w.rows()).collect();
+    let row_offsets = exclusive_scan(&rows);
+    let mut row_block = vec![0u32; row_offsets[nb]];
+    {
+        let rb = GlobalMem::new(&mut row_block);
+        launch(nb, |b| {
+            for f in row_offsets[b]..row_offsets[b + 1] {
+                rb.write(f, b as u32);
+            }
+        });
+    }
+    (row_offsets, row_block)
+}
+
 /// z|τ_b += A_b x|σ_b for every block of the batch, with A_b assembled on
 /// the fly (NP storage discipline, §5.4).
 pub fn batched_dense_matvec(
@@ -28,19 +46,8 @@ pub fn batched_dense_matvec(
     if nb == 0 {
         return;
     }
-    let rows: Vec<usize> = blocks.iter().map(|w| w.rows()).collect();
-    let row_offsets = exclusive_scan(&rows);
+    let (row_offsets, row_block) = flatten_rows(blocks);
     let total_m = row_offsets[nb];
-    // flat row -> block map
-    let mut row_block = vec![0u32; total_m];
-    {
-        let rb = GlobalMem::new(&mut row_block);
-        launch(nb, |b| {
-            for f in row_offsets[b]..row_offsets[b + 1] {
-                rb.write(f, b as u32);
-            }
-        });
-    }
     launch(total_m, |fr| {
         let b = row_block[fr] as usize;
         let w = &blocks[b];
@@ -48,6 +55,66 @@ pub fn batched_dense_matvec(
         // fused assemble+dot row kernel (chunked, vectorized φ — §Perf)
         let acc = kernel.row_dot(points, i, w.sigma.lo, w.sigma.hi, x);
         z.add(i, acc);
+    });
+}
+
+/// RHS columns processed together per assembly pass: the kernel row chunk
+/// is evaluated once and dotted against up to this many x-columns, so the
+/// (expensive) φ evaluations are amortized across the whole tile (§5.4's
+/// batching argument applied along the RHS axis; Boukaram et al. 2019).
+pub const RHS_TILE: usize = 16;
+
+/// z|τ_b += A_b X|σ_b for every block and every RHS column, with A_b
+/// assembled on the fly. `x` and `z` are column-major n × nrhs
+/// (`x[c * n + j]` is column c); each virtual thread owns one flat batched
+/// row and sweeps its kernel entries over a tile of RHS columns, so
+/// assembly cost is paid once per ⌈nrhs / RHS_TILE⌉ instead of once per
+/// column. No heap allocation inside the kernel body.
+pub fn batched_dense_matmat(
+    points: &PointSet,
+    kernel: Kernel,
+    blocks: &[WorkItem],
+    x: &[f64],
+    nrhs: usize,
+    z: &AtomicF64Vec,
+) {
+    let nb = blocks.len();
+    if nb == 0 || nrhs == 0 {
+        return;
+    }
+    let n = points.len();
+    debug_assert_eq!(x.len(), n * nrhs);
+    let (row_offsets, row_block) = flatten_rows(blocks);
+    let total_m = row_offsets[nb];
+    launch(total_m, |fr| {
+        let b = row_block[fr] as usize;
+        let w = &blocks[b];
+        let i = w.tau.lo + (fr - row_offsets[b]);
+        const CHUNK: usize = 128;
+        let mut buf = [0.0f64; CHUNK];
+        let mut c0 = 0;
+        while c0 < nrhs {
+            let ct = (nrhs - c0).min(RHS_TILE);
+            let mut acc = [0.0f64; RHS_TILE];
+            let mut j = w.sigma.lo;
+            while j < w.sigma.hi {
+                let len = (w.sigma.hi - j).min(CHUNK);
+                kernel.eval_many(points, i, j, &mut buf[..len]);
+                for (t, a) in acc[..ct].iter_mut().enumerate() {
+                    let xs = &x[(c0 + t) * n + j..(c0 + t) * n + j + len];
+                    let mut dot = 0.0;
+                    for (p, xv) in buf[..len].iter().zip(xs) {
+                        dot += p * xv;
+                    }
+                    *a += dot;
+                }
+                j += len;
+            }
+            for (t, a) in acc[..ct].iter().enumerate() {
+                z.add((c0 + t) * n + i, *a);
+            }
+            c0 += ct;
+        }
     });
 }
 
@@ -61,19 +128,9 @@ pub fn assemble_padded_batch(
     blocks: &[WorkItem],
 ) -> (Vec<f64>, Vec<usize>, usize) {
     let nb = blocks.len();
-    let rows: Vec<usize> = blocks.iter().map(|w| w.rows()).collect();
-    let row_offsets = exclusive_scan(&rows);
+    let (row_offsets, row_block) = flatten_rows(blocks);
     let total_m = row_offsets[nb];
     let max_cols = blocks.iter().map(|w| w.cols()).max().unwrap_or(0);
-    let mut row_block = vec![0u32; total_m];
-    {
-        let rb = GlobalMem::new(&mut row_block);
-        launch(nb, |b| {
-            for f in row_offsets[b]..row_offsets[b + 1] {
-                rb.write(f, b as u32);
-            }
-        });
-    }
     let mut buf = vec![0.0f64; total_m * max_cols];
     {
         let bf = GlobalMem::new(&mut buf);
@@ -140,6 +197,28 @@ mod tests {
                 for jj in w.cols()..max_cols {
                     assert_eq!(buf[fr * max_cols + jj], 0.0);
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn matmat_matches_columnwise_matvec() {
+        let (pts, blocks) = setup(512);
+        let kern = Kernel::gaussian();
+        let n = pts.len();
+        // nrhs spanning under and over one RHS_TILE
+        for nrhs in [1usize, 3, RHS_TILE, RHS_TILE + 5] {
+            let mut rng = crate::util::prng::Xoshiro256::seed(21 + nrhs as u64);
+            let x = rng.vector(n * nrhs);
+            let z = AtomicF64Vec::zeros(n * nrhs);
+            batched_dense_matmat(&pts, kern, &blocks, &x, nrhs, &z);
+            let got = z.into_vec();
+            for c in 0..nrhs {
+                let zc = AtomicF64Vec::zeros(n);
+                batched_dense_matvec(&pts, kern, &blocks, &x[c * n..(c + 1) * n], &zc);
+                let want = zc.into_vec();
+                let err = crate::util::rel_err(&got[c * n..(c + 1) * n], &want);
+                assert!(err < 1e-13, "nrhs={nrhs} col {c}: {err}");
             }
         }
     }

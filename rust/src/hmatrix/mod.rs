@@ -6,6 +6,15 @@
 //! ACA factors (P mode). [`HMatrix::matvec`] executes the batched dense
 //! and low-rank products through the configured [`crate::coordinator`]
 //! engine (native many-core kernels or XLA/PJRT artifacts).
+//!
+//! Serving-shaped workloads apply the same operator to many right-hand
+//! sides at once: [`HMatrix::matmat`] runs all batched kernels over a
+//! column-major n × nrhs block of RHS, amortizing kernel assembly and
+//! factor traffic across the columns (Boukaram/Turkiyyah/Keyes 2019 show
+//! H-matvec is bandwidth-bound and improves dramatically under RHS
+//! blocking). [`MatvecWorkspace`] makes repeated applies allocation-free
+//! after warm-up — what an iterative solver or a request-batching server
+//! loop should hold on to.
 
 pub mod dense;
 
@@ -13,7 +22,7 @@ use crate::aca::batched::AcaFactors;
 use crate::batch::plan::{plan_batches, BatchBudget, BatchPlan, BlockShape};
 use crate::config::HmxConfig;
 use crate::coordinator::{make_engine, BatchEngine};
-use crate::dpp::sequence::gather;
+use crate::dpp::sequence::{gather_into, scatter};
 use crate::geometry::kernel::Kernel;
 use crate::geometry::points::PointSet;
 use crate::metrics::timed;
@@ -150,49 +159,116 @@ impl HMatrix {
     }
 
     /// Fast mat-vec `y = H x` with `x`, `y` in the *original* point order
-    /// (internally permuted to/from Morton order, §5.1).
+    /// (internally permuted to/from Morton order, §5.1). Allocates a fresh
+    /// workspace; hot loops should hold a [`MatvecWorkspace`] and call
+    /// [`HMatrix::matvec_with`] instead.
     pub fn matvec(&self, x: &[f64]) -> Result<Vec<f64>> {
-        assert_eq!(x.len(), self.points.len());
-        let x_m = gather(x, &self.perm);
-        let z_m = self.matvec_morton(&x_m)?;
-        // scatter back: y[perm[i]] = z[i]
-        let mut y = vec![0.0; x.len()];
-        crate::dpp::sequence::scatter(&z_m, &self.perm, &mut y);
-        Ok(y)
+        self.matmat(x, 1)
+    }
+
+    /// [`HMatrix::matvec`] through a caller-owned workspace: no allocation
+    /// after warm-up. The returned slice borrows the workspace.
+    pub fn matvec_with<'w>(&self, x: &[f64], ws: &'w mut MatvecWorkspace) -> Result<&'w [f64]> {
+        self.matmat_with(x, 1, ws)
     }
 
     /// Mat-vec in Morton order (what iterative solvers should call to skip
     /// the permutations; permute once outside the loop instead).
     pub fn matvec_morton(&self, x_m: &[f64]) -> Result<Vec<f64>> {
+        self.matmat_morton(x_m, 1)
+    }
+
+    /// Multi-RHS mat-mat `Y = H X`: `x` is column-major n × nrhs
+    /// (`x[c * n + i]` is column c) in the *original* point order; the
+    /// result uses the same layout. All batched kernels sweep the whole
+    /// RHS block per assembly/factor pass, so per-RHS cost drops as nrhs
+    /// grows (the Fig 18 bench measures the amortization).
+    pub fn matmat(&self, x: &[f64], nrhs: usize) -> Result<Vec<f64>> {
+        let mut ws = MatvecWorkspace::new();
+        Ok(self.matmat_with(x, nrhs, &mut ws)?.to_vec())
+    }
+
+    /// [`HMatrix::matmat`] through a caller-owned workspace.
+    ///
+    /// Reuse contract: the workspace grows to the largest `n * nrhs` it
+    /// has seen and afterwards performs NO heap allocation for calls of
+    /// the same or smaller shape — hold one per serving thread / solver
+    /// and reuse it across applies. The returned slice borrows the
+    /// workspace and is valid until the next call.
+    pub fn matmat_with<'w>(
+        &self,
+        x: &[f64],
+        nrhs: usize,
+        ws: &'w mut MatvecWorkspace,
+    ) -> Result<&'w [f64]> {
+        let n = self.points.len();
+        assert!(nrhs >= 1, "nrhs must be at least 1");
+        assert_eq!(x.len(), n * nrhs, "x must be column-major n x nrhs");
+        let len = n * nrhs;
+        ws.ensure(len);
+        // permute every column into Morton order (reused storage)
+        for c in 0..nrhs {
+            gather_into(&x[c * n..(c + 1) * n], &self.perm, &mut ws.xm[c * n..(c + 1) * n]);
+        }
+        ws.z.reset();
+        self.matmat_morton_into(&ws.xm[..len], nrhs, &ws.z);
+        // scatter back per column: y[c][perm[i]] = z[c][i], staging the
+        // atomic accumulator through xm (its contents are consumed by now).
+        ws.z.copy_to(&mut ws.xm[..len]);
+        for c in 0..nrhs {
+            scatter(&ws.xm[c * n..(c + 1) * n], &self.perm, &mut ws.y[c * n..(c + 1) * n]);
+        }
+        Ok(&ws.y[..len])
+    }
+
+    /// Multi-RHS mat-mat in Morton order (column-major n × nrhs).
+    pub fn matmat_morton(&self, x_m: &[f64], nrhs: usize) -> Result<Vec<f64>> {
+        assert!(nrhs >= 1, "nrhs must be at least 1");
+        assert_eq!(x_m.len(), self.points.len() * nrhs);
         let z = AtomicF64Vec::zeros(x_m.len());
+        self.matmat_morton_into(x_m, nrhs, &z);
+        Ok(z.into_vec())
+    }
+
+    /// Core batched execution: accumulate `H X` into `z` (both column-major
+    /// n × nrhs, Morton order). `z` must be zeroed (or hold a partial sum
+    /// the caller wants to accumulate onto).
+    fn matmat_morton_into(&self, x_m: &[f64], nrhs: usize, z: &AtomicF64Vec) {
         // batched dense products (§5.4.2)
         timed("matvec.dense", || {
             for &(s, e) in &self.dense_plan.batches {
-                self.engine.dense_matvec(&self.points, self.kernel, &self.dense[s..e], x_m, &z);
+                self.engine.dense_matmat(
+                    &self.points,
+                    self.kernel,
+                    &self.dense[s..e],
+                    x_m,
+                    nrhs,
+                    z,
+                );
             }
         });
         // batched low-rank products (§5.4.1): P applies stored factors,
-        // NP recomputes them on the fly.
+        // NP recomputes them on the fly (once per mat-mat, not per column).
         timed("matvec.aca", || match &self.factors {
             Some(fs) => {
                 for (f, &(s, e)) in fs.iter().zip(&self.aca_plan.batches) {
-                    f.apply(&self.admissible[s..e], x_m, &z);
+                    f.apply_mat(&self.admissible[s..e], x_m, nrhs, z);
                 }
             }
             None => {
                 for &(s, e) in &self.aca_plan.batches {
-                    self.engine.aca_matvec(
+                    self.engine.aca_matmat(
                         &self.points,
                         self.kernel,
                         self.cfg.k,
                         &self.admissible[s..e],
                         x_m,
-                        &z,
+                        nrhs,
+                        z,
                     );
                 }
             }
         });
-        Ok(z.into_vec())
     }
 
     /// The engine actually in use (XLA configs fall back to native when
@@ -201,18 +277,82 @@ impl HMatrix {
         self.engine.name()
     }
 
-    /// Compression ratio: H-matrix storage / dense storage (uses the
-    /// would-be storage in NP mode).
+    /// Compression ratio: H-matrix storage / dense storage. In P mode the
+    /// *actually stored* factor ranks are counted — after ACA early
+    /// termination or recompression they can be well below `cfg.k`; NP
+    /// mode uses the would-be fixed-rank storage.
     pub fn compression_ratio(&self) -> f64 {
         let dense_elems: usize = self.dense.iter().map(|w| w.elems()).sum();
-        let lowrank_elems: usize =
-            self.admissible.iter().map(|w| self.cfg.k * (w.rows() + w.cols())).sum();
+        let lowrank_elems: usize = match &self.factors {
+            Some(fs) => fs
+                .iter()
+                .zip(&self.aca_plan.batches)
+                .map(|(f, &(s, e))| {
+                    f.ranks
+                        .iter()
+                        .zip(&self.admissible[s..e])
+                        .map(|(&r, w)| r * (w.rows() + w.cols()))
+                        .sum::<usize>()
+                })
+                .sum(),
+            None => self.admissible.iter().map(|w| self.cfg.k * (w.rows() + w.cols())).sum(),
+        };
         (dense_elems + lowrank_elems) as f64 / (self.cfg.n as f64 * self.cfg.n as f64)
     }
 
     /// True if this instance holds pre-computed factors (P mode).
     pub fn is_precomputed(&self) -> bool {
         self.factors.is_some()
+    }
+}
+
+/// Reusable scratch for [`HMatrix::matvec_with`] / [`HMatrix::matmat_with`].
+///
+/// Holds the Morton-permuted input columns, the shared atomic accumulator
+/// and the output buffer (all column-major n × nrhs). Buffers grow to the
+/// largest shape seen and are never shrunk, so after the first call at a
+/// given `n * nrhs` every subsequent apply of the same or smaller shape is
+/// allocation-free — the contract an iterative solver or a serving loop
+/// relies on. A workspace is independent of any particular [`HMatrix`]
+/// and may be shared across operators of different sizes.
+#[derive(Default)]
+pub struct MatvecWorkspace {
+    /// Morton-permuted input; doubles as the scatter staging buffer.
+    xm: Vec<f64>,
+    /// Shared accumulator for the batched kernels' atomic writes.
+    z: AtomicF64Vec,
+    /// Output in original point order.
+    y: Vec<f64>,
+}
+
+impl MatvecWorkspace {
+    pub fn new() -> Self {
+        MatvecWorkspace::default()
+    }
+
+    /// Pre-size for an n × nrhs apply so even the first call allocates
+    /// nothing.
+    pub fn with_capacity(n: usize, nrhs: usize) -> Self {
+        let mut ws = MatvecWorkspace::new();
+        ws.ensure(n * nrhs);
+        ws
+    }
+
+    /// Currently provisioned capacity in elements (n × nrhs).
+    pub fn capacity(&self) -> usize {
+        self.xm.len()
+    }
+
+    fn ensure(&mut self, len: usize) {
+        if self.xm.len() < len {
+            self.xm.resize(len, 0.0);
+        }
+        if self.z.len() < len {
+            self.z = AtomicF64Vec::zeros(len);
+        }
+        if self.y.len() < len {
+            self.y.resize(len, 0.0);
+        }
     }
 }
 
@@ -293,6 +433,61 @@ mod tests {
         let y1 = batched.matvec(&x).unwrap();
         let y2 = unbatched.matvec(&x).unwrap();
         assert!(crate::util::rel_err(&y1, &y2) < 1e-12);
+    }
+
+    #[test]
+    fn matmat_matches_columnwise_matvec() {
+        for precompute in [false, true] {
+            let c = HmxConfig { precompute, ..cfg(512) };
+            let pts = PointSet::halton(c.n, c.dim);
+            let h = HMatrix::build(pts, &c).unwrap();
+            let nrhs = 5;
+            let mut rng = crate::util::prng::Xoshiro256::seed(17);
+            let x = rng.vector(c.n * nrhs);
+            let y = h.matmat(&x, nrhs).unwrap();
+            assert_eq!(y.len(), c.n * nrhs);
+            for col in 0..nrhs {
+                let yc = h.matvec(&x[col * c.n..(col + 1) * c.n]).unwrap();
+                let err = crate::util::rel_err(&y[col * c.n..(col + 1) * c.n], &yc);
+                assert!(err < 1e-12, "precompute={precompute} col {col}: {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_is_stable_across_shapes() {
+        let c = cfg(512);
+        let h = HMatrix::build(PointSet::halton(c.n, c.dim), &c).unwrap();
+        let mut rng = crate::util::prng::Xoshiro256::seed(23);
+        let x4 = rng.vector(c.n * 4);
+        let x1 = rng.vector(c.n);
+        let mut ws = MatvecWorkspace::with_capacity(c.n, 4);
+        let cap = ws.capacity();
+        let want4 = h.matmat(&x4, 4).unwrap();
+        let got4 = h.matmat_with(&x4, 4, &mut ws).unwrap().to_vec();
+        assert!(crate::util::rel_err(&got4, &want4) < 1e-13);
+        // a smaller apply through the same (warm) workspace
+        let want1 = h.matvec(&x1).unwrap();
+        let got1 = h.matvec_with(&x1, &mut ws).unwrap().to_vec();
+        assert!(crate::util::rel_err(&got1, &want1) < 1e-13);
+        // and the larger shape again — results must be unchanged
+        let again = h.matmat_with(&x4, 4, &mut ws).unwrap().to_vec();
+        assert!(crate::util::rel_err(&again, &want4) < 1e-13);
+        assert_eq!(ws.capacity(), cap, "warm workspace must not regrow");
+    }
+
+    #[test]
+    fn compression_ratio_reflects_recompressed_ranks() {
+        let base = HmxConfig { precompute: true, ..cfg(1024) };
+        let pts = PointSet::halton(base.n, base.dim);
+        let plain = HMatrix::build(pts.clone(), &base).unwrap();
+        let rc_cfg = HmxConfig { recompress_eps: Some(1e-8), ..base.clone() };
+        let rc = HMatrix::build(pts, &rc_cfg).unwrap();
+        let (r_plain, r_rc) = (plain.compression_ratio(), rc.compression_ratio());
+        assert!(r_rc < r_plain, "recompression must shrink stored ranks: {r_rc} vs {r_plain}");
+        // NP mode still reports the would-be fixed-rank storage
+        let np = HMatrix::build(PointSet::halton(base.n, base.dim), &cfg(1024)).unwrap();
+        assert!(np.compression_ratio() >= r_rc);
     }
 
     #[test]

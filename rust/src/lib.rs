@@ -17,8 +17,8 @@
 //! The crate also ships the comparison substrates the paper evaluates
 //! against: a sequential, recursive, fully-precomputing H-matrix
 //! implementation in the style of H2Lib ([`baseline`]) and an exact dense
-//! operator, plus a CG solver ([`solver`]) for the kernel ridge regression
-//! end-to-end example.
+//! operator, plus CG and multi-RHS block-CG solvers ([`solver`]) for the
+//! kernel ridge regression end-to-end examples.
 //!
 //! ## Quickstart
 //!
@@ -31,6 +31,31 @@
 //! let x = vec![1.0; cfg.n];
 //! let y = h.matvec(&x).unwrap();
 //! println!("|y|_2 = {}", hmx::util::norm2(&y));
+//! ```
+//!
+//! ## Multi-RHS (serving-shaped) applies
+//!
+//! Many simultaneous mat-vecs against the same operator — KRR inference
+//! over request batches, multi-RHS solves — should go through the batched
+//! mat-mat path, which amortizes kernel assembly and factor traffic
+//! across the right-hand sides. Hold a [`hmatrix::MatvecWorkspace`] to
+//! make repeated applies allocation-free after warm-up:
+//!
+//! ```no_run
+//! use hmx::prelude::*;
+//!
+//! let cfg = HmxConfig { n: 1 << 14, dim: 2, k: 16, ..HmxConfig::default() };
+//! let h = HMatrix::build(PointSet::halton(cfg.n, cfg.dim), &cfg).unwrap();
+//! let nrhs = 16; // column-major n x nrhs
+//! let x = vec![1.0; cfg.n * nrhs];
+//! let mut ws = MatvecWorkspace::with_capacity(cfg.n, nrhs);
+//! let y = h.matmat_with(&x, nrhs, &mut ws).unwrap(); // no allocation after warm-up
+//! assert_eq!(y.len(), cfg.n * nrhs);
+//!
+//! // multi-RHS regularized KRR solve: one batched apply per iteration
+//! let op = RegularizedHBlockOp::new(&h, 1e-3);
+//! let res = block_cg_solve(&op, &x, nrhs, BlockCgOptions::default());
+//! assert!(res.converged);
 //! ```
 
 pub mod aca;
@@ -57,7 +82,10 @@ pub mod prelude {
     pub use crate::config::{EngineKind, HmxConfig, KernelKind};
     pub use crate::geometry::kernel::Kernel;
     pub use crate::geometry::points::PointSet;
-    pub use crate::hmatrix::HMatrix;
+    pub use crate::hmatrix::{HMatrix, MatvecWorkspace};
+    pub use crate::solver::block_cg::{
+        block_cg_solve, BlockCgOptions, BlockLinOp, RegularizedHBlockOp,
+    };
     pub use crate::solver::cg::{cg_solve, CgOptions, LinOp};
 }
 

@@ -1,6 +1,8 @@
 //! Iterative solvers on top of the fast H-mat-vec (the MPLA role in the
 //! paper's ecosystem): conjugate gradients for the SPD systems
-//! (A + σ²I)x = b of kernel ridge regression / GPR.
+//! (A + σ²I)x = b of kernel ridge regression / GPR, and block CG
+//! ([`block_cg`]) for multi-RHS solves through the batched H-mat-mat.
 
 pub mod bicgstab;
+pub mod block_cg;
 pub mod cg;

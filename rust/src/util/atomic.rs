@@ -8,6 +8,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// A shared output vector supporting atomic `+=` per element.
+#[derive(Default)]
 pub struct AtomicF64Vec {
     bits: Vec<AtomicU64>,
 }
@@ -50,6 +51,28 @@ impl AtomicF64Vec {
         f64::from_bits(self.bits[i].load(Ordering::Relaxed))
     }
 
+    /// Reset every element to 0.0 so the vector can be reused across
+    /// mat-vecs without reallocating (the [`crate::hmatrix::MatvecWorkspace`]
+    /// contract). Runs as a parallel kernel — it sits on the per-apply hot
+    /// path. No other kernel may be writing concurrently.
+    pub fn reset(&self) {
+        let zero = 0f64.to_bits();
+        crate::dpp::executor::launch(self.bits.len(), |i| {
+            self.bits[i].store(zero, Ordering::Relaxed);
+        });
+    }
+
+    /// Copy the first `out.len()` elements into `out` without consuming the
+    /// vector (workspace reuse); parallel, like [`AtomicF64Vec::reset`].
+    /// No kernel may be writing concurrently.
+    pub fn copy_to(&self, out: &mut [f64]) {
+        let n = out.len().min(self.bits.len());
+        let o = crate::dpp::executor::GlobalMem::new(&mut out[..n]);
+        crate::dpp::executor::launch(n, |i| {
+            o.write(i, f64::from_bits(self.bits[i].load(Ordering::Relaxed)));
+        });
+    }
+
     pub fn into_vec(self) -> Vec<f64> {
         self.bits.into_iter().map(|b| f64::from_bits(b.into_inner())).collect()
     }
@@ -79,5 +102,17 @@ mod tests {
         v.add(0, 0.5);
         assert_eq!(v.get(0), 2.0);
         assert_eq!(v.into_vec(), vec![2.0, -2.5]);
+    }
+
+    #[test]
+    fn reset_and_copy_to_support_reuse() {
+        let v = AtomicF64Vec::from_slice(&[1.0, 2.0, 3.0]);
+        let mut out = vec![0.0; 3];
+        v.copy_to(&mut out);
+        assert_eq!(out, vec![1.0, 2.0, 3.0]);
+        v.reset();
+        v.add(1, 4.0);
+        v.copy_to(&mut out);
+        assert_eq!(out, vec![0.0, 4.0, 0.0]);
     }
 }

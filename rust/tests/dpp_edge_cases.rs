@@ -1,0 +1,99 @@
+//! Edge-case tests for the dpp primitives: kernel launches exactly at the
+//! chunk-grain boundaries (the off-by-one territory of the blocked
+//! schedules) and the parallel algorithms on empty / single-element
+//! inputs — the degenerate batches a serving workload will eventually
+//! produce.
+
+use hmx::dpp;
+use hmx::dpp::executor::{launch_blocked, launch_with_grain, GlobalMem};
+
+const GRAIN: usize = 64;
+
+#[test]
+fn launch_at_exactly_one_grain_covers_all_tids() {
+    // n == grain: runs inline (single chunk), must still cover every tid once
+    let mut out = vec![0u32; GRAIN];
+    {
+        let mem = GlobalMem::new(&mut out);
+        launch_with_grain(GRAIN, GRAIN, |tid| mem.write(tid, tid as u32 + 1));
+    }
+    assert!(out.iter().enumerate().all(|(i, &v)| v == i as u32 + 1));
+}
+
+#[test]
+fn launch_at_grain_plus_one_covers_all_tids() {
+    // n == grain + 1: first multi-chunk shape — the tail chunk holds one tid
+    let n = GRAIN + 1;
+    let mut hits = vec![0u8; n];
+    {
+        let mem = GlobalMem::new(&mut hits);
+        launch_with_grain(n, GRAIN, |tid| mem.write(tid, 1));
+    }
+    assert!(hits.iter().all(|&h| h == 1), "some tid missed or doubled");
+}
+
+#[test]
+fn launch_blocked_at_exactly_one_grain_is_single_range() {
+    let mut ranges: Vec<(usize, usize)> = Vec::new();
+    {
+        // n <= grain runs inline, so collecting into a plain Vec is safe
+        let cell = std::sync::Mutex::new(&mut ranges);
+        launch_blocked(GRAIN, GRAIN, |lo, hi| cell.lock().unwrap().push((lo, hi)));
+    }
+    assert_eq!(ranges, vec![(0, GRAIN)]);
+}
+
+#[test]
+fn launch_blocked_at_grain_plus_one_partitions_exactly() {
+    let n = GRAIN + 1;
+    let mut seen = vec![false; n];
+    {
+        let mem = GlobalMem::new(&mut seen);
+        launch_blocked(n, GRAIN, |lo, hi| {
+            assert!(lo < hi && hi <= n, "bad range [{lo}, {hi})");
+            for i in lo..hi {
+                assert!(!mem.read(i), "range overlap at {i}");
+                mem.write(i, true);
+            }
+        });
+    }
+    assert!(seen.iter().all(|&b| b), "ranges do not cover 0..n");
+}
+
+#[test]
+fn exclusive_scan_on_empty_and_singleton() {
+    // empty: one trailing total slot, zero
+    assert_eq!(dpp::exclusive_scan::<u64>(&[]), vec![0]);
+    // singleton: [0, x]
+    assert_eq!(dpp::exclusive_scan(&[7u64]), vec![0, 7]);
+    let mut data = [5usize];
+    assert_eq!(dpp::exclusive_scan_in_place(&mut data), 5);
+    assert_eq!(data, [0]);
+}
+
+#[test]
+fn sort_on_empty_and_singleton() {
+    let mut empty: Vec<u64> = Vec::new();
+    dpp::sort_u64(&mut empty);
+    assert!(empty.is_empty());
+
+    let mut one = vec![42u64];
+    dpp::sort_u64(&mut one);
+    assert_eq!(one, vec![42]);
+
+    let mut keys: Vec<u64> = Vec::new();
+    let mut vals: Vec<u32> = Vec::new();
+    dpp::sort_pairs_u64(&mut keys, &mut vals);
+    assert!(keys.is_empty() && vals.is_empty());
+
+    let mut keys = vec![9u64];
+    let mut vals = vec![3u32];
+    dpp::sort_pairs_u64(&mut keys, &mut vals);
+    assert_eq!((keys, vals), (vec![9], vec![3]));
+}
+
+#[test]
+fn unique_on_empty_and_singleton() {
+    assert_eq!(dpp::unique_sorted::<u64>(&[]), Vec::<u64>::new());
+    assert_eq!(dpp::unique_sorted(&[11u64]), vec![11]);
+}

@@ -194,6 +194,130 @@ fn c_leaf_sweep_correctness() {
     }
 }
 
+/// Acceptance sweep for the multi-RHS path: matmat with nrhs=16 agrees
+/// with 16 single matvecs to 1e-12 on Gaussian and Matérn kernels in 2D
+/// and 3D (the fast path may reorder work but not change the numbers).
+#[test]
+fn matmat_sixteen_rhs_matches_single_matvecs_all_kernels() {
+    let n = 1024;
+    let nrhs = 16;
+    for kernel in [KernelKind::Gaussian, KernelKind::Matern] {
+        for dim in [2usize, 3] {
+            let c = HmxConfig { n, dim, kernel, c_leaf: 64, k: 12, ..HmxConfig::default() };
+            let h = HMatrix::build(PointSet::halton(n, dim), &c).unwrap();
+            let x = Xoshiro256::seed(31).vector(n * nrhs);
+            let y = h.matmat(&x, nrhs).unwrap();
+            for col in 0..nrhs {
+                let yc = h.matvec(&x[col * n..(col + 1) * n]).unwrap();
+                let err = hmx::util::rel_err(&y[col * n..(col + 1) * n], &yc);
+                assert!(err < 1e-12, "kernel={kernel:?} d={dim} col {col}: {err}");
+            }
+        }
+    }
+}
+
+/// Multi-RHS regularized KRR: block-CG through the batched H-mat-mat must
+/// reproduce the per-column CG solutions through the same operator.
+#[test]
+fn block_cg_matches_columnwise_cg_on_h_operator() {
+    let c = cfg(1024);
+    let sigma2 = 1e-2;
+    let nrhs = 4;
+    let h = HMatrix::build(PointSet::halton(c.n, c.dim), &c).unwrap();
+    let b = Xoshiro256::seed(33).vector(c.n * nrhs);
+
+    let block_op = RegularizedHBlockOp::new(&h, sigma2);
+    let res = block_cg_solve(&block_op, &b, nrhs, BlockCgOptions { max_iter: 400, tol: 1e-10 });
+    assert!(res.converged, "block-CG residuals {:?}", res.residuals);
+
+    let single_op = RegularizedHOp::new(&h, sigma2);
+    for col in 0..nrhs {
+        let single = cg_solve(&single_op, &b[col * c.n..(col + 1) * c.n], CgOptions {
+            max_iter: 400,
+            tol: 1e-12,
+        });
+        assert!(single.converged);
+        let err = hmx::util::rel_err(&res.x[col * c.n..(col + 1) * c.n], &single.x);
+        assert!(err < 1e-6, "col {col}: {err}");
+    }
+}
+
+/// Tolerance-mode ACA end-to-end: tightening ε must not raise the achieved
+/// rank's error, ranks grow monotonically, and the approximation error on a
+/// well-separated block tracks the requested tolerance.
+#[test]
+fn tolerance_mode_aca_tracks_requested_eps() {
+    // τ points in [0,0.25]^2, σ points in [0.75,1]^2 — well separated
+    let m = 96;
+    let base = PointSet::halton(m, 2);
+    let mut rows = Vec::new();
+    for i in 0..m {
+        rows.extend_from_slice(&[base.coord(0, i) * 0.25, base.coord(1, i) * 0.25]);
+    }
+    for i in 0..m {
+        rows.extend_from_slice(&[0.75 + base.coord(0, i) * 0.25, 0.75 + base.coord(1, i) * 0.25]);
+    }
+    let pts = PointSet::from_rows(&rows, 2);
+    let kern = Kernel::gaussian();
+    let eval = |i: usize, j: usize| kern.eval(&pts, i, &pts, m + j);
+    let dense: Vec<f64> = (0..m * m).map(|idx| eval(idx / m, idx % m)).collect();
+
+    let mut last_rank = 0usize;
+    for (eps, budget) in [(1e-2, 1e-1), (1e-4, 1e-3), (1e-8, 1e-7)] {
+        let r = aca_with_tolerance(&eval, m, m, 64, eps, 0.0);
+        assert!(r.rank >= last_rank, "rank not monotone under tighter eps: {} < {last_rank}", r.rank);
+        last_rank = r.rank;
+        assert!(r.rank < 64, "eps={eps}: stopping criterion never fired");
+        let err = hmx::util::rel_err(&r.dense(), &dense);
+        assert!(err < budget, "eps={eps}: err {err} above budget {budget}");
+    }
+}
+
+/// Recompression end-to-end through the build pipeline: P mode with
+/// `recompress_eps` must keep the mat-vec (and mat-mat) numerically close
+/// to the un-recompressed P mode while measurably shrinking stored ranks.
+#[test]
+fn recompress_truncation_end_to_end() {
+    let base = HmxConfig { precompute: true, ..cfg(2048) };
+    let pts = PointSet::halton(base.n, base.dim);
+    let plain = HMatrix::build(pts.clone(), &base).unwrap();
+    let rc_cfg = HmxConfig { recompress_eps: Some(1e-10), ..base.clone() };
+    let rc = HMatrix::build(pts, &rc_cfg).unwrap();
+
+    assert!(
+        rc.compression_ratio() < plain.compression_ratio(),
+        "recompression must shrink stored factor ranks: {} vs {}",
+        rc.compression_ratio(),
+        plain.compression_ratio()
+    );
+
+    let x = Xoshiro256::seed(35).vector(base.n);
+    let err = hmx::util::rel_err(&rc.matvec(&x).unwrap(), &plain.matvec(&x).unwrap());
+    assert!(err < 1e-8, "recompression changed the product: {err}");
+
+    // truncated factors feed the multi-RHS path identically
+    let nrhs = 3;
+    let xb = Xoshiro256::seed(36).vector(base.n * nrhs);
+    let y = rc.matmat(&xb, nrhs).unwrap();
+    for col in 0..nrhs {
+        let yc = rc.matvec(&xb[col * base.n..(col + 1) * base.n]).unwrap();
+        let e = hmx::util::rel_err(&y[col * base.n..(col + 1) * base.n], &yc);
+        assert!(e < 1e-12, "col {col}: {e}");
+    }
+
+    // aggressive truncation degrades the product but stays a sane
+    // approximation of the exact operator
+    let rough_cfg = HmxConfig { recompress_eps: Some(1e-2), ..base.clone() };
+    let rough = HMatrix::build(PointSet::halton(base.n, base.dim), &rough_cfg).unwrap();
+    let exact = DenseOperator::new(PointSet::halton(base.n, base.dim), base.kernel());
+    let e = hmx::util::rel_err(&rough.matvec(&x).unwrap(), &exact.matvec(&x));
+    assert!(e < 1e-1, "aggressive truncation unreasonable: {e}");
+    assert!(
+        rough.compression_ratio() <= rc.compression_ratio(),
+        "coarser eps must not store more"
+    );
+}
+
 /// Batch-size thresholds only change the schedule, never the numbers.
 #[test]
 fn batch_size_invariance() {

@@ -298,6 +298,56 @@ fn prop_hmatvec_close_to_dense_random_configs() {
     );
 }
 
+/// Multi-RHS consistency: `matmat` with nrhs columns must equal nrhs
+/// independent `matvec` calls column by column, to near machine precision,
+/// across random kernels, dimensions and batching/precompute modes (the
+/// batched mat-mat kernels share the assembly/factor passes but may not
+/// change the numbers).
+#[test]
+fn prop_matmat_equals_columnwise_matvec() {
+    check(
+        "matmat-columns",
+        8,
+        |g| {
+            let n = g.usize_in(64, 384);
+            let d = g.usize_in(2, 3);
+            let kernel = [KernelKind::Gaussian, KernelKind::Matern, KernelKind::Exponential]
+                [g.usize_in(0, 2)];
+            let batching = g.usize_in(0, 1) == 1;
+            let precompute = g.usize_in(0, 1) == 1;
+            let nrhs = g.usize_in(1, 8);
+            (n, d, kernel, batching, precompute, nrhs, g.rng.next_u64())
+        },
+        |&(n, d, kernel, batching, precompute, nrhs, seed)| {
+            let cfg = hmx::config::HmxConfig {
+                n,
+                dim: d,
+                kernel,
+                c_leaf: 32,
+                k: 8,
+                batching,
+                precompute,
+                ..hmx::config::HmxConfig::default()
+            };
+            let pts = PointSet::random(n, d, seed);
+            let h = HMatrix::build(pts, &cfg).map_err(|e| e.to_string())?;
+            let x = hmx::util::prng::Xoshiro256::seed(seed ^ 7).vector(n * nrhs);
+            let y = h.matmat(&x, nrhs).map_err(|e| e.to_string())?;
+            for c in 0..nrhs {
+                let yc = h.matvec(&x[c * n..(c + 1) * n]).map_err(|e| e.to_string())?;
+                let err = hmx::util::rel_err(&y[c * n..(c + 1) * n], &yc);
+                if err >= 1e-12 {
+                    return Err(format!(
+                        "col {c}/{nrhs}: err {err} (n={n} d={d} kernel={kernel:?} \
+                         batching={batching} precompute={precompute})"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 // ---------- output queue under adversarial sizes ----------
 
 #[test]

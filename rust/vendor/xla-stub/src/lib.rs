@@ -1,0 +1,102 @@
+//! Offline stub of the `xla` (xla-rs / PJRT) bindings.
+//!
+//! Mirrors exactly the API subset `hmx::runtime` consumes. Every runtime
+//! entry point ([`PjRtClient::cpu`], [`HloModuleProto::from_text_file`])
+//! returns [`Error`], which `hmx` already treats as "XLA unavailable":
+//! `XlaEngine::new` surfaces the error and the coordinator keeps using the
+//! native engine, and the `runtime_xla` tests skip without artifacts. To
+//! execute real AOT artifacts, replace the `xla` path dependency in
+//! `rust/Cargo.toml` with the actual bindings (LaurentMazare/xla-rs),
+//! which require the XLA C++ extension at build time.
+
+/// Error carrying the stub's single failure message (or, with the real
+/// bindings, whatever XLA reports).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(
+        "XLA/PJRT runtime unavailable: built against the offline `xla` stub \
+         (rust/vendor/xla-stub); swap it for the real xla-rs bindings to run AOT artifacts"
+            .to_string(),
+    ))
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _inputs: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+#[derive(Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[f64]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        unavailable()
+    }
+
+    pub fn to_tuple2(self) -> Result<(Literal, Literal)> {
+        unavailable()
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
