@@ -1,0 +1,213 @@
+//! END-TO-END driver: multi-tenant KRR serving through `hmx::serve`.
+//!
+//! Pipeline, per tenant:
+//!   Halton training inputs + q noisy target channels
+//!     → register ONE H-matrix operator in the `OperatorRegistry`
+//!       (built on its dedicated executor thread; engines are not `Send`)
+//!     → OFFLINE fit of the weight block [α₁ … α_q]: the block solver's
+//!       applies are routed THROUGH the serving layer (each column is a
+//!       submission, so the batcher coalesces the solver's own applies
+//!       into multi-RHS batches) — block CG for even tenants, block
+//!       BiCGSTAB for odd ones
+//!     → ONLINE serving: C client threads × R predict requests each,
+//!       coalesced by the DynamicBatcher; overload is shed, not queued
+//!   … then per-tenant occupancy/latency telemetry and the global
+//!   `serve.*` phase stats.
+//!
+//! Run:  cargo run --release --example serve_krr -- \
+//!           [--n 4096] [--tenants 2] [--q 4] [--clients 4] [--requests 8] \
+//!           [--sigma2 1e-3] [--max-batch 32] [--max-wait-ms 5] [--max-iter 100]
+
+use hmx::config::{HmxConfig, KernelKind};
+use hmx::prelude::*;
+use hmx::util::cli::Args;
+use hmx::util::prng::Xoshiro256;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Family of ground-truth functions to regress (one per output channel).
+fn f_true(p: &[f64], channel: usize) -> f64 {
+    let s: f64 = p.iter().sum();
+    let r2: f64 = p.iter().map(|x| (x - 0.5) * (x - 0.5)).sum();
+    let w = 1.0 + channel as f64 * 0.5;
+    (w * 3.0 * s).sin() + (-4.0 * w * r2).exp()
+}
+
+/// (A + σ²I) where the A-apply goes through the serving layer: every
+/// column is one submission, so the batcher coalesces the solver's own
+/// applies into multi-RHS batches (occupancy ≈ q during the fit).
+struct ServedRegularizedOp {
+    handle: OperatorHandle,
+    sigma2: f64,
+}
+
+impl BlockLinOp for ServedRegularizedOp {
+    fn apply_block(&self, x: &[f64], nrhs: usize) -> Vec<f64> {
+        let n = self.handle.n();
+        let mut tickets = Vec::with_capacity(nrhs);
+        for c in 0..nrhs {
+            let col = &x[c * n..(c + 1) * n];
+            // bounded-queue backpressure during the fit: back off and
+            // resubmit instead of aborting (the online clients shed)
+            let ticket = loop {
+                match self.handle.submit(col.to_vec()) {
+                    Ok(t) => break t,
+                    Err(ServeError::Overloaded) => {
+                        std::thread::sleep(Duration::from_micros(200))
+                    }
+                    Err(e) => panic!("serve submit failed: {e}"),
+                }
+            };
+            tickets.push(ticket);
+        }
+        let mut y = Vec::with_capacity(n * nrhs);
+        for t in tickets {
+            y.extend(t.wait().expect("serve apply failed"));
+        }
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += self.sigma2 * xi;
+        }
+        y
+    }
+
+    fn dim(&self) -> usize {
+        self.handle.n()
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let n = args.get("n", 1usize << 12);
+    let dim = args.get("d", 2usize);
+    let tenants = args.get("tenants", 2usize);
+    let q = args.get("q", 4usize);
+    let clients = args.get("clients", 4usize);
+    let requests = args.get("requests", 8usize);
+    let sigma2 = args.get("sigma2", 1e-3f64);
+    let noise = args.get("noise", 1e-2f64);
+    let max_iter = args.get("max-iter", 100usize);
+    let serve_cfg = ServeConfig {
+        max_batch: args.get("max-batch", 32usize),
+        max_wait: Duration::from_millis(args.get("max-wait-ms", 5u64)),
+        queue_capacity: args.get("queue-capacity", 1024usize),
+    };
+
+    let registry = OperatorRegistry::new();
+    for t in 0..tenants {
+        let id = format!("tenant-{t}");
+        let kernel = if t % 2 == 0 { KernelKind::Gaussian } else { KernelKind::Matern };
+        let cfg = HmxConfig {
+            n,
+            dim,
+            k: args.get("k", 16usize),
+            c_leaf: args.get("c-leaf", 256usize),
+            kernel,
+            precompute: !args.has("no-precompute"),
+            ..HmxConfig::default()
+        };
+        let train = PointSet::halton(n, dim);
+
+        // --- register: builds the operator on its executor thread ---
+        let t0 = Instant::now();
+        let handle = registry.register(&id, train.clone(), &cfg, serve_cfg.clone())?;
+        println!(
+            "[{id}] registered: n={n} kernel={} engine={} compression={:.4} ({:.2?})",
+            cfg.kernel.name(),
+            handle.meta().engine,
+            handle.meta().compression_ratio,
+            t0.elapsed()
+        );
+
+        // --- q noisy target channels over the shared inputs ---
+        let mut rng = Xoshiro256::seed(args.get("seed", 42u64) + t as u64);
+        let mut b = vec![0.0; n * q];
+        for c in 0..q {
+            for i in 0..n {
+                b[c * n + i] = f_true(&train.point(i), c) + noise * rng.normal();
+            }
+        }
+
+        // --- offline fit THROUGH the serving layer ---
+        let op = ServedRegularizedOp { handle: handle.clone(), sigma2 };
+        let t1 = Instant::now();
+        let (solver, alpha, iters, converged) = if t % 2 == 0 {
+            let res = block_cg_solve(&op, &b, q, BlockCgOptions { max_iter, tol: 1e-6 });
+            ("block-CG", res.x, res.iterations, res.converged)
+        } else {
+            let res =
+                block_bicgstab_solve(&op, &b, q, BlockBiCgStabOptions { max_iter, tol: 1e-6 });
+            ("block-BiCGSTAB", res.x, res.iterations, res.converged)
+        };
+        let fit_occupancy = handle.stats().mean_occupancy();
+        println!(
+            "[{id}] {solver}: q={q} iters={iters} converged={converged} \
+             fit-occupancy={fit_occupancy:.2} ({:.2?})",
+            t1.elapsed()
+        );
+
+        // --- online serving: C concurrent clients, coalesced predicts ---
+        handle.stats().reset(); // separate fit telemetry from serving telemetry
+        let alpha = Arc::new(alpha);
+        let targets = Arc::new(b);
+        let t2 = Instant::now();
+        let mut joins = Vec::new();
+        for client in 0..clients {
+            let handle = handle.clone();
+            let alpha = Arc::clone(&alpha);
+            let targets = Arc::clone(&targets);
+            joins.push(std::thread::spawn(move || -> (usize, f64) {
+                let mut served = 0usize;
+                let mut worst_rmse = 0.0f64;
+                for r in 0..requests {
+                    let c = (client + r) % q;
+                    match handle.predict(&alpha[c * n..(c + 1) * n]) {
+                        Ok(yhat) => {
+                            // fitted values: ŷ + σ²α should reproduce the targets
+                            let mut se = 0.0;
+                            for i in 0..n {
+                                let d =
+                                    yhat[i] + sigma2 * alpha[c * n + i] - targets[c * n + i];
+                                se += d * d;
+                            }
+                            worst_rmse = worst_rmse.max((se / n as f64).sqrt());
+                            served += 1;
+                        }
+                        Err(ServeError::Overloaded) => {} // shed: client backs off
+                        Err(e) => panic!("serving failed: {e}"),
+                    }
+                }
+                (served, worst_rmse)
+            }));
+        }
+        let mut served_total = 0usize;
+        let mut worst_rmse = 0.0f64;
+        for j in joins {
+            let (served, rmse) = j.join().expect("client thread panicked");
+            served_total += served;
+            worst_rmse = worst_rmse.max(rmse);
+        }
+        let elapsed = t2.elapsed().as_secs_f64();
+        let snap = handle.stats().snapshot();
+        println!(
+            "[{id}] served {served_total}/{} predicts in {elapsed:.3}s \
+             ({:.1} req/s), worst train RMSE {worst_rmse:.3e}",
+            clients * requests,
+            served_total as f64 / elapsed.max(f64::MIN_POSITIVE),
+        );
+        println!("[{id}] telemetry: {snap}");
+    }
+
+    println!("global serve phases:");
+    for s in hmx::metrics::RECORDER.stats() {
+        if s.phase.starts_with("serve.") {
+            println!(
+                "  {:<14} total {:.4}s  count {}  mean {:.6}s",
+                s.phase,
+                s.total.as_secs_f64(),
+                s.count,
+                s.mean.as_secs_f64()
+            );
+        }
+    }
+    Ok(())
+}

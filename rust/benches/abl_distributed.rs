@@ -2,10 +2,13 @@
 //! Sweeps the simulated device count; reports the LPT load-balance
 //! quality (max/mean modeled cost) and the projected multi-device
 //! speedup (total time / max shard time), with correctness checked
-//! against the single-device product.
+//! against the single-device product. The nrhs > 1 rows run the
+//! RHS-blocked sharded apply (`sharded_matmat`): each shard sweeps its
+//! batches over the whole RHS block, so per-RHS device time drops the
+//! same way `fig18_multirhs` measures on a single device.
 
 use hmx::config::HmxConfig;
-use hmx::coordinator::distributed::{imbalance, partition_lpt, sharded_matvec};
+use hmx::coordinator::distributed::{imbalance, partition_lpt, sharded_matmat};
 use hmx::coordinator::NativeEngine;
 use hmx::metrics::CsvTable;
 use hmx::prelude::*;
@@ -17,44 +20,59 @@ fn main() {
     let cfg = HmxConfig { n, dim: 2, k: 16, c_leaf: 256, ..HmxConfig::default() };
     let table = CsvTable::new(
         "abl_distributed",
-        &["devices", "n", "imbalance", "sum_device_s", "max_device_s", "projected_speedup"],
+        &[
+            "devices",
+            "n",
+            "nrhs",
+            "imbalance",
+            "sum_device_s",
+            "max_device_s",
+            "sec_per_rhs",
+            "projected_speedup",
+        ],
     );
     println!("# ablation: LPT multi-device sharding (N={n}, k=16, simulated devices)");
     let mut pts = PointSet::halton(n, 2);
     hmx::morton::morton_sort(&mut pts);
     let tree = hmx::tree::block::build_block_tree(&pts, cfg.eta, cfg.c_leaf);
     let engine = NativeEngine;
-    let x = Xoshiro256::seed(2).vector(n);
-    let mut reference: Option<Vec<f64>> = None;
-    for devices in [1usize, 2, 4, 8, 16] {
-        let shards = partition_lpt(&tree.dense, &tree.admissible, cfg.k, devices);
-        let out = sharded_matvec(
-            &pts,
-            cfg.kernel(),
-            &cfg,
-            &tree.dense,
-            &tree.admissible,
-            &shards,
-            &engine,
-            &x,
-        );
-        match &reference {
-            None => reference = Some(out.y.clone()),
-            Some(r) => {
-                let err = hmx::util::rel_err(&out.y, r);
-                assert!(err < 1e-12, "sharding changed the product: {err}");
+    for nrhs in [1usize, 8] {
+        let x = Xoshiro256::seed(2).vector(n * nrhs);
+        let mut reference: Option<Vec<f64>> = None;
+        for devices in [1usize, 2, 4, 8, 16] {
+            let shards = partition_lpt(&tree.dense, &tree.admissible, cfg.k, devices);
+            let out = sharded_matmat(
+                &pts,
+                cfg.kernel(),
+                &cfg,
+                &tree.dense,
+                &tree.admissible,
+                &shards,
+                &engine,
+                &x,
+                nrhs,
+            );
+            match &reference {
+                None => reference = Some(out.y.clone()),
+                Some(r) => {
+                    let err = hmx::util::rel_err(&out.y, r);
+                    assert!(err < 1e-12, "sharding changed the product: {err}");
+                }
             }
+            let sum: f64 = out.device_seconds.iter().sum();
+            let max = out.device_seconds.iter().cloned().fold(0.0, f64::max);
+            table.row(&[
+                devices.to_string(),
+                n.to_string(),
+                nrhs.to_string(),
+                format!("{:.4}", imbalance(&shards)),
+                format!("{sum:.4}"),
+                format!("{max:.4}"),
+                format!("{:.4}", max / nrhs as f64),
+                format!("{:.2}", sum / max.max(1e-12)),
+            ]);
         }
-        let sum: f64 = out.device_seconds.iter().sum();
-        let max = out.device_seconds.iter().cloned().fold(0.0, f64::max);
-        table.row(&[
-            devices.to_string(),
-            n.to_string(),
-            format!("{:.4}", imbalance(&shards)),
-            format!("{sum:.4}"),
-            format!("{max:.4}"),
-            format!("{:.2}", sum / max.max(1e-12)),
-        ]);
     }
-    println!("# expectation: imbalance stays near 1.0 (LPT), projected speedup ~= devices");
+    println!("# expectation: imbalance stays near 1.0 (LPT), projected speedup ~= devices,");
+    println!("# and sec_per_rhs at nrhs=8 falls well below nrhs=1 (RHS-blocked shards)");
 }

@@ -1,0 +1,94 @@
+//! Serving extension bench: offered load vs. achieved batch occupancy.
+//!
+//! Sweeps the number of closed-loop client threads against ONE served
+//! H-matrix operator and reports what the dynamic batcher achieved:
+//! mean batch occupancy (requests per flushed multi-RHS apply),
+//! throughput, p50/p99 wait and apply latency, and shed count. As load
+//! grows, occupancy should climb toward `max_batch` while per-request
+//! cost falls — the serving-side incarnation of the paper's batching
+//! pattern (§5.4) that `fig18_multirhs` measures offline.
+
+use hmx::config::HmxConfig;
+use hmx::metrics::CsvTable;
+use hmx::prelude::*;
+use hmx::util::prng::Xoshiro256;
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+fn main() {
+    let full = std::env::var("HMX_BENCH_FULL").is_ok();
+    let n = if full { 1usize << 15 } else { 1usize << 13 };
+    let requests_per_client = if full { 128usize } else { 32 };
+    let cfg = HmxConfig { n, dim: 2, k: 16, c_leaf: 256, precompute: true, ..HmxConfig::default() };
+    let serve_cfg = ServeConfig {
+        max_batch: 32,
+        max_wait: Duration::from_millis(1),
+        queue_capacity: 4096,
+    };
+    let table = CsvTable::new(
+        "fig_serve",
+        &[
+            "clients",
+            "n",
+            "requests",
+            "mean_occupancy",
+            "throughput_rps",
+            "p50_wait_ms",
+            "p99_wait_ms",
+            "p50_apply_ms",
+            "p99_apply_ms",
+            "shed",
+        ],
+    );
+    println!(
+        "# fig_serve: offered load vs achieved batch occupancy \
+         (n={n}, max_batch=32, max_wait=1ms, P mode)"
+    );
+    let registry = OperatorRegistry::new();
+    let handle = registry
+        .register("bench", PointSet::halton(n, 2), &cfg, serve_cfg)
+        .expect("register failed");
+    for clients in [1usize, 2, 4, 8, 16] {
+        handle.stats().reset();
+        let barrier = Arc::new(Barrier::new(clients + 1));
+        let mut joins = Vec::new();
+        for c in 0..clients {
+            let handle = handle.clone();
+            let barrier = Arc::clone(&barrier);
+            joins.push(std::thread::spawn(move || {
+                let x = Xoshiro256::seed(100 + c as u64).vector(handle.n());
+                barrier.wait();
+                let mut served = 0usize;
+                for _ in 0..requests_per_client {
+                    if handle.matvec(&x).is_ok() {
+                        served += 1;
+                    }
+                }
+                served
+            }));
+        }
+        // start the clock BEFORE releasing the barrier: the clients begin
+        // submitting the instant they are released, and a descheduled main
+        // thread must not shave their work off the measured window
+        let t0 = std::time::Instant::now();
+        barrier.wait();
+        let served: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
+        let elapsed = t0.elapsed().as_secs_f64().max(f64::MIN_POSITIVE);
+        let snap = handle.stats().snapshot();
+        table.row(&[
+            clients.to_string(),
+            n.to_string(),
+            served.to_string(),
+            format!("{:.2}", snap.mean_occupancy),
+            format!("{:.1}", served as f64 / elapsed),
+            format!("{:.3}", snap.wait_p50.as_secs_f64() * 1e3),
+            format!("{:.3}", snap.wait_p99.as_secs_f64() * 1e3),
+            format!("{:.3}", snap.apply_p50.as_secs_f64() * 1e3),
+            format!("{:.3}", snap.apply_p99.as_secs_f64() * 1e3),
+            snap.shed.to_string(),
+        ]);
+    }
+    println!("# expectation: occupancy climbs with clients (toward max_batch) while");
+    println!("# throughput grows superlinearly vs 1 client — coalesced applies amortize");
+    println!("# assembly/factor traffic exactly as fig18 measures per-RHS offline");
+}

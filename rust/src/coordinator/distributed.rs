@@ -94,7 +94,8 @@ pub fn imbalance(shards: &[Shard]) -> f64 {
     }
 }
 
-/// Result of a sharded mat-vec: output plus per-device measured seconds.
+/// Result of a sharded apply: output (column-major n × nrhs) plus
+/// per-device measured seconds.
 pub struct ShardedMatvec {
     pub y: Vec<f64>,
     pub device_seconds: Vec<f64>,
@@ -103,7 +104,9 @@ pub struct ShardedMatvec {
 
 /// Execute the H-mat-vec shard by shard (simulated devices), measuring
 /// per-device time. The output vector is accumulated across shards the
-/// way a multi-GPU owner-side reduction would.
+/// way a multi-GPU owner-side reduction would. Single-RHS convenience
+/// wrapper over [`sharded_matmat`].
+#[allow(clippy::too_many_arguments)]
 pub fn sharded_matvec(
     points: &PointSet,
     kernel: Kernel,
@@ -114,8 +117,32 @@ pub fn sharded_matvec(
     engine: &dyn BatchEngine,
     x_morton: &[f64],
 ) -> ShardedMatvec {
+    sharded_matmat(points, kernel, cfg, dense, admissible, shards, engine, x_morton, 1)
+}
+
+/// Multi-RHS sharded apply: `x_morton` is column-major n × nrhs (Morton
+/// order). Every shard runs each of its batches over the WHOLE RHS block
+/// through [`BatchEngine::dense_matmat`] / [`BatchEngine::aca_matmat`], so
+/// per-device assembly and factor traffic are amortized across the
+/// columns exactly as in the single-device [`crate::hmatrix::HMatrix::matmat`]
+/// path — the RHS blocking Harbrecht & Zaspel (2018) rely on for
+/// multi-GPU block solves.
+#[allow(clippy::too_many_arguments)]
+pub fn sharded_matmat(
+    points: &PointSet,
+    kernel: Kernel,
+    cfg: &HmxConfig,
+    dense: &[WorkItem],
+    admissible: &[WorkItem],
+    shards: &[Shard],
+    engine: &dyn BatchEngine,
+    x_morton: &[f64],
+    nrhs: usize,
+) -> ShardedMatvec {
     let n = points.len();
-    let z = AtomicF64Vec::zeros(n);
+    assert!(nrhs >= 1, "nrhs must be at least 1");
+    assert_eq!(x_morton.len(), n * nrhs, "x must be column-major n x nrhs");
+    let z = AtomicF64Vec::zeros(n * nrhs);
     let mut device_seconds = Vec::with_capacity(shards.len());
     for shard in shards {
         let t0 = std::time::Instant::now();
@@ -136,10 +163,10 @@ pub fn sharded_matvec(
         let dplan = plan_batches(&dense_shapes, BatchBudget::DensePaddedElems { bs: cfg.bs_dense });
         let aplan = plan_batches(&aca_shapes, BatchBudget::AcaTotalRows { bs: cfg.bs_aca });
         for &(s, e) in &dplan.batches {
-            engine.dense_matvec(points, kernel, &dense_blocks[s..e], x_morton, &z);
+            engine.dense_matmat(points, kernel, &dense_blocks[s..e], x_morton, nrhs, &z);
         }
         for &(s, e) in &aplan.batches {
-            engine.aca_matvec(points, kernel, cfg.k, &aca_blocks[s..e], x_morton, &z);
+            engine.aca_matmat(points, kernel, cfg.k, &aca_blocks[s..e], x_morton, nrhs, &z);
         }
         device_seconds.push(t0.elapsed().as_secs_f64());
     }
@@ -211,6 +238,41 @@ mod tests {
         let err = crate::util::rel_err(&out.y, &ref_out.y);
         assert!(err < 1e-12, "sharding changed the product: {err}");
         assert_eq!(out.device_seconds.len(), 4);
+    }
+
+    #[test]
+    fn sharded_matmat_matches_columnwise_sharded_matvec() {
+        let (pts, dense, adm) = setup(2048);
+        let cfg = HmxConfig { n: 2048, dim: 2, c_leaf: 64, k: 12, ..HmxConfig::default() };
+        let kern = cfg.kernel();
+        let engine = NativeEngine;
+        let n = pts.len();
+        let nrhs = 3;
+        let mut rng = crate::util::prng::Xoshiro256::seed(21);
+        let x = rng.vector(n * nrhs);
+        let shards = partition_lpt(&dense, &adm, cfg.k, 4);
+        let block =
+            sharded_matmat(&pts, kern, &cfg, &dense, &adm, &shards, &engine, &x, nrhs);
+        assert_eq!(block.y.len(), n * nrhs);
+        assert_eq!(block.device_seconds.len(), 4);
+        for c in 0..nrhs {
+            let col = sharded_matvec(
+                &pts,
+                kern,
+                &cfg,
+                &dense,
+                &adm,
+                &shards,
+                &engine,
+                &x[c * n..(c + 1) * n],
+            );
+            let err = crate::util::rel_err(&block.y[c * n..(c + 1) * n], &col.y);
+            assert!(err < 1e-12, "RHS blocking changed column {c}: {err}");
+        }
+        // one simulated device must agree with four
+        let one = partition_lpt(&dense, &adm, cfg.k, 1);
+        let single = sharded_matmat(&pts, kern, &cfg, &dense, &adm, &one, &engine, &x, nrhs);
+        assert!(crate::util::rel_err(&block.y, &single.y) < 1e-12);
     }
 
     #[test]

@@ -9,7 +9,9 @@
 //!   level-wise parallel tree traversal ([`tree`]), batched bounding-box
 //!   computation ([`bbox`]), batched adaptive cross approximation ([`aca`])
 //!   and the H-matrix construction / mat-vec pipeline ([`hmatrix`]) driven by
-//!   a batching [`coordinator`].
+//!   a batching [`coordinator`], plus a multi-tenant dynamic-batching
+//!   serving layer ([`serve`]) that coalesces concurrent requests into the
+//!   multi-RHS mat-mat path.
 //! * **L2/L1 (python/, build-time only)** — JAX batched linear algebra with a
 //!   Pallas kernel-matrix assembly kernel, AOT-lowered to HLO text and
 //!   executed from Rust via PJRT ([`runtime`]).
@@ -57,6 +59,40 @@
 //! let res = block_cg_solve(&op, &x, nrhs, BlockCgOptions::default());
 //! assert!(res.converged);
 //! ```
+//!
+//! ## Serving
+//!
+//! The [`serve`] module turns the multi-RHS engine into a request-facing
+//! system: an [`serve::OperatorRegistry`] owns one built operator per
+//! tenant/model id (build-once/get-many, each on its own executor thread
+//! since engines are not `Send`), and a per-operator
+//! [`serve::DynamicBatcher`] coalesces concurrent mat-vec / predict
+//! submissions into one batched [`HMatrix::matmat_with`] apply — flushing
+//! on batch occupancy or a wait deadline — with bounded-queue
+//! backpressure (overflow is shed with
+//! [`serve::ServeError::Overloaded`]) and occupancy/latency telemetry:
+//!
+//! ```no_run
+//! use hmx::prelude::*;
+//! use std::time::Duration;
+//!
+//! let cfg = HmxConfig { n: 1 << 12, dim: 2, k: 16, ..HmxConfig::default() };
+//! let registry = OperatorRegistry::new();
+//! let serve_cfg = ServeConfig {
+//!     max_batch: 32,
+//!     max_wait: Duration::from_millis(2),
+//!     ..ServeConfig::default()
+//! };
+//! let handle = registry
+//!     .register("tenant-a", PointSet::halton(cfg.n, cfg.dim), &cfg, serve_cfg)
+//!     .unwrap();
+//! // any number of client threads hold clones of `handle`:
+//! let x = vec![1.0; cfg.n];
+//! let y = handle.matvec(&x).unwrap();
+//! assert_eq!(y.len(), cfg.n);
+//! let snap = handle.stats().snapshot();
+//! println!("occupancy {:.2}, p99 wait {:?}", snap.mean_occupancy, snap.wait_p99);
+//! ```
 
 pub mod aca;
 pub mod baseline;
@@ -70,6 +106,7 @@ pub mod hmatrix;
 pub mod metrics;
 pub mod morton;
 pub mod runtime;
+pub mod serve;
 pub mod solver;
 pub mod tree;
 pub mod util;
@@ -83,6 +120,10 @@ pub mod prelude {
     pub use crate::geometry::kernel::Kernel;
     pub use crate::geometry::points::PointSet;
     pub use crate::hmatrix::{HMatrix, MatvecWorkspace};
+    pub use crate::serve::{
+        DynamicBatcher, OperatorHandle, OperatorRegistry, ServeConfig, ServeError, Ticket,
+    };
+    pub use crate::solver::block_bicgstab::{block_bicgstab_solve, BlockBiCgStabOptions};
     pub use crate::solver::block_cg::{
         block_cg_solve, BlockCgOptions, BlockLinOp, RegularizedHBlockOp,
     };

@@ -141,8 +141,14 @@ fn cmd_phases(args: &Args) -> anyhow::Result<()> {
     let x = rng.vector(cfg.n);
     let _ = h.matvec(&x)?;
     println!("phase breakdown (cumulative):");
-    for (phase, total, count) in hmx::metrics::RECORDER.snapshot() {
-        println!("  {phase:<28} {:>10.4} s  ({count}x)", total.as_secs_f64());
+    for s in hmx::metrics::RECORDER.stats() {
+        println!(
+            "  {:<28} {:>10.4} s  ({}x, mean {:.6} s)",
+            s.phase,
+            s.total.as_secs_f64(),
+            s.count,
+            s.mean.as_secs_f64()
+        );
     }
     let (launches, threads) = hmx::metrics::launch_stats();
     println!("  kernel launches: {launches}, virtual threads: {threads}");

@@ -57,15 +57,53 @@ impl Recorder {
     }
 
     /// Snapshot of `(phase, total, count)` sorted by total descending.
+    /// Prefer [`Recorder::stats`], which correlates counts and mean
+    /// durations per phase instead of leaving that to the caller.
     pub fn snapshot(&self) -> Vec<(String, Duration, u64)> {
+        self.stats().into_iter().map(|s| (s.phase, s.total, s.count)).collect()
+    }
+
+    /// Aggregate view with total, call count and mean duration together
+    /// per phase, sorted by total descending.
+    pub fn stats(&self) -> Vec<PhaseStats> {
         let m = self.phases.lock().unwrap();
-        let mut v: Vec<_> = m.iter().map(|(k, &(d, c))| (k.clone(), d, c)).collect();
-        v.sort_by(|a, b| b.1.cmp(&a.1));
+        let mut v: Vec<PhaseStats> =
+            m.iter().map(|(k, &(d, c))| PhaseStats::new(k.clone(), d, c)).collect();
+        v.sort_by(|a, b| b.total.cmp(&a.total));
         v
+    }
+
+    /// Stats for a single phase, if it has been recorded.
+    pub fn stat(&self, phase: &str) -> Option<PhaseStats> {
+        let m = self.phases.lock().unwrap();
+        m.get(phase).map(|&(d, c)| PhaseStats::new(phase.to_string(), d, c))
     }
 
     pub fn reset(&self) {
         self.phases.lock().unwrap().clear();
+    }
+}
+
+/// One phase's aggregate: total, call count and mean duration correlated
+/// in a single record (previously callers had to divide totals by counts
+/// by hand). The serving batcher reports its wait/apply latencies through
+/// these.
+#[derive(Clone, Debug)]
+pub struct PhaseStats {
+    pub phase: String,
+    pub total: Duration,
+    pub count: u64,
+    pub mean: Duration,
+}
+
+impl PhaseStats {
+    fn new(phase: String, total: Duration, count: u64) -> Self {
+        let mean = if count == 0 {
+            Duration::ZERO
+        } else {
+            Duration::from_nanos((total.as_nanos() / count as u128) as u64)
+        };
+        PhaseStats { phase, total, count, mean }
     }
 }
 
@@ -146,6 +184,25 @@ mod tests {
         let snap = r.snapshot();
         assert_eq!(snap.len(), 1);
         assert_eq!(snap[0].2, 2);
+    }
+
+    #[test]
+    fn stats_correlate_counts_and_means() {
+        let r = Recorder::new();
+        r.add("apply", Duration::from_millis(6));
+        r.add("apply", Duration::from_millis(2));
+        r.add("wait", Duration::from_millis(1));
+        let stats = r.stats();
+        assert_eq!(stats.len(), 2);
+        // sorted by total descending
+        assert_eq!(stats[0].phase, "apply");
+        assert_eq!(stats[0].count, 2);
+        assert_eq!(stats[0].total, Duration::from_millis(8));
+        assert_eq!(stats[0].mean, Duration::from_millis(4));
+        let w = r.stat("wait").unwrap();
+        assert_eq!(w.count, 1);
+        assert_eq!(w.mean, Duration::from_millis(1));
+        assert!(r.stat("missing").is_none());
     }
 
     #[test]

@@ -1,0 +1,537 @@
+//! The dynamic batcher: coalesces concurrent mat-vec submissions into
+//! multi-RHS blocks executed on a dedicated single-threaded executor.
+//!
+//! Engines are deliberately not `Send`/`Sync` (see
+//! [`crate::coordinator::BatchEngine`]), so the operator is *built on* the
+//! executor thread and never crosses it; clients only exchange vectors
+//! over channels. Batching policy: a batch opens when the first queued
+//! request is picked up, greedily absorbs the backlog, then waits for
+//! stragglers until the oldest request has aged [`ServeConfig::max_wait`]
+//! since submission (a backlogged batch flushes immediately) or
+//! [`ServeConfig::max_batch`] requests have gathered — the flush then runs
+//! ONE batched apply (for the H-operator:
+//! [`crate::hmatrix::HMatrix::matmat_with`] through a warm
+//! [`crate::hmatrix::MatvecWorkspace`]) and scatters per-column results
+//! back to the awaiting callers.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use super::telemetry::BatcherStats;
+use super::{ServeConfig, ServeError};
+use crate::metrics::RECORDER;
+
+/// What a client gets back: its result column or a serving error.
+type Response = Result<Vec<f64>, ServeError>;
+
+/// One queued submission.
+struct Request {
+    x: Vec<f64>,
+    submitted: Instant,
+    resp: mpsc::Sender<Response>,
+    stats: Arc<BatcherStats>,
+    /// Whether the executor took this request off the queue (and thus
+    /// already decremented the depth gauge).
+    dequeued: bool,
+}
+
+impl Drop for Request {
+    fn drop(&mut self) {
+        // A request can be destroyed without ever being dequeued: it was
+        // enqueued in the instant between the shutdown drain seeing an
+        // empty queue and the executor dropping the receiver. The caller
+        // gets `Shutdown` from its dead response channel either way; this
+        // keeps the depth gauge from reading >0 forever afterwards.
+        if !self.dequeued {
+            self.stats.record_dequeue();
+        }
+    }
+}
+
+/// Take a request off the queue: depth gauge down, drop-guard disarmed.
+fn dequeue(mut req: Request, stats: &BatcherStats) -> Request {
+    stats.record_dequeue();
+    req.dequeued = true;
+    req
+}
+
+/// How long the idle executor sleeps between shutdown-flag checks.
+const IDLE_POLL: Duration = Duration::from_millis(20);
+
+/// A pending response; redeem with [`Ticket::wait`].
+#[derive(Debug)]
+pub struct Ticket {
+    rx: mpsc::Receiver<Response>,
+}
+
+impl Ticket {
+    /// Block until the batch containing this request has been applied.
+    pub fn wait(self) -> Response {
+        self.rx.recv().unwrap_or(Err(ServeError::Shutdown))
+    }
+}
+
+/// Cheaply cloneable submission endpoint; hand one to every client
+/// thread. All clones feed the same executor.
+#[derive(Clone)]
+pub struct BatcherClient {
+    tx: mpsc::SyncSender<Request>,
+    n: usize,
+    stats: Arc<BatcherStats>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl BatcherClient {
+    /// Operator dimension: submissions must be length-`n` vectors.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn stats(&self) -> Arc<BatcherStats> {
+        Arc::clone(&self.stats)
+    }
+
+    /// Enqueue a request without blocking on the result. Sheds with
+    /// [`ServeError::Overloaded`] when the bounded queue is full.
+    pub fn submit(&self, x: Vec<f64>) -> Result<Ticket, ServeError> {
+        if x.len() != self.n {
+            return Err(ServeError::BadRequest(format!(
+                "expected a vector of length {}, got {}",
+                self.n,
+                x.len()
+            )));
+        }
+        // refuse new work once shutdown begins — otherwise a client that
+        // keeps submitting can feed the drain loop indefinitely and stall
+        // the executor join in `DynamicBatcher::drop`
+        if self.shutdown.load(Ordering::Acquire) {
+            return Err(ServeError::Shutdown);
+        }
+        let (rtx, rrx) = mpsc::channel();
+        let req = Request {
+            x,
+            submitted: Instant::now(),
+            resp: rtx,
+            stats: Arc::clone(&self.stats),
+            dequeued: false,
+        };
+        // submit is recorded first so the executor's dequeue decrement can
+        // never observe the gauge before the increment
+        let depth = self.stats.record_submit();
+        match self.tx.try_send(req) {
+            Ok(()) => {
+                self.stats.record_enqueued(depth);
+                Ok(Ticket { rx: rrx })
+            }
+            Err(mpsc::TrySendError::Full(mut req)) => {
+                req.dequeued = true; // record_unsubmit rolls the gauge back
+                self.stats.record_unsubmit(true);
+                Err(ServeError::Overloaded)
+            }
+            Err(mpsc::TrySendError::Disconnected(mut req)) => {
+                req.dequeued = true;
+                self.stats.record_unsubmit(false);
+                Err(ServeError::Shutdown)
+            }
+        }
+    }
+
+    /// Submit and block for the result — `y = A x`.
+    pub fn matvec(&self, x: &[f64]) -> Response {
+        self.submit(x.to_vec())?.wait()
+    }
+
+    /// KRR-predict spelling of [`BatcherClient::matvec`]: fitted values
+    /// `ŷ = A α` for a weight vector `α`.
+    pub fn predict(&self, weights: &[f64]) -> Response {
+        self.matvec(weights)
+    }
+}
+
+/// Owns one executor thread and its operator. Dropping the batcher shuts
+/// the executor down gracefully: the queued backlog is still served, then
+/// the thread exits and later submissions fail with
+/// [`ServeError::Shutdown`].
+pub struct DynamicBatcher {
+    client: BatcherClient,
+    shutdown: Arc<AtomicBool>,
+    executor: Option<thread::JoinHandle<()>>,
+}
+
+impl DynamicBatcher {
+    /// Spawn an executor for an `n`-dimensional operator. `build` runs ON
+    /// the executor thread and returns the batched apply closure
+    /// `(x, nrhs) -> y` (column-major `n × nrhs` in and out) — this is how
+    /// a non-`Send` operator (engine, workspace) gets constructed in place.
+    /// Blocks until the build finishes; a build error is returned here and
+    /// the thread is reaped.
+    pub fn spawn<B, A>(n: usize, cfg: ServeConfig, build: B) -> Result<Self, ServeError>
+    where
+        B: FnOnce() -> crate::Result<A> + Send + 'static,
+        A: FnMut(&[f64], usize) -> crate::Result<Vec<f64>> + 'static,
+    {
+        cfg.validate()?;
+        if n == 0 {
+            return Err(ServeError::BadRequest("operator dimension must be positive".into()));
+        }
+        let (tx, rx) = mpsc::sync_channel(cfg.queue_capacity);
+        let stats = Arc::new(BatcherStats::new());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let (btx, brx) = mpsc::channel::<Result<(), ServeError>>();
+        let stats_ex = Arc::clone(&stats);
+        let shutdown_ex = Arc::clone(&shutdown);
+        let executor = thread::Builder::new()
+            .name("hmx-serve-executor".to_string())
+            .spawn(move || {
+                let mut apply = match build() {
+                    Ok(a) => {
+                        let _ = btx.send(Ok(()));
+                        a
+                    }
+                    Err(e) => {
+                        let _ = btx.send(Err(ServeError::Build(e.to_string())));
+                        return;
+                    }
+                };
+                run_executor(&rx, n, &cfg, &stats_ex, &shutdown_ex, &mut apply);
+            })
+            .map_err(|e| ServeError::Build(format!("failed to spawn executor thread: {e}")))?;
+        let built = brx
+            .recv()
+            .unwrap_or_else(|_| Err(ServeError::Build("executor thread died".into())));
+        if let Err(e) = built {
+            let _ = executor.join();
+            return Err(e);
+        }
+        Ok(DynamicBatcher {
+            client: BatcherClient { tx, n, stats, shutdown: Arc::clone(&shutdown) },
+            shutdown,
+            executor: Some(executor),
+        })
+    }
+
+    /// A new submission endpoint for a client thread.
+    pub fn client(&self) -> BatcherClient {
+        self.client.clone()
+    }
+
+    pub fn n(&self) -> usize {
+        self.client.n
+    }
+
+    pub fn stats(&self) -> Arc<BatcherStats> {
+        self.client.stats()
+    }
+
+    /// Convenience: submit-and-wait from the owning thread.
+    pub fn matvec(&self, x: &[f64]) -> Response {
+        self.client.matvec(x)
+    }
+}
+
+impl Drop for DynamicBatcher {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Release);
+        if let Some(h) = self.executor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Executor main loop: pick up the oldest request, coalesce, flush.
+fn run_executor<A>(
+    rx: &mpsc::Receiver<Request>,
+    n: usize,
+    cfg: &ServeConfig,
+    stats: &BatcherStats,
+    shutdown: &AtomicBool,
+    apply: &mut A,
+) where
+    A: FnMut(&[f64], usize) -> crate::Result<Vec<f64>>,
+{
+    let mut xbuf: Vec<f64> = Vec::new();
+    loop {
+        if shutdown.load(Ordering::Acquire) {
+            // graceful drain: serve the backlog in full batches, then exit
+            while let Ok(first) = rx.try_recv() {
+                let mut batch = vec![dequeue(first, stats)];
+                drain_backlog(rx, &mut batch, cfg.max_batch, stats);
+                process_batch(&mut xbuf, batch, n, stats, apply);
+            }
+            return;
+        }
+        let first = match rx.recv_timeout(IDLE_POLL) {
+            Ok(r) => r,
+            Err(mpsc::RecvTimeoutError::Timeout) => continue,
+            Err(mpsc::RecvTimeoutError::Disconnected) => return,
+        };
+        let mut batch = Vec::with_capacity(cfg.max_batch.min(64));
+        batch.push(dequeue(first, stats));
+        // greedily absorb whatever is already queued...
+        drain_backlog(rx, &mut batch, cfg.max_batch, stats);
+        // ...then wait for stragglers until the flush deadline, measured
+        // from the OLDEST request's submit time: a request that already
+        // aged in the queue (busy executor) is never delayed another full
+        // window, so submit → flush-start is bounded by max_wait plus the
+        // in-flight apply
+        // checked_add: a huge max_wait (Duration::MAX = "no deadline,
+        // flush on occupancy or shutdown only") must not overflow Instant
+        let deadline = batch[0].submitted.checked_add(cfg.max_wait);
+        while batch.len() < cfg.max_batch {
+            let now = Instant::now();
+            // the wait is chunked at IDLE_POLL so a large max_wait cannot
+            // stall shutdown: on the flag the partial batch flushes now
+            // and the outer loop enters the drain
+            if deadline.is_some_and(|d| now >= d) || shutdown.load(Ordering::Acquire) {
+                break;
+            }
+            let wait = deadline.map_or(IDLE_POLL, |d| (d - now).min(IDLE_POLL));
+            match rx.recv_timeout(wait) {
+                Ok(r) => batch.push(dequeue(r, stats)),
+                Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        process_batch(&mut xbuf, batch, n, stats, apply);
+    }
+}
+
+fn drain_backlog(
+    rx: &mpsc::Receiver<Request>,
+    batch: &mut Vec<Request>,
+    max_batch: usize,
+    stats: &BatcherStats,
+) {
+    while batch.len() < max_batch {
+        match rx.try_recv() {
+            Ok(r) => batch.push(dequeue(r, stats)),
+            Err(_) => break,
+        }
+    }
+}
+
+/// Flush one batch: assemble the column-major block, run the batched
+/// apply, scatter columns back to their callers.
+fn process_batch<A>(
+    xbuf: &mut Vec<f64>,
+    batch: Vec<Request>,
+    n: usize,
+    stats: &BatcherStats,
+    apply: &mut A,
+) where
+    A: FnMut(&[f64], usize) -> crate::Result<Vec<f64>>,
+{
+    let nrhs = batch.len();
+    let picked = Instant::now();
+    for req in &batch {
+        let wait = picked.duration_since(req.submitted);
+        stats.record_wait(wait);
+        RECORDER.add("serve.wait", wait);
+    }
+    xbuf.clear();
+    xbuf.reserve(n * nrhs);
+    for req in &batch {
+        xbuf.extend_from_slice(&req.x);
+    }
+    let t0 = Instant::now();
+    let out = apply(&xbuf[..], nrhs);
+    let apply_time = t0.elapsed();
+    stats.record_batch(nrhs, apply_time);
+    RECORDER.add("serve.apply", apply_time);
+    match out {
+        // the shape check is a hard runtime guard, not a debug_assert:
+        // spawn() accepts arbitrary user closures, and a short block must
+        // fail the batch, not panic the executor (which would brick the
+        // operator) or silently mis-scatter columns
+        Ok(y) if y.len() == n * nrhs => {
+            for (c, req) in batch.into_iter().enumerate() {
+                let _ = req.resp.send(Ok(y[c * n..(c + 1) * n].to_vec()));
+            }
+        }
+        Ok(y) => {
+            let msg = format!(
+                "apply returned {} values for an n x nrhs = {n} x {nrhs} block",
+                y.len()
+            );
+            for req in batch {
+                let _ = req.resp.send(Err(ServeError::Apply(msg.clone())));
+            }
+        }
+        Err(e) => {
+            let msg = e.to_string();
+            for req in batch {
+                let _ = req.resp.send(Err(ServeError::Apply(msg.clone())));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A deterministic diagonal test operator: y_i = (i + 1) · x_i,
+    /// applied column by column like any batched engine would.
+    fn diag_apply(x: &[f64], nrhs: usize, n: usize) -> Vec<f64> {
+        let mut y = vec![0.0; n * nrhs];
+        for c in 0..nrhs {
+            for i in 0..n {
+                y[c * n + i] = (i + 1) as f64 * x[c * n + i];
+            }
+        }
+        y
+    }
+
+    fn diag_batcher(n: usize, cfg: ServeConfig) -> DynamicBatcher {
+        DynamicBatcher::spawn(n, cfg, move || {
+            Ok(move |x: &[f64], nrhs: usize| Ok(diag_apply(x, nrhs, n)))
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn deadline_flush_serves_a_lone_request() {
+        let n = 8;
+        let cfg = ServeConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(5),
+            queue_capacity: 16,
+        };
+        let b = diag_batcher(n, cfg);
+        let x: Vec<f64> = (0..n).map(|i| i as f64 + 1.0).collect();
+        let y = b.matvec(&x).unwrap();
+        for i in 0..n {
+            assert_eq!(y[i], (i + 1) as f64 * x[i]);
+        }
+        let stats = b.stats();
+        assert_eq!(stats.batches(), 1, "a lone request must flush on the deadline");
+        assert_eq!(stats.requests(), 1);
+        assert!((stats.mean_occupancy() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wrong_length_is_rejected_before_queueing() {
+        let b = diag_batcher(8, ServeConfig::default());
+        let err = b.client().matvec(&[1.0; 3]).unwrap_err();
+        assert!(matches!(err, ServeError::BadRequest(_)), "{err:?}");
+        assert_eq!(b.stats().requests(), 0);
+    }
+
+    #[test]
+    fn overflow_sheds_with_error_instead_of_blocking() {
+        let n = 4;
+        // the apply blocks until the test releases it, so the queue state
+        // is fully deterministic while the executor is busy
+        let (started_tx, started_rx) = mpsc::channel::<()>();
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        let cfg = ServeConfig {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+            queue_capacity: 2,
+        };
+        let b = DynamicBatcher::spawn(n, cfg, move || {
+            Ok(move |x: &[f64], nrhs: usize| {
+                let _ = started_tx.send(());
+                let _ = release_rx.recv();
+                Ok(diag_apply(x, nrhs, n))
+            })
+        })
+        .unwrap();
+        let client = b.client();
+        let t1 = client.submit(vec![1.0; n]).unwrap();
+        // executor is now inside the (blocked) apply for t1
+        started_rx.recv().unwrap();
+        let t2 = client.submit(vec![2.0; n]).unwrap();
+        let t3 = client.submit(vec![3.0; n]).unwrap();
+        // queue (capacity 2) holds t2 and t3 — the next submit is shed
+        assert_eq!(client.submit(vec![4.0; n]).unwrap_err(), ServeError::Overloaded);
+        assert_eq!(client.stats().shed(), 1);
+        assert_eq!(client.stats().queue_depth(), 2);
+        // release all applies: every accepted request still completes
+        drop(release_tx);
+        for (t, scale) in [(t1, 1.0), (t2, 2.0), (t3, 3.0)] {
+            let y = t.wait().unwrap();
+            assert_eq!(y[2], 3.0 * scale);
+        }
+        assert_eq!(client.stats().shed(), 1);
+    }
+
+    #[test]
+    fn concurrent_clients_get_their_own_columns_back() {
+        let n = 16;
+        let cfg = ServeConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(4),
+            queue_capacity: 256,
+        };
+        let b = diag_batcher(n, cfg);
+        let threads = 4;
+        let per_thread = 8;
+        let barrier = Arc::new(std::sync::Barrier::new(threads));
+        let mut joins = Vec::new();
+        for t in 0..threads {
+            let client = b.client();
+            let barrier = Arc::clone(&barrier);
+            joins.push(thread::spawn(move || {
+                barrier.wait();
+                for r in 0..per_thread {
+                    let x: Vec<f64> =
+                        (0..n).map(|i| (t * per_thread + r) as f64 + i as f64 * 0.5).collect();
+                    let y = client.matvec(&x).unwrap();
+                    let want = diag_apply(&x, 1, n);
+                    assert_eq!(y, want, "thread {t} request {r} got someone else's column");
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let stats = b.stats();
+        assert_eq!(stats.requests(), (threads * per_thread) as u64);
+        assert_eq!(stats.shed(), 0);
+    }
+
+    #[test]
+    fn shutdown_drains_backlog_then_rejects_new_work() {
+        let n = 4;
+        let cfg = ServeConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            queue_capacity: 16,
+        };
+        let b = diag_batcher(n, cfg);
+        let client = b.client();
+        let pending = client.submit(vec![1.0; n]).unwrap();
+        drop(b); // graceful: queued work is still served
+        let y = pending.wait().unwrap();
+        assert_eq!(y[1], 2.0);
+        let err = client.matvec(&[1.0; 4]).unwrap_err();
+        assert_eq!(err, ServeError::Shutdown);
+    }
+
+    #[test]
+    fn apply_errors_propagate_to_every_caller() {
+        let n = 4;
+        let b = DynamicBatcher::spawn(n, ServeConfig::default(), move || {
+            Ok(move |_x: &[f64], _nrhs: usize| {
+                Err(crate::Error::Numerics("synthetic failure".into()))
+            })
+        })
+        .unwrap();
+        let err = b.matvec(&[1.0; 4]).unwrap_err();
+        assert!(matches!(err, ServeError::Apply(m) if m.contains("synthetic failure")));
+    }
+
+    #[test]
+    fn build_failure_is_returned_from_spawn() {
+        let res = DynamicBatcher::spawn(4, ServeConfig::default(), || {
+            Err::<fn(&[f64], usize) -> crate::Result<Vec<f64>>, _>(crate::Error::Config(
+                "nope".into(),
+            ))
+        });
+        assert!(matches!(res, Err(ServeError::Build(m)) if m.contains("nope")));
+    }
+}

@@ -1,0 +1,107 @@
+//! Multi-tenant serving: dynamic batching of concurrent requests into
+//! multi-RHS batched applies.
+//!
+//! The paper's core pattern — many small linear-algebra operations fused
+//! into few large launches (§5.4) — is exactly what a serving front-end
+//! needs: many clients issuing independent mat-vec / KRR-predict requests
+//! against the same operator are coalesced into one multi-RHS
+//! [`crate::hmatrix::HMatrix::matmat_with`] pass, amortizing kernel
+//! assembly and factor traffic the way the `fig18_multirhs` bench measures
+//! per RHS (cf. Harbrecht & Zaspel 2018 on block solves, Börm et al. 2019
+//! on separating task scheduling from batched execution).
+//!
+//! Architecture: [`crate::coordinator::BatchEngine`] is deliberately not
+//! `Send`/`Sync` (the XLA engine holds an `Rc`-backed PJRT client), so
+//! each operator lives on its own dedicated executor thread, built there
+//! and never moved. Clients talk to it over a *bounded* channel:
+//!
+//! * [`DynamicBatcher`] — owns the executor thread; coalesces queued
+//!   submissions into column-major multi-RHS blocks, flushing when
+//!   [`ServeConfig::max_batch`] requests have gathered or the oldest has
+//!   aged [`ServeConfig::max_wait`] since submission; scatters per-column
+//!   results back to the awaiting callers.
+//! * [`OperatorRegistry`] — build-once/get-many table of operators keyed
+//!   by tenant/model id; each entry holds one batcher plus a warm
+//!   per-operator [`crate::hmatrix::MatvecWorkspace`], so the apply's
+//!   gather/accumulate scratch is allocation-free after warm-up (result
+//!   blocks are still copied out per flush — see ROADMAP follow-ups).
+//! * Backpressure — the submission queue is bounded
+//!   ([`ServeConfig::queue_capacity`]); overflow is shed immediately with
+//!   [`ServeError::Overloaded`] instead of blocking or deadlocking.
+//! * Telemetry — per-request wait and per-batch apply latency (p50/p99),
+//!   batch occupancy, queue depth and shed counts via [`BatcherStats`],
+//!   mirrored into the global [`crate::metrics::RECORDER`] under the
+//!   `serve.wait` / `serve.apply` phases.
+
+pub mod batcher;
+pub mod registry;
+pub mod telemetry;
+
+pub use batcher::{BatcherClient, DynamicBatcher, Ticket};
+pub use registry::{OperatorHandle, OperatorMeta, OperatorRegistry};
+pub use telemetry::{BatcherStats, ServeSnapshot};
+
+use std::time::Duration;
+
+/// Dynamic-batching policy for one served operator.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Flush a batch once this many requests have been coalesced.
+    pub max_batch: usize,
+    /// Flush whatever has gathered once the OLDEST request in the batch
+    /// has been waiting this long since submission (on an idle executor a
+    /// lone request is served after at most this delay; a backlogged
+    /// batch whose head already aged past it flushes immediately).
+    pub max_wait: Duration,
+    /// Bounded submission-queue depth; submissions beyond it are shed
+    /// with [`ServeError::Overloaded`].
+    pub queue_capacity: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(2),
+            queue_capacity: 1024,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn validate(&self) -> Result<(), ServeError> {
+        if self.max_batch == 0 {
+            return Err(ServeError::BadRequest("max_batch must be at least 1".into()));
+        }
+        if self.queue_capacity == 0 {
+            return Err(ServeError::BadRequest("queue_capacity must be at least 1".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Errors surfaced to serving clients.
+#[derive(Clone, Debug, PartialEq, Eq, thiserror::Error)]
+pub enum ServeError {
+    /// The bounded submission queue is full; the request was shed so the
+    /// caller can retry/back off (load shedding, not blocking).
+    #[error("serving queue full: request shed (backpressure)")]
+    Overloaded,
+    /// The operator's executor has shut down (registry entry removed or
+    /// batcher dropped).
+    #[error("operator is shutting down")]
+    Shutdown,
+    /// Malformed submission (e.g. wrong vector length).
+    #[error("bad request: {0}")]
+    BadRequest(String),
+    /// No operator registered under this id.
+    #[error("unknown operator id: {0}")]
+    UnknownOperator(String),
+    /// Operator construction failed on the executor thread.
+    #[error("operator build failed: {0}")]
+    Build(String),
+    /// The batched apply itself failed; every request in the batch
+    /// receives this error.
+    #[error("batched apply failed: {0}")]
+    Apply(String),
+}

@@ -1,0 +1,337 @@
+//! Serving telemetry: batch occupancy, queue depth, shed counts and
+//! wait/apply latency quantiles.
+//!
+//! Durations are additionally mirrored into the global
+//! [`crate::metrics::RECORDER`] (phases `serve.wait` / `serve.apply`) so
+//! the `phases` CLI subcommand and the benches see serving next to the
+//! kernel phases; the per-batcher [`BatcherStats`] adds what a flat
+//! phase accumulator cannot: occupancy ratios and p50/p99 latencies.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Fixed-capacity ring of latency samples (microseconds) supporting
+/// quantile queries over the most recent `cap` observations.
+pub struct LatencyWindow {
+    inner: Mutex<Ring>,
+    cap: usize,
+}
+
+struct Ring {
+    buf: Vec<u64>,
+    head: usize,
+}
+
+impl LatencyWindow {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "latency window capacity must be positive");
+        LatencyWindow { inner: Mutex::new(Ring { buf: Vec::new(), head: 0 }), cap }
+    }
+
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros().min(u64::MAX as u128) as u64;
+        let mut r = self.inner.lock().unwrap();
+        if r.buf.len() < self.cap {
+            r.buf.push(us);
+        } else {
+            let h = r.head;
+            r.buf[h] = us;
+            r.head = (h + 1) % self.cap;
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.inner.lock().unwrap().buf.len()
+    }
+
+    /// Quantile over the retained samples (nearest-rank); zero if empty.
+    pub fn quantile(&self, q: f64) -> Duration {
+        self.quantiles(q, q).0
+    }
+
+    /// Two quantiles from ONE buffer copy and sort. The lock is held only
+    /// for the copy, so a stats poll never blocks the executor's `record`
+    /// on the sort.
+    pub fn quantiles(&self, qa: f64, qb: f64) -> (Duration, Duration) {
+        let mut v = self.inner.lock().unwrap().buf.clone();
+        if v.is_empty() {
+            return (Duration::ZERO, Duration::ZERO);
+        }
+        v.sort_unstable();
+        let pick = |q: f64| {
+            let idx = ((v.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+            Duration::from_micros(v[idx])
+        };
+        (pick(qa), pick(qb))
+    }
+
+    pub fn clear(&self) {
+        let mut r = self.inner.lock().unwrap();
+        r.buf.clear();
+        r.head = 0;
+    }
+}
+
+/// Counters for one [`crate::serve::DynamicBatcher`]. All methods are
+/// thread-safe; clients update the submit side while the executor thread
+/// updates the batch side.
+pub struct BatcherStats {
+    /// Requests accepted into the queue.
+    requests: AtomicU64,
+    /// Requests shed on queue overflow.
+    shed: AtomicU64,
+    /// Batches flushed.
+    batches: AtomicU64,
+    /// Sum of flushed-batch occupancies (= requests served).
+    batched_requests: AtomicU64,
+    /// Current queued-but-not-yet-dequeued request count.
+    queue_depth: AtomicU64,
+    /// High-water mark of `queue_depth`.
+    max_queue_depth: AtomicU64,
+    /// Submit → batch-pickup latency per request.
+    wait: LatencyWindow,
+    /// Batched-apply latency per batch.
+    apply: LatencyWindow,
+}
+
+/// Retained latency samples per window (per batcher; ~0.5 MiB ceiling).
+const WINDOW_CAP: usize = 1 << 15;
+
+impl BatcherStats {
+    pub fn new() -> Self {
+        BatcherStats {
+            requests: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_requests: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+            max_queue_depth: AtomicU64::new(0),
+            wait: LatencyWindow::new(WINDOW_CAP),
+            apply: LatencyWindow::new(WINDOW_CAP),
+        }
+    }
+
+    /// Client side: called *before* the queue send so the depth gauge can
+    /// never underflow; on a failed send call [`BatcherStats::record_unsubmit`],
+    /// on a successful one [`BatcherStats::record_enqueued`] with the depth
+    /// returned here. Returns the post-increment depth.
+    pub(crate) fn record_submit(&self) -> u64 {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.queue_depth.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Client side: the send succeeded — fold this request's depth into
+    /// the high-water mark. Shed submissions never reach this, so this
+    /// submitter's own rejected attempts cannot move the mark; another
+    /// thread's pre-send increment can still be transiently counted, so
+    /// under concurrent shedding the mark is an upper bound, not exact.
+    pub(crate) fn record_enqueued(&self, depth: u64) {
+        self.max_queue_depth.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    /// Client side: roll back [`BatcherStats::record_submit`] after a
+    /// failed send (counts the shed when the queue was full).
+    pub(crate) fn record_unsubmit(&self, was_full: bool) {
+        saturating_dec(&self.requests);
+        saturating_dec(&self.queue_depth);
+        if was_full {
+            self.shed.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Executor side: one request taken off the queue.
+    pub(crate) fn record_dequeue(&self) {
+        saturating_dec(&self.queue_depth);
+    }
+
+    /// Executor side: per-request wait (submit → batch pickup).
+    pub(crate) fn record_wait(&self, d: Duration) {
+        self.wait.record(d);
+    }
+
+    /// Executor side: one flushed batch of `occupancy` requests applied in
+    /// `apply_time`.
+    pub(crate) fn record_batch(&self, occupancy: usize, apply_time: Duration) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests.fetch_add(occupancy as u64, Ordering::Relaxed);
+        self.apply.record(apply_time);
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    pub fn shed(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    /// Mean requests per flushed batch — > 1 iff coalescing is happening.
+    pub fn mean_occupancy(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    pub fn queue_depth(&self) -> u64 {
+        self.queue_depth.load(Ordering::Relaxed)
+    }
+
+    pub fn max_queue_depth(&self) -> u64 {
+        self.max_queue_depth.load(Ordering::Relaxed)
+    }
+
+    pub fn wait_quantile(&self, q: f64) -> Duration {
+        self.wait.quantile(q)
+    }
+
+    pub fn apply_quantile(&self, q: f64) -> Duration {
+        self.apply.quantile(q)
+    }
+
+    /// Point-in-time copy of every counter (what the example and the
+    /// `fig_serve` bench print). One copy + sort per latency window.
+    pub fn snapshot(&self) -> ServeSnapshot {
+        let (wait_p50, wait_p99) = self.wait.quantiles(0.50, 0.99);
+        let (apply_p50, apply_p99) = self.apply.quantiles(0.50, 0.99);
+        ServeSnapshot {
+            requests: self.requests(),
+            shed: self.shed(),
+            batches: self.batches(),
+            mean_occupancy: self.mean_occupancy(),
+            queue_depth: self.queue_depth(),
+            max_queue_depth: self.max_queue_depth(),
+            wait_p50,
+            wait_p99,
+            apply_p50,
+            apply_p99,
+        }
+    }
+
+    /// Zero every counter and drop retained samples (bench sweeps reuse
+    /// one warm operator across load levels). A reset racing in-flight
+    /// requests leaves the gauges approximate for those requests but can
+    /// never wrap them below zero (decrements saturate).
+    pub fn reset(&self) {
+        self.requests.store(0, Ordering::Relaxed);
+        self.shed.store(0, Ordering::Relaxed);
+        self.batches.store(0, Ordering::Relaxed);
+        self.batched_requests.store(0, Ordering::Relaxed);
+        self.queue_depth.store(0, Ordering::Relaxed);
+        self.max_queue_depth.store(0, Ordering::Relaxed);
+        self.wait.clear();
+        self.apply.clear();
+    }
+}
+
+impl Default for BatcherStats {
+    fn default() -> Self {
+        BatcherStats::new()
+    }
+}
+
+/// Decrement a gauge, saturating at zero: a [`BatcherStats::reset`] racing
+/// in-flight requests must corrupt at most the current reading, never wrap
+/// the counter to `u64::MAX`.
+fn saturating_dec(gauge: &AtomicU64) {
+    let _ = gauge.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1));
+}
+
+/// A point-in-time view of one batcher's counters.
+#[derive(Clone, Debug)]
+pub struct ServeSnapshot {
+    pub requests: u64,
+    pub shed: u64,
+    pub batches: u64,
+    pub mean_occupancy: f64,
+    pub queue_depth: u64,
+    pub max_queue_depth: u64,
+    pub wait_p50: Duration,
+    pub wait_p99: Duration,
+    pub apply_p50: Duration,
+    pub apply_p99: Duration,
+}
+
+impl std::fmt::Display for ServeSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "requests={} shed={} batches={} occupancy={:.2} max_queue={} \
+             wait p50/p99 {:.3}/{:.3} ms, apply p50/p99 {:.3}/{:.3} ms",
+            self.requests,
+            self.shed,
+            self.batches,
+            self.mean_occupancy,
+            self.max_queue_depth,
+            self.wait_p50.as_secs_f64() * 1e3,
+            self.wait_p99.as_secs_f64() * 1e3,
+            self.apply_p50.as_secs_f64() * 1e3,
+            self.apply_p99.as_secs_f64() * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_quantiles_over_recent_samples() {
+        let w = LatencyWindow::new(4);
+        assert_eq!(w.quantile(0.5), Duration::ZERO);
+        for us in [10u64, 20, 30, 40] {
+            w.record(Duration::from_micros(us));
+        }
+        assert_eq!(w.count(), 4);
+        assert_eq!(w.quantile(0.0), Duration::from_micros(10));
+        assert_eq!(w.quantile(1.0), Duration::from_micros(40));
+        // overwrite the oldest two samples (ring behavior)
+        w.record(Duration::from_micros(100));
+        w.record(Duration::from_micros(200));
+        assert_eq!(w.count(), 4);
+        assert_eq!(w.quantile(1.0), Duration::from_micros(200));
+        assert_eq!(w.quantile(0.0), Duration::from_micros(30));
+        w.clear();
+        assert_eq!(w.count(), 0);
+    }
+
+    #[test]
+    fn occupancy_and_shed_accounting() {
+        let s = BatcherStats::new();
+        assert_eq!(s.mean_occupancy(), 0.0);
+        // 3 accepted, 1 shed (the shed one must not move the high-water mark)
+        for _ in 0..3 {
+            let d = s.record_submit();
+            s.record_enqueued(d);
+        }
+        s.record_submit();
+        s.record_unsubmit(true);
+        assert_eq!(s.requests(), 3);
+        assert_eq!(s.shed(), 1);
+        assert_eq!(s.queue_depth(), 3);
+        assert_eq!(s.max_queue_depth(), 3);
+        // one batch of 2, one of 1
+        for _ in 0..2 {
+            s.record_dequeue();
+        }
+        s.record_batch(2, Duration::from_micros(50));
+        s.record_dequeue();
+        s.record_batch(1, Duration::from_micros(30));
+        assert_eq!(s.batches(), 2);
+        assert!((s.mean_occupancy() - 1.5).abs() < 1e-12);
+        assert_eq!(s.queue_depth(), 0);
+        let snap = s.snapshot();
+        assert_eq!(snap.requests, 3);
+        assert!(snap.apply_p50 >= Duration::from_micros(30));
+        s.reset();
+        assert_eq!(s.requests(), 0);
+        assert_eq!(s.mean_occupancy(), 0.0);
+    }
+}

@@ -161,7 +161,8 @@ pub fn block_cg_solve(
 }
 
 /// Gram block G = AᵀB: `g[j * s + i] = a_i · b_j` over n-long columns.
-fn gram(a: &[f64], b: &[f64], n: usize, s: usize) -> Vec<f64> {
+/// Shared with [`super::block_bicgstab`].
+pub(crate) fn gram(a: &[f64], b: &[f64], n: usize, s: usize) -> Vec<f64> {
     let mut g = vec![0.0; s * s];
     for j in 0..s {
         let bj = &b[j * n..(j + 1) * n];
@@ -178,8 +179,8 @@ fn gram(a: &[f64], b: &[f64], n: usize, s: usize) -> Vec<f64> {
 }
 
 /// `Y += sign · P C` where C is s × s column-major: per output column j,
-/// y_j += sign · Σ_i p_i · C[i, j].
-fn block_axpy(y: &mut [f64], p: &[f64], c: &[f64], n: usize, s: usize, sign: f64) {
+/// y_j += sign · Σ_i p_i · C[i, j]. Shared with [`super::block_bicgstab`].
+pub(crate) fn block_axpy(y: &mut [f64], p: &[f64], c: &[f64], n: usize, s: usize, sign: f64) {
     for j in 0..s {
         for i in 0..s {
             let coef = sign * c[j * s + i];
@@ -196,8 +197,9 @@ fn block_axpy(y: &mut [f64], p: &[f64], c: &[f64], n: usize, s: usize, sign: f64
 
 /// Solve M X = B in place for an s × s column-major M and s × s column-major
 /// B (overwritten with X), by Gaussian elimination with partial pivoting.
-/// Returns false on a (numerically) singular pivot.
-fn solve_small(m: &mut [f64], b: &mut [f64], s: usize) -> bool {
+/// Returns false on a (numerically) singular pivot. Shared with
+/// [`super::block_bicgstab`].
+pub(crate) fn solve_small(m: &mut [f64], b: &mut [f64], s: usize) -> bool {
     // scale-aware singularity threshold
     let scale = m.iter().fold(0.0f64, |a, &v| a.max(v.abs())).max(f64::MIN_POSITIVE);
     for col in 0..s {
@@ -250,45 +252,8 @@ fn solve_small(m: &mut [f64], b: &mut [f64], s: usize) -> bool {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::solver::cg::{cg_solve, CgOptions, LinOp};
-
-    /// Dense SPD test operator, applied column by column.
-    struct DenseOp {
-        a: Vec<f64>,
-        n: usize,
-    }
-
-    impl DenseOp {
-        fn apply_col(&self, x: &[f64]) -> Vec<f64> {
-            (0..self.n)
-                .map(|i| (0..self.n).map(|j| self.a[i * self.n + j] * x[j]).sum())
-                .collect()
-        }
-    }
-
-    impl BlockLinOp for DenseOp {
-        fn apply_block(&self, x: &[f64], nrhs: usize) -> Vec<f64> {
-            let mut y = Vec::with_capacity(self.n * nrhs);
-            for c in 0..nrhs {
-                y.extend(self.apply_col(&x[c * self.n..(c + 1) * self.n]));
-            }
-            y
-        }
-
-        fn dim(&self) -> usize {
-            self.n
-        }
-    }
-
-    impl LinOp for DenseOp {
-        fn apply(&self, x: &[f64]) -> Vec<f64> {
-            self.apply_col(x)
-        }
-
-        fn dim(&self) -> usize {
-            self.n
-        }
-    }
+    use crate::solver::cg::{cg_solve, CgOptions};
+    use crate::solver::test_support::DenseOp;
 
     fn spd(n: usize, seed: u64) -> DenseOp {
         let mut rng = crate::util::prng::Xoshiro256::seed(seed);

@@ -1,8 +1,56 @@
 //! Iterative solvers on top of the fast H-mat-vec (the MPLA role in the
 //! paper's ecosystem): conjugate gradients for the SPD systems
-//! (A + σ²I)x = b of kernel ridge regression / GPR, and block CG
-//! ([`block_cg`]) for multi-RHS solves through the batched H-mat-mat.
+//! (A + σ²I)x = b of kernel ridge regression / GPR, block CG
+//! ([`block_cg`]) for multi-RHS solves through the batched H-mat-mat, and
+//! their non-SPD counterparts [`bicgstab`] / [`block_bicgstab`].
 
 pub mod bicgstab;
+pub mod block_bicgstab;
 pub mod block_cg;
 pub mod cg;
+
+/// Dense reference operator shared by the solver test modules (one
+/// definition, so an indexing-convention fix cannot drift between them).
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::block_cg::BlockLinOp;
+    use super::cg::LinOp;
+
+    /// Dense row-major test operator, applied column by column.
+    pub(crate) struct DenseOp {
+        pub(crate) a: Vec<f64>,
+        pub(crate) n: usize,
+    }
+
+    impl DenseOp {
+        pub(crate) fn apply_col(&self, x: &[f64]) -> Vec<f64> {
+            (0..self.n)
+                .map(|i| (0..self.n).map(|j| self.a[i * self.n + j] * x[j]).sum())
+                .collect()
+        }
+    }
+
+    impl BlockLinOp for DenseOp {
+        fn apply_block(&self, x: &[f64], nrhs: usize) -> Vec<f64> {
+            let mut y = Vec::with_capacity(self.n * nrhs);
+            for c in 0..nrhs {
+                y.extend(self.apply_col(&x[c * self.n..(c + 1) * self.n]));
+            }
+            y
+        }
+
+        fn dim(&self) -> usize {
+            self.n
+        }
+    }
+
+    impl LinOp for DenseOp {
+        fn apply(&self, x: &[f64]) -> Vec<f64> {
+            self.apply_col(x)
+        }
+
+        fn dim(&self) -> usize {
+            self.n
+        }
+    }
+}
