@@ -9,7 +9,12 @@
 //!   → per-output train RMSE, plus timing against q single-RHS CG solves.
 //!
 //! Run:  cargo run --release --example multi_rhs_krr -- \
-//!           [--n 8192] [--d 2] [--q 16] [--sigma2 1e-3]
+//!           [--n 8192] [--d 2] [--q 16] [--sigma2 1e-3] [--budget-mb MB]
+//!
+//! With `--budget-mb` the built operator is compressed to the byte budget
+//! (operator-wide waterfilled truncation + mixed-precision storage, see
+//! `hmx::compress`) BEFORE the fit: the whole multi-RHS solve then runs
+//! on the governed operator, and the achieved bytes/error are reported.
 
 use hmx::config::{HmxConfig, KernelKind};
 use hmx::prelude::*;
@@ -54,13 +59,39 @@ fn main() -> anyhow::Result<()> {
     }
 
     let t0 = Instant::now();
-    let h = HMatrix::build(train.clone(), &cfg)?;
+    let mut h = HMatrix::build(train.clone(), &cfg)?;
     println!(
         "built H-matrix: n={n} d={dim} engine={} compression={:.4} ({:.2?})",
         h.engine_name(),
         h.compression_ratio(),
         t0.elapsed()
     );
+
+    // --- optional memory budget: fit under it, report error + bytes ---
+    if args.has("budget-mb") && !h.is_precomputed() {
+        println!("--budget-mb ignored: NP mode holds no factor storage to budget");
+    } else if args.has("budget-mb") {
+        let budget = args.get("budget-mb", 16usize) * (1 << 20);
+        let mut rng_probe = Xoshiro256::seed(1234);
+        let xp = rng_probe.vector(n);
+        let y_ref = h.matvec(&xp)?;
+        let stats = h.compress(&CompressConfig::bytes(budget))?;
+        let achieved = hmx::util::rel_err(&h.matvec(&xp)?, &y_ref);
+        println!(
+            "compressed under {budget} B budget: factor bytes {} -> {} \
+             (retained {:.3}, {}/{} blocks f32), matvec rel err {achieved:.3e} \
+             (predicted {:.3e})",
+            stats.bytes_before,
+            stats.bytes_after,
+            stats.retained_fraction(),
+            stats.f32_blocks,
+            stats.blocks,
+            stats.predicted_rel_err,
+        );
+        if stats.bytes_after > budget {
+            println!("warning: rank-1 floor exceeds the budget; got as close as possible");
+        }
+    }
 
     // --- block solve: all q channels through one batched operator ---
     let op = RegularizedHBlockOp::new(&h, sigma2);

@@ -16,7 +16,13 @@
 //!
 //! Run:  cargo run --release --example serve_krr -- \
 //!           [--n 4096] [--tenants 2] [--q 4] [--clients 4] [--requests 8] \
-//!           [--sigma2 1e-3] [--max-batch 32] [--max-wait-ms 5] [--max-iter 100]
+//!           [--sigma2 1e-3] [--max-batch 32] [--max-wait-ms 5] [--max-iter 100] \
+//!           [--budget-mb MB]
+//!
+//! With `--budget-mb` the registry runs under a `MemoryGovernor`: tenant
+//! admissions must fit the cross-tenant P-mode factor-byte ceiling, with
+//! over-budget builds triggering in-place recompression of the coldest
+//! tenants and idle-LRU eviction (all decisions reported at the end).
 
 use hmx::config::{HmxConfig, KernelKind};
 use hmx::prelude::*;
@@ -92,7 +98,13 @@ fn main() -> anyhow::Result<()> {
         queue_capacity: args.get("queue-capacity", 1024usize),
     };
 
-    let registry = OperatorRegistry::new();
+    let registry = if args.has("budget-mb") {
+        let budget = args.get("budget-mb", 64usize) * (1 << 20);
+        println!("memory governor: cross-tenant factor budget {budget} B");
+        OperatorRegistry::with_governor(MemoryGovernor::with_budget(budget))
+    } else {
+        OperatorRegistry::new()
+    };
     for t in 0..tenants {
         let id = format!("tenant-{t}");
         let kernel = if t % 2 == 0 { KernelKind::Gaussian } else { KernelKind::Matern };
@@ -107,14 +119,18 @@ fn main() -> anyhow::Result<()> {
         };
         let train = PointSet::halton(n, dim);
 
-        // --- register: builds the operator on its executor thread ---
+        // --- register: builds the operator on its executor thread; under
+        // a governor the admission may recompress/evict colder tenants ---
         let t0 = Instant::now();
-        let handle = registry.register(&id, train.clone(), &cfg, serve_cfg.clone())?;
+        let handle = registry.get_or_build(&id, train.clone(), &cfg, serve_cfg.clone())?;
         println!(
-            "[{id}] registered: n={n} kernel={} engine={} compression={:.4} ({:.2?})",
+            "[{id}] registered: n={n} kernel={} engine={} compression={:.4} \
+             factor-bytes={} (registry total {}) ({:.2?})",
             cfg.kernel.name(),
             handle.meta().engine,
             handle.meta().compression_ratio,
+            handle.meta().build_stats.factor_bytes,
+            registry.factor_bytes(),
             t0.elapsed()
         );
 
@@ -197,9 +213,20 @@ fn main() -> anyhow::Result<()> {
         println!("[{id}] telemetry: {snap}");
     }
 
+    if let Some(gov) = registry.governor() {
+        let snap = gov.snapshot();
+        println!(
+            "governor: {} / {} B in use, {} recompressions, {} evictions, {} rejections",
+            snap.bytes_in_use,
+            snap.budget_bytes,
+            snap.recompressions,
+            snap.evictions,
+            snap.rejections
+        );
+    }
     println!("global serve phases:");
     for s in hmx::metrics::RECORDER.stats() {
-        if s.phase.starts_with("serve.") {
+        if s.phase.starts_with("serve.") || s.phase.starts_with("governor.") {
             println!(
                 "  {:<14} total {:.4}s  count {}  mean {:.6}s",
                 s.phase,

@@ -45,7 +45,7 @@ fn main() {
             n.to_string(),
             stats.rank_before.to_string(),
             stats.rank_after.to_string(),
-            format!("{:.3}", stats.compression()),
+            format!("{:.3}", stats.retained_fraction()),
             format!("{err:.3e}"),
         ]);
     }

@@ -1,0 +1,131 @@
+//! Figure (extension): operator-wide budgeted compression — P-mode factor
+//! bytes vs matvec error across global truncation budgets and storage
+//! precisions.
+//!
+//! The acceptance claim this bench demonstrates: at a matched matvec
+//! relative error ≤ 1e-6 on the model problem, the budgeted pass
+//! (global waterfilled truncation + mixed-precision packing) reduces
+//! P-mode factor bytes by ≥ 2× vs the unbudgeted build. c_leaf defaults
+//! to 128 so low-rank (admissible) blocks dominate even at small n.
+//!
+//! Run:  cargo bench --bench fig_compress -- [--n 8192] [--c-leaf 128]
+//!       (HMX_BENCH_FULL=1 bumps n to 2^16)
+
+use hmx::compress::{CompressBudget, CompressConfig, StorageMode};
+use hmx::config::HmxConfig;
+use hmx::metrics::{measure, CsvTable};
+use hmx::prelude::*;
+use hmx::util::cli::Args;
+use hmx::util::prng::Xoshiro256;
+
+fn main() {
+    let args = Args::parse();
+    let full = std::env::var("HMX_BENCH_FULL").is_ok();
+    let n = args.get("n", if full { 1usize << 16 } else { 1usize << 13 });
+    let c_leaf = args.get("c-leaf", 128usize);
+    let k = args.get("k", 16usize);
+    let trials = args.get("trials", 3usize);
+    let cfg = HmxConfig { n, dim: 2, k, c_leaf, precompute: true, ..HmxConfig::default() };
+    let pts = PointSet::halton(n, 2);
+
+    // reference product: exact dense when affordable, else the
+    // uncompressed P-mode operator (then "rel err" reads as the error
+    // *added* by compression)
+    let x = Xoshiro256::seed(7).vector(n);
+    let exact = (n <= 1 << 13).then(|| DenseOperator::new(pts.clone(), cfg.kernel()));
+    let baseline = HMatrix::build(pts.clone(), &cfg).unwrap();
+    let reference = match &exact {
+        Some(d) => d.matvec(&x),
+        None => baseline.matvec(&x).unwrap(),
+    };
+    let bytes_unbudgeted = baseline.factor_bytes();
+    let base_err = hmx::util::rel_err(&baseline.matvec(&x).unwrap(), &reference);
+    let base_time = {
+        let mut ws = MatvecWorkspace::with_capacity(n, 1);
+        measure(trials, || {
+            baseline.matvec_with(&x, &mut ws).unwrap();
+        })
+        .secs()
+    };
+
+    let table = CsvTable::new(
+        "fig_compress",
+        &[
+            "budget", "storage", "n", "factor_bytes", "retained", "reduction_x", "f32_blocks",
+            "blocks", "matvec_rel_err", "matvec_seconds",
+        ],
+    );
+    println!(
+        "# fig_compress: budgeted global truncation + mixed-precision storage \
+         (n={n}, k={k}, c_leaf={c_leaf}; reference = {})",
+        if exact.is_some() { "exact dense" } else { "uncompressed P-mode" }
+    );
+    table.row(&[
+        "none".into(),
+        "f64-flat".into(),
+        n.to_string(),
+        bytes_unbudgeted.to_string(),
+        "1.000".into(),
+        "1.00".into(),
+        "0".into(),
+        baseline.stats.admissible_blocks.to_string(),
+        format!("{base_err:.3e}"),
+        format!("{base_time:.6}"),
+    ]);
+
+    let mut acceptance_reduction = 0.0f64;
+    let mut acceptance_err = f64::NAN;
+    let budgets: Vec<(String, CompressConfig)> = vec![
+        ("rel1e-4".into(), CompressConfig::rel_err(1e-4)),
+        ("rel1e-6".into(), CompressConfig::rel_err(1e-6)),
+        ("rel1e-8".into(), CompressConfig::rel_err(1e-8)),
+        (
+            "rel1e-6/f64".into(),
+            CompressConfig { budget: CompressBudget::RelErr(1e-6), storage: StorageMode::F64 },
+        ),
+        ("bytes/4".into(), CompressConfig::bytes(bytes_unbudgeted / 4)),
+    ];
+    for (label, ccfg) in budgets {
+        let mut h = HMatrix::build(pts.clone(), &cfg).unwrap();
+        let stats = h.compress(&ccfg).unwrap();
+        let err = hmx::util::rel_err(&h.matvec(&x).unwrap(), &reference);
+        let secs = {
+            let mut ws = MatvecWorkspace::with_capacity(n, 1);
+            measure(trials, || {
+                h.matvec_with(&x, &mut ws).unwrap();
+            })
+            .secs()
+        };
+        let reduction = bytes_unbudgeted as f64 / stats.bytes_after.max(1) as f64;
+        if label == "rel1e-6" {
+            acceptance_reduction = reduction;
+            acceptance_err = err;
+        }
+        let storage = match ccfg.storage {
+            StorageMode::F64 => "f64",
+            StorageMode::Mixed => "mixed",
+            StorageMode::F32 => "f32",
+        };
+        table.row(&[
+            label,
+            storage.into(),
+            n.to_string(),
+            stats.bytes_after.to_string(),
+            format!("{:.3}", stats.retained_fraction()),
+            format!("{reduction:.2}"),
+            stats.f32_blocks.to_string(),
+            stats.blocks.to_string(),
+            format!("{err:.3e}"),
+            format!("{secs:.6}"),
+        ]);
+    }
+    println!(
+        "# acceptance: at budget rel1e-6 (mixed) reduction = {acceptance_reduction:.2}x \
+         (want >= 2x) at matvec rel err {acceptance_err:.3e} (want <= 1e-6)"
+    );
+    if acceptance_reduction < 2.0 || acceptance_err.is_nan() || acceptance_err > 1e-6 {
+        println!("# acceptance: FAILED");
+        std::process::exit(1);
+    }
+    println!("# acceptance: ok");
+}

@@ -432,6 +432,7 @@ mod tests {
         let f = batched_aca_factors(&batch);
         assert!(f.ranks.is_empty());
         let z = AtomicF64Vec::zeros(16);
-        f.apply(&[], &vec![0.0; 16], &z);
+        let x = vec![0.0; 16];
+        f.apply(&[], &x, &z);
     }
 }

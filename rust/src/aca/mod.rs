@@ -20,5 +20,5 @@ pub mod seq;
 pub mod stepwise;
 
 pub use batched::{batched_aca_factors, batched_aca_matvec, AcaBatch};
-pub use recompress::{recompress, RecompressStats, Truncation};
+pub use recompress::{core_svds, recompress, truncate_to_ranks, CoreSvd, RecompressStats, Truncation};
 pub use seq::{aca_fixed_rank, aca_with_tolerance, AcaResult};

@@ -12,11 +12,20 @@
 //! truncating at the first r with σ_{r+1} ≤ ε·σ_1 (relative) or at a
 //! fixed target rank. Cost: O((m+n)k² + k³) per block — negligible next
 //! to the ACA itself, while the P-mode factor storage (the paper's main
-//! GPU memory constraint, §5.4/§6.1) shrinks by the compression ratio.
+//! GPU memory constraint, §5.4/§6.1) shrinks by the retained fraction.
+//!
+//! The pass is split in two stages so [`crate::compress`] can reuse the
+//! QR+Jacobi-SVD kernels for *operator-wide* budgeted truncation:
+//! [`core_svds`] exports every block's core spectrum (the per-block
+//! singular values σ plus the orthonormal bases needed to rebuild), and
+//! [`truncate_to_ranks`] rebuilds the factors at externally chosen
+//! per-block ranks. [`recompress`] composes the two with a uniform
+//! per-block rule. Every pass is recorded under the `compress.pass`
+//! phase of [`crate::metrics::RECORDER`] (visible in `hmx phases`).
 
 use super::batched::AcaFactors;
 use super::linalg::{matmul_cm, qr_thin, svd_jacobi};
-use crate::dpp::executor::launch_with_grain;
+use crate::dpp::executor::{launch_with_grain, GlobalMem};
 use crate::tree::block::WorkItem;
 
 /// Truncation rule for recompression.
@@ -34,40 +43,56 @@ pub struct RecompressStats {
     pub blocks: usize,
     pub rank_before: usize,
     pub rank_after: usize,
+    /// Flat factor storage before the pass (the allocated k-stripe layout).
     pub bytes_before: usize,
+    /// Effective factor bytes after the pass: Σ_b r_b (m_b + n_b) · 8 —
+    /// what a compacted store would occupy (see [`crate::compress`] for
+    /// the store that actually reclaims the memory).
     pub bytes_after: usize,
 }
 
 impl RecompressStats {
-    pub fn compression(&self) -> f64 {
+    /// `bytes_after / bytes_before`: the fraction of factor storage
+    /// *retained* by the pass (0.25 ⇒ the factors shrank 4×). Smaller is
+    /// better — this is a retention ratio, not a compression factor.
+    pub fn retained_fraction(&self) -> f64 {
         self.bytes_after as f64 / self.bytes_before.max(1) as f64
     }
 }
 
-/// Recompress every block of `factors` in place (parallel over blocks).
-/// Returns aggregate statistics.
-pub fn recompress(
-    factors: &mut AcaFactors,
-    blocks: &[WorkItem],
-    rule: Truncation,
-) -> RecompressStats {
+/// One block's core factorization: the thin-QR bases of U and V plus the
+/// SVD of the k×k core `R_u R_vᵀ = W Σ Zᵀ`. `s` is the block's singular
+/// spectrum (descending) — exactly what operator-wide budgeting needs —
+/// and `(qu, w, s, z, qv)` suffice to rebuild rank-r factors for any
+/// r ≤ rk without touching the kernel again.
+pub struct CoreSvd {
+    pub m: usize,
+    pub n: usize,
+    /// Incoming (stored) rank of the block.
+    pub rk: usize,
+    /// m × rk orthonormal basis of U (column-major).
+    pub qu: Vec<f64>,
+    /// n × rk orthonormal basis of V (column-major).
+    pub qv: Vec<f64>,
+    /// rk × rk left singular vectors of the core.
+    pub w: Vec<f64>,
+    /// Core singular values, descending.
+    pub s: Vec<f64>,
+    /// rk × rk right singular vectors of the core.
+    pub z: Vec<f64>,
+}
+
+/// Compute every block's [`CoreSvd`] (parallel over blocks). Degenerate
+/// blocks — rank 0, or fewer rows/columns than stored rank — yield `None`
+/// and are passed through untouched by [`truncate_to_ranks`].
+pub fn core_svds(factors: &AcaFactors, blocks: &[WorkItem]) -> Vec<Option<CoreSvd>> {
     let nb = blocks.len();
-    let k = factors.k;
     let total_m = *factors.row_offsets.last().unwrap();
     let total_n = *factors.col_offsets.last().unwrap();
-    let bytes_before = factors.storage_bytes();
-    let rank_before: usize = factors.ranks.iter().sum();
-
-    // per-block new factors (computed in parallel, then written back)
-    let mut new_ranks = vec![0usize; nb];
-    let mut new_u: Vec<Vec<f64>> = vec![Vec::new(); nb];
-    let mut new_v: Vec<Vec<f64>> = vec![Vec::new(); nb];
+    let mut cores: Vec<Option<CoreSvd>> = (0..nb).map(|_| None).collect();
     {
-        use crate::dpp::executor::GlobalMem;
-        let nr = GlobalMem::new(&mut new_ranks);
-        let nu = GlobalMem::new(&mut new_u);
-        let nv = GlobalMem::new(&mut new_v);
-        let f = &*factors;
+        let out = GlobalMem::new(&mut cores);
+        let f = factors;
         launch_with_grain(nb, 1, |b| {
             let rk = f.ranks[b];
             if rk == 0 {
@@ -105,23 +130,55 @@ pub fn recompress(
                 }
             }
             let (w, s, z) = svd_jacobi(&core, rk);
-            let r_new = match rule {
-                Truncation::Relative(eps) => {
-                    let s1 = s[0].max(1e-300);
-                    s.iter().take_while(|&&x| x > eps * s1).count().max(1)
-                }
-                Truncation::FixedRank(r) => r.min(rk).max(1),
+            *out.get_mut(b) = Some(CoreSvd { m, n, rk, qu, qv, w, s, z });
+        });
+    }
+    cores
+}
+
+/// Rebuild every block's factors truncated to `new_ranks[b]` singular
+/// values (clamped to `1..=rk`), writing back into the flat layout and
+/// zeroing retired stripes. Blocks whose core is `None` keep their
+/// current factors and rank. Returns aggregate statistics.
+pub fn truncate_to_ranks(
+    factors: &mut AcaFactors,
+    blocks: &[WorkItem],
+    cores: &[Option<CoreSvd>],
+    new_ranks: &[usize],
+) -> RecompressStats {
+    let nb = blocks.len();
+    assert_eq!(cores.len(), nb);
+    assert_eq!(new_ranks.len(), nb);
+    let k = factors.k;
+    let total_m = *factors.row_offsets.last().unwrap();
+    let total_n = *factors.col_offsets.last().unwrap();
+    let bytes_before = factors.storage_bytes();
+    let rank_before: usize = factors.ranks.iter().sum();
+
+    // per-block truncated factors (computed in parallel, then written back)
+    let mut out_ranks = vec![0usize; nb];
+    let mut new_u: Vec<Vec<f64>> = vec![Vec::new(); nb];
+    let mut new_v: Vec<Vec<f64>> = vec![Vec::new(); nb];
+    {
+        let nr = GlobalMem::new(&mut out_ranks);
+        let nu = GlobalMem::new(&mut new_u);
+        let nv = GlobalMem::new(&mut new_v);
+        launch_with_grain(nb, 1, |b| {
+            let Some(core) = &cores[b] else {
+                return; // untouched block
             };
+            let (m, n, rk) = (core.m, core.n, core.rk);
+            let r_new = new_ranks[b].min(rk).max(1);
             // U' = Q_u · (W_r · diag(s_r)) ; V' = Q_v · Z_r
             let mut ws = vec![0.0; rk * r_new];
             for l in 0..r_new {
                 for i in 0..rk {
-                    ws[l * rk + i] = w[l * rk + i] * s[l];
+                    ws[l * rk + i] = core.w[l * rk + i] * core.s[l];
                 }
             }
-            let u_new = matmul_cm(&qu, &ws, m, rk, r_new);
-            let z_r = &z[..rk * r_new];
-            let v_new = matmul_cm(&qv, z_r, n, rk, r_new);
+            let u_new = matmul_cm(&core.qu, &ws, m, rk, r_new);
+            let z_r = &core.z[..rk * r_new];
+            let v_new = matmul_cm(&core.qv, z_r, n, rk, r_new);
             nr.write(b, r_new);
             *nu.get_mut(b) = u_new;
             *nv.get_mut(b) = v_new;
@@ -129,7 +186,7 @@ pub fn recompress(
     }
     // write back into the flat layout (zero the retired ranks)
     for b in 0..nb {
-        if new_ranks[b] == 0 {
+        if out_ranks[b] == 0 {
             continue; // untouched block
         }
         let (rlo, rhi) = (factors.row_offsets[b], factors.row_offsets[b + 1]);
@@ -138,19 +195,19 @@ pub fn recompress(
         let n = chi - clo;
         for l in 0..k {
             let u_dst = &mut factors.u_all[l * total_m + rlo..l * total_m + rhi];
-            if l < new_ranks[b] {
+            if l < out_ranks[b] {
                 u_dst.copy_from_slice(&new_u[b][l * m..(l + 1) * m]);
             } else {
                 u_dst.iter_mut().for_each(|x| *x = 0.0);
             }
             let v_dst = &mut factors.v_all[l * total_n + clo..l * total_n + chi];
-            if l < new_ranks[b] {
+            if l < out_ranks[b] {
                 v_dst.copy_from_slice(&new_v[b][l * n..(l + 1) * n]);
             } else {
                 v_dst.iter_mut().for_each(|x| *x = 0.0);
             }
         }
-        factors.ranks[b] = new_ranks[b];
+        factors.ranks[b] = out_ranks[b];
     }
     let rank_after: usize = factors.ranks.iter().sum();
     // storage accounting: effective bytes after truncation
@@ -162,6 +219,34 @@ pub fn recompress(
         })
         .sum();
     RecompressStats { blocks: nb, rank_before, rank_after, bytes_before, bytes_after }
+}
+
+/// Recompress every block of `factors` in place (parallel over blocks)
+/// under a uniform per-block truncation rule. Returns aggregate
+/// statistics. Recorded under the `compress.pass` phase.
+pub fn recompress(
+    factors: &mut AcaFactors,
+    blocks: &[WorkItem],
+    rule: Truncation,
+) -> RecompressStats {
+    crate::metrics::timed("compress.pass", || {
+        let cores = core_svds(factors, blocks);
+        let ranks: Vec<usize> = cores
+            .iter()
+            .zip(&factors.ranks)
+            .map(|(core, &rk)| match core {
+                Some(c) => match rule {
+                    Truncation::Relative(eps) => {
+                        let s1 = c.s[0].max(1e-300);
+                        c.s.iter().take_while(|&&x| x > eps * s1).count().max(1)
+                    }
+                    Truncation::FixedRank(r) => r.min(c.rk).max(1),
+                },
+                None => rk,
+            })
+            .collect();
+        truncate_to_ranks(factors, blocks, &cores, &ranks)
+    })
 }
 
 #[cfg(test)]
@@ -198,7 +283,7 @@ mod tests {
 
         let stats = recompress(&mut f, &blocks, Truncation::Relative(1e-10));
         assert!(stats.rank_after < stats.rank_before, "{stats:?}");
-        assert!(stats.compression() < 1.0, "{stats:?}");
+        assert!(stats.retained_fraction() < 1.0, "{stats:?}");
 
         let z_after = AtomicF64Vec::zeros(pts.len());
         f.apply(&blocks, &x, &z_after);
@@ -230,5 +315,47 @@ mod tests {
         // rank-2 is rough but must stay a sane approximation
         assert!(err < 0.5, "rank-2 error unreasonable: {err}");
         assert!(err > 1e-12, "truncation should actually change something");
+    }
+
+    #[test]
+    fn core_svds_export_descending_spectra() {
+        let (_, blocks, f) = factors_for(1024, 12);
+        let cores = core_svds(&f, &blocks);
+        assert_eq!(cores.len(), blocks.len());
+        let mut seen = 0;
+        for (b, core) in cores.iter().enumerate() {
+            let Some(c) = core else { continue };
+            seen += 1;
+            assert_eq!(c.rk, f.ranks[b]);
+            assert_eq!(c.s.len(), c.rk);
+            assert!(
+                c.s.windows(2).all(|w| w[0] >= w[1] - 1e-12),
+                "block {b} spectrum not descending"
+            );
+            assert!(c.s[0] > 0.0, "block {b} has an all-zero spectrum");
+        }
+        assert!(seen > 0, "no block produced a core SVD");
+    }
+
+    #[test]
+    fn truncate_to_ranks_honors_per_block_choices() {
+        let (pts, blocks, mut f) = factors_for(1024, 12);
+        let cores = core_svds(&f, &blocks);
+        // alternating per-block targets — exactly what the global
+        // waterfilling produces
+        let targets: Vec<usize> =
+            (0..blocks.len()).map(|b| if b % 2 == 0 { 2 } else { 5 }).collect();
+        let stats = truncate_to_ranks(&mut f, &blocks, &cores, &targets);
+        for (b, core) in cores.iter().enumerate() {
+            if core.is_some() {
+                assert_eq!(f.ranks[b], targets[b].min(cores[b].as_ref().unwrap().rk).max(1));
+            }
+        }
+        assert!(stats.rank_after <= stats.rank_before);
+        // product must remain a sane approximation of the original factors
+        let x = crate::util::prng::Xoshiro256::seed(3).vector(pts.len());
+        let z = AtomicF64Vec::zeros(pts.len());
+        f.apply(&blocks, &x, &z);
+        assert!(z.into_vec().iter().all(|v| v.is_finite()));
     }
 }

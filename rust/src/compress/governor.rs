@@ -1,0 +1,271 @@
+//! Cross-tenant memory governor for the serving registry.
+//!
+//! [`crate::serve::OperatorRegistry`] will happily build tenants until
+//! the process OOMs; the governor gives it a hard cross-tenant budget on
+//! P-mode factor bytes. Policy, on an over-budget admission:
+//!
+//! 1. **Recompress** the coldest compressible operators toward tighter
+//!    byte budgets (floored at a configurable fraction of their current
+//!    size so a hot spectrum is not squeezed to uselessness);
+//! 2. failing that, **evict** idle LRU tenants (their executors drain
+//!    in-flight batches gracefully; an evicted tenant rebuilds on its
+//!    next `get_or_build`);
+//! 3. failing even that, **reject** the incoming tenant — the ceiling is
+//!    never exceeded.
+//!
+//! The policy is a pure function ([`MemoryGovernor::next_action`]) over a
+//! usage snapshot, so it is unit-testable without building operators;
+//! the registry executes one action at a time and re-snapshots. Every
+//! decision is counted in the governor's stats and mirrored into
+//! [`crate::metrics::RECORDER`] (`governor.recompress`, `governor.evict`,
+//! `governor.reject`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::storage::StorageMode;
+
+/// Governor policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct GovernorConfig {
+    /// Hard ceiling on summed P-mode factor bytes across tenants.
+    pub budget_bytes: usize,
+    /// A recompression victim is never asked to shrink below this
+    /// fraction of its current bytes in one step (0 < floor < 1).
+    pub recompress_floor: f64,
+    /// Storage precision used for governor-initiated recompressions.
+    pub storage: StorageMode,
+}
+
+impl GovernorConfig {
+    pub fn new(budget_bytes: usize) -> Self {
+        GovernorConfig { budget_bytes, recompress_floor: 0.25, storage: StorageMode::Mixed }
+    }
+}
+
+/// One tenant's standing in the governor's eyes (a registry snapshot).
+#[derive(Clone, Debug)]
+pub struct TenantUsage {
+    pub id: String,
+    /// Current P-mode factor bytes (0 for NP-mode tenants).
+    pub bytes: usize,
+    /// Last access time, milliseconds since the registry epoch.
+    pub last_access_ms: u64,
+    /// Whether a recompression could still shrink this tenant (P mode
+    /// and not yet driven to its floor).
+    pub compressible: bool,
+}
+
+/// What the registry should do next to get back under budget.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum GovernorAction {
+    /// Ask `id`'s executor to recompress toward `target_bytes`.
+    Recompress { id: String, target_bytes: usize },
+    /// Remove `id` (graceful drain; rebuilds on next `get_or_build`).
+    Evict { id: String },
+    /// The incoming tenant cannot fit even alone: remove it and fail the
+    /// registration.
+    Reject { id: String },
+}
+
+/// Decision counters (`BatcherStats`-style; all thread-safe).
+#[derive(Default)]
+pub struct GovernorStats {
+    recompressions: AtomicU64,
+    evictions: AtomicU64,
+    rejections: AtomicU64,
+    /// Last observed cross-tenant byte total.
+    bytes_in_use: AtomicU64,
+}
+
+/// Point-in-time view of the governor's counters.
+#[derive(Clone, Debug)]
+pub struct GovernorSnapshot {
+    pub budget_bytes: usize,
+    pub bytes_in_use: u64,
+    pub recompressions: u64,
+    pub evictions: u64,
+    pub rejections: u64,
+}
+
+/// The cross-tenant byte-budget enforcer handed to
+/// [`crate::serve::OperatorRegistry::with_governor`].
+pub struct MemoryGovernor {
+    pub cfg: GovernorConfig,
+    stats: GovernorStats,
+}
+
+impl MemoryGovernor {
+    pub fn new(cfg: GovernorConfig) -> Self {
+        MemoryGovernor { cfg, stats: GovernorStats::default() }
+    }
+
+    /// Convenience: a byte budget with default policy knobs.
+    pub fn with_budget(budget_bytes: usize) -> Self {
+        MemoryGovernor::new(GovernorConfig::new(budget_bytes))
+    }
+
+    pub fn snapshot(&self) -> GovernorSnapshot {
+        GovernorSnapshot {
+            budget_bytes: self.cfg.budget_bytes,
+            bytes_in_use: self.stats.bytes_in_use.load(Ordering::Relaxed),
+            recompressions: self.stats.recompressions.load(Ordering::Relaxed),
+            evictions: self.stats.evictions.load(Ordering::Relaxed),
+            rejections: self.stats.rejections.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Pure policy step: given a usage snapshot and the id that was just
+    /// admitted, return the next action, or `None` when under budget (or
+    /// when nothing further can help — only possible if every tenant
+    /// holds zero factor bytes, in which case the total is 0 ≤ budget
+    /// anyway).
+    pub fn next_action(
+        &self,
+        tenants: &[TenantUsage],
+        incoming: &str,
+    ) -> Option<GovernorAction> {
+        let total: usize = tenants.iter().map(|t| t.bytes).sum();
+        self.stats.bytes_in_use.store(total as u64, Ordering::Relaxed);
+        if total <= self.cfg.budget_bytes {
+            return None;
+        }
+        let excess = total - self.cfg.budget_bytes;
+
+        // 1. recompress the coldest compressible tenant (the incoming
+        // one only once every other candidate is exhausted). With any
+        // valid floor (< 1) the target is always a real shrink, so one
+        // victim per step is the whole policy; the guard only protects
+        // against a degenerate floor >= 1 config.
+        let victim = tenants
+            .iter()
+            .filter(|t| t.compressible && t.bytes > 0)
+            .min_by_key(|t| (t.id == incoming, t.last_access_ms));
+        if let Some(v) = victim {
+            let floor = (v.bytes as f64 * self.cfg.recompress_floor) as usize;
+            let target = v.bytes.saturating_sub(excess).max(floor);
+            if target < v.bytes {
+                return Some(GovernorAction::Recompress {
+                    id: v.id.clone(),
+                    target_bytes: target,
+                });
+            }
+        }
+
+        // 2. evict the coldest idle tenant that actually frees bytes
+        let victim = tenants
+            .iter()
+            .filter(|t| t.id != incoming && t.bytes > 0)
+            .min_by_key(|t| t.last_access_ms);
+        if let Some(v) = victim {
+            return Some(GovernorAction::Evict { id: v.id.clone() });
+        }
+
+        // 3. only the incoming tenant is left holding bytes: reject it
+        if tenants.iter().any(|t| t.id == incoming && t.bytes > 0) {
+            return Some(GovernorAction::Reject { id: incoming.to_string() });
+        }
+        None
+    }
+
+    pub(crate) fn record_recompress(&self) {
+        self.stats.recompressions.fetch_add(1, Ordering::Relaxed);
+        crate::metrics::RECORDER.incr("governor.recompress");
+    }
+
+    pub(crate) fn record_evict(&self) {
+        self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+        crate::metrics::RECORDER.incr("governor.evict");
+    }
+
+    pub(crate) fn record_reject(&self) {
+        self.stats.rejections.fetch_add(1, Ordering::Relaxed);
+        crate::metrics::RECORDER.incr("governor.reject");
+    }
+
+    pub(crate) fn record_bytes(&self, total: usize) {
+        self.stats.bytes_in_use.store(total as u64, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(id: &str, bytes: usize, last_access_ms: u64, compressible: bool) -> TenantUsage {
+        TenantUsage { id: id.to_string(), bytes, last_access_ms, compressible }
+    }
+
+    #[test]
+    fn under_budget_is_a_noop() {
+        let gov = MemoryGovernor::with_budget(1000);
+        let tenants = vec![t("a", 400, 0, true), t("b", 500, 1, true)];
+        assert_eq!(gov.next_action(&tenants, "b"), None);
+        assert_eq!(gov.snapshot().bytes_in_use, 900);
+    }
+
+    #[test]
+    fn recompresses_coldest_first_and_respects_floor() {
+        let gov = MemoryGovernor::with_budget(1000);
+        // total 1400, excess 400; "cold" (oldest access) is compressible
+        let tenants =
+            vec![t("cold", 600, 10, true), t("warm", 500, 500, true), t("new", 300, 900, true)];
+        match gov.next_action(&tenants, "new") {
+            Some(GovernorAction::Recompress { id, target_bytes }) => {
+                assert_eq!(id, "cold");
+                assert_eq!(target_bytes, 200, "600 - 400 excess, above the 150 floor");
+            }
+            other => panic!("expected recompress, got {other:?}"),
+        }
+        // huge excess: the target clamps at the floor instead of zero
+        let tenants2 = vec![t("cold", 600, 10, true), t("new", 5000, 900, true)];
+        match gov.next_action(&tenants2, "new") {
+            Some(GovernorAction::Recompress { id, target_bytes }) => {
+                assert_eq!(id, "cold");
+                assert_eq!(target_bytes, 150, "floor = 0.25 * 600");
+            }
+            other => panic!("expected floored recompress, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn incoming_tenant_is_compressed_last() {
+        let gov = MemoryGovernor::with_budget(100);
+        // only the incoming tenant is compressible → it is the victim
+        let tenants = vec![t("old", 80, 0, false), t("new", 80, 10, true)];
+        match gov.next_action(&tenants, "new") {
+            Some(GovernorAction::Recompress { id, .. }) => assert_eq!(id, "new"),
+            other => panic!("expected recompress of the incoming tenant, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn evicts_lru_when_nothing_is_compressible() {
+        let gov = MemoryGovernor::with_budget(100);
+        let tenants =
+            vec![t("oldest", 60, 5, false), t("recent", 60, 50, false), t("new", 60, 99, false)];
+        assert_eq!(
+            gov.next_action(&tenants, "new"),
+            Some(GovernorAction::Evict { id: "oldest".to_string() })
+        );
+    }
+
+    #[test]
+    fn rejects_incoming_when_alone_and_oversized() {
+        let gov = MemoryGovernor::with_budget(100);
+        let tenants = vec![t("new", 500, 0, false)];
+        assert_eq!(
+            gov.next_action(&tenants, "new"),
+            Some(GovernorAction::Reject { id: "new".to_string() })
+        );
+        gov.record_reject();
+        assert_eq!(gov.snapshot().rejections, 1);
+    }
+
+    #[test]
+    fn np_mode_tenants_never_block_admission() {
+        let gov = MemoryGovernor::with_budget(100);
+        // zero-byte tenants cannot be over budget in the first place
+        let tenants = vec![t("np1", 0, 0, false), t("np2", 0, 1, false)];
+        assert_eq!(gov.next_action(&tenants, "np2"), None);
+    }
+}

@@ -1,0 +1,236 @@
+//! Operator-wide compression governor: budgeted global rank truncation,
+//! mixed-precision factor storage, and memory-governed serving.
+//!
+//! P-mode factor storage is the dominant memory constraint of the fully
+//! batched H-matrix design (the paper's §5.4/§6.1), and Boukaram,
+//! Turkiyyah & Keyes (2019) show that algebraic compression of
+//! already-built hierarchical operators is itself a batchable many-core
+//! workload that directly buys serving capacity. This module treats
+//! compression as a first-class, operator-wide resource-management layer
+//! rather than a per-block afterthought:
+//!
+//! * [`truncate`] — **budgeted global truncation**: one waterfilling
+//!   problem over every admissible block's core spectrum ("spend rank
+//!   where the spectrum says it matters"), targeting either a global
+//!   relative-error budget or an explicit byte budget. Reuses the
+//!   QR+Jacobi-SVD kernels of [`crate::aca::recompress`].
+//! * [`storage`] — **mixed-precision factor storage**: a compacted
+//!   per-block store ([`PackedFactors`]) holding U/V stripes at their
+//!   achieved rank (the flat k-stripe layout keeps its zero stripes
+//!   allocated; packing reclaims them) in f32 where the error model
+//!   allows, widening to f64 inside the batched matvec/matmat kernels.
+//! * [`governor`] — a **[`MemoryGovernor`]** for
+//!   [`crate::serve::OperatorRegistry`]: a cross-tenant factor-byte
+//!   budget enforced by recompressing the coldest operators toward
+//!   tighter budgets and, failing that, evicting idle LRU tenants.
+//!
+//! ## Error model
+//!
+//! For a relative budget ε ([`CompressBudget::RelErr`]), the discarded
+//! singular mass obeys `Σ_disc σ² ≤ ε² Σ_all σ²`, i.e. the low-rank part
+//! of the operator changes by at most ε in relative Frobenius norm.
+//! Mixed-precision storage demotes a block to f32 only when its σ₁ keeps
+//! the f32 roundoff (≈ 1.2e-7 · σ₁) below a quarter of the truncation
+//! allowance, so the **advertised bound is 1.5 ε** relative Frobenius
+//! error of the low-rank part (the property tests pin it). Byte budgets
+//! are planned at 8 bytes/element, so an f32/mixed store always lands at
+//! or under the requested bytes when the plan is feasible; an infeasible
+//! budget (the rank-1 floor alone exceeds it) is visible as
+//! `bytes_after > budget` in the returned [`CompressStats`].
+//!
+//! Every pass is timed under the `compress.pass` phase of
+//! [`crate::metrics::RECORDER`].
+
+pub mod governor;
+pub mod storage;
+pub mod truncate;
+
+pub use governor::{GovernorAction, GovernorConfig, GovernorSnapshot, MemoryGovernor, TenantUsage};
+pub use storage::{PackedFactors, StorageMode};
+pub use truncate::{waterfill, BlockSpectrum, WaterfillResult};
+
+use crate::aca::batched::AcaFactors;
+use crate::aca::recompress::{core_svds, truncate_to_ranks};
+use crate::tree::block::WorkItem;
+
+/// f32 unit roundoff, widened — what demoting a factor stripe costs.
+pub(crate) const F32_EPS: f64 = f32::EPSILON as f64;
+
+/// What the global truncation is allowed to spend.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CompressBudget {
+    /// Global relative-error target ε: discard singular mass up to
+    /// `ε² · Σ σ²` across the whole operator.
+    RelErr(f64),
+    /// Explicit factor-byte budget (planned at 8 bytes/element; the
+    /// packed store may land lower when blocks demote to f32).
+    Bytes(usize),
+}
+
+/// One compression pass's policy: the budget plus the storage precision.
+#[derive(Clone, Copy, Debug)]
+pub struct CompressConfig {
+    pub budget: CompressBudget,
+    pub storage: StorageMode,
+}
+
+impl CompressConfig {
+    /// Relative-error budget with mixed-precision storage (the default
+    /// serving configuration).
+    pub fn rel_err(eps: f64) -> Self {
+        CompressConfig { budget: CompressBudget::RelErr(eps), storage: StorageMode::Mixed }
+    }
+
+    /// Byte budget with mixed-precision storage.
+    pub fn bytes(budget: usize) -> Self {
+        CompressConfig { budget: CompressBudget::Bytes(budget), storage: StorageMode::Mixed }
+    }
+}
+
+/// Statistics of one operator-wide compression pass.
+#[derive(Clone, Debug, Default)]
+pub struct CompressStats {
+    pub blocks: usize,
+    pub rank_before: usize,
+    pub rank_after: usize,
+    /// Factor bytes held before the pass (the operator's previous store).
+    pub bytes_before: usize,
+    /// Factor bytes held after the pass (the packed store).
+    pub bytes_after: usize,
+    /// Blocks stored in f32 / f64 after the pass.
+    pub f32_blocks: usize,
+    pub f64_blocks: usize,
+    /// Global singular-value threshold the waterfilling applied (0 when
+    /// nothing was discarded).
+    pub threshold: f64,
+    /// Predicted relative Frobenius error of the low-rank part from the
+    /// discarded singular mass (truncation only; see the module docs for
+    /// the mixed-precision term).
+    pub predicted_rel_err: f64,
+}
+
+impl CompressStats {
+    /// `bytes_after / bytes_before` — the retained fraction of factor
+    /// storage (0.25 ⇒ 4× smaller). Smaller is better.
+    pub fn retained_fraction(&self) -> f64 {
+        self.bytes_after as f64 / self.bytes_before.max(1) as f64
+    }
+}
+
+/// Run one budgeted pass over an operator's ACA batches: export every
+/// block's core spectrum, solve the global waterfilling, truncate each
+/// batch to its chosen ranks, and pack the result into compacted
+/// (optionally mixed-precision) stores. `batch_blocks[i]` is the
+/// admissible-block slice backing `batches[i]` (the
+/// [`crate::hmatrix::HMatrix`] batch-plan slices).
+///
+/// `stats.bytes_before` counts the *flat* layout of `batches`; a caller
+/// replacing an already-packed store should overwrite it with the bytes
+/// it actually held.
+pub fn compress_batches(
+    batches: &mut [AcaFactors],
+    batch_blocks: &[&[WorkItem]],
+    cfg: &CompressConfig,
+) -> (Vec<PackedFactors>, CompressStats) {
+    assert_eq!(batches.len(), batch_blocks.len());
+    crate::metrics::timed("compress.pass", || {
+        let bytes_before: usize = batches.iter().map(|f| f.storage_bytes()).sum();
+        let rank_before: usize = batches.iter().map(|f| f.ranks.iter().sum::<usize>()).sum();
+        let nblocks: usize = batch_blocks.iter().map(|b| b.len()).sum();
+
+        // 1. per-block core SVDs (parallel inside), spectra for the solve
+        let cores: Vec<_> =
+            batches.iter().zip(batch_blocks).map(|(f, blocks)| core_svds(f, blocks)).collect();
+        let mut spectra = Vec::new();
+        let mut fixed_bytes = 0usize; // degenerate blocks pass through
+        for (bi, (batch_cores, f)) in cores.iter().zip(batches.iter()).enumerate() {
+            for (blk, core) in batch_cores.iter().enumerate() {
+                match core {
+                    Some(c) => spectra.push(BlockSpectrum {
+                        batch: bi,
+                        block: blk,
+                        rank_elems: c.m + c.n,
+                        s: c.s.clone(),
+                    }),
+                    None => {
+                        let m = f.row_offsets[blk + 1] - f.row_offsets[blk];
+                        let n = f.col_offsets[blk + 1] - f.col_offsets[blk];
+                        fixed_bytes += f.ranks[blk] * (m + n) * std::mem::size_of::<f64>();
+                    }
+                }
+            }
+        }
+
+        // 2. one global waterfilling across every block's spectrum
+        let solve_budget = match cfg.budget {
+            CompressBudget::RelErr(eps) => CompressBudget::RelErr(eps),
+            CompressBudget::Bytes(b) => CompressBudget::Bytes(b.saturating_sub(fixed_bytes)),
+        };
+        let plan = waterfill(&spectra, &solve_budget);
+
+        // 3. per-block rank targets + precision decisions
+        let mut ranks: Vec<Vec<usize>> = batches.iter().map(|f| f.ranks.clone()).collect();
+        for (spec, &r) in spectra.iter().zip(&plan.ranks) {
+            ranks[spec.batch][spec.block] = r;
+        }
+        let eps_tgt = match cfg.budget {
+            CompressBudget::RelErr(eps) => eps,
+            CompressBudget::Bytes(_) => plan.predicted_rel_err,
+        };
+        let mut fp32: Vec<Vec<bool>> =
+            batch_blocks.iter().map(|b| vec![false; b.len()]).collect();
+        match cfg.storage {
+            StorageMode::F64 => {}
+            StorageMode::F32 => {
+                for flags in &mut fp32 {
+                    flags.iter_mut().for_each(|f| *f = true);
+                }
+            }
+            StorageMode::Mixed => {
+                // aggregate-safe demotion ("fall back to f64 where σ₁
+                // demands it"): rounding a block's factors to f32
+                // perturbs its product by ≲ c·εf32·σ₁ (c a small
+                // constant from the two perturbed factors), and B
+                // demoted blocks can stack √B-fold in Frobenius. A block
+                // demotes only while εf32·σ₁·√B ≤ ε·‖L‖_F / 8, which
+                // keeps the aggregate mixed-precision term under 0.5 ε
+                // ‖L‖_F even at c ≈ 4 — so the 1.5 ε advertised bound
+                // holds in aggregate, not just per block
+                let fro = spectra
+                    .iter()
+                    .flat_map(|sp| sp.s.iter().map(|&x| x * x))
+                    .sum::<f64>()
+                    .sqrt();
+                let stack = (spectra.len().max(1) as f64).sqrt();
+                for spec in &spectra {
+                    if spec.s[0] * F32_EPS * stack <= 0.125 * eps_tgt * fro {
+                        fp32[spec.batch][spec.block] = true;
+                    }
+                }
+            }
+        }
+
+        // 4. truncate every batch to its chosen ranks, then pack compact
+        let mut packed = Vec::with_capacity(batches.len());
+        for (bi, (f, blocks)) in batches.iter_mut().zip(batch_blocks).enumerate() {
+            truncate_to_ranks(f, blocks, &cores[bi], &ranks[bi]);
+            packed.push(PackedFactors::pack(f, blocks, &fp32[bi]));
+        }
+
+        let bytes_after: usize = packed.iter().map(|p| p.storage_bytes()).sum();
+        let rank_after: usize = packed.iter().map(|p| p.stored_ranks()).sum();
+        let f32_blocks: usize = packed.iter().map(|p| p.f32_blocks()).sum();
+        let stats = CompressStats {
+            blocks: nblocks,
+            rank_before,
+            rank_after,
+            bytes_before,
+            bytes_after,
+            f32_blocks,
+            f64_blocks: nblocks - f32_blocks,
+            threshold: plan.threshold,
+            predicted_rel_err: plan.predicted_rel_err,
+        };
+        (packed, stats)
+    })
+}

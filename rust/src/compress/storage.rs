@@ -1,0 +1,341 @@
+//! Compacted, optionally mixed-precision P-mode factor storage.
+//!
+//! The flat Fig-10 layout ([`AcaFactors`]) allocates k stripes for every
+//! block; after truncation the retired stripes are zeroed but their
+//! memory stays allocated. [`PackedFactors`] stores each block's U/V
+//! stripes contiguously at the *achieved* rank, and per block in either
+//! f64 or f32 — the precision decision is error-controlled upstream
+//! ([`crate::compress::compress_batches`]): blocks whose σ₁ demands f64
+//! keep it, the rest halve their bytes. The batched matvec/matmat kernel
+//! widens f32 stripes to f64 element-by-element inside the inner loops,
+//! so accumulation stays in f64 and the API (column-major n × nrhs in
+//! and out) is unchanged.
+
+use crate::aca::batched::AcaFactors;
+use crate::dpp::executor::launch_with_grain;
+use crate::dpp::scan::exclusive_scan;
+use crate::tree::block::WorkItem;
+use crate::util::atomic::AtomicF64Vec;
+
+/// One block's y += U (Vᵀ x) over all RHS columns and rank levels, shared
+/// by the f32 and f64 arenas: every element is widened to f64 on load
+/// (`T: Into<f64>` — lossless for both precisions) so the accumulation
+/// itself is identical regardless of storage. `y` is m × nrhs, `t` is the
+/// per-level nrhs-wide dot-product scratch.
+#[allow(clippy::too_many_arguments)]
+fn block_apply<T: Copy + Into<f64>>(
+    ua: &[T],
+    va: &[T],
+    p: &PackedBlock,
+    w: &WorkItem,
+    x: &[f64],
+    n: usize,
+    y: &mut [f64],
+    t: &mut [f64],
+) {
+    let m = p.m;
+    for l in 0..p.rank {
+        let vl = &va[p.v_off + l * p.n..p.v_off + (l + 1) * p.n];
+        for (c, tc) in t.iter_mut().enumerate() {
+            let xs = &x[c * n + w.sigma.lo..c * n + w.sigma.hi];
+            let mut acc = 0.0;
+            for (&v, xv) in vl.iter().zip(xs) {
+                let v: f64 = v.into();
+                acc += v * xv;
+            }
+            *tc = acc;
+        }
+        let ul = &ua[p.u_off + l * m..p.u_off + (l + 1) * m];
+        for (c, &tc) in t.iter().enumerate() {
+            if tc == 0.0 {
+                continue;
+            }
+            for (yi, &u) in y[c * m..(c + 1) * m].iter_mut().zip(ul) {
+                let u: f64 = u.into();
+                *yi += tc * u;
+            }
+        }
+    }
+}
+
+/// Factor storage precision policy for a compression pass.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StorageMode {
+    /// Keep every block in f64.
+    F64,
+    /// Per-block choice: f32 where the error model allows, f64 where σ₁
+    /// demands it (the default).
+    Mixed,
+    /// Force every block to f32 (no error control — benchmarks only).
+    F32,
+}
+
+/// Directory entry: where one block's stripes live.
+#[derive(Clone, Copy, Debug)]
+struct PackedBlock {
+    m: usize,
+    n: usize,
+    rank: usize,
+    /// Offset (elements) of stripe 0 of U in the block's arena; stripe l
+    /// starts at `u_off + l * m`.
+    u_off: usize,
+    /// Offset (elements) of stripe 0 of V; stripe l at `v_off + l * n`.
+    v_off: usize,
+    /// Which arena: true → the f32 arenas.
+    fp32: bool,
+}
+
+/// Compacted per-block factor store for one ACA batch (see module docs).
+pub struct PackedFactors {
+    dir: Vec<PackedBlock>,
+    u32a: Vec<f32>,
+    v32a: Vec<f32>,
+    u64a: Vec<f64>,
+    v64a: Vec<f64>,
+    /// Rank cap of the source factors (kept so [`PackedFactors::unpack`]
+    /// can rebuild the flat layout for a further compression pass).
+    k: usize,
+}
+
+impl PackedFactors {
+    /// Pack `factors` (flat layout) into the compacted store; `fp32[b]`
+    /// selects the f32 arenas for block `b`.
+    pub fn pack(factors: &AcaFactors, blocks: &[WorkItem], fp32: &[bool]) -> Self {
+        let nb = blocks.len();
+        assert_eq!(fp32.len(), nb);
+        assert_eq!(factors.ranks.len(), nb);
+        let total_m = *factors.row_offsets.last().unwrap();
+        let total_n = *factors.col_offsets.last().unwrap();
+        let mut dir = Vec::with_capacity(nb);
+        let (mut u32a, mut v32a) = (Vec::new(), Vec::new());
+        let (mut u64a, mut v64a) = (Vec::new(), Vec::new());
+        for b in 0..nb {
+            let (rlo, rhi) = (factors.row_offsets[b], factors.row_offsets[b + 1]);
+            let (clo, chi) = (factors.col_offsets[b], factors.col_offsets[b + 1]);
+            let m = rhi - rlo;
+            let n = chi - clo;
+            let rank = factors.ranks[b];
+            let (u_off, v_off) =
+                if fp32[b] { (u32a.len(), v32a.len()) } else { (u64a.len(), v64a.len()) };
+            for l in 0..rank {
+                let us = &factors.u_all[l * total_m + rlo..l * total_m + rhi];
+                let vs = &factors.v_all[l * total_n + clo..l * total_n + chi];
+                if fp32[b] {
+                    u32a.extend(us.iter().map(|&x| x as f32));
+                    v32a.extend(vs.iter().map(|&x| x as f32));
+                } else {
+                    u64a.extend_from_slice(us);
+                    v64a.extend_from_slice(vs);
+                }
+            }
+            dir.push(PackedBlock { m, n, rank, u_off, v_off, fp32: fp32[b] });
+        }
+        PackedFactors { dir, u32a, v32a, u64a, v64a, k: factors.k }
+    }
+
+    /// Widen back into the flat f64 layout — what a further compression
+    /// pass (governor tightening an already-packed operator) runs on.
+    pub fn unpack(&self, blocks: &[WorkItem]) -> AcaFactors {
+        let nb = blocks.len();
+        assert_eq!(self.dir.len(), nb);
+        let rows: Vec<usize> = self.dir.iter().map(|p| p.m).collect();
+        let cols: Vec<usize> = self.dir.iter().map(|p| p.n).collect();
+        let row_offsets = exclusive_scan(&rows);
+        let col_offsets = exclusive_scan(&cols);
+        let total_m = row_offsets[nb];
+        let total_n = col_offsets[nb];
+        let mut u_all = vec![0.0f64; self.k * total_m];
+        let mut v_all = vec![0.0f64; self.k * total_n];
+        let mut ranks = vec![0usize; nb];
+        for (b, p) in self.dir.iter().enumerate() {
+            ranks[b] = p.rank;
+            for l in 0..p.rank {
+                let u_dst =
+                    &mut u_all[l * total_m + row_offsets[b]..l * total_m + row_offsets[b] + p.m];
+                let v_dst =
+                    &mut v_all[l * total_n + col_offsets[b]..l * total_n + col_offsets[b] + p.n];
+                if p.fp32 {
+                    let us = &self.u32a[p.u_off + l * p.m..p.u_off + (l + 1) * p.m];
+                    let vs = &self.v32a[p.v_off + l * p.n..p.v_off + (l + 1) * p.n];
+                    for (d, s) in u_dst.iter_mut().zip(us) {
+                        *d = f64::from(*s);
+                    }
+                    for (d, s) in v_dst.iter_mut().zip(vs) {
+                        *d = f64::from(*s);
+                    }
+                } else {
+                    u_dst.copy_from_slice(&self.u64a[p.u_off + l * p.m..p.u_off + (l + 1) * p.m]);
+                    v_dst.copy_from_slice(&self.v64a[p.v_off + l * p.n..p.v_off + (l + 1) * p.n]);
+                }
+            }
+        }
+        AcaFactors { u_all, v_all, row_offsets, col_offsets, ranks, k: self.k }
+    }
+
+    /// Single-RHS apply (see [`PackedFactors::apply_mat`]).
+    pub fn apply(&self, blocks: &[WorkItem], x: &[f64], z: &AtomicF64Vec) {
+        self.apply_mat(blocks, x, 1, z);
+    }
+
+    /// Multi-RHS apply: z|τ_b += U_b (V_bᵀ X|σ_b) for every RHS column,
+    /// mirroring [`AcaFactors::apply_mat`] (same column-major layout and
+    /// per-block parallel launch); f32 stripes are widened to f64 inside
+    /// the inner loops so every accumulation runs in f64.
+    pub fn apply_mat(&self, blocks: &[WorkItem], x: &[f64], nrhs: usize, z: &AtomicF64Vec) {
+        let nb = blocks.len();
+        assert_eq!(self.dir.len(), nb);
+        if nb == 0 || nrhs == 0 {
+            return;
+        }
+        debug_assert_eq!(x.len() % nrhs, 0);
+        let n = x.len() / nrhs;
+        launch_with_grain(nb, 1, |b| {
+            let p = &self.dir[b];
+            let w = &blocks[b];
+            let m = p.m;
+            if p.rank == 0 {
+                return;
+            }
+            // y_c = Σ_r (v_r · x_c) u_r, accumulated locally then scattered
+            // once per row per column (atomic: blocks may share τ rows).
+            let mut y = vec![0.0f64; m * nrhs];
+            let mut t = vec![0.0f64; nrhs];
+            if p.fp32 {
+                block_apply(&self.u32a, &self.v32a, p, w, x, n, &mut y, &mut t);
+            } else {
+                block_apply(&self.u64a, &self.v64a, p, w, x, n, &mut y, &mut t);
+            }
+            for (c, yc) in y.chunks_exact(m).enumerate() {
+                for (i, yi) in yc.iter().enumerate() {
+                    z.add(c * n + w.tau.lo + i, *yi);
+                }
+            }
+        });
+    }
+
+    /// Bytes of factor storage actually held (4 bytes per f32 element,
+    /// 8 per f64 — the honest P-mode footprint).
+    pub fn storage_bytes(&self) -> usize {
+        (self.u32a.len() + self.v32a.len()) * std::mem::size_of::<f32>()
+            + (self.u64a.len() + self.v64a.len()) * std::mem::size_of::<f64>()
+    }
+
+    /// Stored factor elements Σ_b r_b (m_b + n_b) — what the element-based
+    /// [`crate::hmatrix::HMatrix::compression_ratio`] counts.
+    pub fn stored_elems(&self) -> usize {
+        self.u32a.len() + self.v32a.len() + self.u64a.len() + self.v64a.len()
+    }
+
+    /// Sum of stored ranks across blocks.
+    pub fn stored_ranks(&self) -> usize {
+        self.dir.iter().map(|p| p.rank).sum()
+    }
+
+    /// Blocks stored in f32.
+    pub fn f32_blocks(&self) -> usize {
+        self.dir.iter().filter(|p| p.fp32).count()
+    }
+
+    pub fn blocks(&self) -> usize {
+        self.dir.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aca::batched::{batched_aca_factors, AcaBatch};
+    use crate::geometry::kernel::Kernel;
+    use crate::geometry::points::PointSet;
+    use crate::morton::morton_sort;
+    use crate::tree::block::build_block_tree;
+
+    fn factors_for(n: usize, k: usize) -> (PointSet, Vec<WorkItem>, AcaFactors) {
+        let mut pts = PointSet::halton(n, 2);
+        morton_sort(&mut pts);
+        let t = build_block_tree(&pts, 1.5, 32);
+        let blocks = t.admissible;
+        let f = batched_aca_factors(&AcaBatch {
+            points: &pts,
+            kernel: Kernel::gaussian(),
+            blocks: &blocks,
+            k,
+        });
+        (pts, blocks, f)
+    }
+
+    #[test]
+    fn f64_pack_applies_identically_and_shrinks_storage() {
+        let (pts, blocks, f) = factors_for(1024, 16);
+        let n = pts.len();
+        let packed = PackedFactors::pack(&f, &blocks, &vec![false; blocks.len()]);
+        assert_eq!(packed.blocks(), blocks.len());
+        assert_eq!(packed.f32_blocks(), 0);
+        // packing drops the zero stripes the flat layout keeps allocated
+        assert!(packed.storage_bytes() <= f.storage_bytes());
+        for nrhs in [1usize, 3] {
+            let x = crate::util::prng::Xoshiro256::seed(11 + nrhs as u64).vector(n * nrhs);
+            let zf = AtomicF64Vec::zeros(n * nrhs);
+            f.apply_mat(&blocks, &x, nrhs, &zf);
+            let zp = AtomicF64Vec::zeros(n * nrhs);
+            packed.apply_mat(&blocks, &x, nrhs, &zp);
+            let err = crate::util::rel_err(&zp.into_vec(), &zf.into_vec());
+            assert!(err < 1e-14, "f64 pack must be lossless: nrhs={nrhs} {err}");
+        }
+    }
+
+    #[test]
+    fn f32_pack_halves_bytes_with_bounded_error() {
+        let (pts, blocks, f) = factors_for(1024, 12);
+        let n = pts.len();
+        let p64 = PackedFactors::pack(&f, &blocks, &vec![false; blocks.len()]);
+        let p32 = PackedFactors::pack(&f, &blocks, &vec![true; blocks.len()]);
+        assert_eq!(p32.f32_blocks(), blocks.len());
+        assert_eq!(p32.storage_bytes() * 2, p64.storage_bytes());
+        let x = crate::util::prng::Xoshiro256::seed(5).vector(n);
+        let zf = AtomicF64Vec::zeros(n);
+        f.apply(&blocks, &x, &zf);
+        let zp = AtomicF64Vec::zeros(n);
+        p32.apply(&blocks, &x, &zp);
+        let err = crate::util::rel_err(&zp.into_vec(), &zf.into_vec());
+        assert!(err < 1e-5, "f32 storage error too large: {err}");
+        assert!(err > 0.0, "f32 storage should round somewhere");
+    }
+
+    #[test]
+    fn unpack_round_trips_the_apply() {
+        let (pts, blocks, f) = factors_for(512, 10);
+        let n = pts.len();
+        let fp32: Vec<bool> = (0..blocks.len()).map(|b| b % 2 == 0).collect();
+        let packed = PackedFactors::pack(&f, &blocks, &fp32);
+        assert!(packed.f32_blocks() > 0);
+        let unpacked = packed.unpack(&blocks);
+        assert_eq!(unpacked.ranks, f.ranks);
+        assert_eq!(unpacked.k, f.k);
+        let x = crate::util::prng::Xoshiro256::seed(6).vector(n);
+        let za = AtomicF64Vec::zeros(n);
+        packed.apply(&blocks, &x, &za);
+        let zb = AtomicF64Vec::zeros(n);
+        unpacked.apply(&blocks, &x, &zb);
+        // the unpacked flat layout holds the same (possibly rounded)
+        // values, so applies agree to f64 roundoff
+        let err = crate::util::rel_err(&zb.into_vec(), &za.into_vec());
+        assert!(err < 1e-14, "unpack changed the operator: {err}");
+    }
+
+    #[test]
+    fn empty_batch_is_noop() {
+        let pts = PointSet::halton(16, 2);
+        let f = batched_aca_factors(&AcaBatch {
+            points: &pts,
+            kernel: Kernel::gaussian(),
+            blocks: &[],
+            k: 4,
+        });
+        let packed = PackedFactors::pack(&f, &[], &[]);
+        assert_eq!(packed.storage_bytes(), 0);
+        let z = AtomicF64Vec::zeros(16);
+        let x = vec![0.0; 16];
+        packed.apply(&[], &x, &z);
+    }
+}

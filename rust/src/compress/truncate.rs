@@ -1,0 +1,207 @@
+//! Budgeted global rank truncation: one waterfilling problem across the
+//! whole operator.
+//!
+//! Per-block recompression ([`crate::aca::recompress`]) truncates each
+//! block against its *own* σ₁ — a block with a flat spectrum keeps rank
+//! it does not deserve while a block with a steep spectrum is starved.
+//! Operator-wide budgeting instead pools every block's core singular
+//! values and discards the globally smallest mass first (relative-error
+//! budget) or keeps the best σ²-per-byte candidates first (byte budget):
+//! rank is spent where the spectrum says it matters.
+//!
+//! Both solves preserve within-block monotonicity for free: a block's
+//! singular values are descending, so the kept set per block is always a
+//! prefix and a per-block *count* fully describes the decision. Every
+//! block keeps at least rank 1 — dropping admissible blocks entirely
+//! changes the operator's sparsity pattern, which stays the tree's
+//! decision, not the compressor's.
+
+use super::CompressBudget;
+
+/// One block's core spectrum handed to the global solve.
+#[derive(Clone, Debug)]
+pub struct BlockSpectrum {
+    /// Index of the owning ACA batch.
+    pub batch: usize,
+    /// Block index within the batch.
+    pub block: usize,
+    /// `rows + cols` — one rank level of this block stores this many
+    /// factor elements.
+    pub rank_elems: usize,
+    /// Core singular values, descending (see
+    /// [`crate::aca::recompress::CoreSvd`]).
+    pub s: Vec<f64>,
+}
+
+/// Outcome of the global solve, aligned with the input spectra.
+#[derive(Clone, Debug)]
+pub struct WaterfillResult {
+    /// Chosen rank per spectrum (same order as the input), each in
+    /// `1..=s.len()`.
+    pub ranks: Vec<usize>,
+    /// Largest discarded singular value (0 when nothing was discarded).
+    pub threshold: f64,
+    /// `sqrt(Σ_disc σ² / Σ_all σ²)`: predicted relative Frobenius error
+    /// of the low-rank part.
+    pub predicted_rel_err: f64,
+    /// Planned factor bytes for the kept ranks at 8 bytes/element.
+    pub planned_bytes: usize,
+}
+
+/// A discardable singular value: `(spectrum index, level ≥ 1, σ², bytes)`.
+struct Candidate {
+    spec: usize,
+    sv2: f64,
+    bytes: usize,
+}
+
+/// Solve the operator-wide truncation problem. See the module docs for
+/// the two budget semantics. With an empty spectrum list the result is
+/// trivially empty.
+pub fn waterfill(spectra: &[BlockSpectrum], budget: &CompressBudget) -> WaterfillResult {
+    let elem = std::mem::size_of::<f64>();
+    let total_fro2: f64 = spectra.iter().flat_map(|sp| sp.s.iter().map(|&x| x * x)).sum();
+    let mut ranks: Vec<usize> = spectra.iter().map(|sp| sp.s.len()).collect();
+    if total_fro2 <= 0.0 {
+        let planned_bytes = planned_bytes(spectra, &ranks, elem);
+        return WaterfillResult { ranks, threshold: 0.0, predicted_rel_err: 0.0, planned_bytes };
+    }
+
+    // every level ≥ 1 is a discard candidate; level 0 is mandatory
+    let mut cands: Vec<Candidate> = Vec::new();
+    for (si, sp) in spectra.iter().enumerate() {
+        for &sv in sp.s.iter().skip(1) {
+            cands.push(Candidate { spec: si, sv2: sv * sv, bytes: sp.rank_elems * elem });
+        }
+    }
+
+    let mut discarded2 = 0.0f64;
+    let mut threshold = 0.0f64;
+    match *budget {
+        CompressBudget::RelErr(eps) => {
+            // discard the globally smallest singular mass first while the
+            // cumulative discard stays within ε² · Σ σ²
+            let allowance = (eps * eps) * total_fro2;
+            cands.sort_by(|a, b| a.sv2.total_cmp(&b.sv2));
+            for c in &cands {
+                if discarded2 + c.sv2 > allowance {
+                    break;
+                }
+                discarded2 += c.sv2;
+                ranks[c.spec] -= 1;
+                threshold = threshold.max(c.sv2.sqrt());
+            }
+        }
+        CompressBudget::Bytes(budget_bytes) => {
+            // mandatory rank-1 floor first, then keep the best σ² per byte
+            let mut used: usize = spectra.iter().map(|sp| sp.rank_elems * elem).sum();
+            cands.sort_by(|a, b| {
+                let da = a.sv2 / a.bytes as f64;
+                let db = b.sv2 / b.bytes as f64;
+                db.total_cmp(&da)
+            });
+            // everything starts discarded; buy back in value order. A
+            // candidate that does not fit is SKIPPED, not a stopping
+            // point: a cheaper block's level further down may still fit
+            // and use up the remaining budget. Within one block all
+            // levels cost the same, so the kept set per block stays a
+            // prefix and count-based ranks remain valid.
+            for r in &mut ranks {
+                *r = 1;
+            }
+            discarded2 = cands.iter().map(|c| c.sv2).sum();
+            for c in &cands {
+                if used + c.bytes > budget_bytes {
+                    // stays discarded — the largest such σ is the threshold
+                    threshold = threshold.max(c.sv2.sqrt());
+                    continue;
+                }
+                used += c.bytes;
+                ranks[c.spec] += 1;
+                discarded2 -= c.sv2;
+            }
+        }
+    }
+    let predicted_rel_err = (discarded2 / total_fro2).sqrt();
+    let planned_bytes = planned_bytes(spectra, &ranks, elem);
+    WaterfillResult { ranks, threshold, predicted_rel_err, planned_bytes }
+}
+
+fn planned_bytes(spectra: &[BlockSpectrum], ranks: &[usize], elem: usize) -> usize {
+    spectra.iter().zip(ranks).map(|(sp, &r)| r * sp.rank_elems * elem).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(batch: usize, block: usize, rank_elems: usize, s: &[f64]) -> BlockSpectrum {
+        BlockSpectrum { batch, block, rank_elems, s: s.to_vec() }
+    }
+
+    #[test]
+    fn rel_err_budget_discards_smallest_mass_globally() {
+        // block A has a steep spectrum, block B a flat one: the budget
+        // must starve A's tail before touching B's head.
+        let spectra = vec![
+            spec(0, 0, 100, &[10.0, 1e-6, 1e-7, 1e-8]),
+            spec(0, 1, 100, &[5.0, 4.0, 3.0, 2.0]),
+        ];
+        let plan = waterfill(&spectra, &CompressBudget::RelErr(1e-5));
+        assert_eq!(plan.ranks[0], 1, "steep block must drop its tail");
+        assert_eq!(plan.ranks[1], 4, "flat block must keep everything");
+        assert!(plan.predicted_rel_err <= 1e-5, "{}", plan.predicted_rel_err);
+        assert!(plan.threshold >= 1e-7 && plan.threshold < 1e-5, "{}", plan.threshold);
+    }
+
+    #[test]
+    fn zero_budget_keeps_everything() {
+        let spectra = vec![spec(0, 0, 10, &[3.0, 2.0, 1.0])];
+        let plan = waterfill(&spectra, &CompressBudget::RelErr(0.0));
+        assert_eq!(plan.ranks, vec![3]);
+        assert_eq!(plan.threshold, 0.0);
+        assert_eq!(plan.predicted_rel_err, 0.0);
+        assert_eq!(plan.planned_bytes, 3 * 10 * 8);
+    }
+
+    #[test]
+    fn byte_budget_buys_best_value_per_byte() {
+        // same σ, but block 1 is 10× cheaper per rank level: the budget
+        // should prefer its levels
+        let spectra = vec![
+            spec(0, 0, 1000, &[10.0, 9.0, 8.0]),
+            spec(0, 1, 100, &[10.0, 9.0, 8.0]),
+        ];
+        // floor: (1000 + 100) * 8 = 8800; leave room for block 1's two
+        // extra levels (2 * 100 * 8 = 1600) but not block 0's
+        let plan = waterfill(&spectra, &CompressBudget::Bytes(8800 + 1600));
+        assert_eq!(plan.ranks[1], 3, "cheap block keeps full rank");
+        assert_eq!(plan.ranks[0], 1, "expensive block truncated to the floor");
+        assert!(plan.planned_bytes <= 8800 + 1600);
+        assert!(plan.threshold >= 9.0, "dropped σ must set the threshold: {}", plan.threshold);
+    }
+
+    #[test]
+    fn infeasible_byte_budget_keeps_rank_one_floor() {
+        let spectra = vec![spec(0, 0, 100, &[2.0, 1.0]), spec(1, 3, 100, &[2.0, 1.0])];
+        let plan = waterfill(&spectra, &CompressBudget::Bytes(10));
+        assert_eq!(plan.ranks, vec![1, 1], "floor is never sold");
+        assert!(plan.planned_bytes > 10, "infeasibility must be visible");
+    }
+
+    #[test]
+    fn generous_byte_budget_keeps_everything() {
+        let spectra = vec![spec(0, 0, 50, &[3.0, 2.0, 1.0])];
+        let plan = waterfill(&spectra, &CompressBudget::Bytes(1 << 30));
+        assert_eq!(plan.ranks, vec![3]);
+        assert_eq!(plan.threshold, 0.0);
+        assert_eq!(plan.predicted_rel_err, 0.0);
+    }
+
+    #[test]
+    fn empty_spectra_are_trivial() {
+        let plan = waterfill(&[], &CompressBudget::RelErr(1e-3));
+        assert!(plan.ranks.is_empty());
+        assert_eq!(plan.planned_bytes, 0);
+    }
+}

@@ -64,7 +64,10 @@ pub trait BatchEngine {
     ///
     /// The default loops columns through `dense_matvec` so every engine is
     /// multi-RHS capable (the XLA engine's artifacts are single-RHS);
-    /// engines with a fused mat-mat kernel override it.
+    /// engines with a fused mat-mat kernel override it. Every default
+    /// (columnwise) call is counted under `runtime.matmat_fallback` in
+    /// [`crate::metrics::RECORDER`] so the missing multi-RHS XLA
+    /// artifacts stay observable instead of silent.
     fn dense_matmat(
         &self,
         points: &PointSet,
@@ -74,20 +77,12 @@ pub trait BatchEngine {
         nrhs: usize,
         z: &AtomicF64Vec,
     ) {
-        let n = points.len();
-        for c in 0..nrhs {
-            let zc = AtomicF64Vec::zeros(n);
-            self.dense_matvec(points, kernel, blocks, &x[c * n..(c + 1) * n], &zc);
-            for (i, v) in zc.into_vec().into_iter().enumerate() {
-                if v != 0.0 {
-                    z.add(c * n + i, v);
-                }
-            }
-        }
+        columnwise_dense_matmat(self, points, kernel, blocks, x, nrhs, z);
     }
 
     /// Multi-RHS variant of [`BatchEngine::aca_matvec`] (same column-major
-    /// layout and columnwise default as [`BatchEngine::dense_matmat`]).
+    /// layout, columnwise default and fallback counter as
+    /// [`BatchEngine::dense_matmat`]).
     #[allow(clippy::too_many_arguments)]
     fn aca_matmat(
         &self,
@@ -99,19 +94,61 @@ pub trait BatchEngine {
         nrhs: usize,
         z: &AtomicF64Vec,
     ) {
-        let n = points.len();
-        for c in 0..nrhs {
-            let zc = AtomicF64Vec::zeros(n);
-            self.aca_matvec(points, kernel, k, blocks, &x[c * n..(c + 1) * n], &zc);
-            for (i, v) in zc.into_vec().into_iter().enumerate() {
-                if v != 0.0 {
-                    z.add(c * n + i, v);
-                }
-            }
-        }
+        columnwise_aca_matmat(self, points, kernel, k, blocks, x, nrhs, z);
     }
 
     fn name(&self) -> &'static str;
+}
+
+/// The columnwise mat-mat fallback behind the [`BatchEngine::dense_matmat`]
+/// default: one `dense_matvec` per RHS column. Counted under
+/// `runtime.matmat_fallback` (ROADMAP follow-up: multi-RHS XLA artifacts).
+pub fn columnwise_dense_matmat<E: BatchEngine + ?Sized>(
+    engine: &E,
+    points: &PointSet,
+    kernel: Kernel,
+    blocks: &[WorkItem],
+    x: &[f64],
+    nrhs: usize,
+    z: &AtomicF64Vec,
+) {
+    crate::metrics::RECORDER.incr("runtime.matmat_fallback");
+    let n = points.len();
+    for c in 0..nrhs {
+        let zc = AtomicF64Vec::zeros(n);
+        engine.dense_matvec(points, kernel, blocks, &x[c * n..(c + 1) * n], &zc);
+        for (i, v) in zc.into_vec().into_iter().enumerate() {
+            if v != 0.0 {
+                z.add(c * n + i, v);
+            }
+        }
+    }
+}
+
+/// Columnwise fallback behind [`BatchEngine::aca_matmat`]; see
+/// [`columnwise_dense_matmat`].
+#[allow(clippy::too_many_arguments)]
+pub fn columnwise_aca_matmat<E: BatchEngine + ?Sized>(
+    engine: &E,
+    points: &PointSet,
+    kernel: Kernel,
+    k: usize,
+    blocks: &[WorkItem],
+    x: &[f64],
+    nrhs: usize,
+    z: &AtomicF64Vec,
+) {
+    crate::metrics::RECORDER.incr("runtime.matmat_fallback");
+    let n = points.len();
+    for c in 0..nrhs {
+        let zc = AtomicF64Vec::zeros(n);
+        engine.aca_matvec(points, kernel, k, blocks, &x[c * n..(c + 1) * n], &zc);
+        for (i, v) in zc.into_vec().into_iter().enumerate() {
+            if v != 0.0 {
+                z.add(c * n + i, v);
+            }
+        }
+    }
 }
 
 /// The native many-core engine.
@@ -297,5 +334,83 @@ mod tests {
         let cfg = HmxConfig::default();
         let e = make_engine(&cfg).unwrap();
         assert_eq!(e.name(), "native");
+    }
+
+    /// An engine that only implements single-RHS applies, so its mat-mats
+    /// go through the trait's columnwise fallback — exactly the XLA
+    /// engine's situation (its artifacts are single-RHS; the ROADMAP
+    /// follow-up). Pins that the fallback matches the native engine's
+    /// fused `matmat` and that the fallback counter fires.
+    struct ColumnwiseOnly(NativeEngine);
+
+    impl BatchEngine for ColumnwiseOnly {
+        fn dense_matvec(
+            &self,
+            points: &PointSet,
+            kernel: Kernel,
+            blocks: &[WorkItem],
+            x: &[f64],
+            z: &AtomicF64Vec,
+        ) {
+            self.0.dense_matvec(points, kernel, blocks, x, z);
+        }
+
+        fn aca_matvec(
+            &self,
+            points: &PointSet,
+            kernel: Kernel,
+            k: usize,
+            blocks: &[WorkItem],
+            x: &[f64],
+            z: &AtomicF64Vec,
+        ) {
+            self.0.aca_matvec(points, kernel, k, blocks, x, z);
+        }
+
+        fn aca_factors(
+            &self,
+            points: &PointSet,
+            kernel: Kernel,
+            k: usize,
+            blocks: &[WorkItem],
+        ) -> AcaFactors {
+            self.0.aca_factors(points, kernel, k, blocks)
+        }
+
+        fn name(&self) -> &'static str {
+            "columnwise-only"
+        }
+    }
+
+    #[test]
+    fn columnwise_matmat_fallback_matches_native_matmat_and_is_counted() {
+        let mut pts = PointSet::halton(1024, 2);
+        let _ = crate::morton::morton_sort(&mut pts);
+        let tree = crate::tree::block::build_block_tree(&pts, 1.5, 64);
+        let kern = Kernel::gaussian();
+        let n = pts.len();
+        let nrhs = 3;
+        let k = 10;
+        let x = crate::util::prng::Xoshiro256::seed(8).vector(n * nrhs);
+        let native = NativeEngine;
+        let fallback = ColumnwiseOnly(NativeEngine);
+        let before = crate::metrics::RECORDER.count("runtime.matmat_fallback");
+
+        let zf = AtomicF64Vec::zeros(n * nrhs);
+        fallback.dense_matmat(&pts, kern, &tree.dense, &x, nrhs, &zf);
+        let zn = AtomicF64Vec::zeros(n * nrhs);
+        native.dense_matmat(&pts, kern, &tree.dense, &x, nrhs, &zn);
+        let err = crate::util::rel_err(&zf.into_vec(), &zn.into_vec());
+        assert!(err < 1e-13, "dense columnwise fallback diverged from fused matmat: {err}");
+
+        let zf = AtomicF64Vec::zeros(n * nrhs);
+        fallback.aca_matmat(&pts, kern, k, &tree.admissible, &x, nrhs, &zf);
+        let zn = AtomicF64Vec::zeros(n * nrhs);
+        native.aca_matmat(&pts, kern, k, &tree.admissible, &x, nrhs, &zn);
+        let err = crate::util::rel_err(&zf.into_vec(), &zn.into_vec());
+        assert!(err < 1e-13, "ACA columnwise fallback diverged from fused matmat: {err}");
+
+        let after = crate::metrics::RECORDER.count("runtime.matmat_fallback");
+        assert!(after >= before + 2, "fallback counter must fire: {before} -> {after}");
     }
 }

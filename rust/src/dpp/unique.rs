@@ -51,7 +51,8 @@ mod tests {
 
     #[test]
     fn all_equal_collapses_to_one() {
-        assert_eq!(unique_sorted(&vec![3u32; 100_000]), vec![3]);
+        let same = vec![3u32; 100_000];
+        assert_eq!(unique_sorted(&same), vec![3]);
     }
 
     #[test]

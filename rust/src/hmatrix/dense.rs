@@ -227,7 +227,8 @@ mod tests {
     fn empty_block_list_is_noop() {
         let pts = PointSet::halton(16, 2);
         let z = AtomicF64Vec::zeros(16);
-        batched_dense_matvec(&pts, Kernel::gaussian(), &[], &vec![1.0; 16], &z);
+        let x = vec![1.0; 16];
+        batched_dense_matvec(&pts, Kernel::gaussian(), &[], &x, &z);
         assert!(z.into_vec().iter().all(|&v| v == 0.0));
     }
 }

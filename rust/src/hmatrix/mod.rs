@@ -20,6 +20,7 @@ pub mod dense;
 
 use crate::aca::batched::AcaFactors;
 use crate::batch::plan::{plan_batches, BatchBudget, BatchPlan, BlockShape};
+use crate::compress::{CompressConfig, CompressStats, PackedFactors};
 use crate::config::HmxConfig;
 use crate::coordinator::{make_engine, BatchEngine};
 use crate::dpp::sequence::{gather_into, scatter};
@@ -45,6 +46,22 @@ pub struct BuildStats {
     pub factor_bytes: usize,
 }
 
+/// P-mode factor storage: the flat build-time layout, or the compacted
+/// (optionally mixed-precision) store produced by [`HMatrix::compress`].
+enum FactorStore {
+    Flat(Vec<AcaFactors>),
+    Packed(Vec<PackedFactors>),
+}
+
+impl FactorStore {
+    fn storage_bytes(&self) -> usize {
+        match self {
+            FactorStore::Flat(fs) => fs.iter().map(|f| f.storage_bytes()).sum(),
+            FactorStore::Packed(ps) => ps.iter().map(|p| p.storage_bytes()).sum(),
+        }
+    }
+}
+
 /// A truncated kernel matrix in H-matrix form.
 pub struct HMatrix {
     /// Points in Morton order.
@@ -60,7 +77,7 @@ pub struct HMatrix {
     pub aca_plan: BatchPlan,
     pub dense_plan: BatchPlan,
     /// P mode: factors per ACA batch.
-    factors: Option<Vec<AcaFactors>>,
+    factors: Option<FactorStore>,
     engine: Box<dyn BatchEngine>,
     pub stats: BuildStats,
 }
@@ -152,7 +169,7 @@ impl HMatrix {
             dense,
             aca_plan,
             dense_plan,
-            factors,
+            factors: factors.map(FactorStore::Flat),
             engine,
             stats,
         })
@@ -247,12 +264,18 @@ impl HMatrix {
                 );
             }
         });
-        // batched low-rank products (§5.4.1): P applies stored factors,
-        // NP recomputes them on the fly (once per mat-mat, not per column).
+        // batched low-rank products (§5.4.1): P applies stored factors
+        // (flat, or packed mixed-precision with in-kernel widening), NP
+        // recomputes them on the fly (once per mat-mat, not per column).
         timed("matvec.aca", || match &self.factors {
-            Some(fs) => {
+            Some(FactorStore::Flat(fs)) => {
                 for (f, &(s, e)) in fs.iter().zip(&self.aca_plan.batches) {
                     f.apply_mat(&self.admissible[s..e], x_m, nrhs, z);
+                }
+            }
+            Some(FactorStore::Packed(ps)) => {
+                for (p, &(s, e)) in ps.iter().zip(&self.aca_plan.batches) {
+                    p.apply_mat(&self.admissible[s..e], x_m, nrhs, z);
                 }
             }
             None => {
@@ -277,14 +300,16 @@ impl HMatrix {
         self.engine.name()
     }
 
-    /// Compression ratio: H-matrix storage / dense storage. In P mode the
+    /// Compression ratio: H-matrix storage / dense storage, in *elements*
+    /// (see [`HMatrix::factor_bytes`] for the byte-honest P-mode
+    /// footprint, which additionally reflects f32 storage). In P mode the
     /// *actually stored* factor ranks are counted — after ACA early
-    /// termination or recompression they can be well below `cfg.k`; NP
-    /// mode uses the would-be fixed-rank storage.
+    /// termination, recompression or [`HMatrix::compress`] they can be
+    /// well below `cfg.k`; NP mode uses the would-be fixed-rank storage.
     pub fn compression_ratio(&self) -> f64 {
         let dense_elems: usize = self.dense.iter().map(|w| w.elems()).sum();
         let lowrank_elems: usize = match &self.factors {
-            Some(fs) => fs
+            Some(FactorStore::Flat(fs)) => fs
                 .iter()
                 .zip(&self.aca_plan.batches)
                 .map(|(f, &(s, e))| {
@@ -295,14 +320,65 @@ impl HMatrix {
                         .sum::<usize>()
                 })
                 .sum(),
+            Some(FactorStore::Packed(ps)) => ps.iter().map(|p| p.stored_elems()).sum(),
             None => self.admissible.iter().map(|w| self.cfg.k * (w.rows() + w.cols())).sum(),
         };
         (dense_elems + lowrank_elems) as f64 / (self.cfg.n as f64 * self.cfg.n as f64)
     }
 
+    /// Current P-mode factor bytes actually held (0 in NP mode). Tracks
+    /// the live store — after [`HMatrix::compress`] this is the packed
+    /// (possibly mixed-precision) footprint, not the build-time one.
+    pub fn factor_bytes(&self) -> usize {
+        self.factors.as_ref().map(|s| s.storage_bytes()).unwrap_or(0)
+    }
+
     /// True if this instance holds pre-computed factors (P mode).
     pub fn is_precomputed(&self) -> bool {
         self.factors.is_some()
+    }
+
+    /// True once [`HMatrix::compress`] has replaced the flat factor
+    /// layout with the packed store.
+    pub fn is_compressed(&self) -> bool {
+        matches!(self.factors, Some(FactorStore::Packed(_)))
+    }
+
+    /// Operator-wide budgeted compression (see [`crate::compress`]): one
+    /// global waterfilling across every admissible block's core spectrum,
+    /// then a compacted (optionally mixed-precision) factor store. Works
+    /// on already-compressed operators too — the packed store is widened
+    /// back to the flat layout first, so a governor can tighten budgets
+    /// repeatedly. P mode only; NP operators hold no factors to compress.
+    ///
+    /// The apply API is unchanged: subsequent
+    /// [`HMatrix::matvec`] / [`HMatrix::matmat`] calls run the packed
+    /// kernels (f32 stripes widened to f64 in the inner loops) and agree
+    /// with the uncompressed operator within the advertised bound (1.5 ε
+    /// relative Frobenius on the low-rank part for
+    /// [`crate::compress::CompressBudget::RelErr`]).
+    pub fn compress(&mut self, cfg: &CompressConfig) -> Result<CompressStats> {
+        let Some(store) = self.factors.take() else {
+            return Err(crate::Error::Config(
+                "compress requires a precomputed (P-mode) operator; build with precompute: true"
+                    .into(),
+            ));
+        };
+        let bytes_held = store.storage_bytes();
+        let batch_blocks: Vec<&[WorkItem]> =
+            self.aca_plan.batches.iter().map(|&(s, e)| &self.admissible[s..e]).collect();
+        let mut flat: Vec<AcaFactors> = match store {
+            FactorStore::Flat(fs) => fs,
+            FactorStore::Packed(ps) => {
+                ps.iter().zip(&batch_blocks).map(|(p, blocks)| p.unpack(blocks)).collect()
+            }
+        };
+        let (packed, mut stats) =
+            crate::compress::compress_batches(&mut flat, &batch_blocks, cfg);
+        stats.bytes_before = bytes_held;
+        self.stats.factor_bytes = stats.bytes_after;
+        self.factors = Some(FactorStore::Packed(packed));
+        Ok(stats)
     }
 }
 
@@ -488,6 +564,99 @@ mod tests {
         // NP mode still reports the would-be fixed-rank storage
         let np = HMatrix::build(PointSet::halton(base.n, base.dim), &cfg(1024)).unwrap();
         assert!(np.compression_ratio() >= r_rc);
+    }
+
+    #[test]
+    fn compress_meets_error_budget_and_shrinks_storage() {
+        let c = HmxConfig { precompute: true, ..cfg(2048) };
+        let pts = PointSet::halton(c.n, c.dim);
+        let mut h = HMatrix::build(pts, &c).unwrap();
+        let mut rng = crate::util::prng::Xoshiro256::seed(31);
+        let x = rng.vector(c.n);
+        let before = h.matvec(&x).unwrap();
+        let bytes_before = h.factor_bytes();
+        assert!(bytes_before > 0);
+        let ratio_before = h.compression_ratio();
+
+        let eps = 1e-6;
+        let stats = h.compress(&crate::compress::CompressConfig::rel_err(eps)).unwrap();
+        assert!(h.is_compressed());
+        assert_eq!(stats.bytes_before, bytes_before);
+        assert_eq!(stats.bytes_after, h.factor_bytes());
+        assert!(
+            stats.bytes_after * 2 <= bytes_before,
+            "expected >= 2x byte reduction: {} -> {}",
+            bytes_before,
+            stats.bytes_after
+        );
+        assert!(stats.predicted_rel_err <= eps, "{}", stats.predicted_rel_err);
+        assert!(stats.f32_blocks > 0, "mixed storage should demote at eps = 1e-6");
+        assert!(h.compression_ratio() <= ratio_before);
+
+        // advertised bound: 1.5 eps (truncation eps + mixed-precision term)
+        let after = h.matvec(&x).unwrap();
+        let err = crate::util::rel_err(&after, &before);
+        assert!(err < 1.5 * eps, "advertised error bound violated: {err}");
+    }
+
+    #[test]
+    fn compress_respects_byte_budget() {
+        let c = HmxConfig { precompute: true, ..cfg(1024) };
+        let mut h = HMatrix::build(PointSet::halton(c.n, c.dim), &c).unwrap();
+        let before = h.factor_bytes();
+        let budget = before / 3;
+        let stats = h.compress(&crate::compress::CompressConfig::bytes(budget)).unwrap();
+        assert!(
+            stats.bytes_after <= budget,
+            "byte budget exceeded: {} > {budget}",
+            stats.bytes_after
+        );
+        assert_eq!(h.factor_bytes(), stats.bytes_after);
+        // the operator stays usable under the tighter budget
+        let mut rng = crate::util::prng::Xoshiro256::seed(32);
+        let x = rng.vector(c.n);
+        let y = h.matvec(&x).unwrap();
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn repeated_compression_tightens_monotonically() {
+        // the governor tightens already-compressed victims: a second pass
+        // on the packed store must keep shrinking
+        let c = HmxConfig { precompute: true, ..cfg(1024) };
+        let mut h = HMatrix::build(PointSet::halton(c.n, c.dim), &c).unwrap();
+        let s1 = h.compress(&crate::compress::CompressConfig::rel_err(1e-10)).unwrap();
+        let target = s1.bytes_after / 2;
+        let s2 = h.compress(&crate::compress::CompressConfig::bytes(target)).unwrap();
+        assert_eq!(s2.bytes_before, s1.bytes_after, "second pass starts from the packed bytes");
+        assert!(s2.bytes_after <= target, "{} > {target}", s2.bytes_after);
+    }
+
+    #[test]
+    fn compress_requires_p_mode() {
+        let c = cfg(512);
+        let mut h = HMatrix::build(PointSet::halton(c.n, c.dim), &c).unwrap();
+        assert!(h.compress(&crate::compress::CompressConfig::rel_err(1e-6)).is_err());
+        assert!(!h.is_compressed());
+        // the operator still applies (NP path recomputes factors)
+        let x = vec![1.0; c.n];
+        assert!(h.matvec(&x).is_ok());
+    }
+
+    #[test]
+    fn compressed_matmat_matches_columnwise_matvec() {
+        let c = HmxConfig { precompute: true, ..cfg(512) };
+        let mut h = HMatrix::build(PointSet::halton(c.n, c.dim), &c).unwrap();
+        h.compress(&crate::compress::CompressConfig::rel_err(1e-7)).unwrap();
+        let nrhs = 4;
+        let mut rng = crate::util::prng::Xoshiro256::seed(33);
+        let x = rng.vector(c.n * nrhs);
+        let y = h.matmat(&x, nrhs).unwrap();
+        for col in 0..nrhs {
+            let yc = h.matvec(&x[col * c.n..(col + 1) * c.n]).unwrap();
+            let err = crate::util::rel_err(&y[col * c.n..(col + 1) * c.n], &yc);
+            assert!(err < 1e-12, "col {col}: {err}");
+        }
     }
 
     #[test]

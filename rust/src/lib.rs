@@ -93,11 +93,57 @@
 //! let snap = handle.stats().snapshot();
 //! println!("occupancy {:.2}, p99 wait {:?}", snap.mean_occupancy, snap.wait_p99);
 //! ```
+//!
+//! ## Memory & compression
+//!
+//! P-mode factor storage is the design's dominant memory constraint
+//! (§5.4/§6.1). The [`compress`] module manages it operator-wide:
+//!
+//! * **Budget semantics** — [`HMatrix::compress`] solves ONE waterfilling
+//!   problem over every admissible block's core spectrum.
+//!   [`compress::CompressBudget::RelErr`]`(ε)` discards the globally
+//!   smallest singular mass with `Σ_disc σ² ≤ ε² Σ σ²` (at most ε
+//!   relative Frobenius change of the low-rank part);
+//!   [`compress::CompressBudget::Bytes`] keeps the best σ²-per-byte rank
+//!   levels under an explicit byte ceiling (planned at 8 bytes/element,
+//!   so mixed/f32 stores land at or under it whenever the rank-1 floor
+//!   fits).
+//! * **f32 error model** — [`compress::StorageMode::Mixed`] stores a
+//!   block's U/V factors in f32 only when its σ₁ keeps the f32 roundoff
+//!   (≈ 1.2e-7 · σ₁) below a quarter of the truncation allowance, and in
+//!   f64 where σ₁ demands it; the batched kernels widen f32 stripes to
+//!   f64 in the inner loops. Advertised bound: 1.5 ε relative Frobenius
+//!   on the low-rank part.
+//! * **Governor policy** — a [`compress::MemoryGovernor`] attached via
+//!   [`serve::OperatorRegistry::with_governor`] enforces a cross-tenant
+//!   factor-byte ceiling: on over-budget admission it recompresses the
+//!   coldest compressible tenants toward tighter byte budgets (floored
+//!   per step), then evicts idle LRU tenants (in-flight batches drain;
+//!   the tenant rebuilds on its next
+//!   [`serve::OperatorRegistry::get_or_build`]), and only if the incoming
+//!   operator cannot fit even alone rejects it with
+//!   [`serve::ServeError::OverBudget`]. Decisions are observable via
+//!   [`compress::MemoryGovernor::snapshot`] and the
+//!   `governor.recompress` / `governor.evict` / `governor.reject`
+//!   counters in [`metrics::RECORDER`].
+//!
+//! ```no_run
+//! use hmx::prelude::*;
+//!
+//! let cfg = HmxConfig { n: 1 << 14, dim: 2, k: 16, precompute: true, ..HmxConfig::default() };
+//! let mut h = HMatrix::build(PointSet::halton(cfg.n, cfg.dim), &cfg).unwrap();
+//! let stats = h.compress(&CompressConfig::rel_err(1e-6)).unwrap();
+//! println!(
+//!     "factor bytes {} -> {} ({} of {} blocks in f32)",
+//!     stats.bytes_before, stats.bytes_after, stats.f32_blocks, stats.blocks
+//! );
+//! ```
 
 pub mod aca;
 pub mod baseline;
 pub mod batch;
 pub mod bbox;
+pub mod compress;
 pub mod config;
 pub mod coordinator;
 pub mod dpp;
@@ -116,6 +162,10 @@ pub mod prelude {
     pub use crate::aca::seq::{aca_fixed_rank, aca_with_tolerance};
     pub use crate::baseline::dense::DenseOperator;
     pub use crate::baseline::h2lib_like::SequentialHMatrix;
+    pub use crate::compress::{
+        CompressBudget, CompressConfig, CompressStats, GovernorConfig, MemoryGovernor,
+        StorageMode,
+    };
     pub use crate::config::{EngineKind, HmxConfig, KernelKind};
     pub use crate::geometry::kernel::Kernel;
     pub use crate::geometry::points::PointSet;

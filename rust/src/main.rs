@@ -8,7 +8,10 @@
 //!
 //! Common flags: --n, --d, --kernel {gaussian,matern,exponential}, --k,
 //! --c-leaf, --eta, --bs-dense, --bs-aca, --engine {native,xla},
-//! --precompute, --no-batching, --artifacts DIR, --seed, --trials.
+//! --precompute, --no-batching, --recompress-eps EPS, --artifacts DIR,
+//! --seed, --trials. With `--precompute --recompress-eps 1e-8` the
+//! Bebendorf–Kunis pass runs at build time and shows up as the
+//! `compress.pass` phase in `hmx phases`.
 
 use hmx::config::{EngineKind, HmxConfig, KernelKind};
 use hmx::prelude::*;
@@ -30,6 +33,7 @@ fn config_from(args: &Args) -> HmxConfig {
         seed: args.get("seed", 42u64),
         precompute: args.has("precompute"),
         batching: !args.has("no-batching"),
+        recompress_eps: args.has("recompress-eps").then(|| args.get("recompress-eps", 1e-8f64)),
         artifacts_dir: args.get_str("artifacts", "artifacts"),
         ..HmxConfig::default()
     };

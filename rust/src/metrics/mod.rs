@@ -51,6 +51,19 @@ impl Recorder {
         out
     }
 
+    /// Count an event under `phase` without timing it (zero-duration add).
+    /// Event counters (`runtime.matmat_fallback`, `governor.evict`, …)
+    /// surface through the count column of [`Recorder::stats`] and
+    /// `hmx phases` next to the timed phases.
+    pub fn incr(&self, phase: &str) {
+        self.add(phase, Duration::ZERO);
+    }
+
+    /// Total event/call count recorded under `phase` (zero if never seen).
+    pub fn count(&self, phase: &str) -> u64 {
+        self.phases.lock().unwrap().get(phase).map(|e| e.1).unwrap_or(0)
+    }
+
     /// Total accumulated duration for `phase` (zero if never recorded).
     pub fn total(&self, phase: &str) -> Duration {
         self.phases.lock().unwrap().get(phase).map(|e| e.0).unwrap_or(Duration::ZERO)
@@ -203,6 +216,19 @@ mod tests {
         assert_eq!(w.count, 1);
         assert_eq!(w.mean, Duration::from_millis(1));
         assert!(r.stat("missing").is_none());
+    }
+
+    #[test]
+    fn incr_counts_events_without_time() {
+        let r = Recorder::new();
+        assert_eq!(r.count("evt"), 0);
+        r.incr("evt");
+        r.incr("evt");
+        assert_eq!(r.count("evt"), 2);
+        assert_eq!(r.total("evt"), Duration::ZERO);
+        let s = r.stat("evt").unwrap();
+        assert_eq!(s.count, 2);
+        assert_eq!(s.mean, Duration::ZERO);
     }
 
     #[test]

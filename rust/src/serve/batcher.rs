@@ -22,10 +22,37 @@ use std::time::{Duration, Instant};
 
 use super::telemetry::BatcherStats;
 use super::{ServeConfig, ServeError};
+use crate::compress::{CompressConfig, CompressStats};
 use crate::metrics::RECORDER;
 
 /// What a client gets back: its result column or a serving error.
 type Response = Result<Vec<f64>, ServeError>;
+
+/// Out-of-band commands handled by the executor thread *between*
+/// batches (in-flight batches always finish first). This is how a
+/// non-`Send` operator gets mutated in place after it moved onto its
+/// executor: the memory governor's recompressions travel this channel.
+pub enum Control {
+    /// Run an operator-wide compression pass and reply with its stats.
+    Compress {
+        cfg: CompressConfig,
+        reply: mpsc::Sender<crate::Result<CompressStats>>,
+    },
+}
+
+impl Control {
+    /// Reply that this operator has no control support (the plain
+    /// [`DynamicBatcher::spawn`] path for arbitrary apply closures).
+    fn reject(self) {
+        match self {
+            Control::Compress { reply, .. } => {
+                let _ = reply.send(Err(crate::Error::Config(
+                    "operator does not support compression control".into(),
+                )));
+            }
+        }
+    }
+}
 
 /// One queued submission.
 struct Request {
@@ -158,6 +185,7 @@ impl BatcherClient {
 pub struct DynamicBatcher {
     client: BatcherClient,
     shutdown: Arc<AtomicBool>,
+    ctl_tx: mpsc::Sender<Control>,
     executor: Option<thread::JoinHandle<()>>,
 }
 
@@ -167,17 +195,40 @@ impl DynamicBatcher {
     /// `(x, nrhs) -> y` (column-major `n × nrhs` in and out) — this is how
     /// a non-`Send` operator (engine, workspace) gets constructed in place.
     /// Blocks until the build finishes; a build error is returned here and
-    /// the thread is reaped.
+    /// the thread is reaped. Control commands are rejected; use
+    /// [`DynamicBatcher::spawn_with_control`] for operators that support
+    /// them.
     pub fn spawn<B, A>(n: usize, cfg: ServeConfig, build: B) -> Result<Self, ServeError>
     where
         B: FnOnce() -> crate::Result<A> + Send + 'static,
         A: FnMut(&[f64], usize) -> crate::Result<Vec<f64>> + 'static,
+    {
+        Self::spawn_with_control(n, cfg, move || {
+            build().map(|a| (a, |cmd: Control| cmd.reject()))
+        })
+    }
+
+    /// Like [`DynamicBatcher::spawn`], but `build` additionally returns a
+    /// control handler that runs on the executor thread between batches —
+    /// the hook the registry uses to recompress a live operator in place
+    /// (see [`Control`]). In-flight batches always complete before a
+    /// command runs; queued requests are served right after it.
+    pub fn spawn_with_control<B, A, C>(
+        n: usize,
+        cfg: ServeConfig,
+        build: B,
+    ) -> Result<Self, ServeError>
+    where
+        B: FnOnce() -> crate::Result<(A, C)> + Send + 'static,
+        A: FnMut(&[f64], usize) -> crate::Result<Vec<f64>> + 'static,
+        C: FnMut(Control) + 'static,
     {
         cfg.validate()?;
         if n == 0 {
             return Err(ServeError::BadRequest("operator dimension must be positive".into()));
         }
         let (tx, rx) = mpsc::sync_channel(cfg.queue_capacity);
+        let (ctl_tx, ctl_rx) = mpsc::channel::<Control>();
         let stats = Arc::new(BatcherStats::new());
         let shutdown = Arc::new(AtomicBool::new(false));
         let (btx, brx) = mpsc::channel::<Result<(), ServeError>>();
@@ -186,17 +237,26 @@ impl DynamicBatcher {
         let executor = thread::Builder::new()
             .name("hmx-serve-executor".to_string())
             .spawn(move || {
-                let mut apply = match build() {
-                    Ok(a) => {
+                let (mut apply, mut control) = match build() {
+                    Ok(parts) => {
                         let _ = btx.send(Ok(()));
-                        a
+                        parts
                     }
                     Err(e) => {
                         let _ = btx.send(Err(ServeError::Build(e.to_string())));
                         return;
                     }
                 };
-                run_executor(&rx, n, &cfg, &stats_ex, &shutdown_ex, &mut apply);
+                run_executor(
+                    &rx,
+                    &ctl_rx,
+                    n,
+                    &cfg,
+                    &stats_ex,
+                    &shutdown_ex,
+                    &mut apply,
+                    &mut control,
+                );
             })
             .map_err(|e| ServeError::Build(format!("failed to spawn executor thread: {e}")))?;
         let built = brx
@@ -209,8 +269,27 @@ impl DynamicBatcher {
         Ok(DynamicBatcher {
             client: BatcherClient { tx, n, stats, shutdown: Arc::clone(&shutdown) },
             shutdown,
+            ctl_tx,
             executor: Some(executor),
         })
+    }
+
+    /// Ask the executor to recompress its operator in place (see
+    /// [`crate::hmatrix::HMatrix::compress`]); blocks until the pass ran
+    /// between batches and returns its stats. Operators spawned without
+    /// control support (plain [`DynamicBatcher::spawn`]) fail with
+    /// [`ServeError::Apply`]; a shut-down executor with
+    /// [`ServeError::Shutdown`].
+    pub fn compress(&self, cfg: CompressConfig) -> Result<CompressStats, ServeError> {
+        let (reply, rx) = mpsc::channel();
+        self.ctl_tx
+            .send(Control::Compress { cfg, reply })
+            .map_err(|_| ServeError::Shutdown)?;
+        match rx.recv() {
+            Ok(Ok(stats)) => Ok(stats),
+            Ok(Err(e)) => Err(ServeError::Apply(format!("compress failed: {e}"))),
+            Err(_) => Err(ServeError::Shutdown),
+        }
     }
 
     /// A new submission endpoint for a client thread.
@@ -241,19 +320,29 @@ impl Drop for DynamicBatcher {
     }
 }
 
-/// Executor main loop: pick up the oldest request, coalesce, flush.
-fn run_executor<A>(
+/// Executor main loop: handle pending control commands, pick up the
+/// oldest request, coalesce, flush.
+#[allow(clippy::too_many_arguments)]
+fn run_executor<A, C>(
     rx: &mpsc::Receiver<Request>,
+    ctl_rx: &mpsc::Receiver<Control>,
     n: usize,
     cfg: &ServeConfig,
     stats: &BatcherStats,
     shutdown: &AtomicBool,
     apply: &mut A,
+    control: &mut C,
 ) where
     A: FnMut(&[f64], usize) -> crate::Result<Vec<f64>>,
+    C: FnMut(Control),
 {
     let mut xbuf: Vec<f64> = Vec::new();
     loop {
+        // control commands run between batches (never inside one); the
+        // idle poll bounds their pickup latency at IDLE_POLL
+        while let Ok(cmd) = ctl_rx.try_recv() {
+            control(cmd);
+        }
         if shutdown.load(Ordering::Acquire) {
             // graceful drain: serve the backlog in full batches, then exit
             while let Ok(first) = rx.try_recv() {
@@ -287,6 +376,13 @@ fn run_executor<A>(
             // and the outer loop enters the drain
             if deadline.is_some_and(|d| now >= d) || shutdown.load(Ordering::Acquire) {
                 break;
+            }
+            // control pickup must stay IDLE_POLL-bounded even while this
+            // straggler wait is pinned open by a huge max_wait: a blocked
+            // governor compress would otherwise hold the registry lock
+            // until the next flush
+            while let Ok(cmd) = ctl_rx.try_recv() {
+                control(cmd);
             }
             let wait = deadline.map_or(IDLE_POLL, |d| (d - now).min(IDLE_POLL));
             match rx.recv_timeout(wait) {
@@ -510,6 +606,43 @@ mod tests {
         assert_eq!(y[1], 2.0);
         let err = client.matvec(&[1.0; 4]).unwrap_err();
         assert_eq!(err, ServeError::Shutdown);
+    }
+
+    #[test]
+    fn control_commands_reach_the_handler_between_batches() {
+        let n = 4;
+        let b = DynamicBatcher::spawn_with_control(n, ServeConfig::default(), move || {
+            let apply = move |x: &[f64], nrhs: usize| Ok(diag_apply(x, nrhs, n));
+            let control = move |cmd: Control| match cmd {
+                Control::Compress { reply, .. } => {
+                    let _ = reply.send(Ok(crate::compress::CompressStats {
+                        blocks: 7,
+                        ..Default::default()
+                    }));
+                }
+            };
+            Ok((apply, control))
+        })
+        .unwrap();
+        // requests are served around control commands
+        let y = b.matvec(&[1.0; n]).unwrap();
+        assert_eq!(y[3], 4.0);
+        let stats = b.compress(crate::compress::CompressConfig::rel_err(1e-6)).unwrap();
+        assert_eq!(stats.blocks, 7, "handler's reply must round-trip");
+        let y = b.matvec(&[2.0; n]).unwrap();
+        assert_eq!(y[0], 2.0);
+    }
+
+    #[test]
+    fn plain_spawn_rejects_control_commands() {
+        let b = diag_batcher(4, ServeConfig::default());
+        let err = b.compress(crate::compress::CompressConfig::rel_err(1e-6)).unwrap_err();
+        assert!(
+            matches!(err, ServeError::Apply(ref m) if m.contains("compression control")),
+            "{err:?}"
+        );
+        // the executor keeps serving afterwards
+        assert!(b.matvec(&[1.0; 4]).is_ok());
     }
 
     #[test]

@@ -28,6 +28,12 @@
 //! * Backpressure — the submission queue is bounded
 //!   ([`ServeConfig::queue_capacity`]); overflow is shed immediately with
 //!   [`ServeError::Overloaded`] instead of blocking or deadlocking.
+//! * Memory governance — an optional [`crate::compress::MemoryGovernor`]
+//!   ([`OperatorRegistry::with_governor`]) enforces a cross-tenant
+//!   P-mode factor-byte ceiling: over-budget admissions trigger in-place
+//!   recompression of the coldest operators (a [`Control`] command
+//!   handled by the executor between batches), then idle-LRU eviction,
+//!   and as a last resort rejection with [`ServeError::OverBudget`].
 //! * Telemetry — per-request wait and per-batch apply latency (p50/p99),
 //!   batch occupancy, queue depth and shed counts via [`BatcherStats`],
 //!   mirrored into the global [`crate::metrics::RECORDER`] under the
@@ -37,7 +43,7 @@ pub mod batcher;
 pub mod registry;
 pub mod telemetry;
 
-pub use batcher::{BatcherClient, DynamicBatcher, Ticket};
+pub use batcher::{BatcherClient, Control, DynamicBatcher, Ticket};
 pub use registry::{OperatorHandle, OperatorMeta, OperatorRegistry};
 pub use telemetry::{BatcherStats, ServeSnapshot};
 
@@ -104,4 +110,8 @@ pub enum ServeError {
     /// receives this error.
     #[error("batched apply failed: {0}")]
     Apply(String),
+    /// The memory governor could not fit this operator under the
+    /// cross-tenant byte budget even after compressing and evicting.
+    #[error("over memory budget: {0}")]
+    OverBudget(String),
 }

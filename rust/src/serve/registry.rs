@@ -9,14 +9,30 @@
 //! gather/accumulate scratch allocates nothing after warm-up (the PR 2
 //! reuse contract); the result block is still copied out per flush —
 //! zero-copy flushes are a ROADMAP follow-up.
+//!
+//! With a [`MemoryGovernor`] attached ([`OperatorRegistry::with_governor`])
+//! the registry additionally enforces a cross-tenant ceiling on P-mode
+//! factor bytes: every admission re-runs the governor policy, which
+//! recompresses the coldest compressible operators in place (a
+//! [`super::Control`] command executed between batches on the victim's
+//! executor), evicts idle LRU tenants (graceful drain; the tenant
+//! rebuilds on its next [`OperatorRegistry::get_or_build`]) and, only if
+//! the incoming operator cannot fit even alone, rejects it with
+//! [`ServeError::OverBudget`]. Enforcement runs under the registry lock:
+//! lookups for other tenants stall behind a recompression, but executors
+//! never take this lock, so there is no deadlock.
 
 use std::collections::HashMap;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
-use super::batcher::{BatcherClient, DynamicBatcher, Ticket};
+use super::batcher::{BatcherClient, Control, DynamicBatcher, Ticket};
 use super::telemetry::BatcherStats;
 use super::{ServeConfig, ServeError};
+use crate::compress::{
+    CompressBudget, CompressConfig, GovernorAction, MemoryGovernor, TenantUsage,
+};
 use crate::config::HmxConfig;
 use crate::geometry::points::PointSet;
 use crate::hmatrix::{BuildStats, HMatrix, MatvecWorkspace};
@@ -28,6 +44,9 @@ pub struct OperatorMeta {
     pub n: usize,
     pub engine: String,
     pub compression_ratio: f64,
+    /// Build-time facts, including the P-mode `factor_bytes` at build (0
+    /// in NP mode). The governor may shrink the *live* footprint
+    /// afterwards — see [`OperatorRegistry::factor_bytes`].
     pub build_stats: BuildStats,
 }
 
@@ -69,20 +88,62 @@ impl OperatorHandle {
 }
 
 struct OperatorEntry {
-    // owns the executor thread; dropped on `remove` for a graceful drain
+    // owns the executor thread; dropped on `remove`/eviction for a
+    // graceful drain (queued batches are still served)
     batcher: DynamicBatcher,
     meta: Arc<OperatorMeta>,
+    /// Live P-mode factor bytes (updated by governor recompressions).
+    factor_bytes: usize,
+    /// Milliseconds since the registry epoch of the last register/get —
+    /// or of observed *serving* traffic (see
+    /// [`OperatorRegistry::refresh_activity`]): a tenant busy through
+    /// cached handles is not "idle".
+    last_access: u64,
+    /// Request count last seen on the batcher, to detect serving
+    /// activity that bypasses the registry.
+    seen_requests: u64,
+    /// Set once a governor recompression stopped making progress.
+    floored: bool,
 }
 
 /// Build-once/get-many table of served operators keyed by tenant/model id.
-#[derive(Default)]
 pub struct OperatorRegistry {
     ops: Mutex<HashMap<String, OperatorEntry>>,
+    governor: Option<MemoryGovernor>,
+    epoch: Instant,
+}
+
+impl Default for OperatorRegistry {
+    fn default() -> Self {
+        OperatorRegistry::new()
+    }
 }
 
 impl OperatorRegistry {
     pub fn new() -> Self {
-        OperatorRegistry::default()
+        OperatorRegistry {
+            ops: Mutex::new(HashMap::new()),
+            governor: None,
+            epoch: Instant::now(),
+        }
+    }
+
+    /// A registry whose admissions are policed by `governor` (cross-tenant
+    /// P-mode factor-byte ceiling; see [`crate::compress::governor`]).
+    pub fn with_governor(governor: MemoryGovernor) -> Self {
+        OperatorRegistry {
+            ops: Mutex::new(HashMap::new()),
+            governor: Some(governor),
+            epoch: Instant::now(),
+        }
+    }
+
+    pub fn governor(&self) -> Option<&MemoryGovernor> {
+        self.governor.as_ref()
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
     }
 
     /// Build `id`'s operator on a fresh executor thread and start serving
@@ -124,10 +185,13 @@ impl OperatorRegistry {
         let warm_nrhs = serve_cfg.max_batch;
         let build_cfg = cfg.clone();
         // the H-matrix is built on the executor thread (engines are not
-        // Send); its build-time metadata comes back over this channel
+        // Send); its build-time metadata comes back over this channel.
+        // The operator stays on that thread behind an Rc so the apply
+        // closure and the control handler (in-place recompression) can
+        // share it.
         let (mtx, mrx) = mpsc::channel::<OperatorMeta>();
         let meta_id = id.to_string();
-        let batcher = DynamicBatcher::spawn(n, serve_cfg, move || {
+        let batcher = DynamicBatcher::spawn_with_control(n, serve_cfg, move || {
             let h = HMatrix::build(points, &build_cfg)?;
             let _ = mtx.send(OperatorMeta {
                 id: meta_id,
@@ -136,35 +200,171 @@ impl OperatorRegistry {
                 compression_ratio: h.compression_ratio(),
                 build_stats: h.stats.clone(),
             });
+            let h = std::rc::Rc::new(std::cell::RefCell::new(h));
+            let h_ctl = std::rc::Rc::clone(&h);
             let mut ws = MatvecWorkspace::with_capacity(n, warm_nrhs);
-            Ok(move |x: &[f64], nrhs: usize| {
-                h.matmat_with(x, nrhs, &mut ws).map(|y| y.to_vec())
-            })
+            let apply = move |x: &[f64], nrhs: usize| {
+                h.borrow().matmat_with(x, nrhs, &mut ws).map(|y| y.to_vec())
+            };
+            let control = move |cmd: Control| match cmd {
+                Control::Compress { cfg, reply } => {
+                    let _ = reply.send(h_ctl.borrow_mut().compress(&cfg));
+                }
+            };
+            Ok((apply, control))
         })?;
         let meta = Arc::new(
             mrx.recv()
                 .map_err(|_| ServeError::Build("executor reported no metadata".into()))?,
         );
+        let now = self.now_ms();
         let mut ops = self.ops.lock().unwrap();
-        if let Some(entry) = ops.get(id) {
+        if let Some(entry) = ops.get_mut(id) {
             // lost a same-id race: keep the first registration (dropping
             // our batcher drains its executor gracefully)
+            entry.last_access = now;
             return Ok(OperatorHandle {
                 client: entry.batcher.client(),
                 meta: Arc::clone(&entry.meta),
             });
         }
         let handle = OperatorHandle { client: batcher.client(), meta: Arc::clone(&meta) };
-        ops.insert(id.to_string(), OperatorEntry { batcher, meta });
+        let factor_bytes = meta.build_stats.factor_bytes;
+        ops.insert(
+            id.to_string(),
+            OperatorEntry {
+                batcher,
+                meta,
+                factor_bytes,
+                last_access: now,
+                seen_requests: 0,
+                floored: false,
+            },
+        );
+        self.enforce_budget(&mut ops, id)?;
         Ok(handle)
     }
 
-    /// A handle for a registered operator, if present.
+    /// [`OperatorRegistry::register`] under its serving-loop name: returns
+    /// the live handle when `id` is registered, otherwise builds it —
+    /// including a tenant the governor evicted earlier.
+    pub fn get_or_build(
+        &self,
+        id: &str,
+        points: PointSet,
+        cfg: &HmxConfig,
+        serve_cfg: ServeConfig,
+    ) -> Result<OperatorHandle, ServeError> {
+        self.register(id, points, cfg, serve_cfg)
+    }
+
+    /// Drive the governor policy until the cross-tenant byte total is
+    /// back under budget (no-op without a governor). One action at a
+    /// time, re-snapshotting between steps; see the module docs for the
+    /// policy ladder. Established tenants get ONE recompression per
+    /// episode ("toward a tighter budget"), then the ladder escalates to
+    /// eviction; only the incoming tenant is squeezed repeatedly, since
+    /// rejecting it is the ladder's last rung.
+    fn enforce_budget(
+        &self,
+        ops: &mut HashMap<String, OperatorEntry>,
+        incoming: &str,
+    ) -> Result<(), ServeError> {
+        let Some(gov) = &self.governor else { return Ok(()) };
+        let mut attempted: std::collections::HashSet<String> = std::collections::HashSet::new();
+        // bounded: non-incoming tenants are attempted once each, evictions
+        // remove a tenant each, and the incoming squeeze floors after
+        // O(log_{1/floor}(bytes)) geometric steps — the slack covers it
+        let max_rounds = 2 * ops.len() + 64;
+        for _ in 0..max_rounds {
+            Self::refresh_activity(ops, self.now_ms());
+            let usage: Vec<TenantUsage> = ops
+                .iter()
+                .map(|(id, e)| TenantUsage {
+                    id: id.clone(),
+                    bytes: e.factor_bytes,
+                    last_access_ms: e.last_access,
+                    compressible: !e.floored
+                        && e.factor_bytes > 0
+                        && (id == incoming || !attempted.contains(id)),
+                })
+                .collect();
+            let Some(action) = gov.next_action(&usage, incoming) else {
+                return Ok(());
+            };
+            match action {
+                GovernorAction::Recompress { id, target_bytes } => {
+                    if id != incoming {
+                        attempted.insert(id.clone());
+                    }
+                    let entry = ops.get_mut(&id).expect("governor chose a live tenant");
+                    let cfg = CompressConfig {
+                        budget: CompressBudget::Bytes(target_bytes),
+                        storage: gov.cfg.storage,
+                    };
+                    match entry.batcher.compress(cfg) {
+                        Ok(stats) => {
+                            gov.record_recompress();
+                            // no progress, or the rank-1 floor exceeds the
+                            // target: stop asking this tenant
+                            if stats.bytes_after >= entry.factor_bytes
+                                || stats.bytes_after > target_bytes
+                            {
+                                entry.floored = true;
+                            }
+                            entry.factor_bytes = stats.bytes_after;
+                        }
+                        Err(_) => entry.floored = true, // NP mode / shutdown
+                    }
+                }
+                GovernorAction::Evict { id } => {
+                    gov.record_evict();
+                    // drop drains the executor; in-flight tickets complete
+                    ops.remove(&id);
+                }
+                GovernorAction::Reject { id } => {
+                    gov.record_reject();
+                    ops.remove(&id);
+                    let total: usize = ops.values().map(|e| e.factor_bytes).sum();
+                    gov.record_bytes(total);
+                    return Err(ServeError::OverBudget(format!(
+                        "operator `{id}` does not fit under the {}-byte cross-tenant \
+                         budget even after compression",
+                        gov.cfg.budget_bytes
+                    )));
+                }
+            }
+        }
+        let total: usize = ops.values().map(|e| e.factor_bytes).sum();
+        gov.record_bytes(total);
+        Ok(())
+    }
+
+    /// Fold serving traffic into the LRU stamps: a tenant whose batcher
+    /// served requests since the last look is touched *now*, so the
+    /// governor never evicts an operator that is hot through cached
+    /// [`OperatorHandle`]s it has never re-fetched from the registry.
+    fn refresh_activity(ops: &mut HashMap<String, OperatorEntry>, now: u64) {
+        for e in ops.values_mut() {
+            let served = e.batcher.stats().requests();
+            if served > e.seen_requests {
+                e.seen_requests = served;
+                e.last_access = now;
+            }
+        }
+    }
+
+    /// A handle for a registered operator, if present (refreshes the
+    /// tenant's LRU stamp).
     pub fn get(&self, id: &str) -> Option<OperatorHandle> {
-        let ops = self.ops.lock().unwrap();
-        ops.get(id).map(|entry| OperatorHandle {
-            client: entry.batcher.client(),
-            meta: Arc::clone(&entry.meta),
+        let now = self.now_ms();
+        let mut ops = self.ops.lock().unwrap();
+        ops.get_mut(id).map(|entry| {
+            entry.last_access = now;
+            OperatorHandle {
+                client: entry.batcher.client(),
+                meta: Arc::clone(&entry.meta),
+            }
         })
     }
 
@@ -180,6 +380,12 @@ impl OperatorRegistry {
         let mut v: Vec<String> = ops.keys().cloned().collect();
         v.sort();
         v
+    }
+
+    /// Summed live P-mode factor bytes across tenants — the quantity the
+    /// governor budgets.
+    pub fn factor_bytes(&self) -> usize {
+        self.ops.lock().unwrap().values().map(|e| e.factor_bytes).sum()
     }
 
     /// Drop `id`'s operator: its executor drains the queued backlog and
@@ -202,6 +408,7 @@ impl OperatorRegistry {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::GovernorConfig;
     use crate::util::prng::Xoshiro256;
     use std::sync::Barrier;
     use std::time::Duration;
@@ -212,6 +419,10 @@ mod tests {
     // compression_ratio is exactly 1.0.
     fn test_cfg(n: usize) -> HmxConfig {
         HmxConfig { n, dim: 2, c_leaf: 32, k: 12, ..HmxConfig::default() }
+    }
+
+    fn p_cfg(n: usize) -> HmxConfig {
+        HmxConfig { precompute: true, ..test_cfg(n) }
     }
 
     #[test]
@@ -327,5 +538,176 @@ mod tests {
             "concurrent requests were not coalesced: occupancy {}",
             stats.mean_occupancy()
         );
+    }
+
+    #[test]
+    fn evicted_tenant_rebuilds_on_next_get_or_build() {
+        let cfg = p_cfg(256);
+        let reg = OperatorRegistry::new();
+        let h1 = reg
+            .get_or_build("t", PointSet::halton(cfg.n, cfg.dim), &cfg, ServeConfig::default())
+            .unwrap();
+        assert!(reg.remove("t"), "simulated eviction");
+        assert!(reg.get("t").is_none());
+        // rebuild on next get_or_build: a NEW operator, serving again
+        let h2 = reg
+            .get_or_build("t", PointSet::halton(cfg.n, cfg.dim), &cfg, ServeConfig::default())
+            .unwrap();
+        assert!(!Arc::ptr_eq(&h1.meta, &h2.meta), "eviction must force a rebuild");
+        let x = vec![1.0; cfg.n];
+        assert!(h2.matvec(&x).is_ok());
+        // the pre-eviction handle points at the drained executor
+        assert_eq!(h1.matvec(&x).unwrap_err(), ServeError::Shutdown);
+    }
+
+    #[test]
+    fn inflight_batches_drain_when_tenant_is_evicted() {
+        let cfg = test_cfg(256);
+        let pts = PointSet::halton(cfg.n, cfg.dim);
+        let reference = HMatrix::build(pts.clone(), &cfg).unwrap();
+        let reg = OperatorRegistry::new();
+        let handle = reg.register("t", pts, &cfg, ServeConfig::default()).unwrap();
+        // queue a backlog of non-blocking tickets, then evict: remove()
+        // joins the executor, which must drain every accepted request
+        let tickets: Vec<(u64, Ticket)> = (0..6)
+            .map(|r| {
+                let seed = 500 + r as u64;
+                let x = Xoshiro256::seed(seed).vector(cfg.n);
+                (seed, handle.submit(x).unwrap())
+            })
+            .collect();
+        assert!(reg.remove("t"));
+        for (seed, ticket) in tickets {
+            let served = ticket.wait().expect("in-flight request lost on eviction");
+            let x = Xoshiro256::seed(seed).vector(cfg.n);
+            let direct = reference.matvec(&x).unwrap();
+            let err = crate::util::rel_err(&served, &direct);
+            assert!(err < 1e-12, "seed {seed}: drained result diverged: {err}");
+        }
+        // new work is refused after the drain
+        assert_eq!(handle.matvec(&vec![1.0; cfg.n]).unwrap_err(), ServeError::Shutdown);
+    }
+
+    #[test]
+    fn same_id_rebuild_race_keeps_exactly_one_operator() {
+        let cfg = test_cfg(256);
+        let reg = Arc::new(OperatorRegistry::new());
+        // prime + evict so the race is a REbuild race
+        reg.register("t", PointSet::halton(cfg.n, cfg.dim), &cfg, ServeConfig::default())
+            .unwrap();
+        assert!(reg.remove("t"));
+        let threads = 4;
+        let barrier = Arc::new(Barrier::new(threads));
+        let mut joins = Vec::new();
+        for _ in 0..threads {
+            let reg = Arc::clone(&reg);
+            let cfg = cfg.clone();
+            let barrier = Arc::clone(&barrier);
+            joins.push(std::thread::spawn(move || -> OperatorHandle {
+                barrier.wait();
+                reg.get_or_build(
+                    "t",
+                    PointSet::halton(cfg.n, cfg.dim),
+                    &cfg,
+                    ServeConfig::default(),
+                )
+                .unwrap()
+            }));
+        }
+        let handles: Vec<OperatorHandle> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+        assert_eq!(reg.len(), 1, "exactly one operator must survive the race");
+        // every racer's handle serves, regardless of whose build won
+        let x = Xoshiro256::seed(9).vector(cfg.n);
+        let want = handles[0].matvec(&x).unwrap();
+        for h in &handles[1..] {
+            let got = h.matvec(&x).unwrap();
+            let err = crate::util::rel_err(&got, &want);
+            assert!(err < 1e-12, "racing handles disagree: {err}");
+        }
+    }
+
+    /// The ISSUE's acceptance test: under a deliberately tight budget the
+    /// accounted cross-tenant byte total never exceeds the ceiling, and
+    /// the decisions (recompressions/evictions) are observable.
+    #[test]
+    fn governor_never_exceeds_byte_ceiling_across_tenants() {
+        let cfg = p_cfg(256);
+        // probe one tenant's rank-1 compression floor (an infeasible
+        // 1-byte budget lands exactly there), then grant 1.5 floors: a
+        // deliberately tight ceiling where each admission must squeeze
+        // the newcomer to its floor AND evict the previous tenant
+        let mut probe = HMatrix::build(PointSet::halton(cfg.n, cfg.dim), &cfg).unwrap();
+        assert!(probe.factor_bytes() > 0, "P-mode probe must hold factors");
+        let floor = probe.compress(&CompressConfig::bytes(1)).unwrap().bytes_after;
+        assert!(floor > 0);
+        let budget = floor + floor / 2;
+        let reg = OperatorRegistry::with_governor(MemoryGovernor::new(GovernorConfig::new(
+            budget,
+        )));
+        for t in 0..4 {
+            let id = format!("tenant-{t}");
+            let handle = reg
+                .get_or_build(&id, PointSet::halton(cfg.n, cfg.dim), &cfg, ServeConfig::default())
+                .unwrap_or_else(|e| panic!("tenant {t} admission failed: {e}"));
+            let total = reg.factor_bytes();
+            assert!(
+                total <= budget,
+                "after tenant {t}: {total} bytes exceed the {budget}-byte ceiling"
+            );
+            // the freshly admitted tenant serves correctly right away
+            let x = Xoshiro256::seed(40 + t as u64).vector(cfg.n);
+            let y = handle.matvec(&x).unwrap();
+            assert!(y.iter().all(|v| v.is_finite()));
+        }
+        let snap = reg.governor().unwrap().snapshot();
+        assert!(snap.recompressions > 0, "tight budget must trigger recompressions");
+        assert!(snap.evictions > 0, "4 tenants into 1 tenant's budget must evict: {snap:?}");
+        assert!(snap.bytes_in_use <= budget as u64);
+        assert!(crate::metrics::RECORDER.count("governor.recompress") >= snap.recompressions);
+        // evicted tenants are gone from the registry but rebuild on demand
+        assert!(reg.len() < 4, "evictions must have removed tenants");
+        let survivor_count = reg.len();
+        assert!(survivor_count >= 1);
+        let rebuilt = reg
+            .get_or_build(
+                "tenant-0",
+                PointSet::halton(cfg.n, cfg.dim),
+                &cfg,
+                ServeConfig::default(),
+            )
+            .unwrap();
+        assert!(rebuilt.matvec(&vec![1.0; cfg.n]).is_ok());
+        assert!(reg.factor_bytes() <= budget, "rebuild admission must re-enforce");
+    }
+
+    #[test]
+    fn governor_rejects_an_operator_that_cannot_fit_alone() {
+        let cfg = p_cfg(256);
+        let probe = HMatrix::build(PointSet::halton(cfg.n, cfg.dim), &cfg).unwrap();
+        // far below the rank-1 floor: compression cannot save this tenant
+        let budget = probe.factor_bytes() / 200;
+        let reg =
+            OperatorRegistry::with_governor(MemoryGovernor::with_budget(budget.max(1)));
+        let res =
+            reg.register("huge", PointSet::halton(cfg.n, cfg.dim), &cfg, ServeConfig::default());
+        assert!(matches!(res, Err(ServeError::OverBudget(_))), "{res:?}");
+        assert!(reg.is_empty(), "rejected tenant must not linger");
+        let snap = reg.governor().unwrap().snapshot();
+        assert_eq!(snap.rejections, 1);
+        assert!(snap.recompressions >= 1, "it should have tried compressing first");
+    }
+
+    #[test]
+    fn governor_ignores_np_mode_tenants() {
+        // NP operators hold no factor bytes; a tiny budget must not
+        // reject them
+        let cfg = test_cfg(256);
+        let reg = OperatorRegistry::with_governor(MemoryGovernor::with_budget(1));
+        let h = reg
+            .register("np", PointSet::halton(cfg.n, cfg.dim), &cfg, ServeConfig::default())
+            .unwrap();
+        assert_eq!(h.meta().build_stats.factor_bytes, 0);
+        assert_eq!(reg.factor_bytes(), 0);
+        assert!(h.matvec(&vec![1.0; cfg.n]).is_ok());
     }
 }

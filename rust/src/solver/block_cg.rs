@@ -347,6 +347,55 @@ mod tests {
     }
 
     #[test]
+    fn block_cg_on_compressed_operator_matches_uncompressed() {
+        // the serving solve path after a governor pass: (A + σ²I) X = B
+        // through a budget-truncated, mixed-precision operator must agree
+        // with the uncompressed P-mode solve (σ² keeps the conditioning,
+        // the ε-perturbation moves the solution by O(ε/σ²))
+        use crate::config::HmxConfig;
+        use crate::geometry::points::PointSet;
+        use crate::hmatrix::HMatrix;
+        let cfg = HmxConfig {
+            n: 1024,
+            dim: 2,
+            c_leaf: 64,
+            k: 12,
+            precompute: true,
+            ..HmxConfig::default()
+        };
+        let sigma2 = 1e-3;
+        let s = 3;
+        let pts = PointSet::halton(cfg.n, cfg.dim);
+        let plain = HMatrix::build(pts.clone(), &cfg).unwrap();
+        let mut squeezed = HMatrix::build(pts, &cfg).unwrap();
+        let stats =
+            squeezed.compress(&crate::compress::CompressConfig::rel_err(1e-10)).unwrap();
+        assert!(stats.bytes_after <= stats.bytes_before);
+        assert!(squeezed.is_compressed());
+        let mut rng = crate::util::prng::Xoshiro256::seed(21);
+        let b = rng.vector(cfg.n * s);
+        let opts = BlockCgOptions { max_iter: 800, tol: 1e-7 };
+        let got = block_cg_solve(&RegularizedHBlockOp::new(&squeezed, sigma2), &b, s, opts);
+        assert!(got.converged, "compressed solve stalled: {:?}", got.residuals);
+        // the compressed solution must solve the UNCOMPRESSED system too:
+        // residual ≤ solver tol + ‖δA‖·‖X‖/‖B‖ with ‖X‖ ≤ ‖B‖/σ²
+        let plain_op = RegularizedHBlockOp::new(&plain, sigma2);
+        let ax = plain_op.apply_block(&got.x, s);
+        for c in 0..s {
+            let lo = c * cfg.n;
+            let hi = (c + 1) * cfg.n;
+            let res: f64 = ax[lo..hi]
+                .iter()
+                .zip(&b[lo..hi])
+                .map(|(a, bb)| (a - bb) * (a - bb))
+                .sum::<f64>()
+                .sqrt();
+            let rel = res / crate::util::norm2(&b[lo..hi]);
+            assert!(rel < 1e-3, "col {c}: residual vs uncompressed operator: {rel}");
+        }
+    }
+
+    #[test]
     fn respects_max_iter() {
         let op = spd(30, 7);
         let b = vec![1.0; 60];

@@ -388,3 +388,124 @@ fn prop_cluster_key_roundtrip() {
         },
     );
 }
+
+// ---------- operator-wide compression (budget + storage) ----------
+
+/// The compress/ acceptance property: budgeted global truncation plus
+/// (mixed-)precision storage must agree with the f64 uncompressed
+/// operator within the ADVERTISED bound — 1.5 ε relative for F64/Mixed
+/// storage (truncation ε + mixed-precision quarter-allowance; see
+/// `hmx::compress` docs), plus an f32-roundoff allowance when f32 is
+/// FORCED without error control. Checked for both matvec and matmat,
+/// across random sizes, budgets and storage modes.
+#[test]
+fn prop_compressed_operator_stays_within_advertised_error_bound() {
+    use hmx::compress::{CompressBudget, CompressConfig, StorageMode};
+    check(
+        "compress-error-bound",
+        6,
+        |g| {
+            let n = g.usize_in(96, 384);
+            let eps_pow = g.usize_in(4, 8);
+            let storage = g.usize_in(0, 2);
+            let nrhs = g.usize_in(1, 4);
+            (n, eps_pow, storage, nrhs, g.rng.next_u64())
+        },
+        |&(n, eps_pow, storage, nrhs, seed)| {
+            let eps = 10f64.powi(-(eps_pow as i32));
+            let storage = [StorageMode::F64, StorageMode::Mixed, StorageMode::F32][storage];
+            let cfg = hmx::config::HmxConfig {
+                n,
+                dim: 2,
+                c_leaf: 32,
+                k: 8,
+                precompute: true,
+                ..hmx::config::HmxConfig::default()
+            };
+            let pts = PointSet::random(n, 2, seed);
+            let plain = HMatrix::build(pts.clone(), &cfg).map_err(|e| e.to_string())?;
+            let mut h = HMatrix::build(pts, &cfg).map_err(|e| e.to_string())?;
+            let ccfg = CompressConfig { budget: CompressBudget::RelErr(eps), storage };
+            let stats = h.compress(&ccfg).map_err(|e| e.to_string())?;
+            if stats.bytes_after > stats.bytes_before {
+                return Err(format!(
+                    "packing grew storage: {} -> {}",
+                    stats.bytes_before, stats.bytes_after
+                ));
+            }
+            // forced f32 has no error control: allow its roundoff on top
+            let bound = match storage {
+                StorageMode::F32 => 1.5 * eps + 1e-5,
+                _ => 1.5 * eps,
+            };
+            let x = hmx::util::prng::Xoshiro256::seed(seed ^ 3).vector(n * nrhs);
+            let y_ref = plain.matmat(&x, nrhs).map_err(|e| e.to_string())?;
+            let y = h.matmat(&x, nrhs).map_err(|e| e.to_string())?;
+            let err = hmx::util::rel_err(&y, &y_ref);
+            if err > bound {
+                return Err(format!(
+                    "matmat err {err} > advertised {bound} \
+                     (n={n} eps={eps} storage={storage:?} nrhs={nrhs})"
+                ));
+            }
+            // compressed matmat must stay column-consistent with its own matvec
+            for c in 0..nrhs {
+                let yc = h.matvec(&x[c * n..(c + 1) * n]).map_err(|e| e.to_string())?;
+                let col_err = hmx::util::rel_err(&y[c * n..(c + 1) * n], &yc);
+                if col_err >= 1e-12 {
+                    return Err(format!("col {c}: packed matmat vs matvec err {col_err}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Byte budgets are hard: whenever the rank-1 floor fits, the packed
+/// store lands at or under the requested bytes (the governor's
+/// never-exceed invariant builds on this).
+#[test]
+fn prop_byte_budget_is_respected_when_feasible() {
+    use hmx::compress::CompressConfig;
+    check(
+        "compress-byte-budget",
+        6,
+        |g| {
+            let n = g.usize_in(96, 384);
+            // comfortably above the rank-1 floor (1/k of flat) at k = 8
+            let frac = g.usize_in(30, 90);
+            (n, frac, g.rng.next_u64())
+        },
+        |&(n, frac, seed)| {
+            let cfg = hmx::config::HmxConfig {
+                n,
+                dim: 2,
+                c_leaf: 32,
+                k: 8,
+                precompute: true,
+                ..hmx::config::HmxConfig::default()
+            };
+            let pts = PointSet::random(n, 2, seed);
+            let mut h = HMatrix::build(pts, &cfg).map_err(|e| e.to_string())?;
+            let before = h.factor_bytes();
+            if before == 0 {
+                return Ok(()); // no admissible blocks at this size
+            }
+            let budget = before * frac / 100;
+            let stats =
+                h.compress(&CompressConfig::bytes(budget)).map_err(|e| e.to_string())?;
+            if stats.bytes_after > budget {
+                return Err(format!(
+                    "budget exceeded: {} > {budget} (flat {before}, n={n} frac={frac})",
+                    stats.bytes_after
+                ));
+            }
+            let x = hmx::util::prng::Xoshiro256::seed(seed ^ 9).vector(n);
+            let y = h.matvec(&x).map_err(|e| e.to_string())?;
+            y.iter()
+                .all(|v| v.is_finite())
+                .then_some(())
+                .ok_or("non-finite output under byte budget".into())
+        },
+    );
+}
