@@ -33,6 +33,10 @@ fn f_true(p: &[f64], channel: usize) -> f64 {
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse();
+    let trace_out = args.get_str("trace-out", "");
+    if !trace_out.is_empty() {
+        hmx::obs::trace::enable();
+    }
     let n = args.get("n", 1usize << 13);
     let dim = args.get("d", 2usize);
     let q = args.get("q", 16usize);
@@ -133,6 +137,37 @@ fn main() -> anyhow::Result<()> {
             se += diff * diff;
         }
         println!("channel {c}: train RMSE {:.3e}", (se / n as f64).sqrt());
+    }
+
+    // end-of-run observability dump: build/matvec phase totals, solver
+    // iteration histograms, final-residual gauges
+    let snap = hmx::obs::MetricsSnapshot::capture();
+    if args.has("obs-json") {
+        println!("{}", snap.to_json());
+    } else {
+        println!("observability snapshot:");
+        for s in &snap.phases {
+            println!(
+                "  phase {:<22} total {:.4}s  count {}  mean {:.6}s",
+                s.phase,
+                s.total.as_secs_f64(),
+                s.count,
+                s.mean.as_secs_f64()
+            );
+        }
+        for h in &snap.histograms {
+            println!(
+                "  hist  {:<22} count {:<6} p50 {:<8} p99 {:<8} max {}",
+                h.name, h.count, h.p50, h.p99, h.max
+            );
+        }
+        for (name, _, v) in &snap.gauges {
+            println!("  gauge {name:<22} {v}");
+        }
+    }
+    if !trace_out.is_empty() {
+        let spans = hmx::obs::write_chrome_trace(std::path::Path::new(&trace_out))?;
+        println!("wrote {spans} spans to {trace_out} (chrome://tracing / Perfetto)");
     }
     Ok(())
 }

@@ -83,6 +83,10 @@ impl BlockLinOp for ServedRegularizedOp {
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse();
+    let trace_out = args.get_str("trace-out", "");
+    if !trace_out.is_empty() {
+        hmx::obs::trace::enable();
+    }
     let n = args.get("n", 1usize << 12);
     let dim = args.get("d", 2usize);
     let tenants = args.get("tenants", 2usize);
@@ -224,17 +228,49 @@ fn main() -> anyhow::Result<()> {
             snap.rejections
         );
     }
-    println!("global serve phases:");
-    for s in hmx::metrics::RECORDER.stats() {
-        if s.phase.starts_with("serve.") || s.phase.starts_with("governor.") {
+    // end-of-run observability dump: the merged metrics registry (every
+    // tenant's latency histograms, governor counters, queue-depth gauges)
+    let snap = hmx::obs::MetricsSnapshot::capture();
+    if args.has("obs-json") {
+        println!("{}", snap.to_json());
+    } else {
+        println!("observability snapshot:");
+        for s in &snap.phases {
+            if s.phase.starts_with("serve.") || s.phase.starts_with("governor.") {
+                println!(
+                    "  phase {:<18} total {:.4}s  count {}  mean {:.6}s",
+                    s.phase,
+                    s.total.as_secs_f64(),
+                    s.count,
+                    s.mean.as_secs_f64()
+                );
+            }
+        }
+        for h in &snap.histograms {
+            let label = if h.tenant.is_empty() {
+                h.name.clone()
+            } else {
+                format!("{}{{tenant={}}}", h.name, h.tenant)
+            };
             println!(
-                "  {:<14} total {:.4}s  count {}  mean {:.6}s",
-                s.phase,
-                s.total.as_secs_f64(),
-                s.count,
-                s.mean.as_secs_f64()
+                "  hist  {:<34} count {:<6} p50 {:<10} p99 {:<10} max {}",
+                label, h.count, h.p50, h.p99, h.max
             );
         }
+        for (name, tenant, v) in &snap.counters {
+            let label =
+                if tenant.is_empty() { name.clone() } else { format!("{name}{{tenant={tenant}}}") };
+            println!("  ctr   {label:<34} {v}");
+        }
+        for (name, tenant, v) in &snap.gauges {
+            let label =
+                if tenant.is_empty() { name.clone() } else { format!("{name}{{tenant={tenant}}}") };
+            println!("  gauge {label:<34} {v}");
+        }
+    }
+    if !trace_out.is_empty() {
+        let spans = hmx::obs::write_chrome_trace(std::path::Path::new(&trace_out))?;
+        println!("wrote {spans} spans to {trace_out} (chrome://tracing / Perfetto)");
     }
     Ok(())
 }

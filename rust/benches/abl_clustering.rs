@@ -17,6 +17,8 @@ fn main() {
     let full = std::env::var("HMX_BENCH_FULL").is_ok();
     let n = if full { 1 << 16 } else { 1 << 13 };
     let table = CsvTable::new("abl_clustering", &["clustering", "n", "setup_s", "rel_err"]);
+    let mut report = hmx::obs::bench_report("abl_clustering");
+    report.param("n", n).param("k", 16).param("d", 2);
     println!("# ablation: Morton-CBC vs geometric-median clustering (N={n}, k=16, d=2)");
     let pts = PointSet::halton(n, 2);
     let exact = DenseOperator::new(pts.clone(), Kernel::gaussian());
@@ -29,6 +31,7 @@ fn main() {
     let h = HMatrix::build(pts.clone(), &cfg).unwrap();
     let err = hmx::util::rel_err(&h.matvec(&x).unwrap(), &want);
     table.row(&["morton-cbc".into(), n.to_string(), format!("{:.4}", m.secs()), format!("{err:.3e}")]);
+    report.point("morton-cbc", n as f64, &[("setup_s", m.secs()), ("rel_err", err)]);
 
     // Geometric median splits (sequential recursive implementation)
     let m = measure(3, || {
@@ -37,7 +40,12 @@ fn main() {
     let s = SequentialHMatrix::build(pts.clone(), Kernel::gaussian(), 1.5, 128, 16);
     let err = hmx::util::rel_err(&s.matvec(&x), &want);
     table.row(&["geo-median".into(), n.to_string(), format!("{:.4}", m.secs()), format!("{err:.3e}")]);
+    report.point("geo-median", n as f64, &[("setup_s", m.secs()), ("rel_err", err)]);
 
     println!("# expectation: comparable accuracy (same order of magnitude); Morton-CBC");
     println!("# construction is far faster because splitting is array halving");
+    match report.write() {
+        Ok(p) => println!("# bench artifact: {}", p.display()),
+        Err(e) => eprintln!("# bench artifact write failed: {e}"),
+    }
 }

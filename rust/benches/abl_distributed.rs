@@ -32,6 +32,8 @@ fn main() {
         ],
     );
     println!("# ablation: LPT multi-device sharding (N={n}, k=16, simulated devices)");
+    let mut report = hmx::obs::bench_report("abl_distributed");
+    report.param("n", n).param("k", 16);
     let mut pts = PointSet::halton(n, 2);
     hmx::morton::morton_sort(&mut pts);
     let tree = hmx::tree::block::build_block_tree(&pts, cfg.eta, cfg.c_leaf);
@@ -71,8 +73,19 @@ fn main() {
                 format!("{:.4}", max / nrhs as f64),
                 format!("{:.2}", sum / max.max(1e-12)),
             ]);
+            report.point(&format!("nrhs{nrhs}"), devices as f64, &[
+                ("imbalance", imbalance(&shards)),
+                ("sum_device_s", sum),
+                ("max_device_s", max),
+                ("sec_per_rhs", max / nrhs as f64),
+                ("projected_speedup", sum / max.max(1e-12)),
+            ]);
         }
     }
     println!("# expectation: imbalance stays near 1.0 (LPT), projected speedup ~= devices,");
     println!("# and sec_per_rhs at nrhs=8 falls well below nrhs=1 (RHS-blocked shards)");
+    match report.write() {
+        Ok(p) => println!("# bench artifact: {}", p.display()),
+        Err(e) => eprintln!("# bench artifact write failed: {e}"),
+    }
 }

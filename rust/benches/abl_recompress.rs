@@ -19,6 +19,8 @@ fn main() {
         &["eps", "n", "rank_before", "rank_after", "storage_ratio", "added_rel_err"],
     );
     println!("# ablation: ACA recompression trade-off (N={n}, k={k})");
+    let mut report = hmx::obs::bench_report("abl_recompress");
+    report.param("n", n).param("k", k);
     let mut pts = PointSet::halton(n, 2);
     hmx::morton::morton_sort(&mut pts);
     let tree = hmx::tree::block::build_block_tree(&pts, 1.5, 128);
@@ -48,6 +50,16 @@ fn main() {
             format!("{:.3}", stats.retained_fraction()),
             format!("{err:.3e}"),
         ]);
+        report.point("tradeoff", eps, &[
+            ("rank_before", stats.rank_before as f64),
+            ("rank_after", stats.rank_after as f64),
+            ("storage_ratio", stats.retained_fraction()),
+            ("added_rel_err", err),
+        ]);
     }
     println!("# expectation: storage shrinks monotonically with eps; error tracks eps");
+    match report.write() {
+        Ok(p) => println!("# bench artifact: {}", p.display()),
+        Err(e) => eprintln!("# bench artifact write failed: {e}"),
+    }
 }

@@ -40,6 +40,8 @@ fn main() {
         &["threads", "n", "setup_s", "matvec_s", "setup_speedup", "matvec_speedup"],
     );
     println!("# ablation: thread scaling of the many-core engine (N={n})");
+    let mut report = hmx::obs::bench_report("abl_threads");
+    report.param("n", n).param("max_threads", max_threads);
     let mut base: Option<(f64, f64)> = None;
     let mut t = 1usize;
     while t <= max_threads {
@@ -62,7 +64,17 @@ fn main() {
             format!("{:.2}", s0 / setup),
             format!("{:.2}", m0 / mv),
         ]);
+        report.point("scaling", t as f64, &[
+            ("setup_s", setup),
+            ("matvec_s", mv),
+            ("setup_speedup", s0 / setup),
+            ("matvec_speedup", m0 / mv),
+        ]);
         t *= 2;
     }
     println!("# expectation: near-linear speedup of both phases until bandwidth-bound");
+    match report.write() {
+        Ok(p) => println!("# bench artifact: {}", p.display()),
+        Err(e) => eprintln!("# bench artifact write failed: {e}"),
+    }
 }

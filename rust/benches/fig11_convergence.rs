@@ -15,6 +15,8 @@ fn main() {
     let full = std::env::var("HMX_BENCH_FULL").is_ok();
     let n = if full { 32768 } else { 4096 };
     let table = CsvTable::new("fig11", &["kernel", "d", "n", "k", "rel_err"]);
+    let mut report = hmx::obs::bench_report("fig11_convergence");
+    report.param("n", n).param("c_leaf", 256).param("eta", 1.5);
     println!("# Fig 11: H-matvec convergence in ACA rank (N={n}, C_leaf=256, eta=1.5)");
     for dim in [2usize, 3] {
         for kernel in [KernelKind::Gaussian, KernelKind::Matern] {
@@ -35,6 +37,11 @@ fn main() {
                     k.to_string(),
                     format!("{err:.6e}"),
                 ]);
+                report.point(
+                    &format!("{}-d{dim}", kernel.name()),
+                    k as f64,
+                    &[("rel_err", err)],
+                );
                 // sanity: decaying (the paper's headline convergence claim)
                 assert!(err <= prev * 2.0 + 1e-12, "convergence broke: {err} after {prev}");
                 prev = err;
@@ -42,4 +49,8 @@ fn main() {
         }
     }
     println!("# expectation (paper): geometric decay in k for all four series");
+    match report.write() {
+        Ok(p) => println!("# bench artifact: {}", p.display()),
+        Err(e) => eprintln!("# bench artifact write failed: {e}"),
+    }
 }

@@ -20,6 +20,8 @@ fn main() {
         &["phase", "d", "n", "seconds", "sec_per_nlogn_x1e9"],
     );
     println!("# Fig 12: spatial data structure + block tree complexity (eta=1.5, C_leaf=2048)");
+    let mut report = hmx::obs::bench_report("fig12_setup");
+    report.param("max_pow", max_pow).param("trials", trials).param("c_leaf", 2048);
     for dim in [2usize, 3] {
         for pow in 12..=max_pow {
             let n = 1usize << pow;
@@ -37,6 +39,10 @@ fn main() {
                 format!("{:.6}", m.secs()),
                 format!("{:.3}", m.secs() / nlogn * 1e9),
             ]);
+            report.point(&format!("spatial-d{dim}"), n as f64, &[
+                ("seconds", m.secs()),
+                ("sec_per_nlogn_x1e9", m.secs() / nlogn * 1e9),
+            ]);
             // right: block cluster tree construction + traversal
             let mut pts = PointSet::halton(n, dim);
             hmx::morton::morton_sort(&mut pts);
@@ -51,7 +57,15 @@ fn main() {
                 format!("{:.6}", m.secs()),
                 format!("{:.3}", m.secs() / nlogn * 1e9),
             ]);
+            report.point(&format!("blocktree-d{dim}"), n as f64, &[
+                ("seconds", m.secs()),
+                ("sec_per_nlogn_x1e9", m.secs() / nlogn * 1e9),
+            ]);
         }
     }
     println!("# expectation (paper): sec_per_nlogn flattens for large N (O(N log N) slope)");
+    match report.write() {
+        Ok(p) => println!("# bench artifact: {}", p.display()),
+        Err(e) => eprintln!("# bench artifact write failed: {e}"),
+    }
 }

@@ -12,9 +12,18 @@ use hmx::util::prng::Xoshiro256;
 
 fn main() {
     let full = std::env::var("HMX_BENCH_FULL").is_ok();
-    let max_pow = if full { 20 } else { 16 };
-    let trials = 5;
+    let smoke = std::env::var("HMX_BENCH_SMOKE").is_ok();
+    let max_pow = if full {
+        20
+    } else if smoke {
+        12
+    } else {
+        16
+    };
+    let trials = if smoke { 2 } else { 5 };
     let table = CsvTable::new("fig13", &["d", "mode", "n", "seconds", "sec_per_nlogn_x1e9"]);
+    let mut report = hmx::obs::bench_report("fig13_matvec");
+    report.param("k", 16).param("c_leaf", 512).param("max_pow", max_pow).param("trials", trials);
     println!("# Fig 13: H-matvec runtime vs N (k=16, C_leaf=2048 scaled down to 512 on CPU)");
     for dim in [2usize, 3] {
         for pow in 12..=max_pow {
@@ -42,8 +51,23 @@ fn main() {
                     format!("{:.6}", m.secs()),
                     format!("{:.3}", m.secs() / nlogn * 1e9),
                 ]);
+                report.point(
+                    &format!("d{dim}-{}", if precompute { "P" } else { "NP" }),
+                    n as f64,
+                    &[
+                        ("median_s", m.median.as_secs_f64()),
+                        ("mean_s", m.mean.as_secs_f64()),
+                        ("min_s", m.min.as_secs_f64()),
+                        ("max_s", m.max.as_secs_f64()),
+                        ("sec_per_nlogn_x1e9", m.secs() / nlogn * 1e9),
+                    ],
+                );
             }
         }
     }
     println!("# expectation (paper): O(N log N) slope; P faster than NP; d=3 slightly slower");
+    match report.write() {
+        Ok(p) => println!("# bench artifact: {}", p.display()),
+        Err(e) => eprintln!("# bench artifact write failed: {e}"),
+    }
 }

@@ -19,6 +19,8 @@ fn main() {
         &["sweep", "c_leaf", "bs_log2", "dense_s", "aca_s", "total_s"],
     );
     println!("# Fig 14: batching size sweep (N={n}, k=16, d=2)");
+    let mut report = hmx::obs::bench_report("fig14_batchsize");
+    report.param("n", n).param("k", 16);
     let c_leafs = if full { vec![1024usize, 2048] } else { vec![256usize, 512] };
     for &c_leaf in &c_leafs {
         // sweep bs_dense with bs_aca fixed, then vice versa
@@ -43,8 +45,9 @@ fn main() {
                     let x = rng.vector(n);
                     h.matvec(&x).unwrap()
                 });
-                let dense_s = RECORDER.total("matvec.dense").as_secs_f64() / 3.0;
-                let aca_s = RECORDER.total("matvec.aca").as_secs_f64() / 3.0;
+                let dense_s =
+                    RECORDER.total(hmx::obs::names::MATVEC_DENSE).as_secs_f64() / 3.0;
+                let aca_s = RECORDER.total(hmx::obs::names::MATVEC_ACA).as_secs_f64() / 3.0;
                 table.row(&[
                     sweep.into(),
                     c_leaf.to_string(),
@@ -53,9 +56,18 @@ fn main() {
                     format!("{aca_s:.6}"),
                     format!("{:.6}", m.secs()),
                 ]);
+                report.point(&format!("{sweep}-c{c_leaf}"), bs_pow as f64, &[
+                    ("dense_s", dense_s),
+                    ("aca_s", aca_s),
+                    ("total_s", m.secs()),
+                ]);
             }
         }
     }
     println!("# expectation (paper): runtime improves with batch size to an optimum, then");
     println!("# degrades slightly; larger C_leaf raises dense cost and lowers ACA cost");
+    match report.write() {
+        Ok(p) => println!("# bench artifact: {}", p.display()),
+        Err(e) => eprintln!("# bench artifact write failed: {e}"),
+    }
 }

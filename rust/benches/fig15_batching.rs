@@ -18,6 +18,8 @@ fn main() {
     let c_leaf = if full { 2048 } else { 256 };
     let table = CsvTable::new("fig15", &["phase", "mode", "n", "seconds", "speedup"]);
     println!("# Fig 15: batched vs unbatched linear algebra (N={n}, k=16, C_leaf={c_leaf})");
+    let mut report = hmx::obs::bench_report("fig15_batching");
+    report.param("n", n).param("c_leaf", c_leaf).param("k", 16);
     let mut results = std::collections::HashMap::new();
     for batching in [true, false] {
         let cfg = HmxConfig { n, dim: 2, k: 16, c_leaf, batching, ..HmxConfig::default() };
@@ -29,8 +31,9 @@ fn main() {
             let x = rng.vector(n);
             h.matvec(&x).unwrap()
         });
-        let dense_s = RECORDER.total("matvec.dense").as_secs_f64() / trials as f64;
-        let aca_s = RECORDER.total("matvec.aca").as_secs_f64() / trials as f64;
+        let dense_s =
+            RECORDER.total(hmx::obs::names::MATVEC_DENSE).as_secs_f64() / trials as f64;
+        let aca_s = RECORDER.total(hmx::obs::names::MATVEC_ACA).as_secs_f64() / trials as f64;
         results.insert((batching, "dense"), dense_s);
         results.insert((batching, "aca"), aca_s);
     }
@@ -45,8 +48,16 @@ fn main() {
                 format!("{secs:.6}"),
                 format!("{:.2}", u / secs),
             ]);
+            report.point(&format!("{phase}-{mode}"), n as f64, &[
+                ("seconds", secs),
+                ("speedup", u / secs),
+            ]);
         }
         println!("# {phase}: unbatched/batched speedup = {:.2}x", u / b);
     }
     println!("# expectation (paper): ACA speedup >> dense speedup (paper: ~32x vs ~3x on GPU)");
+    match report.write() {
+        Ok(p) => println!("# bench artifact: {}", p.display()),
+        Err(e) => eprintln!("# bench artifact write failed: {e}"),
+    }
 }

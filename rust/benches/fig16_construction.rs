@@ -20,6 +20,8 @@ fn main() {
     let max_pow = if full { 18 } else { 15 };
     let table = CsvTable::new("fig16", &["impl", "n", "seconds", "speedup_vs_seq"]);
     println!("# Fig 16: H-matrix setup, parallel engine vs sequential baseline (k=16, d=2)");
+    let mut report = hmx::obs::bench_report("fig16_construction");
+    report.param("max_pow", max_pow).param("k", 16);
     for pow in 12..=max_pow {
         let n = 1usize << pow;
         let pts = PointSet::halton(n, 2);
@@ -56,7 +58,20 @@ fn main() {
             format!("{:.4}", p.secs()),
             format!("{:.1}", seq.secs() / p.secs()),
         ]);
+        report.point("seq", n as f64, &[("seconds", seq.secs())]);
+        report.point("hmx-NP", n as f64, &[
+            ("seconds", np.secs()),
+            ("speedup_vs_seq", seq.secs() / np.secs()),
+        ]);
+        report.point("hmx-P", n as f64, &[
+            ("seconds", p.secs()),
+            ("speedup_vs_seq", seq.secs() / p.secs()),
+        ]);
     }
     println!("# expectation (paper): NP fastest, P close, seq orders of magnitude slower,");
     println!("# gap growing with N (paper: >100x on GPU at N=2^19)");
+    match report.write() {
+        Ok(p) => println!("# bench artifact: {}", p.display()),
+        Err(e) => eprintln!("# bench artifact write failed: {e}"),
+    }
 }

@@ -21,6 +21,8 @@ fn main() {
         &["mode", "n", "nrhs", "seconds", "sec_per_rhs", "speedup_vs_1rhs", "columnwise_sec"],
     );
     println!("# Fig 18: multi-RHS batched mat-mat (k=16, C_leaf=512), per-RHS amortization");
+    let mut report = hmx::obs::bench_report("fig18_multirhs");
+    report.param("n", n).param("k", 16).param("c_leaf", 512);
     for precompute in [false, true] {
         let cfg = HmxConfig { n, dim: 2, k: 16, c_leaf: 512, precompute, ..HmxConfig::default() };
         let h = HMatrix::build(PointSet::halton(n, 2), &cfg).unwrap();
@@ -52,8 +54,22 @@ fn main() {
                 format!("{:.2}", per_rhs_1 / per_rhs),
                 format!("{:.6}", mc.secs()),
             ]);
+            report.point(
+                if precompute { "P" } else { "NP" },
+                nrhs as f64,
+                &[
+                    ("seconds", m.secs()),
+                    ("sec_per_rhs", per_rhs),
+                    ("speedup_vs_1rhs", per_rhs_1 / per_rhs),
+                    ("columnwise_sec", mc.secs()),
+                ],
+            );
         }
     }
     println!("# expectation: sec_per_rhs strictly decreasing in nrhs (nrhs=16 well below nrhs=1);");
     println!("# NP gains most (factors recomputed once per mat-mat instead of once per column)");
+    match report.write() {
+        Ok(p) => println!("# bench artifact: {}", p.display()),
+        Err(e) => eprintln!("# bench artifact write failed: {e}"),
+    }
 }

@@ -60,6 +60,14 @@ fn main() {
          (n={n}, k={k}, c_leaf={c_leaf}; reference = {})",
         if exact.is_some() { "exact dense" } else { "uncompressed P-mode" }
     );
+    let mut report = hmx::obs::bench_report("fig_compress");
+    report.param("n", n).param("k", k).param("c_leaf", c_leaf);
+    report.point("none", n as f64, &[
+        ("factor_bytes", bytes_unbudgeted as f64),
+        ("reduction_x", 1.0),
+        ("matvec_rel_err", base_err),
+        ("matvec_seconds", base_time),
+    ]);
     table.row(&[
         "none".into(),
         "f64-flat".into(),
@@ -107,7 +115,7 @@ fn main() {
             StorageMode::F32 => "f32",
         };
         table.row(&[
-            label,
+            label.clone(),
             storage.into(),
             n.to_string(),
             stats.bytes_after.to_string(),
@@ -117,6 +125,13 @@ fn main() {
             stats.blocks.to_string(),
             format!("{err:.3e}"),
             format!("{secs:.6}"),
+        ]);
+        report.point(&label, n as f64, &[
+            ("factor_bytes", stats.bytes_after as f64),
+            ("retained", stats.retained_fraction()),
+            ("reduction_x", reduction),
+            ("matvec_rel_err", err),
+            ("matvec_seconds", secs),
         ]);
     }
     println!(
@@ -128,4 +143,8 @@ fn main() {
         std::process::exit(1);
     }
     println!("# acceptance: ok");
+    match report.write() {
+        Ok(p) => println!("# bench artifact: {}", p.display()),
+        Err(e) => eprintln!("# bench artifact write failed: {e}"),
+    }
 }

@@ -17,8 +17,22 @@ use std::time::Duration;
 
 fn main() {
     let full = std::env::var("HMX_BENCH_FULL").is_ok();
-    let n = if full { 1usize << 15 } else { 1usize << 13 };
-    let requests_per_client = if full { 128usize } else { 32 };
+    let smoke = std::env::var("HMX_BENCH_SMOKE").is_ok();
+    let n = if full {
+        1usize << 15
+    } else if smoke {
+        1usize << 11
+    } else {
+        1usize << 13
+    };
+    let requests_per_client = if full {
+        128usize
+    } else if smoke {
+        8
+    } else {
+        32
+    };
+    let client_counts: &[usize] = if smoke { &[1, 4] } else { &[1, 2, 4, 8, 16] };
     let cfg = HmxConfig { n, dim: 2, k: 16, c_leaf: 256, precompute: true, ..HmxConfig::default() };
     let serve_cfg = ServeConfig {
         max_batch: 32,
@@ -44,11 +58,17 @@ fn main() {
         "# fig_serve: offered load vs achieved batch occupancy \
          (n={n}, max_batch=32, max_wait=1ms, P mode)"
     );
+    let mut report = hmx::obs::bench_report("fig_serve");
+    report
+        .param("n", n)
+        .param("max_batch", serve_cfg.max_batch)
+        .param("max_wait_ms", serve_cfg.max_wait.as_millis())
+        .param("requests_per_client", requests_per_client);
     let registry = OperatorRegistry::new();
     let handle = registry
         .register("bench", PointSet::halton(n, 2), &cfg, serve_cfg)
         .expect("register failed");
-    for clients in [1usize, 2, 4, 8, 16] {
+    for &clients in client_counts {
         handle.stats().reset();
         let barrier = Arc::new(Barrier::new(clients + 1));
         let mut joins = Vec::new();
@@ -87,8 +107,24 @@ fn main() {
             format!("{:.3}", snap.apply_p99.as_secs_f64() * 1e3),
             snap.shed.to_string(),
         ]);
+        let c = clients as f64;
+        report.point("occupancy", c, &[("mean", snap.mean_occupancy)]);
+        report.point("throughput_rps", c, &[("served_per_s", served as f64 / elapsed)]);
+        report.point("wait_ms", c, &[
+            ("p50", snap.wait_p50.as_secs_f64() * 1e3),
+            ("p99", snap.wait_p99.as_secs_f64() * 1e3),
+        ]);
+        report.point("apply_ms", c, &[
+            ("p50", snap.apply_p50.as_secs_f64() * 1e3),
+            ("p99", snap.apply_p99.as_secs_f64() * 1e3),
+        ]);
+        report.point("shed", c, &[("count", snap.shed as f64)]);
     }
     println!("# expectation: occupancy climbs with clients (toward max_batch) while");
     println!("# throughput grows superlinearly vs 1 client — coalesced applies amortize");
     println!("# assembly/factor traffic exactly as fig18 measures per-RHS offline");
+    match report.write() {
+        Ok(p) => println!("# bench artifact: {}", p.display()),
+        Err(e) => eprintln!("# bench artifact write failed: {e}"),
+    }
 }

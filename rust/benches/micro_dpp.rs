@@ -11,11 +11,17 @@ fn main() {
     let n = if full { 1 << 24 } else { 1 << 20 };
     let trials = 5;
     let table = CsvTable::new("micro_dpp", &["primitive", "n", "seconds", "melems_per_s"]);
+    let mut report = hmx::obs::bench_report("micro_dpp");
+    report.param("n", n).param("trials", trials);
     let mut rng = Xoshiro256::seed(1);
 
     let data_u64: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
     let m = measure(trials, || dpp::exclusive_scan(&data_u64));
     table.row(&["exclusive_scan".into(), n.to_string(), format!("{:.5}", m.secs()), format!("{:.1}", n as f64 / m.secs() / 1e6)]);
+    report.point("exclusive_scan", n as f64, &[
+        ("seconds", m.secs()),
+        ("melems_per_s", n as f64 / m.secs() / 1e6),
+    ]);
 
     let m = measure(trials, || {
         let mut keys = data_u64.clone();
@@ -23,16 +29,28 @@ fn main() {
         keys
     });
     table.row(&["radix_sort".into(), n.to_string(), format!("{:.5}", m.secs()), format!("{:.1}", n as f64 / m.secs() / 1e6)]);
+    report.point("radix_sort", n as f64, &[
+        ("seconds", m.secs()),
+        ("melems_per_s", n as f64 / m.secs() / 1e6),
+    ]);
 
     // reduce_by_key with segments of ~64 (bbox-table-like workload)
     let keys: Vec<u32> = (0..n).map(|i| (i / 64) as u32).collect();
     let vals: Vec<f64> = (0..n).map(|i| i as f64).collect();
     let m = measure(trials, || dpp::reduce_by_key(&keys, &vals, f64::NEG_INFINITY, f64::max));
     table.row(&["reduce_by_key".into(), n.to_string(), format!("{:.5}", m.secs()), format!("{:.1}", n as f64 / m.secs() / 1e6)]);
+    report.point("reduce_by_key", n as f64, &[
+        ("seconds", m.secs()),
+        ("melems_per_s", n as f64 / m.secs() / 1e6),
+    ]);
 
     let pts = hmx::geometry::points::PointSet::halton(n.min(1 << 22), 3);
     let m = measure(trials, || hmx::morton::compute_morton_codes(&pts));
     table.row(&["morton_codes_3d".into(), pts.len().to_string(), format!("{:.5}", m.secs()), format!("{:.1}", pts.len() as f64 / m.secs() / 1e6)]);
+    report.point("morton_codes_3d", pts.len() as f64, &[
+        ("seconds", m.secs()),
+        ("melems_per_s", pts.len() as f64 / m.secs() / 1e6),
+    ]);
 
     let m = measure(trials, || {
         let q = dpp::OutputQueue::with_capacity(n);
@@ -44,4 +62,12 @@ fn main() {
         q.into_vec()
     });
     table.row(&["output_queue".into(), n.to_string(), format!("{:.5}", m.secs()), format!("{:.1}", n as f64 / m.secs() / 1e6)]);
+    report.point("output_queue", n as f64, &[
+        ("seconds", m.secs()),
+        ("melems_per_s", n as f64 / m.secs() / 1e6),
+    ]);
+    match report.write() {
+        Ok(p) => println!("# bench artifact: {}", p.display()),
+        Err(e) => eprintln!("# bench artifact write failed: {e}"),
+    }
 }

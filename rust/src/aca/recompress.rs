@@ -229,7 +229,7 @@ pub fn recompress(
     blocks: &[WorkItem],
     rule: Truncation,
 ) -> RecompressStats {
-    crate::metrics::timed("compress.pass", || {
+    crate::metrics::timed(crate::obs::names::COMPRESS_PASS, || {
         let cores = core_svds(factors, blocks);
         let ranks: Vec<usize> = cores
             .iter()

@@ -23,6 +23,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::storage::StorageMode;
+use crate::obs::names;
 
 /// Governor policy knobs.
 #[derive(Clone, Copy, Debug)]
@@ -125,7 +126,7 @@ impl MemoryGovernor {
         incoming: &str,
     ) -> Option<GovernorAction> {
         let total: usize = tenants.iter().map(|t| t.bytes).sum();
-        self.stats.bytes_in_use.store(total as u64, Ordering::Relaxed);
+        self.record_bytes(total);
         if total <= self.cfg.budget_bytes {
             return None;
         }
@@ -169,21 +170,25 @@ impl MemoryGovernor {
 
     pub(crate) fn record_recompress(&self) {
         self.stats.recompressions.fetch_add(1, Ordering::Relaxed);
-        crate::metrics::RECORDER.incr("governor.recompress");
+        crate::metrics::RECORDER.incr(names::GOVERNOR_RECOMPRESS);
+        crate::obs::counter_incr(names::GOVERNOR_RECOMPRESS);
     }
 
     pub(crate) fn record_evict(&self) {
         self.stats.evictions.fetch_add(1, Ordering::Relaxed);
-        crate::metrics::RECORDER.incr("governor.evict");
+        crate::metrics::RECORDER.incr(names::GOVERNOR_EVICT);
+        crate::obs::counter_incr(names::GOVERNOR_EVICT);
     }
 
     pub(crate) fn record_reject(&self) {
         self.stats.rejections.fetch_add(1, Ordering::Relaxed);
-        crate::metrics::RECORDER.incr("governor.reject");
+        crate::metrics::RECORDER.incr(names::GOVERNOR_REJECT);
+        crate::obs::counter_incr(names::GOVERNOR_REJECT);
     }
 
     pub(crate) fn record_bytes(&self, total: usize) {
         self.stats.bytes_in_use.store(total as u64, Ordering::Relaxed);
+        crate::obs::gauge_set(names::GOVERNOR_BYTES_IN_USE, total as f64);
     }
 }
 

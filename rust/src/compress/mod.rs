@@ -133,7 +133,7 @@ pub fn compress_batches(
     cfg: &CompressConfig,
 ) -> (Vec<PackedFactors>, CompressStats) {
     assert_eq!(batches.len(), batch_blocks.len());
-    crate::metrics::timed("compress.pass", || {
+    crate::metrics::timed(crate::obs::names::COMPRESS_PASS, || {
         let bytes_before: usize = batches.iter().map(|f| f.storage_bytes()).sum();
         let rank_before: usize = batches.iter().map(|f| f.ranks.iter().sum::<usize>()).sum();
         let nblocks: usize = batch_blocks.iter().map(|b| b.len()).sum();

@@ -112,7 +112,7 @@ pub fn columnwise_dense_matmat<E: BatchEngine + ?Sized>(
     nrhs: usize,
     z: &AtomicF64Vec,
 ) {
-    crate::metrics::RECORDER.incr("runtime.matmat_fallback");
+    crate::metrics::RECORDER.incr(crate::obs::names::RUNTIME_MATMAT_FALLBACK);
     let n = points.len();
     for c in 0..nrhs {
         let zc = AtomicF64Vec::zeros(n);
@@ -138,7 +138,7 @@ pub fn columnwise_aca_matmat<E: BatchEngine + ?Sized>(
     nrhs: usize,
     z: &AtomicF64Vec,
 ) {
-    crate::metrics::RECORDER.incr("runtime.matmat_fallback");
+    crate::metrics::RECORDER.incr(crate::obs::names::RUNTIME_MATMAT_FALLBACK);
     let n = points.len();
     for c in 0..nrhs {
         let zc = AtomicF64Vec::zeros(n);
@@ -394,7 +394,7 @@ mod tests {
         let x = crate::util::prng::Xoshiro256::seed(8).vector(n * nrhs);
         let native = NativeEngine;
         let fallback = ColumnwiseOnly(NativeEngine);
-        let before = crate::metrics::RECORDER.count("runtime.matmat_fallback");
+        let before = crate::metrics::RECORDER.count(crate::obs::names::RUNTIME_MATMAT_FALLBACK);
 
         let zf = AtomicF64Vec::zeros(n * nrhs);
         fallback.dense_matmat(&pts, kern, &tree.dense, &x, nrhs, &zf);
@@ -410,7 +410,7 @@ mod tests {
         let err = crate::util::rel_err(&zf.into_vec(), &zn.into_vec());
         assert!(err < 1e-13, "ACA columnwise fallback diverged from fused matmat: {err}");
 
-        let after = crate::metrics::RECORDER.count("runtime.matmat_fallback");
+        let after = crate::metrics::RECORDER.count(crate::obs::names::RUNTIME_MATMAT_FALLBACK);
         assert!(after >= before + 2, "fallback counter must fire: {before} -> {after}");
     }
 }

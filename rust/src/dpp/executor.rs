@@ -33,6 +33,7 @@ pub fn launch_with_grain<F: Fn(usize) + Send + Sync>(n: usize, grain: usize, bod
     if n == 0 {
         return;
     }
+    let _span = crate::obs::span(crate::obs::names::DPP_LAUNCH);
     metrics::count_launch(n);
     let grain = grain.max(1);
     // Below one grain (or with an empty pool) just run inline: a kernel
@@ -63,6 +64,7 @@ pub fn launch_blocked<F: Fn(usize, usize) + Send + Sync>(n: usize, grain: usize,
     if n == 0 {
         return;
     }
+    let _span = crate::obs::span(crate::obs::names::DPP_LAUNCH);
     metrics::count_launch(n);
     let grain = grain.max(1);
     let p = pool::global();

@@ -91,10 +91,10 @@ impl HMatrix {
         let kernel = cfg.kernel();
 
         // Phase 1: spatial data structure (Morton codes + sort), Fig 12 L.
-        let (_codes, perm) = timed("build.morton", || morton_sort(&mut points));
+        let (_codes, perm) = timed(crate::obs::names::BUILD_MORTON, || morton_sort(&mut points));
 
         // Phase 2: block cluster tree traversal, Fig 12 R.
-        let tree = timed("build.block_tree", || build_block_tree(&points, cfg.eta, cfg.c_leaf));
+        let tree = timed(crate::obs::names::BUILD_BLOCK_TREE, || build_block_tree(&points, cfg.eta, cfg.c_leaf));
 
         // Phase 3: batch planning (§5.4 heuristics).
         let admissible = tree.admissible;
@@ -121,7 +121,7 @@ impl HMatrix {
         // Phase 4 (P mode): pre-compute ACA factors per batch, optionally
         // recompressed (Bebendorf–Kunis) to shrink the factor storage.
         let factors = if cfg.precompute {
-            let mut f: Vec<AcaFactors> = timed("build.precompute_aca", || {
+            let mut f: Vec<AcaFactors> = timed(crate::obs::names::BUILD_PRECOMPUTE_ACA, || {
                 aca_plan
                     .batches
                     .iter()
@@ -131,7 +131,7 @@ impl HMatrix {
                     .collect()
             });
             if let Some(eps) = cfg.recompress_eps {
-                timed("build.recompress", || {
+                timed(crate::obs::names::BUILD_RECOMPRESS, || {
                     for (fac, &(s, e)) in f.iter_mut().zip(&aca_plan.batches) {
                         crate::aca::recompress::recompress(
                             fac,
@@ -252,7 +252,7 @@ impl HMatrix {
     /// the caller wants to accumulate onto).
     fn matmat_morton_into(&self, x_m: &[f64], nrhs: usize, z: &AtomicF64Vec) {
         // batched dense products (§5.4.2)
-        timed("matvec.dense", || {
+        timed(crate::obs::names::MATVEC_DENSE, || {
             for &(s, e) in &self.dense_plan.batches {
                 self.engine.dense_matmat(
                     &self.points,
@@ -267,7 +267,7 @@ impl HMatrix {
         // batched low-rank products (§5.4.1): P applies stored factors
         // (flat, or packed mixed-precision with in-kernel widening), NP
         // recomputes them on the fly (once per mat-mat, not per column).
-        timed("matvec.aca", || match &self.factors {
+        timed(crate::obs::names::MATVEC_ACA, || match &self.factors {
             Some(FactorStore::Flat(fs)) => {
                 for (f, &(s, e)) in fs.iter().zip(&self.aca_plan.batches) {
                     f.apply_mat(&self.admissible[s..e], x_m, nrhs, z);

@@ -138,6 +138,36 @@
 //!     stats.bytes_before, stats.bytes_after, stats.f32_blocks, stats.blocks
 //! );
 //! ```
+//!
+//! ## Observability
+//!
+//! The [`obs`] module is the crate's observability layer — the paper's
+//! per-phase attribution (§6) upgraded to spans, histograms and
+//! machine-readable artifacts:
+//!
+//! * **Tracing spans** — `let _g = obs::span(obs::names::SERVE_FLUSH);`
+//!   records a nested span (start, duration, thread, parent) into a
+//!   lock-free per-thread ring when [`obs::trace::enable`] is on.
+//!   [`obs::write_chrome_trace`] dumps every retained span as Chrome
+//!   trace-event JSON, loadable in Perfetto / `chrome://tracing`: one
+//!   `serve_krr --trace-out trace.json` run yields the full
+//!   submit → queue → flush → batched matmat → scatter timeline, and a
+//!   construction run yields morton → tree → batched ACA → recompress.
+//! * **Histograms with tenant labels** — lock-free log-linear-bucket
+//!   [`obs::Histogram`]s (quantile relative error ≤ [`obs::MAX_REL_ERR`])
+//!   back the batcher's wait/apply latencies and occupancy, solver
+//!   iteration counts, and governor outcomes. Merge-on-read:
+//!   [`obs::MetricsSnapshot::capture`] aggregates every `(name, tenant)`
+//!   series plus the legacy [`metrics::RECORDER`] phase totals, and
+//!   exports JSON or Prometheus text (CLI: `hmx obs`; serving:
+//!   [`serve::OperatorRegistry::observe`]).
+//! * **Bench artifacts** — every bench writes `BENCH_<name>.json`
+//!   (schema `hmx-bench/1`, validated by [`obs::validate_bench_report`])
+//!   via [`obs::BenchReport`], seeding the perf trajectory CI diffs.
+//!
+//! Metric and span names are `const`s in [`obs::names`] with a metadata
+//! [`obs::names::REGISTRY`] (kinds, units, labels — see
+//! `docs/metrics.md`), so a typo'd name is a compile error.
 
 pub mod aca;
 pub mod baseline;
@@ -151,6 +181,7 @@ pub mod geometry;
 pub mod hmatrix;
 pub mod metrics;
 pub mod morton;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod solver;

@@ -5,6 +5,10 @@
 //!   matvec     build + run mat-vecs, report timing and error vs dense
 //!   solve      regularized kernel system solve via CG (end-to-end)
 //!   phases     like matvec, but dump the per-phase timing breakdown
+//!   obs        run an instrumented workload and export the metrics
+//!              registry (--format json|prometheus, --trace-out PATH for a
+//!              Chrome trace), or schema-check artifacts in place
+//!              (--validate-bench FILE, --validate-trace FILE)
 //!
 //! Common flags: --n, --d, --kernel {gaussian,matern,exponential}, --k,
 //! --c-leaf, --eta, --bs-dense, --bs-aca, --engine {native,xla},
@@ -159,6 +163,65 @@ fn cmd_phases(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_obs(args: &Args) -> anyhow::Result<()> {
+    use hmx::obs;
+    // artifact validation modes (CI uses these to schema-check outputs)
+    let bench = args.get_str("validate-bench", "");
+    if !bench.is_empty() {
+        let text = std::fs::read_to_string(&bench)?;
+        match obs::validate_bench_report(&text) {
+            Ok((series, points)) => {
+                println!("ok: {bench}: {series} series, {points} points");
+                return Ok(());
+            }
+            Err(e) => anyhow::bail!("invalid bench report {bench}: {e}"),
+        }
+    }
+    let trace = args.get_str("validate-trace", "");
+    if !trace.is_empty() {
+        let text = std::fs::read_to_string(&trace)?;
+        match obs::validate_chrome_trace(&text) {
+            Ok(n) => {
+                println!("ok: {trace}: {n} spans");
+                return Ok(());
+            }
+            Err(e) => anyhow::bail!("invalid chrome trace {trace}: {e}"),
+        }
+    }
+    // instrumented demo workload: build, a few applies, a small solve —
+    // then export whatever the registry collected
+    let trace_out = args.get_str("trace-out", "");
+    if !trace_out.is_empty() {
+        obs::trace::enable();
+    }
+    let cfg = config_from(args);
+    let points = PointSet::halton(cfg.n, cfg.dim);
+    let h = HMatrix::build(points, &cfg)?;
+    let mut rng = Xoshiro256::seed(cfg.seed);
+    for _ in 0..args.get("trials", 3usize) {
+        let x = rng.vector(cfg.n);
+        let _ = h.matvec(&x)?;
+    }
+    let sigma2 = args.get("sigma2", 1e-4f64);
+    let b: Vec<f64> = (0..cfg.n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let op = RegularizedHOp::new(&h, sigma2);
+    let _ = cg_solve(
+        &op,
+        &b,
+        CgOptions { max_iter: args.get("max-iter", 50usize), tol: args.get("tol", 1e-6f64) },
+    );
+    let snap = hmx::obs::MetricsSnapshot::capture();
+    match args.get_str("format", "json").as_str() {
+        "prometheus" | "prom" => print!("{}", snap.to_prometheus()),
+        _ => println!("{}", snap.to_json()),
+    }
+    if !trace_out.is_empty() {
+        let n = obs::write_chrome_trace(std::path::Path::new(&trace_out))?;
+        eprintln!("wrote {n} spans to {trace_out}");
+    }
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let args = Args::parse();
     match args.positional.first().map(|s| s.as_str()) {
@@ -166,8 +229,11 @@ fn main() -> anyhow::Result<()> {
         Some("matvec") => cmd_matvec(&args),
         Some("solve") => cmd_solve(&args),
         Some("phases") => cmd_phases(&args),
+        Some("obs") => cmd_obs(&args),
         _ => {
-            eprintln!("usage: hmx <construct|matvec|solve|phases> [--n N] [--d D] [--kernel K] ...");
+            eprintln!(
+                "usage: hmx <construct|matvec|solve|phases|obs> [--n N] [--d D] [--kernel K] ..."
+            );
             eprintln!("see rust/src/main.rs header for the full flag list");
             std::process::exit(2);
         }

@@ -3,10 +3,12 @@
 //! The paper's evaluation (§6) reports per-phase runtimes (spatial data
 //! structure, tree traversal, batched ACA, batched dense mat-vec, …). The
 //! global [`Recorder`] collects those phases; benches drain it to print the
-//! same series the paper plots.
+//! same series the paper plots. Span-level (nested, per-thread) timing and
+//! histogram quantiles live in [`crate::obs`]; [`timed`] feeds both layers
+//! at once.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
@@ -25,19 +27,42 @@ pub fn launch_stats() -> (u64, u64) {
     (KERNEL_LAUNCHES.load(Ordering::Relaxed), VIRTUAL_THREADS.load(Ordering::Relaxed))
 }
 
-/// A named wall-clock phase accumulator.
-#[derive(Default)]
+/// Accumulator shards per recorder: enough that the handful of batcher
+/// executor + client threads rarely collide on one lock.
+const NSHARDS: usize = 16;
+
+static NEXT_SHARD: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Each thread is pinned to one shard index for its lifetime, so a
+    /// thread's `add`s never contend with other threads mapped elsewhere.
+    static SHARD: usize = NEXT_SHARD.fetch_add(1, Ordering::Relaxed) % NSHARDS;
+}
+
+/// A named wall-clock phase accumulator, sharded per thread.
+///
+/// Hot paths (`add`/`incr` from concurrent batcher clients and executor
+/// threads) lock only their own thread's shard; reads (`stats`, `stat`,
+/// `count`, `total`) merge all shards, so the public API is unchanged from
+/// the old single-map recorder while writes no longer serialize globally.
 pub struct Recorder {
-    phases: Mutex<HashMap<String, (Duration, u64)>>,
+    shards: [Mutex<HashMap<String, (Duration, u64)>>; NSHARDS],
+}
+
+impl Default for Recorder {
+    fn default() -> Self {
+        Recorder::new()
+    }
 }
 
 impl Recorder {
     pub fn new() -> Self {
-        Recorder::default()
+        Recorder { shards: std::array::from_fn(|_| Mutex::new(HashMap::new())) }
     }
 
     pub fn add(&self, phase: &str, d: Duration) {
-        let mut m = self.phases.lock().unwrap();
+        let shard = SHARD.with(|s| *s);
+        let mut m = self.shards[shard].lock().unwrap();
         let e = m.entry(phase.to_string()).or_insert((Duration::ZERO, 0));
         e.0 += d;
         e.1 += 1;
@@ -59,14 +84,27 @@ impl Recorder {
         self.add(phase, Duration::ZERO);
     }
 
+    /// Merged `(total, count)` for one phase across all shards.
+    fn merged(&self, phase: &str) -> (Duration, u64) {
+        let mut total = Duration::ZERO;
+        let mut count = 0;
+        for shard in &self.shards {
+            if let Some(&(d, c)) = shard.lock().unwrap().get(phase) {
+                total += d;
+                count += c;
+            }
+        }
+        (total, count)
+    }
+
     /// Total event/call count recorded under `phase` (zero if never seen).
     pub fn count(&self, phase: &str) -> u64 {
-        self.phases.lock().unwrap().get(phase).map(|e| e.1).unwrap_or(0)
+        self.merged(phase).1
     }
 
     /// Total accumulated duration for `phase` (zero if never recorded).
     pub fn total(&self, phase: &str) -> Duration {
-        self.phases.lock().unwrap().get(phase).map(|e| e.0).unwrap_or(Duration::ZERO)
+        self.merged(phase).0
     }
 
     /// Snapshot of `(phase, total, count)` sorted by total descending.
@@ -77,23 +115,36 @@ impl Recorder {
     }
 
     /// Aggregate view with total, call count and mean duration together
-    /// per phase, sorted by total descending.
+    /// per phase, merged across shards and sorted by total descending.
     pub fn stats(&self) -> Vec<PhaseStats> {
-        let m = self.phases.lock().unwrap();
+        let mut merged: HashMap<String, (Duration, u64)> = HashMap::new();
+        for shard in &self.shards {
+            for (k, &(d, c)) in shard.lock().unwrap().iter() {
+                let e = merged.entry(k.clone()).or_insert((Duration::ZERO, 0));
+                e.0 += d;
+                e.1 += c;
+            }
+        }
         let mut v: Vec<PhaseStats> =
-            m.iter().map(|(k, &(d, c))| PhaseStats::new(k.clone(), d, c)).collect();
+            merged.into_iter().map(|(k, (d, c))| PhaseStats::new(k, d, c)).collect();
         v.sort_by(|a, b| b.total.cmp(&a.total));
         v
     }
 
     /// Stats for a single phase, if it has been recorded.
     pub fn stat(&self, phase: &str) -> Option<PhaseStats> {
-        let m = self.phases.lock().unwrap();
-        m.get(phase).map(|&(d, c)| PhaseStats::new(phase.to_string(), d, c))
+        let (d, c) = self.merged(phase);
+        if c == 0 && d == Duration::ZERO {
+            None
+        } else {
+            Some(PhaseStats::new(phase.to_string(), d, c))
+        }
     }
 
     pub fn reset(&self) {
-        self.phases.lock().unwrap().clear();
+        for shard in &self.shards {
+            shard.lock().unwrap().clear();
+        }
     }
 }
 
@@ -124,8 +175,11 @@ impl PhaseStats {
 pub static RECORDER: once_cell::sync::Lazy<Recorder> =
     once_cell::sync::Lazy::new(Recorder::new);
 
-/// Convenience: time a closure under the global recorder.
+/// Convenience: time a closure under the global recorder, and open a
+/// tracing span of the same name so enabled traces get the construction
+/// and matvec phase timeline with no extra instrumentation at call sites.
 pub fn timed<T>(phase: &str, f: impl FnOnce() -> T) -> T {
+    let _span = crate::obs::span(phase);
     RECORDER.time(phase, f)
 }
 
@@ -163,21 +217,36 @@ impl Measurement {
 
 /// Print a CSV header + row helper used by every bench binary so output is
 /// uniform and grep-able (`hmx-bench` prefix).
+///
+/// Header emission is guarded by a [`std::sync::Once`]: exactly one header
+/// per table instance, from whichever thread prints first. `Once` is also
+/// what makes the type `Sync`, so a table can be shared across worker
+/// threads or held in a `static` — the old `Cell<bool>` guard was neither
+/// thread-safe nor `Sync`, and rows emitted from multiple threads could
+/// each print their own header.
 pub struct CsvTable {
     name: &'static str,
     columns: &'static [&'static str],
-    header_printed: std::cell::Cell<bool>,
+    header: std::sync::Once,
 }
 
 impl CsvTable {
     pub const fn new(name: &'static str, columns: &'static [&'static str]) -> Self {
-        CsvTable { name, columns, header_printed: std::cell::Cell::new(false) }
+        CsvTable { name, columns, header: std::sync::Once::new() }
+    }
+
+    /// The header line the first time it is called on this instance,
+    /// `None` on every later call (from any thread).
+    pub fn header_row(&self) -> Option<String> {
+        let mut out = None;
+        self.header
+            .call_once(|| out = Some(format!("hmx-bench,{},{}", self.name, self.columns.join(","))));
+        out
     }
 
     pub fn row(&self, values: &[String]) {
-        if !self.header_printed.get() {
-            println!("hmx-bench,{},{}", self.name, self.columns.join(","));
-            self.header_printed.set(true);
+        if let Some(h) = self.header_row() {
+            println!("{h}");
         }
         assert_eq!(values.len(), self.columns.len());
         println!("hmx-bench,{},{}", self.name, values.join(","));
@@ -232,6 +301,29 @@ mod tests {
     }
 
     #[test]
+    fn sharded_adds_merge_across_threads() {
+        static R: once_cell::sync::Lazy<Recorder> = once_cell::sync::Lazy::new(Recorder::new);
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                std::thread::spawn(|| {
+                    for _ in 0..100 {
+                        R.add("sharded.phase", Duration::from_micros(10));
+                        R.incr("sharded.event");
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(R.count("sharded.phase"), 800);
+        assert_eq!(R.total("sharded.phase"), Duration::from_micros(8000));
+        assert_eq!(R.count("sharded.event"), 800);
+        let s = R.stat("sharded.phase").unwrap();
+        assert_eq!(s.mean, Duration::from_micros(10));
+    }
+
+    #[test]
     fn measure_returns_ordered_stats() {
         let m = measure(5, || std::thread::sleep(Duration::from_micros(50)));
         assert!(m.min <= m.median && m.median <= m.max);
@@ -244,5 +336,18 @@ mod tests {
         count_launch(10);
         let (l1, t1) = launch_stats();
         assert!(l1 > l0 && t1 >= t0 + 10);
+    }
+
+    #[test]
+    fn csv_header_prints_once_across_threads() {
+        static TABLE: CsvTable = CsvTable::new("hdr_test", &["a", "b"]);
+        let headers: usize = (0..8)
+            .map(|_| std::thread::spawn(|| TABLE.header_row().is_some() as usize))
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .sum();
+        assert_eq!(headers, 1, "exactly one thread gets the header");
+        assert!(TABLE.header_row().is_none());
     }
 }

@@ -1,0 +1,274 @@
+//! Log-linear-bucket histograms: mergeable, lock-free to record, with
+//! bounded-relative-error quantiles.
+//!
+//! Bucket layout (HdrHistogram-style, coarse): values below
+//! `2^SUB_BITS` get exact unit buckets; above that, every power-of-two
+//! range is split into `2^SUB_BITS` linear sub-buckets, so any bucket's
+//! width is at most `1/2^SUB_BITS` of its lower bound. Quantiles report a
+//! bucket's midpoint (clamped to the observed min/max), which bounds the
+//! relative error by the bucket width — the property
+//! `tests/observability.rs` pins.
+//!
+//! Recording is a handful of relaxed atomic ops on the owning
+//! [`Histogram`]; there is no lock anywhere on the record path, so many
+//! threads can hammer one histogram (the serving batcher's per-tenant
+//! latencies) without serializing.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Linear sub-buckets per power-of-two range (as a power of two).
+pub const SUB_BITS: u32 = 4;
+const SUB: usize = 1 << SUB_BITS; // 16
+/// Exact unit buckets for 0..SUB, then 16 per exponent 4..=63.
+const BUCKETS: usize = SUB + (64 - SUB_BITS as usize) * SUB;
+
+/// Worst-case relative half-width of any bucket: quantile estimates are
+/// within this factor of some recorded value.
+pub const MAX_REL_ERR: f64 = 1.0 / SUB as f64;
+
+#[inline]
+fn bucket_index(v: u64) -> usize {
+    if v < SUB as u64 {
+        v as usize
+    } else {
+        let e = 63 - v.leading_zeros(); // 2^e <= v < 2^(e+1), e >= SUB_BITS
+        let sub = ((v >> (e - SUB_BITS)) & (SUB as u64 - 1)) as usize;
+        SUB + (e - SUB_BITS) as usize * SUB + sub
+    }
+}
+
+/// Lower bound and width of bucket `idx`.
+#[inline]
+fn bucket_bounds(idx: usize) -> (u64, u64) {
+    if idx < SUB {
+        (idx as u64, 1)
+    } else {
+        let e = (idx - SUB) as u32 / SUB as u32 + SUB_BITS;
+        let sub = ((idx - SUB) % SUB) as u64;
+        let width = 1u64 << (e - SUB_BITS);
+        ((1u64 << e) + sub * width, width)
+    }
+}
+
+/// Representative value reported for bucket `idx` (midpoint).
+#[inline]
+fn bucket_rep(idx: usize) -> u64 {
+    let (lo, w) = bucket_bounds(idx);
+    lo + w / 2
+}
+
+/// A concurrent log-linear histogram over `u64` values.
+pub struct Histogram {
+    counts: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        let counts: Vec<AtomicU64> = (0..BUCKETS).map(|_| AtomicU64::new(0)).collect();
+        Histogram {
+            counts: counts.into_boxed_slice(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation. Lock-free; safe from any thread.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.counts[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Record a duration in nanoseconds.
+    #[inline]
+    pub fn record_duration(&self, d: std::time::Duration) {
+        self.record(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Nearest-rank quantile estimate (`q` in [0, 1]); 0 if empty.
+    /// Within [`MAX_REL_ERR`] relative error of a recorded value.
+    pub fn quantile(&self, q: f64) -> u64 {
+        self.accum().quantile(q)
+    }
+
+    pub fn quantile_duration(&self, q: f64) -> std::time::Duration {
+        std::time::Duration::from_nanos(self.quantile(q))
+    }
+
+    /// Fold this histogram's current contents into `acc` (mergeability:
+    /// quantiles over the merged accumulator are quantiles over the union
+    /// of the inputs, at the same bucket resolution).
+    pub fn fold_into(&self, acc: &mut HistAccum) {
+        for (i, c) in self.counts.iter().enumerate() {
+            acc.counts[i] += c.load(Ordering::Relaxed);
+        }
+        acc.count += self.count.load(Ordering::Relaxed);
+        acc.sum += self.sum.load(Ordering::Relaxed);
+        acc.min = acc.min.min(self.min.load(Ordering::Relaxed));
+        acc.max = acc.max.max(self.max.load(Ordering::Relaxed));
+    }
+
+    /// Snapshot into a fresh accumulator.
+    pub fn accum(&self) -> HistAccum {
+        let mut acc = HistAccum::new();
+        self.fold_into(&mut acc);
+        acc
+    }
+
+    /// Zero every bucket. Not atomic with respect to concurrent `record`s
+    /// — a racing observation may land before or after the clear — but
+    /// counts can never go negative or wrap.
+    pub fn clear(&self) {
+        for c in self.counts.iter() {
+            c.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+        self.min.store(u64::MAX, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+    }
+}
+
+/// A plain (non-atomic) merged view of one or more [`Histogram`]s.
+pub struct HistAccum {
+    counts: Vec<u64>,
+    pub count: u64,
+    pub sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for HistAccum {
+    fn default() -> Self {
+        HistAccum::new()
+    }
+}
+
+impl HistAccum {
+    pub fn new() -> Self {
+        HistAccum { counts: vec![0; BUCKETS], count: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Nearest-rank quantile over the merged buckets; the representative
+    /// is the bucket midpoint clamped to the observed [min, max].
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_rep(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_roundtrip_bounds_every_value() {
+        for v in (0u64..4096).chain([1 << 20, (1 << 20) + 12345, u64::MAX / 2, u64::MAX]) {
+            let idx = bucket_index(v);
+            let (lo, w) = bucket_bounds(idx);
+            assert!(lo <= v, "v={v} idx={idx} lo={lo}");
+            // hi is exclusive; guard overflow at the top bucket
+            assert!(v - lo < w, "v={v} idx={idx} lo={lo} w={w}");
+            // width never exceeds MAX_REL_ERR of the lower bound (above SUB)
+            if v >= SUB as u64 {
+                assert!(w as f64 <= MAX_REL_ERR * lo as f64 + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn exact_for_small_values() {
+        let h = Histogram::new();
+        for v in [3u64, 3, 7, 11] {
+            h.record(v);
+        }
+        assert_eq!(h.quantile(0.0), 3);
+        assert_eq!(h.quantile(0.5), 3);
+        assert_eq!(h.quantile(1.0), 11);
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.sum(), 24);
+    }
+
+    #[test]
+    fn merge_equals_union() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        for v in 0..100u64 {
+            a.record(v * 17 + 3);
+            b.record(v * 31 + 11);
+        }
+        let mut acc = HistAccum::new();
+        a.fold_into(&mut acc);
+        b.fold_into(&mut acc);
+        assert_eq!(acc.count, 200);
+        assert_eq!(acc.sum, a.sum() + b.sum());
+        assert_eq!(acc.min(), a.accum().min().min(b.accum().min()));
+        assert_eq!(acc.max(), a.accum().max().max(b.accum().max()));
+    }
+
+    #[test]
+    fn clear_resets() {
+        let h = Histogram::new();
+        h.record(42);
+        h.clear();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0);
+    }
+}

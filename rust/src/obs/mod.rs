@@ -1,0 +1,56 @@
+//! Observability: structured tracing spans, histogram metrics and
+//! exportable run artifacts.
+//!
+//! The paper's evaluation (§6) attributes runtime phase by phase —
+//! spatial data structure, tree traversal, batched ACA, batched
+//! dense/low-rank mat-vec — and the serving/governor layers stack more
+//! pipeline stages on top (queue wait, flush, batched apply, scatter,
+//! recompress, evict). This module upgrades the crate from flat
+//! mutex-guarded phase totals to three composable pieces:
+//!
+//! * **Spans** ([`trace`]): `let _g = obs::span(obs::names::SERVE_FLUSH);`
+//!   opens a nested span that records start/duration/thread/parent into a
+//!   lock-free per-thread ring on drop. [`trace::enable`] gates recording
+//!   (off = one atomic load per span, safe in hot paths);
+//!   [`trace::write_chrome_trace`] exports everything as Chrome
+//!   trace-event JSON loadable in Perfetto / `chrome://tracing`.
+//!   [`crate::metrics::timed`] opens a span around every legacy phase
+//!   automatically, so construction and matvec timelines come for free.
+//! * **Histograms/counters/gauges** ([`hist`], [`snapshot`]): log-linear
+//!   bucket histograms with bounded-relative-error quantiles
+//!   ([`MAX_REL_ERR`]), lock-free to record, mergeable across threads and
+//!   tenants. The global registry keys series by `(name, tenant)`;
+//!   [`MetricsSnapshot::capture`] merges everything (including legacy
+//!   phase totals) for JSON or Prometheus-text export (`hmx obs`).
+//! * **Bench artifacts** ([`report`]): [`BenchReport`] writes
+//!   `BENCH_<name>.json` (schema `hmx-bench/1`) with per-series
+//!   median/mean/min/max points — the machine-readable perf trajectory CI
+//!   validates and archives.
+//!
+//! Every metric/span name is a `const` in [`names`], with kind, unit and
+//! label metadata in [`names::REGISTRY`] (rendered in `docs/metrics.md`).
+//! Instrumentation sites use the consts so typos fail at compile time.
+
+pub mod hist;
+pub mod json;
+pub mod names;
+pub mod report;
+pub mod snapshot;
+pub mod trace;
+
+pub use hist::{HistAccum, Histogram, MAX_REL_ERR};
+pub use report::{validate as validate_bench_report, BenchReport};
+pub use snapshot::{
+    counter_add, counter_incr, counter_value, gauge_handle, gauge_set, gauge_set_labeled,
+    histogram, observe, observe_duration, register_histogram, GaugeHandle, HistSeries,
+    MetricsSnapshot,
+};
+pub use trace::{
+    chrome_trace_json, snapshot_spans, span, validate_chrome_trace, write_chrome_trace, SpanEvent,
+    SpanGuard,
+};
+
+/// Convenience constructor mirroring `obs::bench_report("fig13_matvec")`.
+pub fn bench_report(bench: &str) -> BenchReport {
+    BenchReport::new(bench)
+}

@@ -1,0 +1,149 @@
+//! The metric/span name registry: every name the crate records is a
+//! `const` here, so a typo in an instrumentation site fails at compile
+//! time instead of silently splitting a series. `docs/metrics.md` renders
+//! [`REGISTRY`] as the human-readable table; CI greps that benches and
+//! examples never use raw dotted name literals.
+
+/// What a registered name counts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricKind {
+    /// A wall-clock phase/span (also a Chrome-trace span name).
+    Span,
+    /// A value distribution with quantiles (log-linear histogram).
+    Histogram,
+    /// A monotone event count.
+    Counter,
+    /// A last-value gauge.
+    Gauge,
+}
+
+/// One registry row: name plus the metadata the exporters and docs need.
+#[derive(Clone, Copy, Debug)]
+pub struct MetricDef {
+    pub name: &'static str,
+    pub kind: MetricKind,
+    /// Unit of the recorded value ("ns", "bytes", "iters", "" for counts).
+    pub unit: &'static str,
+    /// Label keys this series may carry ("" if unlabeled).
+    pub labels: &'static str,
+    pub help: &'static str,
+}
+
+// --- construction phases (paper §6 attribution) ---
+pub const BUILD_MORTON: &str = "build.morton";
+pub const BUILD_BLOCK_TREE: &str = "build.block_tree";
+pub const BUILD_PRECOMPUTE_ACA: &str = "build.precompute_aca";
+pub const BUILD_RECOMPRESS: &str = "build.recompress";
+pub const BLOCK_TREE_BBOX_TABLE: &str = "block_tree.bbox_table";
+pub const BLOCK_TREE_BBOX_MAP: &str = "block_tree.bbox_map";
+
+// --- apply phases ---
+pub const MATVEC_DENSE: &str = "matvec.dense";
+pub const MATVEC_ACA: &str = "matvec.aca";
+pub const RUNTIME_MATMAT_FALLBACK: &str = "runtime.matmat_fallback";
+pub const XLA_COMPILE: &str = "xla.compile";
+pub const DPP_LAUNCH: &str = "dpp.launch";
+
+// --- serving ---
+pub const SERVE_WAIT: &str = "serve.wait";
+pub const SERVE_APPLY: &str = "serve.apply";
+pub const SERVE_FLUSH: &str = "serve.flush";
+pub const SERVE_SCATTER: &str = "serve.scatter";
+pub const SERVE_QUEUE_DEPTH: &str = "serve.queue_depth";
+pub const SERVE_BATCH_OCCUPANCY: &str = "serve.batch_occupancy";
+
+// --- compression / memory governance ---
+pub const COMPRESS_PASS: &str = "compress.pass";
+pub const GOVERNOR_RECOMPRESS: &str = "governor.recompress";
+pub const GOVERNOR_EVICT: &str = "governor.evict";
+pub const GOVERNOR_REJECT: &str = "governor.reject";
+pub const GOVERNOR_BYTES_IN_USE: &str = "governor.bytes_in_use";
+
+// --- solvers ---
+pub const SOLVER_CG_ITERS: &str = "solver.cg.iters";
+pub const SOLVER_BLOCK_CG_ITERS: &str = "solver.block_cg.iters";
+pub const SOLVER_BLOCK_BICGSTAB_ITERS: &str = "solver.block_bicgstab.iters";
+pub const SOLVER_CG_SOLVE: &str = "solver.cg.solve";
+pub const SOLVER_BLOCK_CG_SOLVE: &str = "solver.block_cg.solve";
+pub const SOLVER_BLOCK_BICGSTAB_SOLVE: &str = "solver.block_bicgstab.solve";
+pub const SOLVER_CG_RESIDUAL: &str = "solver.cg.final_residual";
+pub const SOLVER_BLOCK_CG_RESIDUAL: &str = "solver.block_cg.final_residual";
+pub const SOLVER_BLOCK_BICGSTAB_RESIDUAL: &str = "solver.block_bicgstab.final_residual";
+
+// --- the observability layer itself ---
+pub const OBS_TRACE_DROPPED: &str = "obs.trace_dropped";
+
+/// Every name the crate records, with kind/unit/label metadata. Kept
+/// sorted by name; `docs/metrics.md` mirrors this table.
+pub const REGISTRY: &[MetricDef] = &[
+    MetricDef { name: BLOCK_TREE_BBOX_MAP, kind: MetricKind::Span, unit: "ns", labels: "", help: "bbox lookup-map construction inside block-tree build" },
+    MetricDef { name: BLOCK_TREE_BBOX_TABLE, kind: MetricKind::Span, unit: "ns", labels: "", help: "batched bounding-box table computation" },
+    MetricDef { name: BUILD_BLOCK_TREE, kind: MetricKind::Span, unit: "ns", labels: "", help: "level-wise block cluster tree traversal (paper Fig 12 R)" },
+    MetricDef { name: BUILD_MORTON, kind: MetricKind::Span, unit: "ns", labels: "", help: "Morton codes + sort, the spatial data structure (Fig 12 L)" },
+    MetricDef { name: BUILD_PRECOMPUTE_ACA, kind: MetricKind::Span, unit: "ns", labels: "", help: "P-mode batched ACA factor precomputation" },
+    MetricDef { name: BUILD_RECOMPRESS, kind: MetricKind::Span, unit: "ns", labels: "", help: "build-time Bebendorf-Kunis recompression pass" },
+    MetricDef { name: COMPRESS_PASS, kind: MetricKind::Span, unit: "ns", labels: "", help: "operator-wide budgeted truncation pass (build-time or governor-driven)" },
+    MetricDef { name: DPP_LAUNCH, kind: MetricKind::Span, unit: "ns", labels: "", help: "one BSP kernel launch over virtual threads" },
+    MetricDef { name: GOVERNOR_BYTES_IN_USE, kind: MetricKind::Gauge, unit: "bytes", labels: "", help: "cross-tenant P-mode factor bytes accounted by the memory governor" },
+    MetricDef { name: GOVERNOR_EVICT, kind: MetricKind::Counter, unit: "", labels: "", help: "idle-LRU tenant evictions by the memory governor" },
+    MetricDef { name: GOVERNOR_RECOMPRESS, kind: MetricKind::Counter, unit: "", labels: "", help: "in-place tenant recompressions ordered by the memory governor" },
+    MetricDef { name: GOVERNOR_REJECT, kind: MetricKind::Counter, unit: "", labels: "", help: "admissions rejected because the operator cannot fit even alone" },
+    MetricDef { name: MATVEC_ACA, kind: MetricKind::Span, unit: "ns", labels: "", help: "batched low-rank (ACA factor) products of one mat-mat" },
+    MetricDef { name: MATVEC_DENSE, kind: MetricKind::Span, unit: "ns", labels: "", help: "batched dense near-field products of one mat-mat" },
+    MetricDef { name: OBS_TRACE_DROPPED, kind: MetricKind::Counter, unit: "", labels: "", help: "span events overwritten in a full per-thread trace ring" },
+    MetricDef { name: RUNTIME_MATMAT_FALLBACK, kind: MetricKind::Counter, unit: "", labels: "", help: "multi-RHS applies that fell back to columnwise (no fused artifact)" },
+    MetricDef { name: SERVE_APPLY, kind: MetricKind::Histogram, unit: "ns", labels: "tenant", help: "batched-apply latency per flushed batch" },
+    MetricDef { name: SERVE_BATCH_OCCUPANCY, kind: MetricKind::Histogram, unit: "reqs", labels: "tenant", help: "requests coalesced per flushed batch" },
+    MetricDef { name: SERVE_FLUSH, kind: MetricKind::Span, unit: "ns", labels: "", help: "one batcher flush: assemble block, batched apply, scatter" },
+    MetricDef { name: SERVE_QUEUE_DEPTH, kind: MetricKind::Gauge, unit: "reqs", labels: "tenant", help: "queued-but-not-dequeued submissions right now" },
+    MetricDef { name: SERVE_SCATTER, kind: MetricKind::Span, unit: "ns", labels: "", help: "scattering per-caller result columns after a batched apply" },
+    MetricDef { name: SERVE_WAIT, kind: MetricKind::Histogram, unit: "ns", labels: "tenant", help: "submit -> batch-pickup wait per request" },
+    MetricDef { name: SOLVER_BLOCK_BICGSTAB_RESIDUAL, kind: MetricKind::Gauge, unit: "rel", labels: "", help: "worst-column relative residual of the last block-BiCGSTAB solve" },
+    MetricDef { name: SOLVER_BLOCK_BICGSTAB_ITERS, kind: MetricKind::Histogram, unit: "iters", labels: "", help: "block-BiCGSTAB iterations per solve" },
+    MetricDef { name: SOLVER_BLOCK_BICGSTAB_SOLVE, kind: MetricKind::Span, unit: "ns", labels: "", help: "one block-BiCGSTAB solve end to end" },
+    MetricDef { name: SOLVER_BLOCK_CG_RESIDUAL, kind: MetricKind::Gauge, unit: "rel", labels: "", help: "worst-column relative residual of the last block-CG solve" },
+    MetricDef { name: SOLVER_BLOCK_CG_ITERS, kind: MetricKind::Histogram, unit: "iters", labels: "", help: "block-CG iterations per solve" },
+    MetricDef { name: SOLVER_BLOCK_CG_SOLVE, kind: MetricKind::Span, unit: "ns", labels: "", help: "one block-CG solve end to end" },
+    MetricDef { name: SOLVER_CG_RESIDUAL, kind: MetricKind::Gauge, unit: "rel", labels: "", help: "relative residual of the last CG solve" },
+    MetricDef { name: SOLVER_CG_ITERS, kind: MetricKind::Histogram, unit: "iters", labels: "", help: "CG iterations per solve" },
+    MetricDef { name: SOLVER_CG_SOLVE, kind: MetricKind::Span, unit: "ns", labels: "", help: "one CG solve end to end" },
+    MetricDef { name: XLA_COMPILE, kind: MetricKind::Span, unit: "ns", labels: "", help: "PJRT/XLA artifact compilation" },
+];
+
+/// Metadata for `name`, if registered.
+pub fn lookup(name: &str) -> Option<&'static MetricDef> {
+    REGISTRY.iter().find(|d| d.name == name)
+}
+
+/// Whether `name` is a registered metric/span name.
+pub fn is_registered(name: &str) -> bool {
+    lookup(name).is_some()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_the_consts() {
+        for name in [
+            BUILD_MORTON,
+            MATVEC_DENSE,
+            SERVE_WAIT,
+            SERVE_FLUSH,
+            GOVERNOR_EVICT,
+            SOLVER_BLOCK_CG_ITERS,
+            OBS_TRACE_DROPPED,
+        ] {
+            assert!(is_registered(name), "{name} missing from REGISTRY");
+        }
+        assert!(!is_registered("serve.wat"));
+    }
+
+    #[test]
+    fn lookup_returns_metadata() {
+        let d = lookup(SERVE_WAIT).unwrap();
+        assert_eq!(d.unit, "ns");
+        assert_eq!(d.labels, "tenant");
+    }
+}

@@ -1,0 +1,235 @@
+//! Machine-readable bench artifacts: every `fig_*`/`abl_*` bench emits a
+//! `BENCH_<name>.json` (schema `hmx-bench/1`) alongside its `hmx-bench`
+//! CSV lines, so perf PRs can diff against a stored baseline instead of
+//! eyeballing stdout. CI smoke-runs two benches and schema-validates the
+//! artifacts with [`validate`].
+
+use std::fmt::Display;
+use std::io;
+use std::path::PathBuf;
+
+use super::json::{self, Json};
+use crate::metrics::Measurement;
+
+/// Schema tag written into (and required from) every artifact.
+pub const BENCH_SCHEMA: &str = "hmx-bench/1";
+
+/// Env var naming the directory artifacts are written into (default: cwd).
+pub const BENCH_OUT_ENV: &str = "HMX_BENCH_OUT";
+
+struct Point {
+    x: f64,
+    metrics: Vec<(String, f64)>,
+}
+
+struct Series {
+    name: String,
+    points: Vec<Point>,
+}
+
+/// Accumulates one bench run's parameters and measured series, then
+/// writes `BENCH_<bench>.json`.
+pub struct BenchReport {
+    bench: String,
+    params: Vec<(String, String)>,
+    series: Vec<Series>,
+}
+
+impl BenchReport {
+    pub fn new(bench: &str) -> Self {
+        BenchReport { bench: bench.to_string(), params: Vec::new(), series: Vec::new() }
+    }
+
+    /// Record a run parameter (problem size, thread count, mode...).
+    pub fn param(&mut self, key: &str, value: impl Display) -> &mut Self {
+        self.params.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    fn series_mut(&mut self, name: &str) -> &mut Series {
+        if let Some(i) = self.series.iter().position(|s| s.name == name) {
+            &mut self.series[i]
+        } else {
+            self.series.push(Series { name: name.to_string(), points: Vec::new() });
+            self.series.last_mut().unwrap()
+        }
+    }
+
+    /// Add one point to `series` at abscissa `x` with named metric values.
+    pub fn point(&mut self, series: &str, x: f64, metrics: &[(&str, f64)]) -> &mut Self {
+        let s = self.series_mut(series);
+        s.points.push(Point {
+            x,
+            metrics: metrics.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        });
+        self
+    }
+
+    /// Add a [`Measurement`] (median/mean/min/max seconds) as one point.
+    pub fn measurement(&mut self, series: &str, x: f64, m: &Measurement) -> &mut Self {
+        self.point(
+            series,
+            x,
+            &[
+                ("median_s", m.median.as_secs_f64()),
+                ("mean_s", m.mean.as_secs_f64()),
+                ("min_s", m.min.as_secs_f64()),
+                ("max_s", m.max.as_secs_f64()),
+            ],
+        )
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(512);
+        out.push_str("{\"schema\":");
+        json::escape_into(BENCH_SCHEMA, &mut out);
+        out.push_str(",\"bench\":");
+        json::escape_into(&self.bench, &mut out);
+        out.push_str(",\"params\":{");
+        for (i, (k, v)) in self.params.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            json::escape_into(k, &mut out);
+            out.push(':');
+            json::escape_into(v, &mut out);
+        }
+        out.push_str("},\"series\":[");
+        for (i, s) in self.series.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str("{\"name\":");
+            json::escape_into(&s.name, &mut out);
+            out.push_str(",\"points\":[");
+            for (j, p) in s.points.iter().enumerate() {
+                if j > 0 {
+                    out.push(',');
+                }
+                out.push_str(&format!("{{\"x\":{},\"metrics\":{{", json::num(p.x)));
+                for (k, (name, v)) in p.metrics.iter().enumerate() {
+                    if k > 0 {
+                        out.push(',');
+                    }
+                    json::escape_into(name, &mut out);
+                    out.push(':');
+                    out.push_str(&json::num(*v));
+                }
+                out.push_str("}}");
+            }
+            out.push_str("]}");
+        }
+        out.push_str("]}");
+        out
+    }
+
+    /// Target path: `$HMX_BENCH_OUT/BENCH_<bench>.json` (cwd if unset).
+    pub fn path(&self) -> PathBuf {
+        let dir = std::env::var(BENCH_OUT_ENV).unwrap_or_else(|_| ".".to_string());
+        PathBuf::from(dir).join(format!("BENCH_{}.json", self.bench))
+    }
+
+    /// Write the artifact; returns the path written.
+    pub fn write(&self) -> io::Result<PathBuf> {
+        let path = self.path();
+        std::fs::write(&path, self.to_json())?;
+        Ok(path)
+    }
+}
+
+/// Schema-validate a `BENCH_*.json` document. Returns (series, points).
+pub fn validate(input: &str) -> Result<(usize, usize), String> {
+    let v = json::parse(input)?;
+    match v.get("schema").and_then(|s| s.as_str()) {
+        Some(BENCH_SCHEMA) => {}
+        other => return Err(format!("bad schema tag: {other:?}")),
+    }
+    v.get("bench").and_then(|s| s.as_str()).ok_or("missing bench name")?;
+    let params = v.get("params").and_then(|p| p.as_object()).ok_or("missing params object")?;
+    for (k, val) in params {
+        if val.as_str().is_none() {
+            return Err(format!("param {k}: value must be a string"));
+        }
+    }
+    let series = v.get("series").and_then(|s| s.as_array()).ok_or("missing series array")?;
+    if series.is_empty() {
+        return Err("series array is empty".into());
+    }
+    let mut npoints = 0;
+    for (i, s) in series.iter().enumerate() {
+        s.get("name")
+            .and_then(|n| n.as_str())
+            .ok_or_else(|| format!("series[{i}]: missing name"))?;
+        let points = s
+            .get("points")
+            .and_then(|p| p.as_array())
+            .ok_or_else(|| format!("series[{i}]: missing points array"))?;
+        if points.is_empty() {
+            return Err(format!("series[{i}]: no points"));
+        }
+        for (j, p) in points.iter().enumerate() {
+            let ctx = format!("series[{i}].points[{j}]");
+            let x = p.get("x").and_then(|x| x.as_f64()).ok_or_else(|| format!("{ctx}: missing x"))?;
+            if !x.is_finite() {
+                return Err(format!("{ctx}: non-finite x"));
+            }
+            let metrics = p
+                .get("metrics")
+                .and_then(|m| m.as_object())
+                .ok_or_else(|| format!("{ctx}: missing metrics object"))?;
+            if metrics.is_empty() {
+                return Err(format!("{ctx}: empty metrics"));
+            }
+            for (k, mv) in metrics {
+                match mv {
+                    Json::Num(x) if x.is_finite() => {}
+                    _ => return Err(format!("{ctx}: metric {k} not a finite number")),
+                }
+            }
+        }
+        npoints += points.len();
+    }
+    Ok((series.len(), npoints))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn report_roundtrips_through_validate() {
+        let mut r = BenchReport::new("unit_test");
+        r.param("n", 4096).param("mode", "smoke");
+        r.point("latency", 1.0, &[("p50_us", 12.0), ("p99_us", 40.0)]);
+        let m = Measurement {
+            median: Duration::from_millis(2),
+            mean: Duration::from_millis(2),
+            min: Duration::from_millis(1),
+            max: Duration::from_millis(3),
+            trials: 3,
+        };
+        r.measurement("matvec", 4096.0, &m);
+        let json = r.to_json();
+        assert_eq!(validate(&json).unwrap(), (2, 2));
+    }
+
+    #[test]
+    fn validate_rejects_bad_documents() {
+        assert!(validate("{}").is_err());
+        assert!(validate(r#"{"schema":"hmx-bench/1","bench":"x","params":{},"series":[]}"#)
+            .is_err());
+        assert!(validate(
+            r#"{"schema":"hmx-bench/1","bench":"x","params":{},
+                "series":[{"name":"s","points":[{"x":1,"metrics":{}}]}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn bench_out_env_controls_path() {
+        let r = BenchReport::new("pathcheck");
+        let p = r.path();
+        assert!(p.to_string_lossy().ends_with("BENCH_pathcheck.json"));
+    }
+}

@@ -1,0 +1,382 @@
+//! The process-wide metric registry and its exporters.
+//!
+//! Histograms, counters and gauges live in a global map keyed by
+//! `(name, tenant)`. Hot paths never touch the map: they hold an
+//! `Arc<Histogram>` (or `Arc<AtomicU64>`) obtained once and record
+//! lock-free. Components that own per-instance histograms (a tenant's
+//! `BatcherStats`) register them *weakly*, so an instance's `reset()`
+//! only affects itself while live instances still aggregate into every
+//! [`MetricsSnapshot`]; dropped instances fall out on the next capture.
+//!
+//! [`MetricsSnapshot::capture`] merges everything — including the
+//! legacy [`crate::metrics::RECORDER`] phase totals — into one plain
+//! struct, exportable as JSON (`hmx obs`) or Prometheus text.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+
+use once_cell::sync::Lazy;
+
+use super::hist::{HistAccum, Histogram};
+use super::{json, names};
+use crate::metrics;
+
+type Key = (String, String); // (name, tenant); tenant "" = unlabeled
+
+struct HistEntry {
+    /// The shared get-or-create instance behind [`histogram`]/[`observe`].
+    shared: Option<Arc<Histogram>>,
+    /// Weakly-held per-instance histograms (e.g. one per batcher).
+    weak: Vec<Weak<Histogram>>,
+}
+
+struct Registry {
+    hists: Mutex<HashMap<Key, HistEntry>>,
+    counters: Mutex<HashMap<Key, Arc<AtomicU64>>>,
+    gauges: Mutex<HashMap<Key, Arc<AtomicU64>>>, // f64 bits
+}
+
+static REGISTRY: Lazy<Registry> = Lazy::new(|| Registry {
+    hists: Mutex::new(HashMap::new()),
+    counters: Mutex::new(HashMap::new()),
+    gauges: Mutex::new(HashMap::new()),
+});
+
+fn key(name: &str, tenant: &str) -> Key {
+    (name.to_string(), tenant.to_string())
+}
+
+/// Get (or create) the shared histogram for `(name, tenant)`. Hold the
+/// returned `Arc` and call [`Histogram::record`] on the hot path; this
+/// lookup itself takes the registry lock.
+pub fn histogram(name: &str, tenant: &str) -> Arc<Histogram> {
+    let mut hists = REGISTRY.hists.lock().unwrap();
+    let entry = hists
+        .entry(key(name, tenant))
+        .or_insert_with(|| HistEntry { shared: None, weak: Vec::new() });
+    Arc::clone(entry.shared.get_or_insert_with(|| Arc::new(Histogram::new())))
+}
+
+/// Register a component-owned histogram under `(name, tenant)` without
+/// keeping it alive: snapshots aggregate it while the owner lives.
+pub fn register_histogram(name: &str, tenant: &str, h: &Arc<Histogram>) {
+    let mut hists = REGISTRY.hists.lock().unwrap();
+    let entry = hists
+        .entry(key(name, tenant))
+        .or_insert_with(|| HistEntry { shared: None, weak: Vec::new() });
+    entry.weak.retain(|w| w.strong_count() > 0);
+    entry.weak.push(Arc::downgrade(h));
+}
+
+/// One-shot record into the shared unlabeled histogram for `name`.
+pub fn observe(name: &str, v: u64) {
+    histogram(name, "").record(v);
+}
+
+/// One-shot record of a duration (nanoseconds) for `name`.
+pub fn observe_duration(name: &str, d: std::time::Duration) {
+    histogram(name, "").record_duration(d);
+}
+
+fn counter(name: &str, tenant: &str) -> Arc<AtomicU64> {
+    let mut counters = REGISTRY.counters.lock().unwrap();
+    Arc::clone(counters.entry(key(name, tenant)).or_default())
+}
+
+/// Add 1 to the counter `name` (unlabeled).
+pub fn counter_incr(name: &str) {
+    counter_add(name, 1);
+}
+
+/// Add `n` to the counter `name` (unlabeled).
+pub fn counter_add(name: &str, n: u64) {
+    counter(name, "").fetch_add(n, Ordering::Relaxed);
+}
+
+/// Current value of counter `(name, tenant)` (0 if never touched).
+pub fn counter_value(name: &str) -> u64 {
+    counter(name, "").load(Ordering::Relaxed)
+}
+
+/// Set the gauge `(name, tenant)` to `v`.
+pub fn gauge_set_labeled(name: &str, tenant: &str, v: f64) {
+    let cell = {
+        let mut gauges = REGISTRY.gauges.lock().unwrap();
+        Arc::clone(gauges.entry(key(name, tenant)).or_default())
+    };
+    cell.store(v.to_bits(), Ordering::Relaxed);
+}
+
+/// Set the unlabeled gauge `name` to `v`.
+pub fn gauge_set(name: &str, v: f64) {
+    gauge_set_labeled(name, "", v);
+}
+
+/// A handle for hot-path gauge updates (one registry lookup up front).
+pub struct GaugeHandle(Arc<AtomicU64>);
+
+impl GaugeHandle {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+}
+
+/// Obtain a reusable handle to the gauge `(name, tenant)`.
+pub fn gauge_handle(name: &str, tenant: &str) -> GaugeHandle {
+    let mut gauges = REGISTRY.gauges.lock().unwrap();
+    GaugeHandle(Arc::clone(gauges.entry(key(name, tenant)).or_default()))
+}
+
+/// Summary of one `(name, tenant)` histogram series at capture time.
+#[derive(Clone, Debug)]
+pub struct HistSeries {
+    pub name: String,
+    pub tenant: String,
+    pub count: u64,
+    pub sum: u64,
+    pub mean: f64,
+    pub min: u64,
+    pub p50: u64,
+    pub p90: u64,
+    pub p99: u64,
+    pub max: u64,
+}
+
+/// A point-in-time merged view of every metric in the process.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    /// Legacy flat phase totals from [`crate::metrics::RECORDER`].
+    pub phases: Vec<metrics::PhaseStats>,
+    pub histograms: Vec<HistSeries>,
+    /// `(name, tenant, value)`.
+    pub counters: Vec<(String, String, u64)>,
+    /// `(name, tenant, value)`.
+    pub gauges: Vec<(String, String, f64)>,
+}
+
+impl MetricsSnapshot {
+    /// Merge every registered histogram/counter/gauge plus the recorder's
+    /// phase totals. Output is sorted by `(name, tenant)` so exports are
+    /// deterministic.
+    pub fn capture() -> Self {
+        let mut histograms = Vec::new();
+        {
+            let mut hists = REGISTRY.hists.lock().unwrap();
+            for ((name, tenant), entry) in hists.iter_mut() {
+                entry.weak.retain(|w| w.strong_count() > 0);
+                let mut acc = HistAccum::new();
+                if let Some(h) = &entry.shared {
+                    h.fold_into(&mut acc);
+                }
+                for w in &entry.weak {
+                    if let Some(h) = w.upgrade() {
+                        h.fold_into(&mut acc);
+                    }
+                }
+                if acc.is_empty() {
+                    continue;
+                }
+                histograms.push(HistSeries {
+                    name: name.clone(),
+                    tenant: tenant.clone(),
+                    count: acc.count,
+                    sum: acc.sum,
+                    mean: acc.mean(),
+                    min: acc.min(),
+                    p50: acc.quantile(0.50),
+                    p90: acc.quantile(0.90),
+                    p99: acc.quantile(0.99),
+                    max: acc.max(),
+                });
+            }
+        }
+        histograms.sort_by(|a, b| (&a.name, &a.tenant).cmp(&(&b.name, &b.tenant)));
+
+        let mut counters: Vec<(String, String, u64)> = {
+            let c = REGISTRY.counters.lock().unwrap();
+            c.iter()
+                .map(|((n, t), v)| (n.clone(), t.clone(), v.load(Ordering::Relaxed)))
+                .filter(|(_, _, v)| *v > 0)
+                .collect()
+        };
+        counters.sort();
+
+        let mut gauges: Vec<(String, String, f64)> = {
+            let g = REGISTRY.gauges.lock().unwrap();
+            g.iter()
+                .map(|((n, t), v)| (n.clone(), t.clone(), f64::from_bits(v.load(Ordering::Relaxed))))
+                .collect()
+        };
+        gauges.sort_by(|a, b| (&a.0, &a.1).cmp(&(&b.0, &b.1)));
+
+        let mut phases = metrics::RECORDER.stats();
+        phases.sort_by(|a, b| a.phase.cmp(&b.phase));
+
+        MetricsSnapshot { phases, histograms, counters, gauges }
+    }
+
+    /// Serialize as a JSON document (`hmx-metrics/1` schema).
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(1024);
+        out.push_str("{\"schema\":\"hmx-metrics/1\",\"phases\":[");
+        for (i, p) in self.phases.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str("{\"phase\":");
+            json::escape_into(&p.phase, &mut out);
+            out.push_str(&format!(
+                ",\"total_ns\":{},\"count\":{},\"mean_ns\":{}}}",
+                p.total.as_nanos(),
+                p.count,
+                p.mean.as_nanos()
+            ));
+        }
+        out.push_str("],\"histograms\":[");
+        for (i, h) in self.histograms.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let unit = names::lookup(&h.name).map(|d| d.unit).unwrap_or("");
+            out.push_str("{\"name\":");
+            json::escape_into(&h.name, &mut out);
+            out.push_str(",\"tenant\":");
+            json::escape_into(&h.tenant, &mut out);
+            out.push_str(",\"unit\":");
+            json::escape_into(unit, &mut out);
+            out.push_str(&format!(
+                ",\"count\":{},\"sum\":{},\"mean\":{},\"min\":{},\"p50\":{},\"p90\":{},\
+                 \"p99\":{},\"max\":{}}}",
+                h.count,
+                h.sum,
+                json::num(h.mean),
+                h.min,
+                h.p50,
+                h.p90,
+                h.p99,
+                h.max
+            ));
+        }
+        out.push_str("],\"counters\":[");
+        for (i, (n, t, v)) in self.counters.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str("{\"name\":");
+            json::escape_into(n, &mut out);
+            out.push_str(",\"tenant\":");
+            json::escape_into(t, &mut out);
+            out.push_str(&format!(",\"value\":{v}}}"));
+        }
+        out.push_str("],\"gauges\":[");
+        for (i, (n, t, v)) in self.gauges.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str("{\"name\":");
+            json::escape_into(n, &mut out);
+            out.push_str(",\"tenant\":");
+            json::escape_into(t, &mut out);
+            out.push_str(&format!(",\"value\":{}}}", json::num(*v)));
+        }
+        out.push_str("]}");
+        out
+    }
+
+    /// Serialize in the Prometheus text exposition format.
+    pub fn to_prometheus(&self) -> String {
+        fn mangle(name: &str) -> String {
+            name.chars().map(|c| if c.is_ascii_alphanumeric() { c } else { '_' }).collect()
+        }
+        fn label(tenant: &str, extra: &str) -> String {
+            let mut parts = Vec::new();
+            if !tenant.is_empty() {
+                parts.push(format!("tenant=\"{tenant}\""));
+            }
+            if !extra.is_empty() {
+                parts.push(extra.to_string());
+            }
+            if parts.is_empty() {
+                String::new()
+            } else {
+                format!("{{{}}}", parts.join(","))
+            }
+        }
+        let mut out = String::with_capacity(1024);
+        for p in &self.phases {
+            let m = mangle(&p.phase);
+            out.push_str(&format!(
+                "hmx_phase_{m}_seconds_total {}\nhmx_phase_{m}_count {}\n",
+                json::num(p.total.as_secs_f64()),
+                p.count
+            ));
+        }
+        for h in &self.histograms {
+            let m = mangle(&h.name);
+            for (q, v) in [(0.5, h.p50), (0.9, h.p90), (0.99, h.p99)] {
+                out.push_str(&format!(
+                    "hmx_{m}{} {v}\n",
+                    label(&h.tenant, &format!("quantile=\"{q}\""))
+                ));
+            }
+            out.push_str(&format!("hmx_{m}_sum{} {}\n", label(&h.tenant, ""), h.sum));
+            out.push_str(&format!("hmx_{m}_count{} {}\n", label(&h.tenant, ""), h.count));
+        }
+        for (n, t, v) in &self.counters {
+            out.push_str(&format!("hmx_{}_total{} {v}\n", mangle(n), label(t, "")));
+        }
+        for (n, t, v) in &self.gauges {
+            out.push_str(&format!("hmx_{}{} {}\n", mangle(n), label(t, ""), json::num(*v)));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observe_lands_in_snapshot() {
+        for v in [10u64, 20, 30] {
+            histogram("test.snapshot.series", "tenant-a").record(v);
+        }
+        let snap = MetricsSnapshot::capture();
+        let h = snap
+            .histograms
+            .iter()
+            .find(|h| h.name == "test.snapshot.series" && h.tenant == "tenant-a")
+            .expect("series present");
+        assert_eq!(h.count, 3);
+        assert_eq!(h.sum, 60);
+        assert_eq!(h.min, 10);
+        assert_eq!(h.max, 30);
+    }
+
+    #[test]
+    fn weak_registration_drops_with_owner() {
+        let h = Arc::new(Histogram::new());
+        h.record(7);
+        register_histogram("test.snapshot.weak", "", &h);
+        let snap = MetricsSnapshot::capture();
+        assert!(snap.histograms.iter().any(|s| s.name == "test.snapshot.weak" && s.count == 1));
+        drop(h);
+        let snap = MetricsSnapshot::capture();
+        assert!(!snap.histograms.iter().any(|s| s.name == "test.snapshot.weak"));
+    }
+
+    #[test]
+    fn exports_are_well_formed() {
+        histogram("test.snapshot.json", "").record(5);
+        counter_add("test.snapshot.ctr", 2);
+        gauge_set("test.snapshot.gauge", 1.5);
+        let snap = MetricsSnapshot::capture();
+        let parsed = json::parse(&snap.to_json()).expect("valid json");
+        assert_eq!(parsed.get("schema").and_then(|s| s.as_str()), Some("hmx-metrics/1"));
+        let prom = snap.to_prometheus();
+        assert!(prom.contains("hmx_test_snapshot_ctr_total 2"));
+        assert!(prom.contains("hmx_test_snapshot_gauge 1.5"));
+        assert!(prom.contains("quantile=\"0.5\""));
+    }
+}

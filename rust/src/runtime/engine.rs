@@ -53,7 +53,7 @@ impl XlaEngine {
     /// Compile-or-fetch the executable for `artifact`.
     fn executable(&self, artifact: &Artifact) -> Result<()> {
         if !self.cache.borrow().contains_key(&artifact.name) {
-            let exe = crate::metrics::timed("xla.compile", || compile_hlo_file(&self.client, &artifact.file))?;
+            let exe = crate::metrics::timed(crate::obs::names::XLA_COMPILE, || compile_hlo_file(&self.client, &artifact.file))?;
             self.cache.borrow_mut().insert(artifact.name.clone(), exe);
         }
         Ok(())

@@ -24,6 +24,7 @@ use super::telemetry::BatcherStats;
 use super::{ServeConfig, ServeError};
 use crate::compress::{CompressConfig, CompressStats};
 use crate::metrics::RECORDER;
+use crate::obs::{self, names};
 
 /// What a client gets back: its result column or a serving error.
 type Response = Result<Vec<f64>, ServeError>;
@@ -223,13 +224,31 @@ impl DynamicBatcher {
         A: FnMut(&[f64], usize) -> crate::Result<Vec<f64>> + 'static,
         C: FnMut(Control) + 'static,
     {
+        Self::spawn_labeled(n, cfg, "", build)
+    }
+
+    /// Like [`DynamicBatcher::spawn_with_control`], with a tenant label:
+    /// this batcher's wait/apply/occupancy histograms and queue-depth
+    /// gauge carry `tenant=label` in the global metric registry (the
+    /// [`crate::serve::OperatorRegistry`] passes the operator id).
+    pub fn spawn_labeled<B, A, C>(
+        n: usize,
+        cfg: ServeConfig,
+        tenant: &str,
+        build: B,
+    ) -> Result<Self, ServeError>
+    where
+        B: FnOnce() -> crate::Result<(A, C)> + Send + 'static,
+        A: FnMut(&[f64], usize) -> crate::Result<Vec<f64>> + 'static,
+        C: FnMut(Control) + 'static,
+    {
         cfg.validate()?;
         if n == 0 {
             return Err(ServeError::BadRequest("operator dimension must be positive".into()));
         }
         let (tx, rx) = mpsc::sync_channel(cfg.queue_capacity);
         let (ctl_tx, ctl_rx) = mpsc::channel::<Control>();
-        let stats = Arc::new(BatcherStats::new());
+        let stats = Arc::new(BatcherStats::with_tenant(tenant));
         let shutdown = Arc::new(AtomicBool::new(false));
         let (btx, brx) = mpsc::channel::<Result<(), ServeError>>();
         let stats_ex = Arc::clone(&stats);
@@ -420,12 +439,16 @@ fn process_batch<A>(
 ) where
     A: FnMut(&[f64], usize) -> crate::Result<Vec<f64>>,
 {
+    // the flush span covers assemble + batched apply + scatter; with
+    // tracing enabled it therefore *contains* the matvec.dense/matvec.aca
+    // spans the apply emits on this same executor thread
+    let _flush = obs::span(names::SERVE_FLUSH);
     let nrhs = batch.len();
     let picked = Instant::now();
     for req in &batch {
         let wait = picked.duration_since(req.submitted);
         stats.record_wait(wait);
-        RECORDER.add("serve.wait", wait);
+        RECORDER.add(names::SERVE_WAIT, wait);
     }
     xbuf.clear();
     xbuf.reserve(n * nrhs);
@@ -433,10 +456,14 @@ fn process_batch<A>(
         xbuf.extend_from_slice(&req.x);
     }
     let t0 = Instant::now();
-    let out = apply(&xbuf[..], nrhs);
+    let out = {
+        let _apply = obs::span(names::SERVE_APPLY);
+        apply(&xbuf[..], nrhs)
+    };
     let apply_time = t0.elapsed();
     stats.record_batch(nrhs, apply_time);
-    RECORDER.add("serve.apply", apply_time);
+    RECORDER.add(names::SERVE_APPLY, apply_time);
+    let _scatter = obs::span(names::SERVE_SCATTER);
     match out {
         // the shape check is a hard runtime guard, not a debug_assert:
         // spawn() accepts arbitrary user closures, and a short block must

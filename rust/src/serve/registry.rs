@@ -191,7 +191,9 @@ impl OperatorRegistry {
         // share it.
         let (mtx, mrx) = mpsc::channel::<OperatorMeta>();
         let meta_id = id.to_string();
-        let batcher = DynamicBatcher::spawn_with_control(n, serve_cfg, move || {
+        // spawn_labeled: this tenant's wait/apply/occupancy histograms and
+        // queue-depth gauge carry tenant=<id> in the global metric registry
+        let batcher = DynamicBatcher::spawn_labeled(n, serve_cfg, id, move || {
             let h = HMatrix::build(points, &build_cfg)?;
             let _ = mtx.send(OperatorMeta {
                 id: meta_id,
@@ -402,6 +404,18 @@ impl OperatorRegistry {
 
     pub fn is_empty(&self) -> bool {
         self.ops.lock().unwrap().is_empty()
+    }
+
+    /// A merged [`crate::obs::MetricsSnapshot`] of every metric in the
+    /// process — per-tenant `serve.*` histogram series (labeled with the
+    /// operator ids registered here), governor counters, solver and
+    /// construction phases. Refreshes the governor's byte gauge first so
+    /// the snapshot reflects the live registry footprint.
+    pub fn observe(&self) -> crate::obs::MetricsSnapshot {
+        if let Some(gov) = &self.governor {
+            gov.record_bytes(self.factor_bytes());
+        }
+        crate::obs::MetricsSnapshot::capture()
     }
 }
 
@@ -695,6 +709,31 @@ mod tests {
         let snap = reg.governor().unwrap().snapshot();
         assert_eq!(snap.rejections, 1);
         assert!(snap.recompressions >= 1, "it should have tried compressing first");
+    }
+
+    #[test]
+    fn observe_exposes_tenant_labeled_series() {
+        let cfg = test_cfg(256);
+        let reg = OperatorRegistry::new();
+        let handle = reg
+            .register("obs-tenant", PointSet::halton(cfg.n, cfg.dim), &cfg, ServeConfig::default())
+            .unwrap();
+        handle.matvec(&vec![1.0; cfg.n]).unwrap();
+        let snap = reg.observe();
+        let apply = snap
+            .histograms
+            .iter()
+            .find(|h| h.name == crate::obs::names::SERVE_APPLY && h.tenant == "obs-tenant")
+            .expect("tenant-labeled apply series");
+        assert!(apply.count >= 1);
+        assert!(apply.p50 > 0, "apply latency quantile must be non-zero");
+        let occ = snap
+            .histograms
+            .iter()
+            .find(|h| h.name == crate::obs::names::SERVE_BATCH_OCCUPANCY
+                && h.tenant == "obs-tenant")
+            .expect("tenant-labeled occupancy series");
+        assert_eq!(occ.count, apply.count, "one occupancy sample per flushed batch");
     }
 
     #[test]

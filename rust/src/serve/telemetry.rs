@@ -1,81 +1,27 @@
 //! Serving telemetry: batch occupancy, queue depth, shed counts and
 //! wait/apply latency quantiles.
 //!
-//! Durations are additionally mirrored into the global
-//! [`crate::metrics::RECORDER`] (phases `serve.wait` / `serve.apply`) so
-//! the `phases` CLI subcommand and the benches see serving next to the
-//! kernel phases; the per-batcher [`BatcherStats`] adds what a flat
-//! phase accumulator cannot: occupancy ratios and p50/p99 latencies.
+//! Latencies and occupancies are held in lock-free log-linear
+//! [`Histogram`]s (see [`crate::obs`]) owned by this batcher and
+//! registered weakly in the global metric registry under the batcher's
+//! tenant label, so `(serve.wait, tenant=..)` / `(serve.apply, tenant=..)`
+//! / `(serve.batch_occupancy, tenant=..)` series show up in every
+//! [`crate::obs::MetricsSnapshot`] while one batcher's [`BatcherStats::reset`]
+//! can never clobber another's. Durations are additionally mirrored into
+//! the flat [`crate::metrics::RECORDER`] phases by the batcher so
+//! `hmx phases` keeps working.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::Arc;
 use std::time::Duration;
 
-/// Fixed-capacity ring of latency samples (microseconds) supporting
-/// quantile queries over the most recent `cap` observations.
-pub struct LatencyWindow {
-    inner: Mutex<Ring>,
-    cap: usize,
-}
-
-struct Ring {
-    buf: Vec<u64>,
-    head: usize,
-}
-
-impl LatencyWindow {
-    pub fn new(cap: usize) -> Self {
-        assert!(cap > 0, "latency window capacity must be positive");
-        LatencyWindow { inner: Mutex::new(Ring { buf: Vec::new(), head: 0 }), cap }
-    }
-
-    pub fn record(&self, d: Duration) {
-        let us = d.as_micros().min(u64::MAX as u128) as u64;
-        let mut r = self.inner.lock().unwrap();
-        if r.buf.len() < self.cap {
-            r.buf.push(us);
-        } else {
-            let h = r.head;
-            r.buf[h] = us;
-            r.head = (h + 1) % self.cap;
-        }
-    }
-
-    pub fn count(&self) -> usize {
-        self.inner.lock().unwrap().buf.len()
-    }
-
-    /// Quantile over the retained samples (nearest-rank); zero if empty.
-    pub fn quantile(&self, q: f64) -> Duration {
-        self.quantiles(q, q).0
-    }
-
-    /// Two quantiles from ONE buffer copy and sort. The lock is held only
-    /// for the copy, so a stats poll never blocks the executor's `record`
-    /// on the sort.
-    pub fn quantiles(&self, qa: f64, qb: f64) -> (Duration, Duration) {
-        let mut v = self.inner.lock().unwrap().buf.clone();
-        if v.is_empty() {
-            return (Duration::ZERO, Duration::ZERO);
-        }
-        v.sort_unstable();
-        let pick = |q: f64| {
-            let idx = ((v.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
-            Duration::from_micros(v[idx])
-        };
-        (pick(qa), pick(qb))
-    }
-
-    pub fn clear(&self) {
-        let mut r = self.inner.lock().unwrap();
-        r.buf.clear();
-        r.head = 0;
-    }
-}
+use crate::obs::{self, names, GaugeHandle, Histogram};
 
 /// Counters for one [`crate::serve::DynamicBatcher`]. All methods are
 /// thread-safe; clients update the submit side while the executor thread
-/// updates the batch side.
+/// updates the batch side. Quantiles come from merged histogram buckets
+/// (relative error bounded by [`crate::obs::MAX_REL_ERR`]), not exact
+/// sample windows.
 pub struct BatcherStats {
     /// Requests accepted into the queue.
     requests: AtomicU64,
@@ -89,17 +35,31 @@ pub struct BatcherStats {
     queue_depth: AtomicU64,
     /// High-water mark of `queue_depth`.
     max_queue_depth: AtomicU64,
-    /// Submit → batch-pickup latency per request.
-    wait: LatencyWindow,
-    /// Batched-apply latency per batch.
-    apply: LatencyWindow,
+    /// Submit → batch-pickup latency per request (ns).
+    wait: Arc<Histogram>,
+    /// Batched-apply latency per batch (ns).
+    apply: Arc<Histogram>,
+    /// Requests coalesced per flushed batch.
+    occupancy: Arc<Histogram>,
+    /// Mirrors `queue_depth` into the labeled global gauge.
+    depth_gauge: GaugeHandle,
 }
-
-/// Retained latency samples per window (per batcher; ~0.5 MiB ceiling).
-const WINDOW_CAP: usize = 1 << 15;
 
 impl BatcherStats {
     pub fn new() -> Self {
+        BatcherStats::with_tenant("")
+    }
+
+    /// Stats whose histogram series carry `tenant=label` in the global
+    /// metric registry (the [`crate::serve::OperatorRegistry`] passes the
+    /// operator id).
+    pub fn with_tenant(label: &str) -> Self {
+        let wait = Arc::new(Histogram::new());
+        let apply = Arc::new(Histogram::new());
+        let occupancy = Arc::new(Histogram::new());
+        obs::register_histogram(names::SERVE_WAIT, label, &wait);
+        obs::register_histogram(names::SERVE_APPLY, label, &apply);
+        obs::register_histogram(names::SERVE_BATCH_OCCUPANCY, label, &occupancy);
         BatcherStats {
             requests: AtomicU64::new(0),
             shed: AtomicU64::new(0),
@@ -107,8 +67,10 @@ impl BatcherStats {
             batched_requests: AtomicU64::new(0),
             queue_depth: AtomicU64::new(0),
             max_queue_depth: AtomicU64::new(0),
-            wait: LatencyWindow::new(WINDOW_CAP),
-            apply: LatencyWindow::new(WINDOW_CAP),
+            wait,
+            apply,
+            occupancy,
+            depth_gauge: obs::gauge_handle(names::SERVE_QUEUE_DEPTH, label),
         }
     }
 
@@ -118,7 +80,9 @@ impl BatcherStats {
     /// returned here. Returns the post-increment depth.
     pub(crate) fn record_submit(&self) -> u64 {
         self.requests.fetch_add(1, Ordering::Relaxed);
-        self.queue_depth.fetch_add(1, Ordering::Relaxed) + 1
+        let depth = self.queue_depth.fetch_add(1, Ordering::Relaxed) + 1;
+        self.depth_gauge.set(depth as f64);
+        depth
     }
 
     /// Client side: the send succeeded — fold this request's depth into
@@ -134,7 +98,7 @@ impl BatcherStats {
     /// failed send (counts the shed when the queue was full).
     pub(crate) fn record_unsubmit(&self, was_full: bool) {
         saturating_dec(&self.requests);
-        saturating_dec(&self.queue_depth);
+        self.depth_gauge.set(saturating_dec(&self.queue_depth) as f64);
         if was_full {
             self.shed.fetch_add(1, Ordering::Relaxed);
         }
@@ -142,12 +106,12 @@ impl BatcherStats {
 
     /// Executor side: one request taken off the queue.
     pub(crate) fn record_dequeue(&self) {
-        saturating_dec(&self.queue_depth);
+        self.depth_gauge.set(saturating_dec(&self.queue_depth) as f64);
     }
 
     /// Executor side: per-request wait (submit → batch pickup).
     pub(crate) fn record_wait(&self, d: Duration) {
-        self.wait.record(d);
+        self.wait.record_duration(d);
     }
 
     /// Executor side: one flushed batch of `occupancy` requests applied in
@@ -155,7 +119,8 @@ impl BatcherStats {
     pub(crate) fn record_batch(&self, occupancy: usize, apply_time: Duration) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_requests.fetch_add(occupancy as u64, Ordering::Relaxed);
-        self.apply.record(apply_time);
+        self.occupancy.record(occupancy as u64);
+        self.apply.record_duration(apply_time);
     }
 
     pub fn requests(&self) -> u64 {
@@ -188,19 +153,27 @@ impl BatcherStats {
         self.max_queue_depth.load(Ordering::Relaxed)
     }
 
+    /// Wait-latency quantile over every request this batcher has seen
+    /// (histogram estimate; relative error ≤ [`crate::obs::MAX_REL_ERR`]).
     pub fn wait_quantile(&self, q: f64) -> Duration {
-        self.wait.quantile(q)
+        self.wait.quantile_duration(q)
     }
 
+    /// Apply-latency quantile per flushed batch (histogram estimate).
     pub fn apply_quantile(&self, q: f64) -> Duration {
-        self.apply.quantile(q)
+        self.apply.quantile_duration(q)
+    }
+
+    /// Occupancy quantile per flushed batch (histogram estimate).
+    pub fn occupancy_quantile(&self, q: f64) -> u64 {
+        self.occupancy.quantile(q)
     }
 
     /// Point-in-time copy of every counter (what the example and the
-    /// `fig_serve` bench print). One copy + sort per latency window.
+    /// `fig_serve` bench print).
     pub fn snapshot(&self) -> ServeSnapshot {
-        let (wait_p50, wait_p99) = self.wait.quantiles(0.50, 0.99);
-        let (apply_p50, apply_p99) = self.apply.quantiles(0.50, 0.99);
+        let wait = self.wait.accum();
+        let apply = self.apply.accum();
         ServeSnapshot {
             requests: self.requests(),
             shed: self.shed(),
@@ -208,17 +181,19 @@ impl BatcherStats {
             mean_occupancy: self.mean_occupancy(),
             queue_depth: self.queue_depth(),
             max_queue_depth: self.max_queue_depth(),
-            wait_p50,
-            wait_p99,
-            apply_p50,
-            apply_p99,
+            wait_p50: Duration::from_nanos(wait.quantile(0.50)),
+            wait_p99: Duration::from_nanos(wait.quantile(0.99)),
+            apply_p50: Duration::from_nanos(apply.quantile(0.50)),
+            apply_p99: Duration::from_nanos(apply.quantile(0.99)),
         }
     }
 
     /// Zero every counter and drop retained samples (bench sweeps reuse
-    /// one warm operator across load levels). A reset racing in-flight
-    /// requests leaves the gauges approximate for those requests but can
-    /// never wrap them below zero (decrements saturate).
+    /// one warm operator across load levels). Only THIS batcher's
+    /// histograms clear — they are instance-owned, other tenants'
+    /// series are untouched. A reset racing in-flight requests leaves the
+    /// gauges approximate for those requests but can never wrap them below
+    /// zero (decrements saturate).
     pub fn reset(&self) {
         self.requests.store(0, Ordering::Relaxed);
         self.shed.store(0, Ordering::Relaxed);
@@ -228,6 +203,7 @@ impl BatcherStats {
         self.max_queue_depth.store(0, Ordering::Relaxed);
         self.wait.clear();
         self.apply.clear();
+        self.occupancy.clear();
     }
 }
 
@@ -239,9 +215,12 @@ impl Default for BatcherStats {
 
 /// Decrement a gauge, saturating at zero: a [`BatcherStats::reset`] racing
 /// in-flight requests must corrupt at most the current reading, never wrap
-/// the counter to `u64::MAX`.
-fn saturating_dec(gauge: &AtomicU64) {
-    let _ = gauge.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1));
+/// the counter to `u64::MAX`. Returns the post-decrement value.
+fn saturating_dec(gauge: &AtomicU64) -> u64 {
+    match gauge.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1)) {
+        Ok(prev) => prev - 1,
+        Err(_) => 0,
+    }
 }
 
 /// A point-in-time view of one batcher's counters.
@@ -283,26 +262,6 @@ mod tests {
     use super::*;
 
     #[test]
-    fn window_quantiles_over_recent_samples() {
-        let w = LatencyWindow::new(4);
-        assert_eq!(w.quantile(0.5), Duration::ZERO);
-        for us in [10u64, 20, 30, 40] {
-            w.record(Duration::from_micros(us));
-        }
-        assert_eq!(w.count(), 4);
-        assert_eq!(w.quantile(0.0), Duration::from_micros(10));
-        assert_eq!(w.quantile(1.0), Duration::from_micros(40));
-        // overwrite the oldest two samples (ring behavior)
-        w.record(Duration::from_micros(100));
-        w.record(Duration::from_micros(200));
-        assert_eq!(w.count(), 4);
-        assert_eq!(w.quantile(1.0), Duration::from_micros(200));
-        assert_eq!(w.quantile(0.0), Duration::from_micros(30));
-        w.clear();
-        assert_eq!(w.count(), 0);
-    }
-
-    #[test]
     fn occupancy_and_shed_accounting() {
         let s = BatcherStats::new();
         assert_eq!(s.mean_occupancy(), 0.0);
@@ -329,9 +288,38 @@ mod tests {
         assert_eq!(s.queue_depth(), 0);
         let snap = s.snapshot();
         assert_eq!(snap.requests, 3);
+        // histogram estimate: within MAX_REL_ERR of the true 30us p50
         assert!(snap.apply_p50 >= Duration::from_micros(30));
+        assert!(
+            snap.apply_p50.as_nanos() as f64
+                <= 30_000.0 * (1.0 + crate::obs::MAX_REL_ERR) + 1.0
+        );
+        assert_eq!(s.occupancy_quantile(1.0), 2);
         s.reset();
         assert_eq!(s.requests(), 0);
         assert_eq!(s.mean_occupancy(), 0.0);
+        assert_eq!(s.wait_quantile(0.5), Duration::ZERO);
+    }
+
+    #[test]
+    fn tenant_labeled_stats_surface_in_global_snapshot() {
+        let s = BatcherStats::with_tenant("telemetry-test-tenant");
+        s.record_wait(Duration::from_micros(100));
+        s.record_batch(4, Duration::from_micros(250));
+        let snap = crate::obs::MetricsSnapshot::capture();
+        let wait = snap
+            .histograms
+            .iter()
+            .find(|h| h.name == names::SERVE_WAIT && h.tenant == "telemetry-test-tenant")
+            .expect("tenant wait series registered");
+        assert_eq!(wait.count, 1);
+        let occ = snap
+            .histograms
+            .iter()
+            .find(|h| {
+                h.name == names::SERVE_BATCH_OCCUPANCY && h.tenant == "telemetry-test-tenant"
+            })
+            .expect("tenant occupancy series registered");
+        assert_eq!(occ.max, 4);
     }
 }

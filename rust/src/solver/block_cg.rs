@@ -103,6 +103,21 @@ pub fn block_cg_solve(
     nrhs: usize,
     opts: BlockCgOptions,
 ) -> BlockCgResult {
+    use crate::obs::{self, names};
+    let _span = obs::span(names::SOLVER_BLOCK_CG_SOLVE);
+    let res = block_cg_solve_inner(op, b, nrhs, opts);
+    obs::observe(names::SOLVER_BLOCK_CG_ITERS, res.iterations as u64);
+    let worst = res.residuals.iter().cloned().fold(0.0f64, f64::max);
+    obs::gauge_set(names::SOLVER_BLOCK_CG_RESIDUAL, worst);
+    res
+}
+
+fn block_cg_solve_inner(
+    op: &dyn BlockLinOp,
+    b: &[f64],
+    nrhs: usize,
+    opts: BlockCgOptions,
+) -> BlockCgResult {
     let n = op.dim();
     assert!(nrhs >= 1, "nrhs must be at least 1");
     assert_eq!(b.len(), n * nrhs, "b must be column-major n x nrhs");

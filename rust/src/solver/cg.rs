@@ -69,6 +69,15 @@ pub struct CgResult {
 
 /// Solve A x = b with plain CG.
 pub fn cg_solve(op: &dyn LinOp, b: &[f64], opts: CgOptions) -> CgResult {
+    use crate::obs::{self, names};
+    let _span = obs::span(names::SOLVER_CG_SOLVE);
+    let res = cg_solve_inner(op, b, opts);
+    obs::observe(names::SOLVER_CG_ITERS, res.iterations as u64);
+    obs::gauge_set(names::SOLVER_CG_RESIDUAL, res.residual);
+    res
+}
+
+fn cg_solve_inner(op: &dyn LinOp, b: &[f64], opts: CgOptions) -> CgResult {
     let n = op.dim();
     assert_eq!(b.len(), n);
     let b_norm = norm2(b).max(f64::MIN_POSITIVE);

@@ -74,10 +74,10 @@ pub fn build_block_tree(points: &PointSet, eta: f64, c_leaf: usize) -> BlockTree
         let mut cluster_keys = Vec::with_capacity(2 * m);
         cluster_keys.extend(level.iter().map(|w| w.tau.key()));
         cluster_keys.extend(level.iter().map(|w| w.sigma.key()));
-        let table = crate::metrics::timed("block_tree.bbox_table", || {
+        let table = crate::metrics::timed(crate::obs::names::BLOCK_TREE_BBOX_TABLE, || {
             compute_bbox_lookup_table(&cluster_keys, points)
         });
-        let map = crate::metrics::timed("block_tree.bbox_map", || {
+        let map = crate::metrics::timed(crate::obs::names::BLOCK_TREE_BBOX_MAP, || {
             create_map_for_bounding_boxes(&cluster_keys)
         });
 

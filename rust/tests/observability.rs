@@ -1,0 +1,253 @@
+//! Observability acceptance tests: histogram quantile error bounds,
+//! lossless concurrent recording, Chrome-trace export round-trips, bench
+//! artifact schema, and span-tree validity on a real served workload
+//! (`serve.flush` spans must contain the `matvec.*` spans of their
+//! batched apply).
+//!
+//! Tracing is enabled process-globally by some tests here; none of them
+//! assert it is off, so in-binary test parallelism is safe.
+
+use hmx::config::HmxConfig;
+use hmx::obs::{self, names};
+use hmx::prelude::*;
+use hmx::util::prng::Xoshiro256;
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------- histograms
+
+#[test]
+fn histogram_quantiles_within_documented_relative_error() {
+    let h = obs::Histogram::new();
+    // log-uniform-ish deterministic values spanning 6 decades
+    let mut rng = Xoshiro256::seed(9);
+    let mut values: Vec<u64> = (0..20_000)
+        .map(|_| {
+            let e = rng.range_f64(0.0, 20.0);
+            2f64.powf(e) as u64
+        })
+        .collect();
+    for &v in &values {
+        h.record(v);
+    }
+    values.sort_unstable();
+    for q in [0.0, 0.1, 0.25, 0.5, 0.9, 0.99, 0.999, 1.0] {
+        let est = h.quantile(q) as f64;
+        // nearest-rank reference over the exact sorted sample
+        let rank = ((q * values.len() as f64).ceil() as usize).clamp(1, values.len());
+        let exact = values[rank - 1] as f64;
+        // the estimate is the midpoint of the exact value's bucket, so it
+        // is within MAX_REL_ERR of SOME recorded value in that bucket;
+        // compare against the reference with bucket-width slack (+1 for
+        // the integer unit buckets)
+        let tol = exact * obs::MAX_REL_ERR + 1.0;
+        assert!(
+            (est - exact).abs() <= tol,
+            "q={q}: est {est} vs exact {exact} (tol {tol})"
+        );
+    }
+}
+
+#[test]
+fn concurrent_recording_loses_no_updates() {
+    // >= 8 threads hammer one shared tenant-labeled histogram plus one
+    // thread-private histogram each; the merged global snapshot must equal
+    // the sum of per-thread contributions exactly (counts and sums).
+    const THREADS: u64 = 8;
+    const PER_THREAD: u64 = 10_000;
+    let shared = obs::histogram("test.obs.concurrent", "tenant-obs");
+    let handles: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let shared = shared.clone();
+            std::thread::spawn(move || {
+                let local = obs::Histogram::new();
+                for i in 0..PER_THREAD {
+                    let v = t * PER_THREAD + i;
+                    shared.record(v);
+                    local.record(v);
+                }
+                (local.count(), local.sum())
+            })
+        })
+        .collect();
+    let mut want_count = 0u64;
+    let mut want_sum = 0u64;
+    for h in handles {
+        let (c, s) = h.join().unwrap();
+        want_count += c;
+        want_sum += s;
+    }
+    assert_eq!(want_count, THREADS * PER_THREAD);
+    let acc = shared.accum();
+    assert_eq!(acc.count, want_count, "lost count updates");
+    assert_eq!(acc.sum, want_sum, "lost sum updates");
+
+    // and the same series surfaces through the global snapshot
+    let snap = obs::MetricsSnapshot::capture();
+    let series = snap
+        .histograms
+        .iter()
+        .find(|s| s.name == "test.obs.concurrent" && s.tenant == "tenant-obs")
+        .expect("series missing from snapshot");
+    assert_eq!(series.count, want_count);
+    assert_eq!(series.sum, want_sum);
+}
+
+// ------------------------------------------------------------------- tracing
+
+#[test]
+fn chrome_trace_export_roundtrips_through_validator() {
+    obs::trace::enable();
+    std::thread::spawn(|| {
+        let _outer = obs::span("test.export.outer");
+        let _inner = obs::span("test.export.inner");
+    })
+    .join()
+    .unwrap();
+    let events = obs::snapshot_spans();
+    assert!(events.iter().any(|e| e.name == "test.export.outer"));
+    let json = obs::chrome_trace_json(&events);
+    let n = obs::validate_chrome_trace(&json).expect("exporter emitted invalid trace JSON");
+    assert_eq!(n, events.len());
+
+    // and through a file, as `--trace-out` writes it
+    let path = std::env::temp_dir().join(format!("hmx_trace_test_{}.json", std::process::id()));
+    let written = obs::write_chrome_trace(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(obs::validate_chrome_trace(&text).unwrap(), written);
+}
+
+#[test]
+fn serve_flush_spans_contain_matvec_spans() {
+    obs::trace::enable();
+    let n = 1024;
+    let cfg = HmxConfig { n, dim: 2, k: 8, c_leaf: 64, precompute: true, ..HmxConfig::default() };
+    let serve_cfg = ServeConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(1),
+        queue_capacity: 256,
+    };
+    let registry = OperatorRegistry::new();
+    let handle = registry
+        .register("span-tree-tenant", PointSet::halton(n, 2), &cfg, serve_cfg)
+        .expect("register failed");
+    let x = Xoshiro256::seed(5).vector(n);
+    for _ in 0..4 {
+        handle.matvec(&x).expect("served matvec failed");
+    }
+    // the flush span closes on the executor thread shortly after the
+    // client's ticket resolves; poll rather than racing it
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let events = obs::snapshot_spans();
+        let flushes: Vec<_> =
+            events.iter().filter(|e| e.name == names::SERVE_FLUSH).collect();
+        let contained = events.iter().find(|e| {
+            (e.name == names::MATVEC_DENSE || e.name == names::MATVEC_ACA)
+                && flushes.iter().any(|f| f.contains(e))
+        });
+        if let Some(m) = contained {
+            // valid tree: the matvec span's ancestor chain reaches the
+            // flush span on the same thread
+            let f = flushes.iter().find(|f| f.contains(m)).unwrap();
+            assert!(f.dur_ns >= m.dur_ns, "child longer than parent");
+            // apply sits between them: flush -> apply -> matvec
+            let apply = events.iter().find(|e| {
+                e.name == names::SERVE_APPLY && e.tid == m.tid && e.id == m.parent
+            });
+            if let Some(a) = apply {
+                assert_eq!(a.parent, f.id, "apply span not parented to flush");
+                assert!(f.contains(a));
+            }
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "no flush-contained matvec span appeared; events: {}",
+            events.len()
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+// ------------------------------------------------------------ bench artifacts
+
+#[test]
+fn bench_artifact_matches_schema_and_survives_file_roundtrip() {
+    // shaped like the fig_serve smoke artifact CI validates: latency
+    // series carrying p50/p99 points per client count
+    let mut r = obs::bench_report("schema_check");
+    r.param("n", 2048).param("max_batch", 32);
+    for clients in [1.0, 4.0] {
+        r.point("wait_ms", clients, &[("p50", 0.4 * clients), ("p99", 2.5 * clients)]);
+        r.point("apply_ms", clients, &[("p50", 1.1), ("p99", 3.0)]);
+        r.point("throughput_rps", clients, &[("served_per_s", 900.0 * clients)]);
+    }
+    let json = r.to_json();
+    let (series, points) = obs::validate_bench_report(&json).expect("schema-invalid artifact");
+    assert_eq!(series, 3);
+    assert_eq!(points, 6);
+
+    let path = std::env::temp_dir().join(format!("hmx_bench_test_{}.json", std::process::id()));
+    std::fs::write(&path, &json).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(obs::validate_bench_report(&text).unwrap(), (3, 6));
+
+    // rejects truncated/corrupt artifacts
+    assert!(obs::validate_bench_report(&json[..json.len() / 2]).is_err());
+    assert!(obs::validate_bench_report("{\"schema\":\"hmx-bench/9\"}").is_err());
+}
+
+// ------------------------------------------------------------------ registry
+
+#[test]
+fn instrumentation_uses_only_registered_names() {
+    // every name const wired through the code base must have a registry
+    // row (docs/metrics.md is rendered from the same table)
+    for def in names::REGISTRY {
+        assert!(names::is_registered(def.name));
+        assert!(!def.help.is_empty(), "{}: empty help", def.name);
+    }
+    // spot-check the cross-layer names the acceptance criteria rely on
+    for name in [
+        names::SERVE_FLUSH,
+        names::SERVE_WAIT,
+        names::SERVE_APPLY,
+        names::SERVE_BATCH_OCCUPANCY,
+        names::SERVE_QUEUE_DEPTH,
+        names::MATVEC_DENSE,
+        names::SOLVER_CG_ITERS,
+        names::SOLVER_BLOCK_CG_ITERS,
+        names::GOVERNOR_RECOMPRESS,
+        names::GOVERNOR_BYTES_IN_USE,
+        names::DPP_LAUNCH,
+        names::OBS_TRACE_DROPPED,
+    ] {
+        assert!(names::is_registered(name), "{name} not in names::REGISTRY");
+    }
+}
+
+#[test]
+fn solver_metrics_flow_into_snapshot_and_exports() {
+    // a tiny SPD solve must land iteration counts in the histogram and a
+    // final residual in the gauge, visible in both export formats
+    let op = (16usize, |x: &[f64]| x.to_vec()); // identity via blanket impl
+    let b = vec![1.0; 16];
+    let res = cg_solve(&op, &b, CgOptions::default());
+    assert!(res.converged);
+    let snap = obs::MetricsSnapshot::capture();
+    let iters = snap
+        .histograms
+        .iter()
+        .find(|s| s.name == names::SOLVER_CG_ITERS && s.tenant.is_empty())
+        .expect("solver iteration histogram missing");
+    assert!(iters.count >= 1);
+    assert!(snap.gauges.iter().any(|(n, _, _)| n == names::SOLVER_CG_RESIDUAL));
+
+    let json = snap.to_json();
+    assert!(json.contains("\"hmx-metrics/1\""));
+    assert!(json.contains(names::SOLVER_CG_ITERS));
+    let prom = snap.to_prometheus();
+    assert!(prom.contains("hmx_solver_cg_iters"));
+}
