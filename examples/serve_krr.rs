@@ -5,12 +5,14 @@
 //!     → register ONE H-matrix operator in the `OperatorRegistry`
 //!       (built on its dedicated executor thread; engines are not `Send`)
 //!     → OFFLINE fit of the weight block [α₁ … α_q]: the block solver's
-//!       applies are routed THROUGH the serving layer (each column is a
-//!       submission, so the batcher coalesces the solver's own applies
-//!       into multi-RHS batches) — block CG for even tenants, block
-//!       BiCGSTAB for odd ones
-//!     → ONLINE serving: C client threads × R predict requests each,
-//!       coalesced by the DynamicBatcher; overload is shed, not queued
+//!       applies are routed THROUGH the serving layer as `submit_async`
+//!       futures (one reactor thread, all q columns in flight at once, so
+//!       the batcher coalesces the solver's own applies into multi-RHS
+//!       batches) — block CG for even tenants, block BiCGSTAB for odd ones
+//!     → ONLINE serving: C client threads × R predict requests each on a
+//!       weighted fair-queue lane (`<id>/online`, weight 2) next to the
+//!       fit lane (`<id>/fit`, weight 1), coalesced by the DynamicBatcher;
+//!       overload is shed, not queued
 //!   … then per-tenant occupancy/latency telemetry and the global
 //!   `serve.*` phase stats.
 //!
@@ -40,35 +42,36 @@ fn f_true(p: &[f64], channel: usize) -> f64 {
 }
 
 /// (A + σ²I) where the A-apply goes through the serving layer: every
-/// column is one submission, so the batcher coalesces the solver's own
-/// applies into multi-RHS batches (occupancy ≈ q during the fit).
+/// column is one async submission, all in flight before any is awaited,
+/// so the batcher coalesces the solver's own applies into multi-RHS
+/// batches (occupancy ≈ q during the fit) from this ONE reactor thread.
 struct ServedRegularizedOp {
-    handle: OperatorHandle,
+    client: BatcherClient,
     sigma2: f64,
 }
 
 impl BlockLinOp for ServedRegularizedOp {
     fn apply_block(&self, x: &[f64], nrhs: usize) -> Vec<f64> {
-        let n = self.handle.n();
-        let mut tickets = Vec::with_capacity(nrhs);
+        let n = self.client.n();
+        let mut futures = Vec::with_capacity(nrhs);
         for c in 0..nrhs {
             let col = &x[c * n..(c + 1) * n];
             // bounded-queue backpressure during the fit: back off and
             // resubmit instead of aborting (the online clients shed)
-            let ticket = loop {
-                match self.handle.submit(col.to_vec()) {
-                    Ok(t) => break t,
+            let fut = loop {
+                match self.client.submit_async(col.to_vec()) {
+                    Ok(f) => break f,
                     Err(ServeError::Overloaded) => {
                         std::thread::sleep(Duration::from_micros(200))
                     }
                     Err(e) => panic!("serve submit failed: {e}"),
                 }
             };
-            tickets.push(ticket);
+            futures.push(fut);
         }
         let mut y = Vec::with_capacity(n * nrhs);
-        for t in tickets {
-            y.extend(t.wait().expect("serve apply failed"));
+        for f in futures {
+            y.extend(block_on(f).expect("serve apply failed"));
         }
         for (yi, xi) in y.iter_mut().zip(x) {
             *yi += self.sigma2 * xi;
@@ -77,7 +80,7 @@ impl BlockLinOp for ServedRegularizedOp {
     }
 
     fn dim(&self) -> usize {
-        self.handle.n()
+        self.client.n()
     }
 }
 
@@ -100,6 +103,7 @@ fn main() -> anyhow::Result<()> {
         max_batch: args.get("max-batch", 32usize),
         max_wait: Duration::from_millis(args.get("max-wait-ms", 5u64)),
         queue_capacity: args.get("queue-capacity", 1024usize),
+        ..ServeConfig::default()
     };
 
     let registry = if args.has("budget-mb") {
@@ -147,8 +151,12 @@ fn main() -> anyhow::Result<()> {
             }
         }
 
-        // --- offline fit THROUGH the serving layer ---
-        let op = ServedRegularizedOp { handle: handle.clone(), sigma2 };
+        // --- offline fit THROUGH the serving layer, on its own weighted
+        // fair-queue lane (so its wait series is separable from online) ---
+        let op = ServedRegularizedOp {
+            client: handle.for_tenant(&format!("{id}/fit"), 1.0),
+            sigma2,
+        };
         let t1 = Instant::now();
         let (solver, alpha, iters, converged) = if t % 2 == 0 {
             let res = block_cg_solve(&op, &b, q, BlockCgOptions { max_iter, tol: 1e-6 });
@@ -172,7 +180,9 @@ fn main() -> anyhow::Result<()> {
         let t2 = Instant::now();
         let mut joins = Vec::new();
         for client in 0..clients {
-            let handle = handle.clone();
+            // online lane: twice the fit lane's fair-queue weight, its own
+            // per-tenant `serve.wait` series under label `<id>/online`
+            let lane = handle.for_tenant(&format!("{id}/online"), 2.0);
             let alpha = Arc::clone(&alpha);
             let targets = Arc::clone(&targets);
             joins.push(std::thread::spawn(move || -> (usize, f64) {
@@ -180,7 +190,7 @@ fn main() -> anyhow::Result<()> {
                 let mut worst_rmse = 0.0f64;
                 for r in 0..requests {
                     let c = (client + r) % q;
-                    match handle.predict(&alpha[c * n..(c + 1) * n]) {
+                    match lane.predict(&alpha[c * n..(c + 1) * n]) {
                         Ok(yhat) => {
                             // fitted values: ŷ + σ²α should reproduce the targets
                             let mut se = 0.0;

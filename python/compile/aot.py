@@ -9,7 +9,12 @@ reassigns ids (see /opt/xla-example/README.md and aot_recipe).
 
 Usage:  cd python && python -m compile.aot --out ../artifacts \
             [--kernels gaussian,matern] [--dims 2,3] [--k 16] \
-            [--dense-buckets 64,256] [--aca-buckets 256,512,1024] [--batch 16]
+            [--dense-buckets 64,256] [--aca-buckets 256,512,1024] [--batch 16] \
+            [--rhs-widths 4,16]
+
+`--rhs-widths` additionally emits fused multi-RHS `dense_mm`/`aca_mm`
+artifacts at those fixed widths (the serving width-ladder rungs; manifest
+column `r`). Single-RHS rows carry `r = 1`.
 """
 
 import argparse
@@ -52,6 +57,18 @@ def lower_aca_factors(kernel: str, d: int, m: int, k: int, b: int):
     return jax.jit(fn).lower(spec(b, m, d), spec(b, m, d), spec(b, m), spec(b, m))
 
 
+def lower_dense_mm(kernel: str, d: int, m: int, b: int, r: int):
+    fn = lambda tau, sigma, x: model.dense_mm(tau, sigma, x, kernel=kernel)
+    return jax.jit(fn).lower(spec(b, m, d), spec(b, m, d), spec(b, m, r))
+
+
+def lower_aca_mm(kernel: str, d: int, m: int, k: int, b: int, r: int):
+    fn = lambda tau, sigma, x, rm, cm: model.aca_mm(tau, sigma, x, rm, cm, k=k, kernel=kernel)
+    return jax.jit(fn).lower(
+        spec(b, m, d), spec(b, m, d), spec(b, m, r), spec(b, m), spec(b, m)
+    )
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="../artifacts")
@@ -61,6 +78,7 @@ def main() -> None:
     ap.add_argument("--dense-buckets", default="64,256")
     ap.add_argument("--aca-buckets", default="256,512,1024")
     ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--rhs-widths", default="4,16")
     args = ap.parse_args()
 
     out_dir = args.out
@@ -69,17 +87,18 @@ def main() -> None:
     dims = [int(x) for x in args.dims.split(",") if x]
     dense_buckets = [int(x) for x in args.dense_buckets.split(",") if x]
     aca_buckets = [int(x) for x in args.aca_buckets.split(",") if x]
+    rhs_widths = [int(x) for x in args.rhs_widths.split(",") if x]
     b = args.batch
     k = args.k
 
     rows = []
 
-    def emit(name, lowered, op, kernel, d, m, n, kk):
+    def emit(name, lowered, op, kernel, d, m, n, kk, r=1):
         text = to_hlo_text(lowered)
         fname = f"{name}.hlo.txt"
         with open(os.path.join(out_dir, fname), "w") as f:
             f.write(text)
-        rows.append((name, fname, op, kernel, d, m, n, kk, b))
+        rows.append((name, fname, op, kernel, d, m, n, kk, b, r))
         print(f"  wrote {fname} ({len(text) // 1024} KiB)")
 
     for kernel in kernels:
@@ -88,10 +107,38 @@ def main() -> None:
                 name = f"dense_mv_{kernel}_d{d}_m{m}"
                 print(f"lowering {name} ...")
                 emit(name, lower_dense_mv(kernel, d, m, b), "dense_mv", kernel, d, m, m, 0)
+                for r in rhs_widths:
+                    name = f"dense_mm_{kernel}_d{d}_m{m}_r{r}"
+                    print(f"lowering {name} ...")
+                    emit(
+                        name,
+                        lower_dense_mm(kernel, d, m, b, r),
+                        "dense_mm",
+                        kernel,
+                        d,
+                        m,
+                        m,
+                        0,
+                        r,
+                    )
             for m in aca_buckets:
                 name = f"aca_mv_{kernel}_d{d}_m{m}_k{k}"
                 print(f"lowering {name} ...")
                 emit(name, lower_aca_mv(kernel, d, m, k, b), "aca_mv", kernel, d, m, m, k)
+                for r in rhs_widths:
+                    name = f"aca_mm_{kernel}_d{d}_m{m}_k{k}_r{r}"
+                    print(f"lowering {name} ...")
+                    emit(
+                        name,
+                        lower_aca_mm(kernel, d, m, k, b, r),
+                        "aca_mm",
+                        kernel,
+                        d,
+                        m,
+                        m,
+                        k,
+                        r,
+                    )
                 name = f"aca_factors_{kernel}_d{d}_m{m}_k{k}"
                 print(f"lowering {name} ...")
                 emit(
@@ -107,7 +154,7 @@ def main() -> None:
 
     manifest = os.path.join(out_dir, "manifest.tsv")
     with open(manifest, "w") as f:
-        f.write("# name\tfile\top\tkernel\td\tm\tn\tk\tb\n")
+        f.write("# name\tfile\top\tkernel\td\tm\tn\tk\tb\tr\n")
         for row in rows:
             f.write("\t".join(str(c) for c in row) + "\n")
     print(f"wrote {manifest} with {len(rows)} artifacts")

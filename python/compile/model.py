@@ -1,6 +1,6 @@
 """L2: the batched linear-algebra compute graphs (§5.4 of the paper).
 
-Three entry points, each AOT-lowered per shape bucket by `aot.py`:
+Five entry points, each AOT-lowered per shape bucket by `aot.py`:
 
 * `dense_mv`      — batched dense block mat-vec: Pallas-assembled tiles
                     (L1) contracted against x (the paper's MAGMA
@@ -8,6 +8,9 @@ Three entry points, each AOT-lowered per shape bucket by `aot.py`:
 * `aca_mv`        — fused batched fixed-rank ACA + low-rank apply
                     (NP mode: factors live only inside the executable).
 * `aca_factors`   — batched ACA factors only (P-mode precompute).
+* `dense_mm`      — multi-RHS `dense_mv`: one assembly amortized over a
+                    fixed RHS width R (the serving width-ladder rungs).
+* `aca_mm`        — multi-RHS fused ACA + low-rank apply at width R.
 
 The ACA iteration itself is data-dependent gather/argmax-heavy work, which
 stays at the JAX level (vmap of a fori_loop); its inner kernel evaluations
@@ -48,3 +51,28 @@ def aca_mv(tau, sigma, x, row_mask, col_mask, k: int = 16, kernel: str = "gaussi
 def aca_factors(tau, sigma, row_mask, col_mask, k: int = 16, kernel: str = "gaussian"):
     """Batched rank-k ACA factors (U [B,M,K], V [B,N,K])."""
     return ref.aca_factors_ref(tau, sigma, row_mask, col_mask, k, kernel)
+
+
+@functools.partial(jax.jit, static_argnames=("kernel",))
+def dense_mm(tau, sigma, x, kernel: str = "gaussian"):
+    """Multi-RHS dense_mv: one on-the-fly assembly applied to R columns.
+
+    tau: [B, M, D], sigma: [B, N, D], x: [B, N, R] -> y: [B, M, R].
+    The serving batcher pads flushes to the fixed widths this is lowered
+    at, so assembly cost is amortized over the whole flush instead of
+    being re-paid per column.
+    """
+    a = assembly.assemble(tau, sigma, kernel)
+    return jnp.einsum("bmn,bnr->bmr", a, x)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "kernel"))
+def aca_mm(tau, sigma, x, row_mask, col_mask, k: int = 16, kernel: str = "gaussian"):
+    """Multi-RHS fused rank-k ACA + low-rank apply.
+
+    x: [B, N, R] -> y: [B, M, R]. The ACA sweep runs ONCE per block and
+    both contraction stages carry all R columns: y = U (V^T x).
+    """
+    u, v = ref.aca_factors_ref(tau, sigma, row_mask, col_mask, k, kernel)
+    vt_x = jnp.einsum("bnk,bnr->bkr", v, x)
+    return jnp.einsum("bmk,bkr->bmr", u, vt_x) * row_mask[:, :, None]

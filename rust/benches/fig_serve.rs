@@ -7,9 +7,23 @@
 //! grows, occupancy should climb toward `max_batch` while per-request
 //! cost falls — the serving-side incarnation of the paper's batching
 //! pattern (§5.4) that `fig18_multirhs` measures offline.
+//!
+//! Two further segments exercise the serving hot path:
+//!
+//! * an **async burst** — one thread submits a burst of `submit_async`
+//!   futures and drains them with `block_on`, demonstrating >max_batch
+//!   requests in flight from a single caller thread;
+//! * a **weighted fair queueing** contrast — a light tenant (weight 1)
+//!   next to a heavy one (weight 4, 4 threads), reporting each tenant's
+//!   own `serve.wait` p99.
+//!
+//! Flushes ride the width ladder, so the whole run must stay off the
+//! columnwise mat-mat fallback; under `HMX_BENCH_SMOKE` the bench
+//! asserts `runtime.matmat_fallback` did not move.
 
 use hmx::config::HmxConfig;
-use hmx::metrics::CsvTable;
+use hmx::metrics::{CsvTable, RECORDER};
+use hmx::obs::names;
 use hmx::prelude::*;
 use hmx::util::prng::Xoshiro256;
 use std::sync::{Arc, Barrier};
@@ -38,6 +52,7 @@ fn main() {
         max_batch: 32,
         max_wait: Duration::from_millis(1),
         queue_capacity: 4096,
+        ..ServeConfig::default()
     };
     let table = CsvTable::new(
         "fig_serve",
@@ -68,6 +83,9 @@ fn main() {
     let handle = registry
         .register("bench", PointSet::halton(n, 2), &cfg, serve_cfg)
         .expect("register failed");
+    // The serve path pads flushes to the width ladder, so nothing below
+    // may hit the columnwise mat-mat fallback; measure it over the run.
+    let fallback_before = RECORDER.count(names::RUNTIME_MATMAT_FALLBACK);
     for &clients in client_counts {
         handle.stats().reset();
         let barrier = Arc::new(Barrier::new(clients + 1));
@@ -120,6 +138,83 @@ fn main() {
         ]);
         report.point("shed", c, &[("count", snap.shed as f64)]);
     }
+    // --- async burst: one thread, a queue-depth worth of futures in flight ---
+    let burst = if full {
+        2048usize
+    } else if smoke {
+        256
+    } else {
+        1024
+    };
+    let x = Xoshiro256::seed(9).vector(handle.n());
+    let client = handle.client();
+    let t0 = std::time::Instant::now();
+    let futs: Vec<_> = (0..burst)
+        .map(|_| client.submit_async(x.clone()).expect("async submit shed"))
+        .collect();
+    let mut resolved = 0usize;
+    for f in futs {
+        if block_on(f).is_ok() {
+            resolved += 1;
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64().max(f64::MIN_POSITIVE);
+    println!("# async burst: {resolved}/{burst} futures from ONE thread in {dt:.3}s");
+    report.point("async_burst_rps", burst as f64, &[("resolved_per_s", resolved as f64 / dt)]);
+    assert_eq!(resolved, burst, "async burst lost requests");
+
+    // --- weighted fair queueing: light tenant next to a heavy one ---
+    let heavy_threads = 4usize;
+    let wfq_requests = requests_per_client;
+    let barrier = Arc::new(Barrier::new(heavy_threads + 2));
+    let mut joins = Vec::new();
+    for c in 0..heavy_threads {
+        let client = handle.for_tenant("fig-heavy", 4.0);
+        let barrier = Arc::clone(&barrier);
+        let x = Xoshiro256::seed(200 + c as u64).vector(handle.n());
+        joins.push(std::thread::spawn(move || {
+            barrier.wait();
+            for _ in 0..wfq_requests {
+                let _ = client.matvec(&x);
+            }
+        }));
+    }
+    {
+        let client = handle.for_tenant("fig-light", 1.0);
+        let barrier = Arc::clone(&barrier);
+        let x = Xoshiro256::seed(300).vector(handle.n());
+        joins.push(std::thread::spawn(move || {
+            barrier.wait();
+            for _ in 0..wfq_requests {
+                let _ = client.matvec(&x);
+            }
+        }));
+    }
+    barrier.wait();
+    for j in joins {
+        j.join().unwrap();
+    }
+    let snap = hmx::obs::MetricsSnapshot::capture();
+    let wait_p99_ms = |tenant: &str| {
+        snap.histograms
+            .iter()
+            .find(|h| h.name == names::SERVE_WAIT && h.tenant == tenant)
+            .map(|h| h.p99 as f64 / 1e6)
+            .unwrap_or(f64::NAN)
+    };
+    let (light_p99, heavy_p99) = (wait_p99_ms("fig-light"), wait_p99_ms("fig-heavy"));
+    println!("# wfq: light tenant p99 wait {light_p99:.3}ms vs heavy {heavy_p99:.3}ms");
+    report.point("wfq_wait_p99_ms", 1.0, &[("light", light_p99), ("heavy", heavy_p99)]);
+
+    let fallback_after = RECORDER.count(names::RUNTIME_MATMAT_FALLBACK);
+    report.param("matmat_fallback", fallback_after - fallback_before);
+    if smoke {
+        assert_eq!(
+            fallback_after, fallback_before,
+            "serve path hit the columnwise mat-mat fallback"
+        );
+    }
+
     println!("# expectation: occupancy climbs with clients (toward max_batch) while");
     println!("# throughput grows superlinearly vs 1 client — coalesced applies amortize");
     println!("# assembly/factor traffic exactly as fig18 measures per-RHS offline");

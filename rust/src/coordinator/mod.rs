@@ -63,11 +63,12 @@ pub trait BatchEngine {
     /// column-major n × nrhs (`x[c * n + j]` is column c, n = points.len()).
     ///
     /// The default loops columns through `dense_matvec` so every engine is
-    /// multi-RHS capable (the XLA engine's artifacts are single-RHS);
-    /// engines with a fused mat-mat kernel override it. Every default
-    /// (columnwise) call is counted under `runtime.matmat_fallback` in
-    /// [`crate::metrics::RECORDER`] so the missing multi-RHS XLA
-    /// artifacts stay observable instead of silent.
+    /// multi-RHS capable; engines with a fused mat-mat kernel override it
+    /// (the native engine always, the XLA engine when a `dense_mm`
+    /// artifact covers the group's bucket and RHS width). Every
+    /// columnwise call is counted under `runtime.matmat_fallback` in
+    /// [`crate::metrics::RECORDER`] so missing multi-RHS artifacts stay
+    /// observable instead of silent.
     fn dense_matmat(
         &self,
         points: &PointSet,
@@ -102,7 +103,9 @@ pub trait BatchEngine {
 
 /// The columnwise mat-mat fallback behind the [`BatchEngine::dense_matmat`]
 /// default: one `dense_matvec` per RHS column. Counted under
-/// `runtime.matmat_fallback` (ROADMAP follow-up: multi-RHS XLA artifacts).
+/// `runtime.matmat_fallback`; the serving width ladder pads flushes to the
+/// fused `dense_mm`/`aca_mm` artifact widths precisely so the serve path
+/// never lands here.
 pub fn columnwise_dense_matmat<E: BatchEngine + ?Sized>(
     engine: &E,
     points: &PointSet,
@@ -337,9 +340,9 @@ mod tests {
     }
 
     /// An engine that only implements single-RHS applies, so its mat-mats
-    /// go through the trait's columnwise fallback — exactly the XLA
-    /// engine's situation (its artifacts are single-RHS; the ROADMAP
-    /// follow-up). Pins that the fallback matches the native engine's
+    /// go through the trait's columnwise fallback — the XLA engine's
+    /// situation whenever no fused `*_mm` artifact covers a group's
+    /// bucket/width. Pins that the fallback matches the native engine's
     /// fused `matmat` and that the fallback counter fires.
     struct ColumnwiseOnly(NativeEngine);
 

@@ -386,10 +386,11 @@ impl HMatrix {
 ///
 /// Holds the Morton-permuted input columns, the shared atomic accumulator
 /// and the output buffer (all column-major n × nrhs). Buffers grow to the
-/// largest shape seen and are never shrunk, so after the first call at a
-/// given `n * nrhs` every subsequent apply of the same or smaller shape is
-/// allocation-free — the contract an iterative solver or a serving loop
-/// relies on. A workspace is independent of any particular [`HMatrix`]
+/// largest shape seen and are never shrunk implicitly, so after the first
+/// call at a given `n * nrhs` every subsequent apply of the same or smaller
+/// shape is allocation-free — the contract an iterative solver or a serving
+/// loop relies on ([`MatvecWorkspace::shrink_to`] is the explicit opt-out).
+/// A workspace is independent of any particular [`HMatrix`]
 /// and may be shared across operators of different sizes.
 #[derive(Default)]
 pub struct MatvecWorkspace {
@@ -428,6 +429,26 @@ impl MatvecWorkspace {
         }
         if self.y.len() < len {
             self.y.resize(len, 0.0);
+        }
+    }
+
+    /// Release provisioned capacity above `elems` elements. The opt-in
+    /// counterpart to the grow-only default: a serving executor that has
+    /// seen one wide burst calls this (via its xbuf governor) so the
+    /// workspace tracks a recent high-water mark instead of pinning the
+    /// burst peak forever. Shrinking below the next apply's shape is
+    /// harmless — `ensure` regrows on demand.
+    pub fn shrink_to(&mut self, elems: usize) {
+        if self.xm.len() > elems {
+            self.xm.truncate(elems);
+            self.xm.shrink_to_fit();
+        }
+        if self.y.len() > elems {
+            self.y.truncate(elems);
+            self.y.shrink_to_fit();
+        }
+        if self.z.len() > elems {
+            self.z = AtomicF64Vec::zeros(elems);
         }
     }
 }

@@ -70,7 +70,26 @@
 //! submissions into one batched [`HMatrix::matmat_with`] apply — flushing
 //! on batch occupancy or a wait deadline — with bounded-queue
 //! backpressure (overflow is shed with
-//! [`serve::ServeError::Overloaded`]) and occupancy/latency telemetry:
+//! [`serve::ServeError::Overloaded`]) and occupancy/latency telemetry.
+//!
+//! The hot path is built from four pieces (see `docs/serving.md`):
+//!
+//! * **Async submits** — [`serve::DynamicBatcher::submit_async`] returns a
+//!   [`serve::SubmitFuture`] resolved by the executor via waker, so one
+//!   reactor thread can hold thousands of in-flight requests; the blocking
+//!   [`serve::Ticket`] is a thin [`serve::block_on`] over the same future.
+//! * **Zero-copy lending applies** — executors drive a
+//!   [`serve::LendingApply`] implementation whose `apply_batch` *lends*
+//!   its result slab (`&[f64]`), and per-caller columns are scattered
+//!   straight out of it into buffers recycled from the requests
+//!   themselves: no per-flush `Vec`, no per-request copy.
+//! * **Fixed-width flushes** — a [`serve::WidthLadder`] pads each flush to
+//!   a small set of batch widths so a fused-artifact runtime sees a few
+//!   stable shapes instead of every occupancy in `1..=max_batch`
+//!   (`runtime.matmat_fallback` stays 0 on the serve path).
+//! * **Weighted fair queueing** — per-tenant virtual-time lanes
+//!   ([`serve::BatcherClient::for_tenant`]) keep a light tenant's wait
+//!   bounded next to a heavy one, with per-tenant `serve.wait` series:
 //!
 //! ```no_run
 //! use hmx::prelude::*;
@@ -202,7 +221,9 @@ pub mod prelude {
     pub use crate::geometry::points::PointSet;
     pub use crate::hmatrix::{HMatrix, MatvecWorkspace};
     pub use crate::serve::{
-        DynamicBatcher, OperatorHandle, OperatorRegistry, ServeConfig, ServeError, Ticket,
+        block_on, BatcherClient, ClosureApply, ControlHandle, DynamicBatcher, LendingApply,
+        OperatorHandle, OperatorRegistry, ServeConfig, ServeError, SubmitFuture, Ticket,
+        WidthLadder,
     };
     pub use crate::solver::block_bicgstab::{block_bicgstab_solve, BlockBiCgStabOptions};
     pub use crate::solver::block_cg::{

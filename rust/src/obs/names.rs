@@ -51,6 +51,9 @@ pub const SERVE_FLUSH: &str = "serve.flush";
 pub const SERVE_SCATTER: &str = "serve.scatter";
 pub const SERVE_QUEUE_DEPTH: &str = "serve.queue_depth";
 pub const SERVE_BATCH_OCCUPANCY: &str = "serve.batch_occupancy";
+pub const SERVE_XBUF_BYTES: &str = "serve.xbuf_bytes";
+pub const SERVE_PAD_COLS: &str = "serve.pad_cols";
+pub const SERVE_APPLY_PANIC: &str = "serve.apply_panic";
 
 // --- compression / memory governance ---
 pub const COMPRESS_PASS: &str = "compress.pass";
@@ -93,11 +96,14 @@ pub const REGISTRY: &[MetricDef] = &[
     MetricDef { name: OBS_TRACE_DROPPED, kind: MetricKind::Counter, unit: "", labels: "", help: "span events overwritten in a full per-thread trace ring" },
     MetricDef { name: RUNTIME_MATMAT_FALLBACK, kind: MetricKind::Counter, unit: "", labels: "", help: "multi-RHS applies that fell back to columnwise (no fused artifact)" },
     MetricDef { name: SERVE_APPLY, kind: MetricKind::Histogram, unit: "ns", labels: "tenant", help: "batched-apply latency per flushed batch" },
+    MetricDef { name: SERVE_APPLY_PANIC, kind: MetricKind::Counter, unit: "", labels: "", help: "user applies that panicked (unwind caught, batch resolved with ApplyPanicked)" },
     MetricDef { name: SERVE_BATCH_OCCUPANCY, kind: MetricKind::Histogram, unit: "reqs", labels: "tenant", help: "requests coalesced per flushed batch" },
     MetricDef { name: SERVE_FLUSH, kind: MetricKind::Span, unit: "ns", labels: "", help: "one batcher flush: assemble block, batched apply, scatter" },
+    MetricDef { name: SERVE_PAD_COLS, kind: MetricKind::Counter, unit: "cols", labels: "", help: "zero columns added to pad flushes up to their width-ladder rung" },
     MetricDef { name: SERVE_QUEUE_DEPTH, kind: MetricKind::Gauge, unit: "reqs", labels: "tenant", help: "queued-but-not-dequeued submissions right now" },
     MetricDef { name: SERVE_SCATTER, kind: MetricKind::Span, unit: "ns", labels: "", help: "scattering per-caller result columns after a batched apply" },
-    MetricDef { name: SERVE_WAIT, kind: MetricKind::Histogram, unit: "ns", labels: "tenant", help: "submit -> batch-pickup wait per request" },
+    MetricDef { name: SERVE_WAIT, kind: MetricKind::Histogram, unit: "ns", labels: "tenant", help: "submit -> batch-pickup wait per request (per-tenant fair-queue lanes record their own series)" },
+    MetricDef { name: SERVE_XBUF_BYTES, kind: MetricKind::Gauge, unit: "bytes", labels: "tenant", help: "executor input-slab capacity (shrinks toward a recent high-water mark)" },
     MetricDef { name: SOLVER_BLOCK_BICGSTAB_RESIDUAL, kind: MetricKind::Gauge, unit: "rel", labels: "", help: "worst-column relative residual of the last block-BiCGSTAB solve" },
     MetricDef { name: SOLVER_BLOCK_BICGSTAB_ITERS, kind: MetricKind::Histogram, unit: "iters", labels: "", help: "block-BiCGSTAB iterations per solve" },
     MetricDef { name: SOLVER_BLOCK_BICGSTAB_SOLVE, kind: MetricKind::Span, unit: "ns", labels: "", help: "one block-BiCGSTAB solve end to end" },

@@ -4,12 +4,15 @@
 //! artifact per line:
 //!
 //! ```text
-//! name <TAB> file <TAB> op <TAB> kernel <TAB> d <TAB> m <TAB> n <TAB> k <TAB> b
+//! name <TAB> file <TAB> op <TAB> kernel <TAB> d <TAB> m <TAB> n <TAB> k <TAB> b [<TAB> r]
 //! ```
 //!
-//! `op ∈ {dense_mv, aca_mv, aca_factors}`; `m`/`n` are the padded block
-//! bucket sides, `b` the fixed batch width, `k` the ACA rank (0 for
-//! dense_mv).
+//! `op ∈ {dense_mv, aca_mv, aca_factors, dense_mm, aca_mm}`; `m`/`n` are
+//! the padded block bucket sides, `b` the fixed batch width, `k` the ACA
+//! rank (0 for dense ops), and `r` the fixed right-hand-side width the
+//! artifact was lowered for (the serving width-ladder rungs). The 10th
+//! column is optional so manifests written before the multi-RHS artifacts
+//! still load; absent means `r = 1` (column-at-a-time `*_mv` shapes).
 
 use crate::{Error, Result};
 use std::path::{Path, PathBuf};
@@ -25,6 +28,8 @@ pub struct Artifact {
     pub n: usize,
     pub k: usize,
     pub b: usize,
+    /// Fixed RHS width the artifact applies at once (1 for `*_mv` shapes).
+    pub r: usize,
 }
 
 #[derive(Clone, Debug, Default)]
@@ -48,9 +53,9 @@ impl Manifest {
                 continue;
             }
             let cols: Vec<&str> = line.split('\t').collect();
-            if cols.len() != 9 {
+            if cols.len() != 9 && cols.len() != 10 {
                 return Err(Error::Artifact(format!(
-                    "manifest line {} has {} columns, want 9",
+                    "manifest line {} has {} columns, want 9 or 10",
                     lineno + 1,
                     cols.len()
                 )));
@@ -70,6 +75,10 @@ impl Manifest {
                 n: parse(cols[6], "n")?,
                 k: parse(cols[7], "k")?,
                 b: parse(cols[8], "b")?,
+                r: match cols.get(9) {
+                    Some(s) => parse(s, "r")?,
+                    None => 1,
+                },
             });
         }
         Ok(Manifest { artifacts })
@@ -89,6 +98,38 @@ impl Manifest {
                     && a.n >= n
             })
             .min_by_key(|a| a.m * a.n)
+    }
+
+    /// Find the tightest fused multi-RHS artifact for `op`/`kernel`/`d`
+    /// (and `k` for ACA ops) whose block bucket covers `(m, n)` and whose
+    /// fixed RHS width covers `nrhs`.
+    ///
+    /// Width is the primary key: the serving batcher pads flushes to the
+    /// ladder rungs the artifacts were lowered at, so an exact-`r` match is
+    /// the common case and a wider rung is only picked when no exact one
+    /// exists. Bucket area breaks ties, as in [`Manifest::find`].
+    pub fn find_mm(
+        &self,
+        op: &str,
+        kernel: &str,
+        d: usize,
+        k: usize,
+        m: usize,
+        n: usize,
+        nrhs: usize,
+    ) -> Option<&Artifact> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.op == op
+                    && a.kernel == kernel
+                    && a.d == d
+                    && (op == "dense_mm" || a.k == k)
+                    && a.m >= m
+                    && a.n >= n
+                    && a.r >= nrhs
+            })
+            .min_by_key(|a| (a.r, a.m * a.n))
     }
 }
 
@@ -122,6 +163,45 @@ mod tests {
         assert!(m.find("dense_mv", "gaussian", 2, 0, 200, 200).is_some());
         // dense lookup ignores k
         assert!(m.find("dense_mv", "gaussian", 2, 99, 200, 200).is_some());
+    }
+
+    #[test]
+    fn nine_column_rows_default_to_rhs_width_one() {
+        let dir = std::env::temp_dir().join("hmx_manifest_legacy_r");
+        write_manifest(
+            &dir,
+            "dense_mv_gaussian_d2_m256\tf.hlo.txt\tdense_mv\tgaussian\t2\t256\t256\t0\t16\n",
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts[0].r, 1);
+    }
+
+    #[test]
+    fn find_mm_prefers_exact_width_then_smallest_bucket() {
+        let dir = std::env::temp_dir().join("hmx_manifest_mm");
+        write_manifest(
+            &dir,
+            "dense_mm_gaussian_d2_m256_r4\ta.hlo.txt\tdense_mm\tgaussian\t2\t256\t256\t0\t16\t4\n\
+             dense_mm_gaussian_d2_m256_r16\tb.hlo.txt\tdense_mm\tgaussian\t2\t256\t256\t0\t16\t16\n\
+             dense_mm_gaussian_d2_m512_r4\tc.hlo.txt\tdense_mm\tgaussian\t2\t512\t512\t0\t16\t4\n\
+             aca_mm_gaussian_d2_m512_k16_r4\td.hlo.txt\taca_mm\tgaussian\t2\t512\t512\t16\t16\t4\n",
+        );
+        let m = Manifest::load(&dir).unwrap();
+        // exact-width rung beats a wider one
+        let a = m.find_mm("dense_mm", "gaussian", 2, 0, 200, 200, 4).unwrap();
+        assert_eq!((a.r, a.m), (4, 256));
+        // nrhs between rungs: the next rung up is taken
+        let a = m.find_mm("dense_mm", "gaussian", 2, 0, 200, 200, 5).unwrap();
+        assert_eq!(a.r, 16);
+        // bucket coverage still applies; width ties break by bucket area
+        let a = m.find_mm("dense_mm", "gaussian", 2, 0, 400, 400, 4).unwrap();
+        assert_eq!((a.r, a.m), (4, 512));
+        // no rung wide enough -> None (caller falls back columnwise)
+        assert!(m.find_mm("dense_mm", "gaussian", 2, 0, 200, 200, 17).is_none());
+        // ACA lookups match on rank, dense ones ignore it
+        assert!(m.find_mm("aca_mm", "gaussian", 2, 16, 300, 300, 4).is_some());
+        assert!(m.find_mm("aca_mm", "gaussian", 2, 8, 300, 300, 4).is_none());
+        assert!(m.find_mm("dense_mm", "gaussian", 2, 99, 200, 200, 4).is_some());
     }
 
     #[test]

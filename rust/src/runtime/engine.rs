@@ -9,7 +9,9 @@
 //! matching artifact fall back to the native engine.
 
 use crate::aca::batched::AcaFactors;
-use crate::coordinator::{BatchEngine, NativeEngine};
+use crate::coordinator::{
+    columnwise_aca_matmat, columnwise_dense_matmat, BatchEngine, NativeEngine,
+};
 use crate::geometry::kernel::Kernel;
 use crate::geometry::points::PointSet;
 use crate::runtime::artifacts::{Artifact, Manifest};
@@ -107,6 +109,32 @@ impl XlaEngine {
         for (bi, w) in blocks.iter().enumerate() {
             for (jj, j) in (w.sigma.lo..w.sigma.hi).enumerate() {
                 buf[bi * bucket + jj] = x[j];
+            }
+        }
+        buf
+    }
+
+    /// Marshal column-major multi-RHS input (`x[c * n_total + j]`, the
+    /// crate's mat-mat layout) into the artifact's `[B, N, R]` buffer.
+    /// Padded RHS columns `nrhs..r` and padded rows stay zero, so they
+    /// contribute nothing to the contraction.
+    #[allow(clippy::too_many_arguments)]
+    fn marshal_x_mm(
+        &self,
+        blocks: &[WorkItem],
+        x: &[f64],
+        nrhs: usize,
+        n_total: usize,
+        bucket: usize,
+        b: usize,
+        r: usize,
+    ) -> Vec<f64> {
+        let mut buf = vec![0.0f64; b * bucket * r];
+        for (bi, w) in blocks.iter().enumerate() {
+            for (jj, j) in (w.sigma.lo..w.sigma.hi).enumerate() {
+                for c in 0..nrhs {
+                    buf[bi * bucket * r + jj * r + c] = x[c * n_total + j];
+                }
             }
         }
         buf
@@ -213,6 +241,105 @@ impl XlaEngine {
         for (bi, w) in blocks.iter().enumerate() {
             for (ii, i) in (w.tau.lo..w.tau.hi).enumerate() {
                 z.add(i, y[bi * bucket_m + ii]);
+            }
+        }
+        Ok(true)
+    }
+
+    /// Execute one ≤B group of dense blocks through the fused multi-RHS
+    /// artifact; returns false if no artifact covers the group's bucket
+    /// AND width (caller falls back columnwise).
+    fn try_dense_mm_group(
+        &self,
+        points: &PointSet,
+        blocks: &[WorkItem],
+        x: &[f64],
+        nrhs: usize,
+        z: &AtomicF64Vec,
+    ) -> Result<bool> {
+        let max_m = blocks.iter().map(|w| w.rows()).max().unwrap();
+        let max_n = blocks.iter().map(|w| w.cols()).max().unwrap();
+        let Some(artifact) = self
+            .manifest
+            .find_mm("dense_mm", &self.kernel_name, self.dim, 0, max_m, max_n, nrhs)
+            .cloned()
+        else {
+            return Ok(false);
+        };
+        let (bucket_m, bucket_n, b, r) = (artifact.m, artifact.n, artifact.b, artifact.r);
+        if blocks.len() > b {
+            return Ok(false);
+        }
+        let n_total = points.len();
+        let tau = self.marshal_points(points, blocks, Side::Tau, bucket_m, b);
+        let sigma = self.marshal_points(points, blocks, Side::Sigma, bucket_n, b);
+        let xb = self.marshal_x_mm(blocks, x, nrhs, n_total, bucket_n, b, r);
+        let d = self.dim as i64;
+        let out = self.run(
+            &artifact,
+            &[
+                self.literal(&tau, &[b as i64, bucket_m as i64, d])?,
+                self.literal(&sigma, &[b as i64, bucket_n as i64, d])?,
+                self.literal(&xb, &[b as i64, bucket_n as i64, r as i64])?,
+            ],
+        )?;
+        let y = out.to_tuple1()?.to_vec::<f64>()?; // [b, bucket_m, r]
+        for (bi, w) in blocks.iter().enumerate() {
+            for c in 0..nrhs {
+                for (ii, i) in (w.tau.lo..w.tau.hi).enumerate() {
+                    z.add(c * n_total + i, y[bi * bucket_m * r + ii * r + c]);
+                }
+            }
+        }
+        Ok(true)
+    }
+
+    /// Multi-RHS analogue of [`XlaEngine::try_aca_group`]: one fused
+    /// ACA + apply per block, contraction carrying all `nrhs` columns.
+    fn try_aca_mm_group(
+        &self,
+        points: &PointSet,
+        blocks: &[WorkItem],
+        x: &[f64],
+        nrhs: usize,
+        z: &AtomicF64Vec,
+    ) -> Result<bool> {
+        let max_m = blocks.iter().map(|w| w.rows()).max().unwrap();
+        let max_n = blocks.iter().map(|w| w.cols()).max().unwrap();
+        let Some(artifact) = self
+            .manifest
+            .find_mm("aca_mm", &self.kernel_name, self.dim, self.k, max_m, max_n, nrhs)
+            .cloned()
+        else {
+            return Ok(false);
+        };
+        let (bucket_m, bucket_n, b, r) = (artifact.m, artifact.n, artifact.b, artifact.r);
+        if blocks.len() > b {
+            return Ok(false);
+        }
+        let n_total = points.len();
+        let tau = self.marshal_points(points, blocks, Side::Tau, bucket_m, b);
+        let sigma = self.marshal_points(points, blocks, Side::Sigma, bucket_n, b);
+        let xb = self.marshal_x_mm(blocks, x, nrhs, n_total, bucket_n, b, r);
+        let row_mask = self.marshal_mask(blocks, Side::Tau, bucket_m, b);
+        let col_mask = self.marshal_mask(blocks, Side::Sigma, bucket_n, b);
+        let d = self.dim as i64;
+        let out = self.run(
+            &artifact,
+            &[
+                self.literal(&tau, &[b as i64, bucket_m as i64, d])?,
+                self.literal(&sigma, &[b as i64, bucket_n as i64, d])?,
+                self.literal(&xb, &[b as i64, bucket_n as i64, r as i64])?,
+                self.literal(&row_mask, &[b as i64, bucket_m as i64])?,
+                self.literal(&col_mask, &[b as i64, bucket_n as i64])?,
+            ],
+        )?;
+        let y = out.to_tuple1()?.to_vec::<f64>()?; // [b, bucket_m, r]
+        for (bi, w) in blocks.iter().enumerate() {
+            for c in 0..nrhs {
+                for (ii, i) in (w.tau.lo..w.tau.hi).enumerate() {
+                    z.add(c * n_total + i, y[bi * bucket_m * r + ii * r + c]);
+                }
             }
         }
         Ok(true)
@@ -415,6 +542,72 @@ impl BatchEngine for XlaEngine {
             base += group.len();
         }
         AcaFactors { u_all, v_all, row_offsets, col_offsets, ranks, k }
+    }
+
+    fn dense_matmat(
+        &self,
+        points: &PointSet,
+        kernel: Kernel,
+        blocks: &[WorkItem],
+        x: &[f64],
+        nrhs: usize,
+        z: &AtomicF64Vec,
+    ) {
+        let b = self
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| a.op == "dense_mm")
+            .map(|a| a.b)
+            .unwrap_or(16);
+        for group in groups(blocks, b) {
+            match self.try_dense_mm_group(points, group, x, nrhs, z) {
+                Ok(true) => self.xla_batches.set(self.xla_batches.get() + 1),
+                Ok(false) => {
+                    self.fallback_batches.set(self.fallback_batches.get() + 1);
+                    columnwise_dense_matmat(self, points, kernel, group, x, nrhs, z);
+                }
+                Err(e) => {
+                    eprintln!("hmx: XLA dense_mm failed ({e}); falling back columnwise");
+                    self.fallback_batches.set(self.fallback_batches.get() + 1);
+                    columnwise_dense_matmat(self, points, kernel, group, x, nrhs, z);
+                }
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn aca_matmat(
+        &self,
+        points: &PointSet,
+        kernel: Kernel,
+        k: usize,
+        blocks: &[WorkItem],
+        x: &[f64],
+        nrhs: usize,
+        z: &AtomicF64Vec,
+    ) {
+        let b = self
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| a.op == "aca_mm")
+            .map(|a| a.b)
+            .unwrap_or(16);
+        for group in groups(blocks, b) {
+            match self.try_aca_mm_group(points, group, x, nrhs, z) {
+                Ok(true) => self.xla_batches.set(self.xla_batches.get() + 1),
+                Ok(false) => {
+                    self.fallback_batches.set(self.fallback_batches.get() + 1);
+                    columnwise_aca_matmat(self, points, kernel, k, group, x, nrhs, z);
+                }
+                Err(e) => {
+                    eprintln!("hmx: XLA aca_mm failed ({e}); falling back columnwise");
+                    self.fallback_batches.set(self.fallback_batches.get() + 1);
+                    columnwise_aca_matmat(self, points, kernel, k, group, x, nrhs, z);
+                }
+            }
+        }
     }
 
     fn name(&self) -> &'static str {

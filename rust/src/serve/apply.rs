@@ -1,0 +1,210 @@
+//! The executor-side operator contract: zero-copy lending applies and
+//! the fixed batch-width ladder.
+//!
+//! Before this PR the executor took a `FnMut(&[f64], usize) ->
+//! Vec<f64>` — every flush allocated an `n × nrhs` output vector and
+//! every request copied its column out of it. [`LendingApply`] replaces
+//! that: the operator *lends* a slice of its own result storage (for the
+//! H-operator, the [`crate::hmatrix::MatvecWorkspace`] output slab that
+//! [`crate::hmatrix::HMatrix::matmat_with`] already writes), and the
+//! executor scatters per-caller columns straight from it into each
+//! request's recycled input buffer — no per-flush `Vec`, no per-request
+//! allocation.
+//!
+//! [`WidthLadder`] is the serving-side incarnation of the paper's
+//! fixed-size batched kernels (§5.4.2; cf. Boukaram et al. 2019): applies
+//! are compiled/cached at a small ladder of batch widths and every flush
+//! is zero-padded UP to the nearest rung, so an artifact-backed engine
+//! sees only ladder widths and never falls back to columnwise execution
+//! (`runtime.matmat_fallback` stays 0 on the serve path). Zero columns
+//! are exact for linear operators: the padded columns produce zeros the
+//! scatter simply skips.
+
+use super::batcher::Control;
+
+/// A batched operator living on its executor thread. `apply_batch` lends
+/// the result block out of internal storage — valid until the next call.
+pub trait LendingApply {
+    /// `Y = A X` for column-major `x` of shape `n × nrhs`; returns the
+    /// column-major result borrowed from `self` (length `n * nrhs`).
+    fn apply_batch(&mut self, x: &[f64], nrhs: usize) -> crate::Result<&[f64]>;
+
+    /// Out-of-band control, run between batches on the executor thread.
+    /// Default: reject (the operator has no control support).
+    fn on_control(&mut self, cmd: Control) {
+        cmd.reject();
+    }
+
+    /// Advisory downsizing: release internal scratch above `max_elems`
+    /// elements (the executor calls this when it shrinks its own input
+    /// slab toward the recent high-water mark). Default: no-op.
+    fn trim(&mut self, _max_elems: usize) {}
+}
+
+/// Adapter: the pre-existing closure contract (`(x, nrhs) -> Vec<f64>`)
+/// as a [`LendingApply`]. Keeps [`crate::serve::DynamicBatcher::spawn`]
+/// and friends source-compatible; the closure's output vector is parked
+/// in `out` and lent, so the per-flush allocation a closure makes is its
+/// own doing, not the executor's.
+pub struct ClosureApply<F, C = fn(Control)> {
+    f: F,
+    ctl: Option<C>,
+    out: Vec<f64>,
+}
+
+impl<F> ClosureApply<F, fn(Control)>
+where
+    F: FnMut(&[f64], usize) -> crate::Result<Vec<f64>>,
+{
+    pub fn new(f: F) -> Self {
+        ClosureApply { f, ctl: None, out: Vec::new() }
+    }
+}
+
+impl<F, C> ClosureApply<F, C>
+where
+    F: FnMut(&[f64], usize) -> crate::Result<Vec<f64>>,
+    C: FnMut(Control),
+{
+    pub fn with_control(f: F, ctl: C) -> Self {
+        ClosureApply { f, ctl: Some(ctl), out: Vec::new() }
+    }
+}
+
+impl<F, C> LendingApply for ClosureApply<F, C>
+where
+    F: FnMut(&[f64], usize) -> crate::Result<Vec<f64>>,
+    C: FnMut(Control),
+{
+    fn apply_batch(&mut self, x: &[f64], nrhs: usize) -> crate::Result<&[f64]> {
+        self.out = (self.f)(x, nrhs)?;
+        Ok(&self.out)
+    }
+
+    fn on_control(&mut self, cmd: Control) {
+        match &mut self.ctl {
+            Some(c) => c(cmd),
+            None => cmd.reject(),
+        }
+    }
+
+    fn trim(&mut self, max_elems: usize) {
+        if self.out.capacity() > max_elems {
+            self.out = Vec::new();
+        }
+    }
+}
+
+/// The fixed batch widths a served operator is applied at. Flushes are
+/// padded up to the smallest rung ≥ occupancy (capped by `max_batch`,
+/// which is always the top rung), so an engine caching one compiled
+/// apply path per width sees a handful of shapes instead of `max_batch`
+/// distinct ones.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WidthLadder {
+    /// Sorted ascending; empty = padding disabled (every occupancy is
+    /// its own width).
+    widths: Vec<usize>,
+}
+
+impl WidthLadder {
+    /// The default ladder: powers of two `1, 2, 4, …` capped at
+    /// `max_batch` (which becomes the top rung even when it is not a
+    /// power of two) — e.g. `max_batch = 24` gives `1/2/4/8/16/24`.
+    pub fn auto(max_batch: usize) -> Self {
+        assert!(max_batch >= 1);
+        let mut widths = Vec::new();
+        let mut w = 1usize;
+        while w < max_batch {
+            widths.push(w);
+            w *= 2;
+        }
+        widths.push(max_batch);
+        WidthLadder { widths }
+    }
+
+    /// An explicit ladder. Rungs above `max_batch` are dropped;
+    /// `max_batch` itself is always appended so every flush has a rung.
+    pub fn from_widths(widths: &[usize], max_batch: usize) -> Self {
+        assert!(max_batch >= 1);
+        let mut v: Vec<usize> =
+            widths.iter().copied().filter(|&w| w >= 1 && w < max_batch).collect();
+        v.push(max_batch);
+        v.sort_unstable();
+        v.dedup();
+        WidthLadder { widths: v }
+    }
+
+    /// No padding: each flush runs at its exact occupancy.
+    pub fn disabled() -> Self {
+        WidthLadder { widths: Vec::new() }
+    }
+
+    pub fn is_disabled(&self) -> bool {
+        self.widths.is_empty()
+    }
+
+    pub fn widths(&self) -> &[usize] {
+        &self.widths
+    }
+
+    /// The width a flush of `nrhs` requests runs at: the smallest rung
+    /// ≥ `nrhs` (or `nrhs` itself when padding is disabled — callers cap
+    /// occupancy at `max_batch`, the top rung, so a rung always exists).
+    pub fn width_for(&self, nrhs: usize) -> usize {
+        match self.widths.iter().find(|&&w| w >= nrhs) {
+            Some(&w) => w,
+            None => nrhs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_ladder_is_powers_of_two_capped() {
+        assert_eq!(WidthLadder::auto(32).widths(), &[1, 2, 4, 8, 16, 32]);
+        assert_eq!(WidthLadder::auto(24).widths(), &[1, 2, 4, 8, 16, 24]);
+        assert_eq!(WidthLadder::auto(1).widths(), &[1]);
+    }
+
+    #[test]
+    fn width_for_rounds_up_to_the_nearest_rung() {
+        let l = WidthLadder::auto(32);
+        assert_eq!(l.width_for(1), 1);
+        assert_eq!(l.width_for(3), 4);
+        assert_eq!(l.width_for(16), 16);
+        assert_eq!(l.width_for(17), 32);
+        assert_eq!(l.width_for(32), 32);
+    }
+
+    #[test]
+    fn explicit_ladder_always_covers_max_batch() {
+        let l = WidthLadder::from_widths(&[4, 16, 999], 32);
+        assert_eq!(l.widths(), &[4, 16, 32]);
+        assert_eq!(l.width_for(2), 4);
+        assert_eq!(l.width_for(5), 16);
+        assert_eq!(l.width_for(17), 32);
+    }
+
+    #[test]
+    fn disabled_ladder_passes_occupancy_through() {
+        let l = WidthLadder::disabled();
+        assert!(l.is_disabled());
+        assert_eq!(l.width_for(7), 7);
+    }
+
+    #[test]
+    fn closure_apply_lends_and_rejects_control() {
+        let mut a = ClosureApply::new(|x: &[f64], nrhs| {
+            Ok(x.iter().map(|v| 2.0 * v).take(x.len() / nrhs * nrhs).collect())
+        });
+        let y = a.apply_batch(&[1.0, 2.0], 1).unwrap();
+        assert_eq!(y, &[2.0, 4.0]);
+        a.trim(0);
+        let y = a.apply_batch(&[3.0], 1).unwrap();
+        assert_eq!(y, &[6.0]);
+    }
+}

@@ -4,30 +4,32 @@
 //! Engines are deliberately not `Send`/`Sync` (see
 //! [`crate::coordinator::BatchEngine`]), so the operator is *built on* the
 //! executor thread and never crosses it; clients only exchange vectors
-//! over channels. Batching policy: a batch opens when the first queued
-//! request is picked up, greedily absorbs the backlog, then waits for
-//! stragglers until the oldest request has aged [`ServeConfig::max_wait`]
-//! since submission (a backlogged batch flushes immediately) or
-//! [`ServeConfig::max_batch`] requests have gathered — the flush then runs
-//! ONE batched apply (for the H-operator:
+//! over the weighted fair queue. Batching policy: a batch opens when the
+//! first queued request is picked up, greedily absorbs the backlog, then
+//! waits for stragglers until the oldest request has aged
+//! [`ServeConfig::max_wait`] since submission (a backlogged batch flushes
+//! immediately) or [`ServeConfig::max_batch`] requests have gathered —
+//! the flush then zero-pads the block up to its [`WidthLadder`] width,
+//! runs ONE batched [`LendingApply::apply_batch`] (for the H-operator:
 //! [`crate::hmatrix::HMatrix::matmat_with`] through a warm
 //! [`crate::hmatrix::MatvecWorkspace`]) and scatters per-column results
-//! back to the awaiting callers.
+//! straight from the lent slab into each caller's recycled input buffer.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
 
+use super::apply::{ClosureApply, LendingApply, WidthLadder};
+use super::queue::{FairQueue, PopError, PushError};
+use super::slot::{Response, ResponseSlot, SubmitFuture, Ticket};
 use super::telemetry::BatcherStats;
 use super::{ServeConfig, ServeError};
 use crate::compress::{CompressConfig, CompressStats};
 use crate::metrics::RECORDER;
-use crate::obs::{self, names};
-
-/// What a client gets back: its result column or a serving error.
-type Response = Result<Vec<f64>, ServeError>;
+use crate::obs::{self, names, Histogram};
 
 /// Out-of-band commands handled by the executor thread *between*
 /// batches (in-flight batches always finish first). This is how a
@@ -44,7 +46,7 @@ pub enum Control {
 impl Control {
     /// Reply that this operator has no control support (the plain
     /// [`DynamicBatcher::spawn`] path for arbitrary apply closures).
-    fn reject(self) {
+    pub(crate) fn reject(self) {
         match self {
             Control::Compress { reply, .. } => {
                 let _ = reply.send(Err(crate::Error::Config(
@@ -56,11 +58,14 @@ impl Control {
 }
 
 /// One queued submission.
-struct Request {
+pub(crate) struct Request {
     x: Vec<f64>,
     submitted: Instant,
-    resp: mpsc::Sender<Response>,
+    slot: Arc<ResponseSlot>,
     stats: Arc<BatcherStats>,
+    /// Extra per-tenant `serve.wait` series for [`BatcherClient::for_tenant`]
+    /// clients (the operator-level series in `stats` always records too).
+    tenant_wait: Option<Arc<Histogram>>,
     /// Whether the executor took this request off the queue (and thus
     /// already decremented the depth gauge).
     dequeued: bool,
@@ -68,11 +73,13 @@ struct Request {
 
 impl Drop for Request {
     fn drop(&mut self) {
-        // A request can be destroyed without ever being dequeued: it was
-        // enqueued in the instant between the shutdown drain seeing an
-        // empty queue and the executor dropping the receiver. The caller
-        // gets `Shutdown` from its dead response channel either way; this
-        // keeps the depth gauge from reading >0 forever afterwards.
+        // A request can be destroyed without ever being served: the
+        // queue's terminal close() drops leftovers enqueued between the
+        // executor's last drain pass and its exit. The slot is one-shot
+        // first-writer-wins, so for served requests this complete is a
+        // no-op; for abandoned ones it resolves the waiter with Shutdown
+        // instead of leaving its future pending forever.
+        self.slot.complete(Err(ServeError::Shutdown));
         if !self.dequeued {
             self.stats.record_dequeue();
         }
@@ -89,27 +96,25 @@ fn dequeue(mut req: Request, stats: &BatcherStats) -> Request {
 /// How long the idle executor sleeps between shutdown-flag checks.
 const IDLE_POLL: Duration = Duration::from_millis(20);
 
-/// A pending response; redeem with [`Ticket::wait`].
-#[derive(Debug)]
-pub struct Ticket {
-    rx: mpsc::Receiver<Response>,
-}
-
-impl Ticket {
-    /// Block until the batch containing this request has been applied.
-    pub fn wait(self) -> Response {
-        self.rx.recv().unwrap_or(Err(ServeError::Shutdown))
-    }
-}
+/// The executor re-evaluates its input-slab size every this many flushes:
+/// capacity above the window's high-water mark is released (and the
+/// operator's scratch trimmed to match), so one burst cannot pin
+/// peak-sized buffers outside the memory governor's ceiling forever.
+const XBUF_SHRINK_WINDOW: u32 = 64;
 
 /// Cheaply cloneable submission endpoint; hand one to every client
-/// thread. All clones feed the same executor.
+/// thread. All clones feed the same executor. [`BatcherClient::for_tenant`]
+/// derives a client whose submissions ride their own weighted fair-queue
+/// lane and per-tenant wait series.
 #[derive(Clone)]
 pub struct BatcherClient {
-    tx: mpsc::SyncSender<Request>,
+    queue: Arc<FairQueue<Request>>,
     n: usize,
     stats: Arc<BatcherStats>,
     shutdown: Arc<AtomicBool>,
+    tenant: String,
+    weight: f64,
+    wait_hist: Option<Arc<Histogram>>,
 }
 
 impl BatcherClient {
@@ -122,9 +127,38 @@ impl BatcherClient {
         Arc::clone(&self.stats)
     }
 
-    /// Enqueue a request without blocking on the result. Sheds with
-    /// [`ServeError::Overloaded`] when the bounded queue is full.
-    pub fn submit(&self, x: Vec<f64>) -> Result<Ticket, ServeError> {
+    /// Whether the executor has begun shutting down (new submissions are
+    /// refused with [`ServeError::Shutdown`]).
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::Acquire)
+    }
+
+    /// A client whose submissions go through their own fair-queue lane:
+    /// under contention each lane receives dequeue slots in proportion to
+    /// `weight` (virtual-finish-time scheduling), so a heavy tenant's
+    /// backlog cannot starve a light one. The lane's submit → pickup
+    /// waits are additionally recorded in a `(serve.wait, tenant=label)`
+    /// histogram series. `weight` must be positive.
+    pub fn for_tenant(&self, label: &str, weight: f64) -> BatcherClient {
+        assert!(weight > 0.0 && weight.is_finite(), "tenant weight must be positive");
+        BatcherClient {
+            queue: Arc::clone(&self.queue),
+            n: self.n,
+            stats: Arc::clone(&self.stats),
+            shutdown: Arc::clone(&self.shutdown),
+            tenant: label.to_string(),
+            weight,
+            wait_hist: Some(super::telemetry::tenant_wait_histogram(label)),
+        }
+    }
+
+    /// Enqueue a request and get back a [`SubmitFuture`] resolving to its
+    /// result column — the request is in flight the moment this returns,
+    /// no OS thread blocks on it, and one reactor can hold thousands of
+    /// pending futures. Sheds with [`ServeError::Overloaded`] when the
+    /// bounded queue is full. Dropping the future abandons the request
+    /// (the batch still runs; the column is discarded).
+    pub fn submit_async(&self, x: Vec<f64>) -> Result<SubmitFuture, ServeError> {
         if x.len() != self.n {
             return Err(ServeError::BadRequest(format!(
                 "expected a vector of length {}, got {}",
@@ -138,33 +172,40 @@ impl BatcherClient {
         if self.shutdown.load(Ordering::Acquire) {
             return Err(ServeError::Shutdown);
         }
-        let (rtx, rrx) = mpsc::channel();
+        let slot = ResponseSlot::new();
         let req = Request {
             x,
             submitted: Instant::now(),
-            resp: rtx,
+            slot: Arc::clone(&slot),
             stats: Arc::clone(&self.stats),
+            tenant_wait: self.wait_hist.clone(),
             dequeued: false,
         };
         // submit is recorded first so the executor's dequeue decrement can
         // never observe the gauge before the increment
         let depth = self.stats.record_submit();
-        match self.tx.try_send(req) {
+        match self.queue.push(&self.tenant, self.weight, req) {
             Ok(()) => {
                 self.stats.record_enqueued(depth);
-                Ok(Ticket { rx: rrx })
+                Ok(SubmitFuture::new(slot))
             }
-            Err(mpsc::TrySendError::Full(mut req)) => {
+            Err(PushError::Full(mut req)) => {
                 req.dequeued = true; // record_unsubmit rolls the gauge back
                 self.stats.record_unsubmit(true);
                 Err(ServeError::Overloaded)
             }
-            Err(mpsc::TrySendError::Disconnected(mut req)) => {
+            Err(PushError::Closed(mut req)) => {
                 req.dequeued = true;
                 self.stats.record_unsubmit(false);
                 Err(ServeError::Shutdown)
             }
         }
+    }
+
+    /// Enqueue a request without blocking on the result. Sheds with
+    /// [`ServeError::Overloaded`] when the bounded queue is full.
+    pub fn submit(&self, x: Vec<f64>) -> Result<Ticket, ServeError> {
+        self.submit_async(x).map(Ticket::new)
     }
 
     /// Submit and block for the result — `y = A x`.
@@ -179,10 +220,38 @@ impl BatcherClient {
     }
 }
 
+/// Clonable handle for sending [`Control`] commands to the executor;
+/// survives the [`DynamicBatcher`] only in the sense that sends after
+/// shutdown fail with [`ServeError::Shutdown`].
+#[derive(Clone)]
+pub struct ControlHandle {
+    ctl_tx: mpsc::Sender<Control>,
+}
+
+impl ControlHandle {
+    /// Queue a raw control command; the executor runs it between batches
+    /// (and keeps draining control during the graceful-shutdown drain).
+    pub fn send(&self, cmd: Control) -> Result<(), ServeError> {
+        self.ctl_tx.send(cmd).map_err(|_| ServeError::Shutdown)
+    }
+
+    /// Ask the executor to recompress its operator in place; blocks until
+    /// the pass ran between batches and returns its stats.
+    pub fn compress(&self, cfg: CompressConfig) -> Result<CompressStats, ServeError> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Control::Compress { cfg, reply })?;
+        match rx.recv() {
+            Ok(Ok(stats)) => Ok(stats),
+            Ok(Err(e)) => Err(ServeError::Apply(format!("compress failed: {e}"))),
+            Err(_) => Err(ServeError::Shutdown),
+        }
+    }
+}
+
 /// Owns one executor thread and its operator. Dropping the batcher shuts
-/// the executor down gracefully: the queued backlog is still served, then
-/// the thread exits and later submissions fail with
-/// [`ServeError::Shutdown`].
+/// the executor down gracefully: the queued backlog is still served (and
+/// pending control commands still run), then the thread exits and later
+/// submissions fail with [`ServeError::Shutdown`].
 pub struct DynamicBatcher {
     client: BatcherClient,
     shutdown: Arc<AtomicBool>,
@@ -198,15 +267,14 @@ impl DynamicBatcher {
     /// Blocks until the build finishes; a build error is returned here and
     /// the thread is reaped. Control commands are rejected; use
     /// [`DynamicBatcher::spawn_with_control`] for operators that support
-    /// them.
+    /// them, or [`DynamicBatcher::spawn_apply`] for zero-copy
+    /// [`LendingApply`] operators.
     pub fn spawn<B, A>(n: usize, cfg: ServeConfig, build: B) -> Result<Self, ServeError>
     where
         B: FnOnce() -> crate::Result<A> + Send + 'static,
         A: FnMut(&[f64], usize) -> crate::Result<Vec<f64>> + 'static,
     {
-        Self::spawn_with_control(n, cfg, move || {
-            build().map(|a| (a, |cmd: Control| cmd.reject()))
-        })
+        Self::spawn_apply(n, cfg, "", move || build().map(ClosureApply::new))
     }
 
     /// Like [`DynamicBatcher::spawn`], but `build` additionally returns a
@@ -242,40 +310,52 @@ impl DynamicBatcher {
         A: FnMut(&[f64], usize) -> crate::Result<Vec<f64>> + 'static,
         C: FnMut(Control) + 'static,
     {
+        Self::spawn_apply(n, cfg, tenant, move || {
+            build().map(|(a, c)| ClosureApply::with_control(a, c))
+        })
+    }
+
+    /// The core spawn: `build` runs on the executor thread and returns any
+    /// [`LendingApply`] operator — the zero-copy contract under which the
+    /// executor scatters result columns straight from the operator's lent
+    /// slab ([`crate::hmatrix::MatvecWorkspace`] for the H-operator) with
+    /// no per-flush output allocation.
+    pub fn spawn_apply<B, A>(
+        n: usize,
+        cfg: ServeConfig,
+        tenant: &str,
+        build: B,
+    ) -> Result<Self, ServeError>
+    where
+        B: FnOnce() -> crate::Result<A> + Send + 'static,
+        A: LendingApply + 'static,
+    {
         cfg.validate()?;
         if n == 0 {
             return Err(ServeError::BadRequest("operator dimension must be positive".into()));
         }
-        let (tx, rx) = mpsc::sync_channel(cfg.queue_capacity);
+        let queue = Arc::new(FairQueue::new(cfg.queue_capacity));
         let (ctl_tx, ctl_rx) = mpsc::channel::<Control>();
         let stats = Arc::new(BatcherStats::with_tenant(tenant));
         let shutdown = Arc::new(AtomicBool::new(false));
         let (btx, brx) = mpsc::channel::<Result<(), ServeError>>();
+        let queue_ex = Arc::clone(&queue);
         let stats_ex = Arc::clone(&stats);
         let shutdown_ex = Arc::clone(&shutdown);
         let executor = thread::Builder::new()
             .name("hmx-serve-executor".to_string())
             .spawn(move || {
-                let (mut apply, mut control) = match build() {
-                    Ok(parts) => {
+                let mut apply = match build() {
+                    Ok(a) => {
                         let _ = btx.send(Ok(()));
-                        parts
+                        a
                     }
                     Err(e) => {
                         let _ = btx.send(Err(ServeError::Build(e.to_string())));
                         return;
                     }
                 };
-                run_executor(
-                    &rx,
-                    &ctl_rx,
-                    n,
-                    &cfg,
-                    &stats_ex,
-                    &shutdown_ex,
-                    &mut apply,
-                    &mut control,
-                );
+                run_executor(&queue_ex, &ctl_rx, n, &cfg, &stats_ex, &shutdown_ex, &mut apply);
             })
             .map_err(|e| ServeError::Build(format!("failed to spawn executor thread: {e}")))?;
         let built = brx
@@ -286,7 +366,15 @@ impl DynamicBatcher {
             return Err(e);
         }
         Ok(DynamicBatcher {
-            client: BatcherClient { tx, n, stats, shutdown: Arc::clone(&shutdown) },
+            client: BatcherClient {
+                queue,
+                n,
+                stats,
+                shutdown: Arc::clone(&shutdown),
+                tenant: String::new(),
+                weight: 1.0,
+                wait_hist: None,
+            },
             shutdown,
             ctl_tx,
             executor: Some(executor),
@@ -300,15 +388,13 @@ impl DynamicBatcher {
     /// [`ServeError::Apply`]; a shut-down executor with
     /// [`ServeError::Shutdown`].
     pub fn compress(&self, cfg: CompressConfig) -> Result<CompressStats, ServeError> {
-        let (reply, rx) = mpsc::channel();
-        self.ctl_tx
-            .send(Control::Compress { cfg, reply })
-            .map_err(|_| ServeError::Shutdown)?;
-        match rx.recv() {
-            Ok(Ok(stats)) => Ok(stats),
-            Ok(Err(e)) => Err(ServeError::Apply(format!("compress failed: {e}"))),
-            Err(_) => Err(ServeError::Shutdown),
-        }
+        self.controller().compress(cfg)
+    }
+
+    /// A detached control endpoint (see [`ControlHandle`]); usable even
+    /// while this batcher is mid-drop on another thread.
+    pub fn controller(&self) -> ControlHandle {
+        ControlHandle { ctl_tx: self.ctl_tx.clone() }
     }
 
     /// A new submission endpoint for a client thread.
@@ -339,56 +425,113 @@ impl Drop for DynamicBatcher {
     }
 }
 
+/// Run one control command, isolating the executor from a panicking
+/// handler (the command's reply channel drops, so the issuer sees
+/// `Shutdown` instead of hanging).
+fn run_control<A: LendingApply>(apply: &mut A, cmd: Control) {
+    if catch_unwind(AssertUnwindSafe(|| apply.on_control(cmd))).is_err() {
+        RECORDER.incr(names::SERVE_APPLY_PANIC);
+    }
+}
+
+/// Sliding high-water governor for the executor's input slab: every
+/// [`XBUF_SHRINK_WINDOW`] flushes, capacity above the window's peak usage
+/// is released and the operator is asked to trim its scratch to match.
+struct XbufGovernor {
+    high_water: usize,
+    flushes: u32,
+}
+
+impl XbufGovernor {
+    fn new() -> Self {
+        XbufGovernor { high_water: 0, flushes: 0 }
+    }
+
+    fn after_flush<A: LendingApply>(
+        &mut self,
+        used_elems: usize,
+        xbuf: &mut Vec<f64>,
+        stats: &BatcherStats,
+        apply: &mut A,
+    ) {
+        self.high_water = self.high_water.max(used_elems);
+        self.flushes += 1;
+        if self.flushes >= XBUF_SHRINK_WINDOW {
+            if xbuf.capacity() > self.high_water {
+                xbuf.shrink_to(self.high_water);
+                apply.trim(self.high_water);
+            }
+            self.flushes = 0;
+            self.high_water = 0;
+        }
+        stats.record_xbuf_bytes((xbuf.capacity() * std::mem::size_of::<f64>()) as u64);
+    }
+}
+
 /// Executor main loop: handle pending control commands, pick up the
-/// oldest request, coalesce, flush.
-#[allow(clippy::too_many_arguments)]
-fn run_executor<A, C>(
-    rx: &mpsc::Receiver<Request>,
+/// fairness-ordered head request, coalesce, flush.
+fn run_executor<A: LendingApply>(
+    queue: &FairQueue<Request>,
     ctl_rx: &mpsc::Receiver<Control>,
     n: usize,
     cfg: &ServeConfig,
     stats: &BatcherStats,
     shutdown: &AtomicBool,
     apply: &mut A,
-    control: &mut C,
-) where
-    A: FnMut(&[f64], usize) -> crate::Result<Vec<f64>>,
-    C: FnMut(Control),
-{
+) {
+    let ladder = cfg.ladder();
     let mut xbuf: Vec<f64> = Vec::new();
+    let mut governor = XbufGovernor::new();
     loop {
         // control commands run between batches (never inside one); the
         // idle poll bounds their pickup latency at IDLE_POLL
         while let Ok(cmd) = ctl_rx.try_recv() {
-            control(cmd);
+            run_control(apply, cmd);
         }
         if shutdown.load(Ordering::Acquire) {
             // graceful drain: serve the backlog in full batches, then exit
-            while let Ok(first) = rx.try_recv() {
+            loop {
+                // control must keep draining HERE too — a governor
+                // Compress issued just before shutdown used to be
+                // silently dropped once this drain loop was entered,
+                // leaving its issuer blocked on a reply that never came
+                while let Ok(cmd) = ctl_rx.try_recv() {
+                    run_control(apply, cmd);
+                }
+                let Some(first) = queue.try_pop() else { break };
                 let mut batch = vec![dequeue(first, stats)];
-                drain_backlog(rx, &mut batch, cfg.max_batch, stats);
-                process_batch(&mut xbuf, batch, n, stats, apply);
+                drain_backlog(queue, &mut batch, cfg.max_batch, stats);
+                let used = process_batch(&mut xbuf, batch, n, stats, &ladder, apply);
+                governor.after_flush(used, &mut xbuf, stats, apply);
             }
+            while let Ok(cmd) = ctl_rx.try_recv() {
+                run_control(apply, cmd);
+            }
+            // terminal close: leftovers racing in behind the last drain
+            // pass are dropped, resolving their waiters with Shutdown
+            // (clients already refuse new submissions on the flag)
+            queue.close();
             return;
         }
-        let first = match rx.recv_timeout(IDLE_POLL) {
+        let first = match queue.pop_timeout(IDLE_POLL) {
             Ok(r) => r,
-            Err(mpsc::RecvTimeoutError::Timeout) => continue,
-            Err(mpsc::RecvTimeoutError::Disconnected) => return,
+            Err(PopError::Timeout) => continue,
+            Err(PopError::Closed) => return,
         };
         let mut batch = Vec::with_capacity(cfg.max_batch.min(64));
         batch.push(dequeue(first, stats));
         // greedily absorb whatever is already queued...
-        drain_backlog(rx, &mut batch, cfg.max_batch, stats);
+        drain_backlog(queue, &mut batch, cfg.max_batch, stats);
         // ...then wait for stragglers until the flush deadline, measured
-        // from the OLDEST request's submit time: a request that already
-        // aged in the queue (busy executor) is never delayed another full
-        // window, so submit → flush-start is bounded by max_wait plus the
-        // in-flight apply
-        // checked_add: a huge max_wait (Duration::MAX = "no deadline,
-        // flush on occupancy or shutdown only") must not overflow Instant
-        let deadline = batch[0].submitted.checked_add(cfg.max_wait);
+        // from the OLDEST request's submit time — under fair queueing the
+        // pop order is not arrival order, so the minimum is taken over the
+        // whole batch: a request that already aged in a backlogged lane is
+        // never delayed another full window
         while batch.len() < cfg.max_batch {
+            // checked_add: a huge max_wait (Duration::MAX = "no deadline,
+            // flush on occupancy or shutdown only") must not overflow
+            let oldest = batch.iter().map(|r| r.submitted).min().expect("batch is non-empty");
+            let deadline = oldest.checked_add(cfg.max_wait);
             let now = Instant::now();
             // the wait is chunked at IDLE_POLL so a large max_wait cannot
             // stall shutdown: on the flag the partial batch flushes now
@@ -401,64 +544,91 @@ fn run_executor<A, C>(
             // governor compress would otherwise hold the registry lock
             // until the next flush
             while let Ok(cmd) = ctl_rx.try_recv() {
-                control(cmd);
+                run_control(apply, cmd);
             }
             let wait = deadline.map_or(IDLE_POLL, |d| (d - now).min(IDLE_POLL));
-            match rx.recv_timeout(wait) {
+            match queue.pop_timeout(wait) {
                 Ok(r) => batch.push(dequeue(r, stats)),
-                Err(mpsc::RecvTimeoutError::Timeout) => continue,
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                Err(PopError::Timeout) => continue,
+                Err(PopError::Closed) => break,
             }
         }
-        process_batch(&mut xbuf, batch, n, stats, apply);
+        let used = process_batch(&mut xbuf, batch, n, stats, &ladder, apply);
+        governor.after_flush(used, &mut xbuf, stats, apply);
     }
 }
 
 fn drain_backlog(
-    rx: &mpsc::Receiver<Request>,
+    queue: &FairQueue<Request>,
     batch: &mut Vec<Request>,
     max_batch: usize,
     stats: &BatcherStats,
 ) {
     while batch.len() < max_batch {
-        match rx.try_recv() {
-            Ok(r) => batch.push(dequeue(r, stats)),
-            Err(_) => break,
+        match queue.try_pop() {
+            Some(r) => batch.push(dequeue(r, stats)),
+            None => break,
         }
     }
 }
 
-/// Flush one batch: assemble the column-major block, run the batched
-/// apply, scatter columns back to their callers.
-fn process_batch<A>(
+/// Extract a readable message from a caught panic payload.
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Flush one batch: assemble the column-major block zero-padded to its
+/// ladder width, run the batched lending apply, scatter columns straight
+/// from the lent slab back into each caller's recycled input buffer.
+/// Returns the element count the input slab was used at (for the
+/// [`XbufGovernor`]).
+fn process_batch<A: LendingApply>(
     xbuf: &mut Vec<f64>,
     batch: Vec<Request>,
     n: usize,
     stats: &BatcherStats,
+    ladder: &WidthLadder,
     apply: &mut A,
-) where
-    A: FnMut(&[f64], usize) -> crate::Result<Vec<f64>>,
-{
+) -> usize {
     // the flush span covers assemble + batched apply + scatter; with
     // tracing enabled it therefore *contains* the matvec.dense/matvec.aca
     // spans the apply emits on this same executor thread
     let _flush = obs::span(names::SERVE_FLUSH);
     let nrhs = batch.len();
+    let width = ladder.width_for(nrhs);
     let picked = Instant::now();
     for req in &batch {
         let wait = picked.duration_since(req.submitted);
         stats.record_wait(wait);
+        if let Some(h) = &req.tenant_wait {
+            h.record_duration(wait);
+        }
         RECORDER.add(names::SERVE_WAIT, wait);
     }
     xbuf.clear();
-    xbuf.reserve(n * nrhs);
+    xbuf.reserve(n * width);
     for req in &batch {
         xbuf.extend_from_slice(&req.x);
     }
+    // zero-pad up to the ladder width: exact for a linear operator, and
+    // the engine sees only ladder shapes (artifact/plan reuse every flush)
+    xbuf.resize(n * width, 0.0);
+    for _ in nrhs..width {
+        RECORDER.incr(names::SERVE_PAD_COLS);
+    }
     let t0 = Instant::now();
+    // the unwind is caught so a panicking user apply cannot kill the
+    // executor and leave every queued waiter hanging: the batch resolves
+    // with ApplyPanicked and the executor keeps serving later batches
     let out = {
         let _apply = obs::span(names::SERVE_APPLY);
-        apply(&xbuf[..], nrhs)
+        catch_unwind(AssertUnwindSafe(|| apply.apply_batch(&xbuf[..], width)))
     };
     let apply_time = t0.elapsed();
     stats.record_batch(nrhs, apply_time);
@@ -466,35 +636,49 @@ fn process_batch<A>(
     let _scatter = obs::span(names::SERVE_SCATTER);
     match out {
         // the shape check is a hard runtime guard, not a debug_assert:
-        // spawn() accepts arbitrary user closures, and a short block must
+        // spawn() accepts arbitrary user operators, and a short block must
         // fail the batch, not panic the executor (which would brick the
         // operator) or silently mis-scatter columns
-        Ok(y) if y.len() == n * nrhs => {
-            for (c, req) in batch.into_iter().enumerate() {
-                let _ = req.resp.send(Ok(y[c * n..(c + 1) * n].to_vec()));
+        Ok(Ok(y)) if y.len() == n * width => {
+            for (c, mut req) in batch.into_iter().enumerate() {
+                // recycle the request's own input vector as its output
+                // buffer: the scatter is slab → caller buffer, with no
+                // per-request allocation on the executor
+                let mut col = std::mem::take(&mut req.x);
+                col.copy_from_slice(&y[c * n..(c + 1) * n]);
+                req.slot.complete(Ok(col));
             }
         }
-        Ok(y) => {
+        Ok(Ok(y)) => {
             let msg = format!(
-                "apply returned {} values for an n x nrhs = {n} x {nrhs} block",
+                "apply returned {} values for an n x width = {n} x {width} block",
                 y.len()
             );
             for req in batch {
-                let _ = req.resp.send(Err(ServeError::Apply(msg.clone())));
+                req.slot.complete(Err(ServeError::Apply(msg.clone())));
             }
         }
-        Err(e) => {
+        Ok(Err(e)) => {
             let msg = e.to_string();
             for req in batch {
-                let _ = req.resp.send(Err(ServeError::Apply(msg.clone())));
+                req.slot.complete(Err(ServeError::Apply(msg.clone())));
+            }
+        }
+        Err(payload) => {
+            RECORDER.incr(names::SERVE_APPLY_PANIC);
+            let msg = panic_message(payload);
+            for req in batch {
+                req.slot.complete(Err(ServeError::ApplyPanicked(msg.clone())));
             }
         }
     }
+    n * width
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::serve::block_on;
 
     /// A deterministic diagonal test operator: y_i = (i + 1) · x_i,
     /// applied column by column like any batched engine would.
@@ -522,6 +706,7 @@ mod tests {
             max_batch: 64,
             max_wait: Duration::from_millis(5),
             queue_capacity: 16,
+            ..ServeConfig::default()
         };
         let b = diag_batcher(n, cfg);
         let x: Vec<f64> = (0..n).map(|i| i as f64 + 1.0).collect();
@@ -554,6 +739,7 @@ mod tests {
             max_batch: 1,
             max_wait: Duration::ZERO,
             queue_capacity: 2,
+            ..ServeConfig::default()
         };
         let b = DynamicBatcher::spawn(n, cfg, move || {
             Ok(move |x: &[f64], nrhs: usize| {
@@ -589,6 +775,7 @@ mod tests {
             max_batch: 8,
             max_wait: Duration::from_millis(4),
             queue_capacity: 256,
+            ..ServeConfig::default()
         };
         let b = diag_batcher(n, cfg);
         let threads = 4;
@@ -618,12 +805,82 @@ mod tests {
     }
 
     #[test]
+    fn async_submits_resolve_without_blocking_threads() {
+        let n = 8;
+        let cfg = ServeConfig {
+            max_batch: 16,
+            max_wait: Duration::from_millis(2),
+            queue_capacity: 256,
+            ..ServeConfig::default()
+        };
+        let b = diag_batcher(n, cfg);
+        let client = b.client();
+        // one thread holds many in-flight futures at once, then drains
+        let futs: Vec<SubmitFuture> =
+            (0..100).map(|i| client.submit_async(vec![i as f64; n]).unwrap()).collect();
+        for (i, f) in futs.into_iter().enumerate() {
+            let y = block_on(f).unwrap();
+            assert_eq!(y[2], 3.0 * i as f64, "future {i} got someone else's column");
+        }
+    }
+
+    #[test]
+    fn dropping_a_future_abandons_only_that_request() {
+        let n = 4;
+        let b = diag_batcher(n, ServeConfig::default());
+        let client = b.client();
+        let keep = client.submit_async(vec![1.0; n]).unwrap();
+        let abandon = client.submit_async(vec![2.0; n]).unwrap();
+        drop(abandon);
+        let y = block_on(keep).unwrap();
+        assert_eq!(y[1], 2.0);
+    }
+
+    #[test]
+    fn padded_flushes_run_at_ladder_widths_only() {
+        let n = 8;
+        let widths_seen = Arc::new(std::sync::Mutex::new(Vec::<usize>::new()));
+        let ws = Arc::clone(&widths_seen);
+        let cfg = ServeConfig {
+            max_batch: 16,
+            max_wait: Duration::from_millis(10),
+            queue_capacity: 64,
+            pad_widths: Some(vec![4]),
+        };
+        let b = DynamicBatcher::spawn(n, cfg, move || {
+            Ok(move |x: &[f64], nrhs: usize| {
+                ws.lock().unwrap().push(nrhs);
+                Ok(diag_apply(x, nrhs, n))
+            })
+        })
+        .unwrap();
+        let client = b.client();
+        // occupancies 1..=3 must all be padded to width 4; results stay
+        // exact because the padded columns are zeros the scatter skips
+        let tickets: Vec<Ticket> =
+            (0..3).map(|i| client.submit(vec![(i + 1) as f64; n]).unwrap()).collect();
+        for (i, t) in tickets.into_iter().enumerate() {
+            let y = t.wait().unwrap();
+            assert_eq!(y[4], 5.0 * (i + 1) as f64);
+        }
+        let seen = widths_seen.lock().unwrap();
+        assert!(!seen.is_empty());
+        for w in seen.iter() {
+            assert!(
+                *w == 4 || *w == 16,
+                "apply saw a non-ladder width {w}; ladder is [4, 16]"
+            );
+        }
+    }
+
+    #[test]
     fn shutdown_drains_backlog_then_rejects_new_work() {
         let n = 4;
         let cfg = ServeConfig {
             max_batch: 4,
             max_wait: Duration::from_millis(1),
             queue_capacity: 16,
+            ..ServeConfig::default()
         };
         let b = diag_batcher(n, cfg);
         let client = b.client();
@@ -658,6 +915,151 @@ mod tests {
         assert_eq!(stats.blocks, 7, "handler's reply must round-trip");
         let y = b.matvec(&[2.0; n]).unwrap();
         assert_eq!(y[0], 2.0);
+    }
+
+    #[test]
+    fn control_commands_survive_the_shutdown_drain() {
+        // Regression: a Control issued while the executor drains its
+        // backlog after shutdown used to be silently dropped (the drain
+        // loop only popped requests), leaving the issuer's reply channel
+        // dead. Choreography: per-call gated apply, shutdown with one
+        // request still queued, command injected while the drain is
+        // mid-apply on that request.
+        let n = 4;
+        let (started_tx, started_rx) = mpsc::channel::<()>();
+        let (permit_tx, permit_rx) = mpsc::channel::<()>();
+        let cfg = ServeConfig {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+            queue_capacity: 16,
+            ..ServeConfig::default()
+        };
+        let b = DynamicBatcher::spawn_with_control(n, cfg, move || {
+            let apply = move |x: &[f64], nrhs: usize| {
+                let _ = started_tx.send(());
+                let _ = permit_rx.recv();
+                Ok(diag_apply(x, nrhs, n))
+            };
+            let control = move |cmd: Control| match cmd {
+                Control::Compress { reply, .. } => {
+                    let _ = reply.send(Ok(crate::compress::CompressStats {
+                        blocks: 99,
+                        ..Default::default()
+                    }));
+                }
+            };
+            Ok((apply, control))
+        })
+        .unwrap();
+        let client = b.client();
+        let ctl = b.controller();
+        let t1 = client.submit(vec![1.0; n]).unwrap();
+        started_rx.recv().unwrap(); // executor blocked inside apply(t1)
+        let t2 = client.submit(vec![2.0; n]).unwrap(); // queued backlog
+        let dropper = thread::spawn(move || drop(b));
+        while !client.is_shutdown() {
+            thread::sleep(Duration::from_millis(1));
+        }
+        permit_tx.send(()).unwrap(); // finish apply(t1) → executor enters the drain
+        started_rx.recv().unwrap(); // executor blocked inside apply(t2), i.e. MID-DRAIN
+        let (reply, reply_rx) = mpsc::channel();
+        ctl.send(Control::Compress { cfg: crate::compress::CompressConfig::rel_err(1e-6), reply })
+            .unwrap();
+        permit_tx.send(()).unwrap(); // finish apply(t2); the drain continues
+        dropper.join().unwrap();
+        assert_eq!(t1.wait().unwrap()[1], 2.0);
+        assert_eq!(t2.wait().unwrap()[1], 4.0);
+        let got = reply_rx
+            .recv()
+            .expect("control command was dropped during the shutdown drain")
+            .unwrap();
+        assert_eq!(got.blocks, 99);
+    }
+
+    #[test]
+    fn xbuf_shrinks_toward_recent_high_water() {
+        // Regression: the executor's input slab grew to the largest batch
+        // ever seen and never shrank — memory pinned outside the
+        // governor's ceiling after one burst.
+        let n = 64;
+        let wide = 32;
+        let cfg = ServeConfig {
+            max_batch: wide,
+            max_wait: Duration::from_millis(50),
+            queue_capacity: 64,
+            ..ServeConfig::default()
+        };
+        let b = diag_batcher(n, cfg);
+        let client = b.client();
+        // burst: a full-width flush grows the slab to n * wide elements
+        let tickets: Vec<Ticket> =
+            (0..wide).map(|i| client.submit(vec![i as f64; n]).unwrap()).collect();
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        let peak = b.stats().xbuf_bytes();
+        assert!(
+            peak >= (n * wide * std::mem::size_of::<f64>()) as u64,
+            "burst must have grown the slab, gauge reads {peak} B"
+        );
+        // then a long run of singles: once the shrink window has turned
+        // over past the burst, capacity must come back down to ~1 column
+        for _ in 0..(2 * XBUF_SHRINK_WINDOW + 4) {
+            b.matvec(&vec![1.0; n]).unwrap();
+        }
+        let settled = b.stats().xbuf_bytes();
+        assert!(
+            settled <= (2 * n * std::mem::size_of::<f64>()) as u64,
+            "slab stayed at burst size after the window turned over: {settled} B"
+        );
+    }
+
+    #[test]
+    fn panicking_apply_resolves_tickets_with_typed_error() {
+        // Regression: a panicking user apply killed the executor thread
+        // and left every queued waiter hanging. The unwind is now caught:
+        // the batch resolves with ApplyPanicked and the executor survives.
+        let n = 4;
+        let b = DynamicBatcher::spawn(n, ServeConfig::default(), move || {
+            let mut calls = 0u32;
+            Ok(move |x: &[f64], nrhs: usize| {
+                calls += 1;
+                if calls == 1 {
+                    panic!("injected apply panic");
+                }
+                Ok(diag_apply(x, nrhs, n))
+            })
+        })
+        .unwrap();
+        let err = b.matvec(&[1.0; n]).unwrap_err();
+        assert!(
+            matches!(err, ServeError::ApplyPanicked(ref m) if m.contains("injected")),
+            "want ApplyPanicked, got {err:?}"
+        );
+        // the executor keeps serving later batches
+        let y = b.matvec(&[1.0; n]).unwrap();
+        assert_eq!(y[3], 4.0);
+    }
+
+    #[test]
+    fn tenant_clients_record_their_own_wait_series() {
+        let n = 4;
+        let b = diag_batcher(n, ServeConfig::default());
+        let light = b.client().for_tenant("batcher-test-light", 2.0);
+        let heavy = b.client().for_tenant("batcher-test-heavy", 1.0);
+        light.matvec(&[1.0; 4]).unwrap();
+        heavy.matvec(&[2.0; 4]).unwrap();
+        heavy.matvec(&[3.0; 4]).unwrap();
+        let snap = crate::obs::MetricsSnapshot::capture();
+        let series = |tenant: &str| {
+            snap.histograms
+                .iter()
+                .find(|h| h.name == names::SERVE_WAIT && h.tenant == tenant)
+                .unwrap_or_else(|| panic!("missing per-tenant wait series for {tenant}"))
+                .count
+        };
+        assert_eq!(series("batcher-test-light"), 1);
+        assert_eq!(series("batcher-test-heavy"), 2);
     }
 
     #[test]

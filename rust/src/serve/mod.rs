@@ -13,18 +13,35 @@
 //! Architecture: [`crate::coordinator::BatchEngine`] is deliberately not
 //! `Send`/`Sync` (the XLA engine holds an `Rc`-backed PJRT client), so
 //! each operator lives on its own dedicated executor thread, built there
-//! and never moved. Clients talk to it over a *bounded* channel:
+//! and never moved. Clients talk to it over a *bounded* weighted
+//! fair queue:
 //!
 //! * [`DynamicBatcher`] — owns the executor thread; coalesces queued
 //!   submissions into column-major multi-RHS blocks, flushing when
 //!   [`ServeConfig::max_batch`] requests have gathered or the oldest has
-//!   aged [`ServeConfig::max_wait`] since submission; scatters per-column
-//!   results back to the awaiting callers.
+//!   aged [`ServeConfig::max_wait`] since submission. Submission is
+//!   async-first: [`BatcherClient::submit_async`] returns a poll/waker
+//!   [`SubmitFuture`] (no OS thread parked per in-flight predict); the
+//!   blocking [`Ticket`] is a thin [`block_on`] shell over it.
+//! * Zero-copy flushes — the executor contract is the lending-apply
+//!   trait [`LendingApply`]: the operator lends its result slab (the
+//!   warm [`crate::hmatrix::MatvecWorkspace`] output) and per-caller
+//!   columns are scattered straight from it into each request's
+//!   recycled input buffer. No per-flush output `Vec`, no per-request
+//!   allocation.
+//! * Fixed-width applies — flushes are zero-padded up to a small
+//!   [`WidthLadder`] of batch widths ([`ServeConfig::pad_widths`]), so
+//!   width-specialized apply paths (fixed-shape XLA `*_mm` artifacts,
+//!   cached native plans) are hit every flush and the serve path keeps
+//!   `runtime.matmat_fallback` at 0.
+//! * Weighted fair queueing — each client lane carries a tenant label
+//!   and weight ([`BatcherClient::for_tenant`]); the executor pops by
+//!   virtual finish time, so a heavy tenant's backlog cannot starve a
+//!   light tenant, and per-tenant `serve.wait` histogram series prove
+//!   the isolation.
 //! * [`OperatorRegistry`] — build-once/get-many table of operators keyed
 //!   by tenant/model id; each entry holds one batcher plus a warm
-//!   per-operator [`crate::hmatrix::MatvecWorkspace`], so the apply's
-//!   gather/accumulate scratch is allocation-free after warm-up (result
-//!   blocks are still copied out per flush — see ROADMAP follow-ups).
+//!   per-operator [`crate::hmatrix::MatvecWorkspace`].
 //! * Backpressure — the submission queue is bounded
 //!   ([`ServeConfig::queue_capacity`]); overflow is shed immediately with
 //!   [`ServeError::Overloaded`] instead of blocking or deadlocking.
@@ -35,16 +52,21 @@
 //!   handled by the executor between batches), then idle-LRU eviction,
 //!   and as a last resort rejection with [`ServeError::OverBudget`].
 //! * Telemetry — per-request wait and per-batch apply latency (p50/p99),
-//!   batch occupancy, queue depth and shed counts via [`BatcherStats`],
-//!   mirrored into the global [`crate::metrics::RECORDER`] under the
-//!   `serve.wait` / `serve.apply` phases.
+//!   batch occupancy, queue depth, executor slab bytes and shed counts
+//!   via [`BatcherStats`], mirrored into the global
+//!   [`crate::metrics::RECORDER`] under the `serve.*` phases.
 
+pub mod apply;
 pub mod batcher;
+mod queue;
 pub mod registry;
+mod slot;
 pub mod telemetry;
 
-pub use batcher::{BatcherClient, Control, DynamicBatcher, Ticket};
+pub use apply::{ClosureApply, LendingApply, WidthLadder};
+pub use batcher::{BatcherClient, Control, ControlHandle, DynamicBatcher};
 pub use registry::{OperatorHandle, OperatorMeta, OperatorRegistry};
+pub use slot::{block_on, SubmitFuture, Ticket};
 pub use telemetry::{BatcherStats, ServeSnapshot};
 
 use std::time::Duration;
@@ -62,6 +84,13 @@ pub struct ServeConfig {
     /// Bounded submission-queue depth; submissions beyond it are shed
     /// with [`ServeError::Overloaded`].
     pub queue_capacity: usize,
+    /// The fixed batch widths flushes are zero-padded up to (so the
+    /// operator sees few distinct shapes and width-specialized apply
+    /// paths stay hot). `None` = the automatic power-of-two ladder
+    /// capped at `max_batch`; `Some(vec![])` disables padding;
+    /// `Some(widths)` is an explicit ladder (`max_batch` is always
+    /// appended as the top rung).
+    pub pad_widths: Option<Vec<usize>>,
 }
 
 impl Default for ServeConfig {
@@ -70,6 +99,7 @@ impl Default for ServeConfig {
             max_batch: 64,
             max_wait: Duration::from_millis(2),
             queue_capacity: 1024,
+            pad_widths: None,
         }
     }
 }
@@ -82,7 +112,22 @@ impl ServeConfig {
         if self.queue_capacity == 0 {
             return Err(ServeError::BadRequest("queue_capacity must be at least 1".into()));
         }
+        if let Some(widths) = &self.pad_widths {
+            if widths.iter().any(|&w| w == 0) {
+                return Err(ServeError::BadRequest("pad widths must be positive".into()));
+            }
+        }
         Ok(())
+    }
+
+    /// The [`WidthLadder`] this policy implies (see
+    /// [`ServeConfig::pad_widths`]).
+    pub fn ladder(&self) -> WidthLadder {
+        match &self.pad_widths {
+            None => WidthLadder::auto(self.max_batch),
+            Some(w) if w.is_empty() => WidthLadder::disabled(),
+            Some(w) => WidthLadder::from_widths(w, self.max_batch),
+        }
     }
 }
 
@@ -110,6 +155,11 @@ pub enum ServeError {
     /// receives this error.
     #[error("batched apply failed: {0}")]
     Apply(String),
+    /// The batched apply panicked. The unwind is caught on the executor
+    /// (which keeps serving later batches); every request in the batch
+    /// resolves with this instead of hanging on a dead executor.
+    #[error("batched apply panicked: {0}")]
+    ApplyPanicked(String),
     /// The memory governor could not fit this operator under the
     /// cross-tenant byte budget even after compressing and evicting.
     #[error("over memory budget: {0}")]

@@ -1,0 +1,284 @@
+//! Weighted fair queueing (WFQ) in front of each shared executor.
+//!
+//! A plain FIFO lets one heavy tenant fill the bounded queue and push
+//! every other tenant's wait toward `queue_capacity / throughput`. The
+//! [`FairQueue`] instead keeps one lane per tenant and stamps each item
+//! with a *virtual finish time*: `vft = max(vtime, lane.last_vft) +
+//! 1/weight`, where `vtime` advances to the vft of each popped item
+//! (start-time-agnostic virtual clock, the classic WFQ approximation).
+//! The executor always pops the globally smallest head vft, so a tenant
+//! with weight `w` receives ~`w / Σw` of the dequeue slots no matter how
+//! deep another lane's backlog is — a light tenant's fresh request
+//! overtakes a heavy tenant's parked hundreds.
+//!
+//! Capacity is bounded across all lanes (overflow is shed by the caller
+//! as [`crate::serve::ServeError::Overloaded`]). `close()` flips the
+//! queue into a terminal state and *drops* any leftover items — for the
+//! batcher those are `Request`s whose drop guard resolves their waiters
+//! with `Shutdown`, closing the race where a request enqueued between
+//! the executor's last drain pass and its exit would hang forever.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Why a push was refused (the item is handed back either way).
+pub(crate) enum PushError<T> {
+    /// Bounded capacity reached across all lanes.
+    Full(T),
+    /// The queue was closed; no consumer will ever pop again.
+    Closed(T),
+}
+
+/// Why a blocking pop returned empty-handed.
+#[derive(Debug, PartialEq, Eq)]
+pub(crate) enum PopError {
+    Timeout,
+    /// Closed AND drained — there will never be another item.
+    Closed,
+}
+
+struct Lane<T> {
+    items: VecDeque<(f64, T)>,
+    /// Virtual finish time of the lane's most recently pushed item; a
+    /// backlogged lane's next vft chains off it, an idle lane restarts
+    /// at the global virtual clock (no credit hoarding while idle).
+    last_vft: f64,
+    weight: f64,
+}
+
+struct Inner<T> {
+    lanes: HashMap<String, Lane<T>>,
+    /// Global virtual clock: advances to each popped item's vft.
+    vtime: f64,
+    len: usize,
+    closed: bool,
+}
+
+/// Bounded multi-tenant queue with weighted virtual-time scheduling.
+pub(crate) struct FairQueue<T> {
+    inner: Mutex<Inner<T>>,
+    nonempty: Condvar,
+    capacity: usize,
+}
+
+impl<T> FairQueue<T> {
+    pub(crate) fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1, "queue capacity must be positive");
+        FairQueue {
+            inner: Mutex::new(Inner {
+                lanes: HashMap::new(),
+                vtime: 0.0,
+                len: 0,
+                closed: false,
+            }),
+            nonempty: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Enqueue into `tenant`'s lane. `weight` must be positive; a heavier
+    /// lane's items are spaced closer in virtual time and therefore pop
+    /// more often under contention.
+    pub(crate) fn push(&self, tenant: &str, weight: f64, item: T) -> Result<(), PushError<T>> {
+        debug_assert!(weight > 0.0 && weight.is_finite());
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return Err(PushError::Closed(item));
+        }
+        if inner.len >= self.capacity {
+            return Err(PushError::Full(item));
+        }
+        let vtime = inner.vtime;
+        let lane = inner.lanes.entry(tenant.to_string()).or_insert_with(|| Lane {
+            items: VecDeque::new(),
+            last_vft: 0.0,
+            weight,
+        });
+        lane.weight = weight; // latest client wins if weights disagree
+        let vft = vtime.max(lane.last_vft) + 1.0 / weight.max(f64::MIN_POSITIVE);
+        lane.last_vft = vft;
+        lane.items.push_back((vft, item));
+        inner.len += 1;
+        drop(inner);
+        self.nonempty.notify_one();
+        Ok(())
+    }
+
+    fn pop_locked(inner: &mut Inner<T>) -> Option<T> {
+        // min head vft across lanes; ties broken by tenant name so the
+        // pop order is deterministic under equal weights
+        let key = inner
+            .lanes
+            .iter()
+            .filter_map(|(id, l)| l.items.front().map(|&(vft, _)| (vft, id)))
+            .min_by(|a, b| a.0.total_cmp(&b.0).then_with(|| a.1.cmp(b.1)))
+            .map(|(_, id)| id.clone())?;
+        let lane = inner.lanes.get_mut(&key).unwrap();
+        let (vft, item) = lane.items.pop_front().unwrap();
+        inner.vtime = inner.vtime.max(vft);
+        inner.len -= 1;
+        Some(item)
+    }
+
+    /// Non-blocking pop of the fairness-ordered head.
+    pub(crate) fn try_pop(&self) -> Option<T> {
+        Self::pop_locked(&mut self.inner.lock().unwrap())
+    }
+
+    /// Blocking pop with a deadline. Returns [`PopError::Closed`] only
+    /// once the queue is closed AND empty.
+    pub(crate) fn pop_timeout(&self, timeout: Duration) -> Result<T, PopError> {
+        let deadline = Instant::now() + timeout;
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = Self::pop_locked(&mut inner) {
+                return Ok(item);
+            }
+            if inner.closed {
+                return Err(PopError::Closed);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(PopError::Timeout);
+            }
+            let (guard, _) = self.nonempty.wait_timeout(inner, deadline - now).unwrap();
+            inner = guard;
+        }
+    }
+
+    /// Current queued item count (all lanes).
+    #[cfg(test)]
+    pub(crate) fn len(&self) -> usize {
+        self.inner.lock().unwrap().len
+    }
+
+    /// Terminal close: refuse future pushes and DROP the leftovers. The
+    /// returned count is how many items were discarded (their `Drop`
+    /// impls run here — the batcher's request guard resolves waiters).
+    pub(crate) fn close(&self) -> usize {
+        let dropped: Vec<T> = {
+            let mut inner = self.inner.lock().unwrap();
+            inner.closed = true;
+            let mut out = Vec::with_capacity(inner.len);
+            for lane in inner.lanes.values_mut() {
+                out.extend(lane.items.drain(..).map(|(_, item)| item));
+            }
+            inner.len = 0;
+            out
+        };
+        self.nonempty.notify_all();
+        let n = dropped.len();
+        drop(dropped); // outside the lock: Drop impls may log/complete slots
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_lane_is_fifo() {
+        let q = FairQueue::new(8);
+        for i in 0..5 {
+            q.push("a", 1.0, i).ok().unwrap();
+        }
+        assert_eq!(q.len(), 5);
+        for i in 0..5 {
+            assert_eq!(q.try_pop(), Some(i));
+        }
+        assert_eq!(q.try_pop(), None);
+    }
+
+    #[test]
+    fn equal_weights_interleave_lanes() {
+        let q = FairQueue::new(64);
+        // a's backlog arrives first, then b's: a strict FIFO would drain
+        // all of a before b; WFQ alternates once both lanes are backlogged
+        for i in 0..4 {
+            q.push("a", 1.0, ("a", i)).ok().unwrap();
+        }
+        for i in 0..4 {
+            q.push("b", 1.0, ("b", i)).ok().unwrap();
+        }
+        let order: Vec<_> = std::iter::from_fn(|| q.try_pop()).collect();
+        assert_eq!(
+            order,
+            vec![
+                ("a", 0),
+                ("b", 0),
+                ("a", 1),
+                ("b", 1),
+                ("a", 2),
+                ("b", 2),
+                ("a", 3),
+                ("b", 3)
+            ]
+        );
+    }
+
+    #[test]
+    fn heavier_lane_gets_proportionally_more_slots() {
+        let q = FairQueue::new(64);
+        for i in 0..9 {
+            q.push("heavy", 2.0, ("heavy", i)).ok().unwrap();
+            q.push("light", 1.0, ("light", i)).ok().unwrap();
+        }
+        // first 9 pops: weight-2 lane should take ~2/3 of them
+        let first: Vec<_> = (0..9).map(|_| q.try_pop().unwrap().0).collect();
+        let heavy = first.iter().filter(|t| **t == "heavy").count();
+        assert_eq!(heavy, 6, "weight 2:1 must split pops 2:1, got {first:?}");
+    }
+
+    #[test]
+    fn fresh_light_request_overtakes_deep_heavy_backlog() {
+        let q = FairQueue::new(1024);
+        for i in 0..100 {
+            q.push("heavy", 1.0, ("heavy", i)).ok().unwrap();
+        }
+        // drain a few so the virtual clock has advanced into the backlog
+        for _ in 0..3 {
+            q.try_pop().unwrap();
+        }
+        q.push("light", 2.0, ("light", 0)).ok().unwrap();
+        // the light item must pop within ~1/weight of the clock, i.e.
+        // after at most one more heavy item — not after the remaining 97
+        let next_two: Vec<_> = (0..2).map(|_| q.try_pop().unwrap().0).collect();
+        assert!(
+            next_two.contains(&"light"),
+            "light tenant starved behind heavy backlog: {next_two:?}"
+        );
+    }
+
+    #[test]
+    fn capacity_is_shared_and_bounded() {
+        let q = FairQueue::new(2);
+        q.push("a", 1.0, 1).ok().unwrap();
+        q.push("b", 1.0, 2).ok().unwrap();
+        assert!(matches!(q.push("c", 1.0, 3), Err(PushError::Full(3))));
+        q.try_pop().unwrap();
+        q.push("c", 1.0, 3).ok().unwrap();
+    }
+
+    #[test]
+    fn close_drops_leftovers_and_refuses_pushes() {
+        let q = FairQueue::new(8);
+        q.push("a", 1.0, 1).ok().unwrap();
+        q.push("a", 1.0, 2).ok().unwrap();
+        assert_eq!(q.close(), 2);
+        assert_eq!(q.len(), 0);
+        assert!(matches!(q.push("a", 1.0, 3), Err(PushError::Closed(3))));
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), Err(PopError::Closed));
+    }
+
+    #[test]
+    fn pop_timeout_wakes_on_push() {
+        let q = std::sync::Arc::new(FairQueue::new(8));
+        let q2 = std::sync::Arc::clone(&q);
+        let t = std::thread::spawn(move || q2.pop_timeout(Duration::from_secs(5)));
+        std::thread::sleep(Duration::from_millis(10));
+        q.push("a", 1.0, 42).ok().unwrap();
+        assert_eq!(t.join().unwrap(), Ok(42));
+    }
+}

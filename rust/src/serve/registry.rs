@@ -7,8 +7,11 @@
 //! any number of client threads. Each executor holds one warm
 //! [`MatvecWorkspace`] pre-sized to `n × max_batch`, so the apply's
 //! gather/accumulate scratch allocates nothing after warm-up (the PR 2
-//! reuse contract); the result block is still copied out per flush —
-//! zero-copy flushes are a ROADMAP follow-up.
+//! reuse contract), and the operator is served through the zero-copy
+//! [`super::LendingApply`] contract: the executor scatters result columns
+//! straight out of the workspace slab
+//! ([`crate::hmatrix::HMatrix::matmat_with`] returns a borrow), with no
+//! per-flush output allocation.
 //!
 //! With a [`MemoryGovernor`] attached ([`OperatorRegistry::with_governor`])
 //! the registry additionally enforces a cross-tenant ceiling on P-mode
@@ -27,9 +30,10 @@ use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use super::batcher::{BatcherClient, Control, DynamicBatcher, Ticket};
+use super::batcher::{BatcherClient, Control, DynamicBatcher};
+use super::slot::{SubmitFuture, Ticket};
 use super::telemetry::BatcherStats;
-use super::{ServeConfig, ServeError};
+use super::{LendingApply, ServeConfig, ServeError};
 use crate::compress::{
     CompressBudget, CompressConfig, GovernorAction, MemoryGovernor, TenantUsage,
 };
@@ -71,9 +75,29 @@ impl OperatorHandle {
         self.client.stats()
     }
 
+    /// The raw submission endpoint (e.g. to derive per-tenant fair-queue
+    /// clients with [`BatcherClient::for_tenant`]).
+    pub fn client(&self) -> BatcherClient {
+        self.client.clone()
+    }
+
+    /// A client whose submissions ride their own weighted fair-queue lane
+    /// and per-tenant `serve.wait` series; see
+    /// [`BatcherClient::for_tenant`].
+    pub fn for_tenant(&self, label: &str, weight: f64) -> BatcherClient {
+        self.client.for_tenant(label, weight)
+    }
+
     /// Enqueue without blocking on the result.
     pub fn submit(&self, x: Vec<f64>) -> Result<Ticket, ServeError> {
         self.client.submit(x)
+    }
+
+    /// Enqueue and get a poll/waker future for the result; thousands can
+    /// be in flight per reactor thread. See
+    /// [`BatcherClient::submit_async`].
+    pub fn submit_async(&self, x: Vec<f64>) -> Result<SubmitFuture, ServeError> {
+        self.client.submit_async(x)
     }
 
     /// Submit and block: `y = A x`.
@@ -84,6 +108,35 @@ impl OperatorHandle {
     /// KRR-predict spelling: fitted values `ŷ = A α`.
     pub fn predict(&self, weights: &[f64]) -> Result<Vec<f64>, ServeError> {
         self.client.predict(weights)
+    }
+}
+
+/// The registry's served operator: an [`HMatrix`] plus its warm workspace,
+/// living on the executor thread behind the zero-copy [`LendingApply`]
+/// contract. `apply_batch` lends the workspace's output slab directly
+/// (no `Vec` per flush); control handles in-place recompression; `trim`
+/// follows the executor's xbuf governor so a one-off wide burst does not
+/// pin peak-sized scratch outside the memory governor's ceiling.
+struct HmatServeApply {
+    h: HMatrix,
+    ws: MatvecWorkspace,
+}
+
+impl LendingApply for HmatServeApply {
+    fn apply_batch(&mut self, x: &[f64], nrhs: usize) -> crate::Result<&[f64]> {
+        self.h.matmat_with(x, nrhs, &mut self.ws)
+    }
+
+    fn on_control(&mut self, cmd: Control) {
+        match cmd {
+            Control::Compress { cfg, reply } => {
+                let _ = reply.send(self.h.compress(&cfg));
+            }
+        }
+    }
+
+    fn trim(&mut self, max_elems: usize) {
+        self.ws.shrink_to(max_elems);
     }
 }
 
@@ -186,14 +239,16 @@ impl OperatorRegistry {
         let build_cfg = cfg.clone();
         // the H-matrix is built on the executor thread (engines are not
         // Send); its build-time metadata comes back over this channel.
-        // The operator stays on that thread behind an Rc so the apply
-        // closure and the control handler (in-place recompression) can
-        // share it.
+        // The operator then serves through the zero-copy LendingApply
+        // contract (HmatServeApply below): matmat_with returns a borrow
+        // of the warm workspace and the executor scatters straight from
+        // it — no per-flush output Vec.
         let (mtx, mrx) = mpsc::channel::<OperatorMeta>();
         let meta_id = id.to_string();
-        // spawn_labeled: this tenant's wait/apply/occupancy histograms and
-        // queue-depth gauge carry tenant=<id> in the global metric registry
-        let batcher = DynamicBatcher::spawn_labeled(n, serve_cfg, id, move || {
+        // spawn_apply with tenant=<id>: this tenant's wait/apply/occupancy
+        // histograms and queue-depth/xbuf gauges carry the label in the
+        // global metric registry
+        let batcher = DynamicBatcher::spawn_apply(n, serve_cfg, id, move || {
             let h = HMatrix::build(points, &build_cfg)?;
             let _ = mtx.send(OperatorMeta {
                 id: meta_id,
@@ -202,18 +257,7 @@ impl OperatorRegistry {
                 compression_ratio: h.compression_ratio(),
                 build_stats: h.stats.clone(),
             });
-            let h = std::rc::Rc::new(std::cell::RefCell::new(h));
-            let h_ctl = std::rc::Rc::clone(&h);
-            let mut ws = MatvecWorkspace::with_capacity(n, warm_nrhs);
-            let apply = move |x: &[f64], nrhs: usize| {
-                h.borrow().matmat_with(x, nrhs, &mut ws).map(|y| y.to_vec())
-            };
-            let control = move |cmd: Control| match cmd {
-                Control::Compress { cfg, reply } => {
-                    let _ = reply.send(h_ctl.borrow_mut().compress(&cfg));
-                }
-            };
-            Ok((apply, control))
+            Ok(HmatServeApply { h, ws: MatvecWorkspace::with_capacity(n, warm_nrhs) })
         })?;
         let meta = Arc::new(
             mrx.recv()
@@ -505,6 +549,7 @@ mod tests {
             max_batch: 16,
             max_wait: Duration::from_millis(25),
             queue_capacity: 256,
+            ..ServeConfig::default()
         };
         let handle = reg.register("krr", pts, &cfg, serve_cfg).unwrap();
         let threads = 4;

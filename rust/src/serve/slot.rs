@@ -1,0 +1,215 @@
+//! The async completion primitive behind [`crate::serve::DynamicBatcher`]:
+//! a one-shot [`ResponseSlot`] the executor fills and a poll/waker
+//! [`SubmitFuture`] the client awaits.
+//!
+//! One OS thread can hold thousands of in-flight predicts: each
+//! submission costs one `Arc<ResponseSlot>` (a mutex around an
+//! `Option<Response>` plus a parked [`Waker`]), not a blocked thread.
+//! The blocking [`Ticket`] is reimplemented on top — it is just a
+//! [`SubmitFuture`] driven by the mini-executor [`block_on`], whose waker
+//! unparks the waiting thread.
+
+use std::future::Future;
+use std::pin::Pin;
+use std::sync::{Arc, Mutex};
+use std::task::{Context, Poll, Wake, Waker};
+use std::thread::Thread;
+
+use super::ServeError;
+
+/// What a client gets back: its result column or a serving error.
+pub(crate) type Response = Result<Vec<f64>, ServeError>;
+
+/// One-shot rendezvous between the executor (producer) and a submission
+/// future (consumer). First `complete` wins; later ones are dropped —
+/// that idempotence is what lets the [`super::batcher::Request`] drop
+/// guard blanket-resolve abandoned requests with
+/// [`ServeError::Shutdown`] without racing a real result.
+pub(crate) struct ResponseSlot {
+    state: Mutex<SlotState>,
+}
+
+struct SlotState {
+    result: Option<Response>,
+    waker: Option<Waker>,
+}
+
+impl ResponseSlot {
+    pub(crate) fn new() -> Arc<Self> {
+        Arc::new(ResponseSlot {
+            state: Mutex::new(SlotState { result: None, waker: None }),
+        })
+    }
+
+    /// Fill the slot (first writer wins) and wake the awaiting future.
+    pub(crate) fn complete(&self, r: Response) {
+        let waker = {
+            let mut s = self.state.lock().unwrap();
+            if s.result.is_some() {
+                return;
+            }
+            s.result = Some(r);
+            s.waker.take()
+        };
+        // wake OUTSIDE the lock: the woken task may poll (and lock)
+        // immediately on another thread
+        if let Some(w) = waker {
+            w.wake();
+        }
+    }
+
+    /// Poll-side: take the result, or park `waker` for the producer.
+    fn poll_take(&self, waker: &Waker) -> Poll<Response> {
+        let mut s = self.state.lock().unwrap();
+        match s.result.take() {
+            Some(r) => Poll::Ready(r),
+            None => {
+                // clone_from would skip the store when the wakers are
+                // equal; will_wake covers that without the trait bound
+                match &s.waker {
+                    Some(w) if w.will_wake(waker) => {}
+                    _ => s.waker = Some(waker.clone()),
+                }
+                Poll::Pending
+            }
+        }
+    }
+}
+
+/// The pending result of one [`crate::serve::BatcherClient::submit_async`]
+/// call. Await it from any executor (it is `Send`), or drive it directly
+/// with [`block_on`]. Dropping it abandons the request; the batcher still
+/// serves the batch, the column is simply discarded.
+#[must_use = "futures do nothing unless polled"]
+pub struct SubmitFuture {
+    slot: Arc<ResponseSlot>,
+    done: bool,
+}
+
+impl SubmitFuture {
+    pub(crate) fn new(slot: Arc<ResponseSlot>) -> Self {
+        SubmitFuture { slot, done: false }
+    }
+}
+
+impl Future for SubmitFuture {
+    type Output = Response;
+
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Self::Output> {
+        let this = self.get_mut();
+        assert!(!this.done, "SubmitFuture polled after completion");
+        match this.slot.poll_take(cx.waker()) {
+            Poll::Ready(r) => {
+                this.done = true;
+                Poll::Ready(r)
+            }
+            Poll::Pending => Poll::Pending,
+        }
+    }
+}
+
+/// A pending response; redeem with [`Ticket::wait`]. Since this PR it is
+/// a thin blocking shell over [`SubmitFuture`] — `wait` parks the calling
+/// thread through [`block_on`] instead of blocking on a channel.
+#[must_use = "dropping a ticket abandons its result"]
+pub struct Ticket {
+    fut: SubmitFuture,
+}
+
+impl Ticket {
+    pub(crate) fn new(fut: SubmitFuture) -> Self {
+        Ticket { fut }
+    }
+
+    /// Block until the batch containing this request has been applied.
+    pub fn wait(self) -> Response {
+        block_on(self.fut)
+    }
+}
+
+impl std::fmt::Debug for Ticket {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Ticket").finish_non_exhaustive()
+    }
+}
+
+/// Waker that unparks the thread that created it.
+struct ThreadWaker(Thread);
+
+impl Wake for ThreadWaker {
+    fn wake(self: Arc<Self>) {
+        self.0.unpark();
+    }
+
+    fn wake_by_ref(self: &Arc<Self>) {
+        self.0.unpark();
+    }
+}
+
+/// Minimal single-future executor: poll, park until woken, repeat. This
+/// is all the runtime a blocking [`Ticket::wait`] needs — no dependency
+/// on an async framework. Also handy in tests and benches to drive many
+/// [`SubmitFuture`]s from one reactor thread (poll each in turn).
+pub fn block_on<F: Future>(fut: F) -> F::Output {
+    let mut fut = Box::pin(fut);
+    let waker: Waker = Arc::new(ThreadWaker(std::thread::current())).into();
+    let mut cx = Context::from_waker(&waker);
+    loop {
+        match fut.as_mut().poll(&mut cx) {
+            Poll::Ready(v) => return v,
+            // a stale unpark from an earlier future only costs a re-poll
+            Poll::Pending => std::thread::park(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn complete_then_await_is_immediate() {
+        let slot = ResponseSlot::new();
+        slot.complete(Ok(vec![1.0, 2.0]));
+        // later completions lose
+        slot.complete(Err(ServeError::Shutdown));
+        let y = block_on(SubmitFuture::new(slot)).unwrap();
+        assert_eq!(y, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn await_then_complete_wakes_the_parked_thread() {
+        let slot = ResponseSlot::new();
+        let producer = {
+            let slot = Arc::clone(&slot);
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(20));
+                slot.complete(Ok(vec![7.0]));
+            })
+        };
+        let y = block_on(SubmitFuture::new(slot)).unwrap();
+        assert_eq!(y, vec![7.0]);
+        producer.join().unwrap();
+    }
+
+    #[test]
+    fn many_futures_one_reactor() {
+        // one thread holds N pending futures and redeems them all
+        let slots: Vec<_> = (0..64).map(|_| ResponseSlot::new()).collect();
+        let futs: Vec<_> =
+            slots.iter().map(|s| SubmitFuture::new(Arc::clone(s))).collect();
+        let producer = {
+            let slots = slots.clone();
+            std::thread::spawn(move || {
+                for (i, s) in slots.iter().enumerate() {
+                    s.complete(Ok(vec![i as f64]));
+                }
+            })
+        };
+        for (i, f) in futs.into_iter().enumerate() {
+            assert_eq!(block_on(f).unwrap(), vec![i as f64]);
+        }
+        producer.join().unwrap();
+    }
+}

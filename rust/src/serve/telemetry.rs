@@ -43,6 +43,23 @@ pub struct BatcherStats {
     occupancy: Arc<Histogram>,
     /// Mirrors `queue_depth` into the labeled global gauge.
     depth_gauge: GaugeHandle,
+    /// Current capacity of the executor's input slab, in bytes (tracks
+    /// the burst-then-shrink behaviour of the xbuf governor).
+    xbuf_bytes: AtomicU64,
+    /// Mirrors `xbuf_bytes` into the labeled global gauge.
+    xbuf_gauge: GaugeHandle,
+}
+
+/// The per-tenant `serve.wait` histogram series for one fair-queue lane,
+/// under `tenant=label` in the global metric registry. Used by
+/// [`crate::serve::BatcherClient::for_tenant`] so each lane's
+/// submit → pickup waits are separately observable (the proof-of-isolation
+/// series for the WFQ starvation tests). Uses the registry-owned shared
+/// series — NOT a weak registration — so samples survive after every
+/// client for the lane has been dropped (the WFQ bench/test capture the
+/// snapshot after joining their client threads).
+pub(crate) fn tenant_wait_histogram(label: &str) -> Arc<Histogram> {
+    obs::histogram(names::SERVE_WAIT, label)
 }
 
 impl BatcherStats {
@@ -71,6 +88,8 @@ impl BatcherStats {
             apply,
             occupancy,
             depth_gauge: obs::gauge_handle(names::SERVE_QUEUE_DEPTH, label),
+            xbuf_bytes: AtomicU64::new(0),
+            xbuf_gauge: obs::gauge_handle(names::SERVE_XBUF_BYTES, label),
         }
     }
 
@@ -107,6 +126,20 @@ impl BatcherStats {
     /// Executor side: one request taken off the queue.
     pub(crate) fn record_dequeue(&self) {
         self.depth_gauge.set(saturating_dec(&self.queue_depth) as f64);
+    }
+
+    /// Executor side: the input slab's current capacity in bytes (after
+    /// every flush, including post-shrink).
+    pub(crate) fn record_xbuf_bytes(&self, bytes: u64) {
+        self.xbuf_bytes.store(bytes, Ordering::Relaxed);
+        self.xbuf_gauge.set(bytes as f64);
+    }
+
+    /// Current executor input-slab capacity in bytes (see the xbuf
+    /// governor in [`crate::serve::DynamicBatcher`]'s executor: shrinks
+    /// toward a recent high-water mark rather than pinning burst peaks).
+    pub fn xbuf_bytes(&self) -> u64 {
+        self.xbuf_bytes.load(Ordering::Relaxed)
     }
 
     /// Executor side: per-request wait (submit → batch pickup).

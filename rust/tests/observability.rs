@@ -126,6 +126,7 @@ fn serve_flush_spans_contain_matvec_spans() {
         max_batch: 8,
         max_wait: Duration::from_millis(1),
         queue_capacity: 256,
+        ..ServeConfig::default()
     };
     let registry = OperatorRegistry::new();
     let handle = registry
