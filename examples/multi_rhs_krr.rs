@@ -161,6 +161,9 @@ fn main() -> anyhow::Result<()> {
                 h.name, h.count, h.p50, h.p99, h.max
             );
         }
+        for (name, _, v) in &snap.counters {
+            println!("  ctr   {name:<22} {v}");
+        }
         for (name, _, v) in &snap.gauges {
             println!("  gauge {name:<22} {v}");
         }

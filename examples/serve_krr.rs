@@ -19,12 +19,18 @@
 //! Run:  cargo run --release --example serve_krr -- \
 //!           [--n 4096] [--tenants 2] [--q 4] [--clients 4] [--requests 8] \
 //!           [--sigma2 1e-3] [--max-batch 32] [--max-wait-ms 5] [--max-iter 100] \
-//!           [--budget-mb MB]
+//!           [--budget-mb MB] [--deadline-ms MS]
 //!
 //! With `--budget-mb` the registry runs under a `MemoryGovernor`: tenant
 //! admissions must fit the cross-tenant P-mode factor-byte ceiling, with
 //! over-budget builds triggering in-place recompression of the coldest
 //! tenants and idle-LRU eviction (all decisions reported at the end).
+//!
+//! The registry runs under its supervision watchdog for the whole run
+//! (dead/wedged executors would be respawned from their build recipes),
+//! and `--deadline-ms` gives every online predict a per-request budget:
+//! requests that cannot be served in time resolve `DeadlineExceeded`
+//! instead of riding a stale backlog.
 
 use hmx::config::{HmxConfig, KernelKind};
 use hmx::prelude::*;
@@ -106,13 +112,18 @@ fn main() -> anyhow::Result<()> {
         ..ServeConfig::default()
     };
 
-    let registry = if args.has("budget-mb") {
+    let deadline_ms = args.get("deadline-ms", 0u64);
+
+    let registry = Arc::new(if args.has("budget-mb") {
         let budget = args.get("budget-mb", 64usize) * (1 << 20);
         println!("memory governor: cross-tenant factor budget {budget} B");
         OperatorRegistry::with_governor(MemoryGovernor::with_budget(budget))
     } else {
         OperatorRegistry::new()
-    };
+    });
+    // background supervision: heartbeat checks + respawn-from-recipe for
+    // any executor that dies or wedges while the run is serving
+    let watchdog = registry.spawn_watchdog(Duration::from_millis(250));
     for t in 0..tenants {
         let id = format!("tenant-{t}");
         let kernel = if t % 2 == 0 { KernelKind::Gaussian } else { KernelKind::Matern };
@@ -182,7 +193,10 @@ fn main() -> anyhow::Result<()> {
         for client in 0..clients {
             // online lane: twice the fit lane's fair-queue weight, its own
             // per-tenant `serve.wait` series under label `<id>/online`
-            let lane = handle.for_tenant(&format!("{id}/online"), 2.0);
+            let mut lane = handle.for_tenant(&format!("{id}/online"), 2.0);
+            if deadline_ms > 0 {
+                lane = lane.with_deadline(Duration::from_millis(deadline_ms));
+            }
             let alpha = Arc::clone(&alpha);
             let targets = Arc::clone(&targets);
             joins.push(std::thread::spawn(move || -> (usize, f64) {
@@ -203,6 +217,7 @@ fn main() -> anyhow::Result<()> {
                             served += 1;
                         }
                         Err(ServeError::Overloaded) => {} // shed: client backs off
+                        Err(ServeError::DeadlineExceeded) => {} // budget spent queueing
                         Err(e) => panic!("serving failed: {e}"),
                     }
                 }
@@ -238,9 +253,12 @@ fn main() -> anyhow::Result<()> {
             snap.rejections
         );
     }
-    // end-of-run observability dump: the merged metrics registry (every
-    // tenant's latency histograms, governor counters, queue-depth gauges)
-    let snap = hmx::obs::MetricsSnapshot::capture();
+    println!("registry health at end of run: {}", registry.health());
+    watchdog.stop();
+    // end-of-run observability dump via the registry (refreshes the
+    // `serve.health` gauge, then captures every tenant's latency
+    // histograms, governor counters, and queue-depth gauges)
+    let snap = registry.observe();
     if args.has("obs-json") {
         println!("{}", snap.to_json());
     } else {

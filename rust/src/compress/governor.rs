@@ -35,11 +35,34 @@ pub struct GovernorConfig {
     pub recompress_floor: f64,
     /// Storage precision used for governor-initiated recompressions.
     pub storage: StorageMode,
+    /// Soft-limit fraction of `budget_bytes` (0 < w ≤ 1). In the
+    /// *pressure band* — total above `w * budget` but still under the
+    /// hard budget — the governor tightens compression on live tenants
+    /// (recompress only, never evict/reject), so brown-out pressure is
+    /// relieved before the ceiling is ever hit. `1.0` (the default)
+    /// disables the band: the classic hard-budget-only ladder.
+    pub pressure_watermark: f64,
 }
 
 impl GovernorConfig {
     pub fn new(budget_bytes: usize) -> Self {
-        GovernorConfig { budget_bytes, recompress_floor: 0.25, storage: StorageMode::Mixed }
+        GovernorConfig {
+            budget_bytes,
+            recompress_floor: 0.25,
+            storage: StorageMode::Mixed,
+            pressure_watermark: 1.0,
+        }
+    }
+
+    /// Set the soft-limit fraction (clamped to (0, 1]).
+    pub fn with_pressure_watermark(mut self, w: f64) -> Self {
+        self.pressure_watermark = if w.is_finite() { w.clamp(f64::MIN_POSITIVE, 1.0) } else { 1.0 };
+        self
+    }
+
+    /// The soft limit in bytes: recompression pressure starts here.
+    pub fn soft_limit_bytes(&self) -> usize {
+        ((self.budget_bytes as f64 * self.pressure_watermark) as usize).min(self.budget_bytes)
     }
 }
 
@@ -127,10 +150,15 @@ impl MemoryGovernor {
     ) -> Option<GovernorAction> {
         let total: usize = tenants.iter().map(|t| t.bytes).sum();
         self.record_bytes(total);
-        if total <= self.cfg.budget_bytes {
+        let soft = self.cfg.soft_limit_bytes();
+        if total <= soft {
             return None;
         }
-        let excess = total - self.cfg.budget_bytes;
+        // excess is measured against the SOFT limit: in the pressure band
+        // recompressions aim below the watermark (headroom restored, not
+        // just the ceiling grazed); with watermark 1.0 this is the
+        // classic excess-over-budget
+        let excess = total - soft;
 
         // 1. recompress the coldest compressible tenant (the incoming
         // one only once every other candidate is exhausted). With any
@@ -150,6 +178,13 @@ impl MemoryGovernor {
                     target_bytes: target,
                 });
             }
+        }
+
+        // still under the HARD budget (pressure band only): compression
+        // was the only permissible lever — never evict or reject a
+        // tenant that fits under the ceiling
+        if total <= self.cfg.budget_bytes {
+            return None;
         }
 
         // 2. evict the coldest idle tenant that actually frees bytes
@@ -264,6 +299,32 @@ mod tests {
         );
         gov.record_reject();
         assert_eq!(gov.snapshot().rejections, 1);
+    }
+
+    #[test]
+    fn pressure_band_recompresses_but_never_evicts() {
+        let cfg = GovernorConfig::new(1000).with_pressure_watermark(0.8);
+        let gov = MemoryGovernor::new(cfg);
+        assert_eq!(cfg.soft_limit_bytes(), 800);
+        // total 900: above the 800 soft limit, under the 1000 hard budget
+        let tenants = vec![t("cold", 500, 0, true), t("hot", 400, 50, true)];
+        match gov.next_action(&tenants, "hot") {
+            Some(GovernorAction::Recompress { id, target_bytes }) => {
+                assert_eq!(id, "cold");
+                // excess over the SOFT limit: 900 - 800 = 100 → 400
+                assert_eq!(target_bytes, 400);
+            }
+            other => panic!("expected pressure-band recompress, got {other:?}"),
+        }
+        // same band with NOTHING compressible: no eviction while under
+        // the hard budget — the band is advisory pressure only
+        let stuck = vec![t("cold", 500, 0, false), t("hot", 400, 50, false)];
+        assert_eq!(gov.next_action(&stuck, "hot"), None);
+        // below the soft limit: silent
+        let calm = vec![t("cold", 400, 0, true), t("hot", 300, 50, true)];
+        assert_eq!(gov.next_action(&calm, "hot"), None);
+        // watermark 1.0 keeps the legacy semantics (soft == hard)
+        assert_eq!(GovernorConfig::new(1000).soft_limit_bytes(), 1000);
     }
 
     #[test]

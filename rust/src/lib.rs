@@ -89,7 +89,18 @@
 //!   (`runtime.matmat_fallback` stays 0 on the serve path).
 //! * **Weighted fair queueing** — per-tenant virtual-time lanes
 //!   ([`serve::BatcherClient::for_tenant`]) keep a light tenant's wait
-//!   bounded next to a heavy one, with per-tenant `serve.wait` series:
+//!   bounded next to a heavy one, with per-tenant `serve.wait` series.
+//! * **Self-healing supervision** — executors publish a heartbeat; a
+//!   registry [`serve::Watchdog`] ([`serve::OperatorRegistry::spawn_watchdog`])
+//!   detects dead or wedged executors, fails their in-flight requests with
+//!   typed [`serve::ServeError::ExecutorLost`] (never a hung future) and
+//!   respawns the tenant from its build recipe through a per-tenant
+//!   rebuild [`serve::CircuitBreaker`] (exponential backoff, half-open
+//!   probe). Request deadlines
+//!   ([`serve::BatcherClient::submit_async_with_deadline`]) sweep stale
+//!   requests before each flush, and [`serve::BrownoutConfig`] watermarks
+//!   degrade gracefully under overload — shedding the lightest lanes
+//!   first and exporting the `serve.health` gauge:
 //!
 //! ```no_run
 //! use hmx::prelude::*;
@@ -221,9 +232,10 @@ pub mod prelude {
     pub use crate::geometry::points::PointSet;
     pub use crate::hmatrix::{HMatrix, MatvecWorkspace};
     pub use crate::serve::{
-        block_on, BatcherClient, ClosureApply, ControlHandle, DynamicBatcher, LendingApply,
-        OperatorHandle, OperatorRegistry, ServeConfig, ServeError, SubmitFuture, Ticket,
-        WidthLadder,
+        block_on, BatcherClient, BreakerConfig, BrownoutConfig, CircuitBreaker, ClosureApply,
+        ControlHandle, DynamicBatcher, HealthState, LendingApply, OperatorHandle,
+        OperatorRegistry, ServeConfig, ServeError, SubmitFuture, SupervisorConfig, Ticket,
+        Watchdog, WidthLadder,
     };
     pub use crate::solver::block_bicgstab::{block_bicgstab_solve, BlockBiCgStabOptions};
     pub use crate::solver::block_cg::{

@@ -55,6 +55,13 @@ pub const SERVE_XBUF_BYTES: &str = "serve.xbuf_bytes";
 pub const SERVE_PAD_COLS: &str = "serve.pad_cols";
 pub const SERVE_APPLY_PANIC: &str = "serve.apply_panic";
 
+// --- serving resilience (supervision, deadlines, brown-out) ---
+pub const SERVE_HEALTH: &str = "serve.health";
+pub const SERVE_DEADLINE_EXPIRED: &str = "serve.deadline_expired";
+pub const SERVE_EXECUTOR_RESTART: &str = "serve.executor_restart";
+pub const SERVE_BREAKER_OPEN: &str = "serve.breaker_open";
+pub const SERVE_BROWNOUT_SHED: &str = "serve.brownout_shed";
+
 // --- compression / memory governance ---
 pub const COMPRESS_PASS: &str = "compress.pass";
 pub const GOVERNOR_RECOMPRESS: &str = "governor.recompress";
@@ -98,7 +105,12 @@ pub const REGISTRY: &[MetricDef] = &[
     MetricDef { name: SERVE_APPLY, kind: MetricKind::Histogram, unit: "ns", labels: "tenant", help: "batched-apply latency per flushed batch" },
     MetricDef { name: SERVE_APPLY_PANIC, kind: MetricKind::Counter, unit: "", labels: "", help: "user applies that panicked (unwind caught, batch resolved with ApplyPanicked)" },
     MetricDef { name: SERVE_BATCH_OCCUPANCY, kind: MetricKind::Histogram, unit: "reqs", labels: "tenant", help: "requests coalesced per flushed batch" },
+    MetricDef { name: SERVE_BREAKER_OPEN, kind: MetricKind::Counter, unit: "", labels: "", help: "rebuild circuit breakers tripped open after repeated build failures" },
+    MetricDef { name: SERVE_BROWNOUT_SHED, kind: MetricKind::Counter, unit: "", labels: "", help: "submissions shed from low-weight lanes during a brown-out" },
+    MetricDef { name: SERVE_DEADLINE_EXPIRED, kind: MetricKind::Counter, unit: "", labels: "", help: "requests resolved DeadlineExceeded (expired at submit or swept before a flush)" },
+    MetricDef { name: SERVE_EXECUTOR_RESTART, kind: MetricKind::Counter, unit: "", labels: "", help: "dead/wedged executors respawned (operator rebuilt) by the registry watchdog" },
     MetricDef { name: SERVE_FLUSH, kind: MetricKind::Span, unit: "ns", labels: "", help: "one batcher flush: assemble block, batched apply, scatter" },
+    MetricDef { name: SERVE_HEALTH, kind: MetricKind::Gauge, unit: "state", labels: "tenant", help: "serving health state: 0 = Ok, 1 = Degraded, 2 = BrownOut (per tenant; \"\" = registry aggregate)" },
     MetricDef { name: SERVE_PAD_COLS, kind: MetricKind::Counter, unit: "cols", labels: "", help: "zero columns added to pad flushes up to their width-ladder rung" },
     MetricDef { name: SERVE_QUEUE_DEPTH, kind: MetricKind::Gauge, unit: "reqs", labels: "tenant", help: "queued-but-not-dequeued submissions right now" },
     MetricDef { name: SERVE_SCATTER, kind: MetricKind::Span, unit: "ns", labels: "", help: "scattering per-caller result columns after a batched apply" },

@@ -16,17 +16,19 @@
 //! straight from the lent slab into each caller's recycled input buffer.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
 
 use super::apply::{ClosureApply, LendingApply, WidthLadder};
+use super::faults;
+use super::faults::FlushFaults;
 use super::queue::{FairQueue, PopError, PushError};
 use super::slot::{Response, ResponseSlot, SubmitFuture, Ticket};
-use super::telemetry::BatcherStats;
-use super::{ServeConfig, ServeError};
+use super::telemetry::{BatcherStats, HealthState};
+use super::{BrownoutConfig, ServeConfig, ServeError};
 use crate::compress::{CompressConfig, CompressStats};
 use crate::metrics::RECORDER;
 use crate::obs::{self, names, Histogram};
@@ -61,25 +63,50 @@ impl Control {
 pub(crate) struct Request {
     x: Vec<f64>,
     submitted: Instant,
+    /// Absolute expiry: past it the request is swept from the queue and
+    /// resolved [`ServeError::DeadlineExceeded`] instead of being served.
+    deadline: Option<Instant>,
     slot: Arc<ResponseSlot>,
     stats: Arc<BatcherStats>,
     /// Extra per-tenant `serve.wait` series for [`BatcherClient::for_tenant`]
     /// clients (the operator-level series in `stats` always records too).
     tenant_wait: Option<Arc<Histogram>>,
+    /// Graceful-shutdown flag of the owning batcher (drop-guard triage).
+    shutdown: Arc<AtomicBool>,
+    /// Set by the supervisor when the executor died or wedged.
+    lost: Arc<AtomicBool>,
     /// Whether the executor took this request off the queue (and thus
     /// already decremented the depth gauge).
     dequeued: bool,
 }
 
+impl Request {
+    fn expired(&self, now: Instant) -> bool {
+        self.deadline.map_or(false, |d| now >= d)
+    }
+}
+
 impl Drop for Request {
     fn drop(&mut self) {
         // A request can be destroyed without ever being served: the
-        // queue's terminal close() drops leftovers enqueued between the
-        // executor's last drain pass and its exit. The slot is one-shot
-        // first-writer-wins, so for served requests this complete is a
-        // no-op; for abandoned ones it resolves the waiter with Shutdown
-        // instead of leaving its future pending forever.
-        self.slot.complete(Err(ServeError::Shutdown));
+        // queue's terminal close() drops leftovers, and a batch dies in
+        // the executor's hands when the thread is killed mid-flush. The
+        // slot is one-shot first-writer-wins, so for served requests
+        // this complete is a no-op; for abandoned ones it resolves the
+        // waiter with a typed error instead of leaving its future
+        // pending forever. Triage: a graceful drain (shutdown flag set,
+        // executor healthy) is `Shutdown`; anything else — supervisor
+        // marked the executor lost, or the request died WITHOUT shutdown
+        // ever being requested (executor killed with the batch in hand)
+        // — is `ExecutorLost`, telling the caller a retry may succeed
+        // once the watchdog respawns the tenant.
+        let err = if !self.lost.load(Ordering::Acquire) && self.shutdown.load(Ordering::Acquire)
+        {
+            ServeError::Shutdown
+        } else {
+            ServeError::ExecutorLost
+        };
+        self.slot.complete(Err(err));
         if !self.dequeued {
             self.stats.record_dequeue();
         }
@@ -112,9 +139,15 @@ pub struct BatcherClient {
     n: usize,
     stats: Arc<BatcherStats>,
     shutdown: Arc<AtomicBool>,
+    lost: Arc<AtomicBool>,
     tenant: String,
     weight: f64,
     wait_hist: Option<Arc<Histogram>>,
+    /// Default per-request deadline stamped by [`BatcherClient::with_deadline`].
+    deadline: Option<Duration>,
+    /// Resolved [`BrownoutConfig::shed_weight_below`] (None = no brown-out
+    /// policy configured; lanes are never weight-shed).
+    shed_below: Option<f64>,
 }
 
 impl BatcherClient {
@@ -133,6 +166,24 @@ impl BatcherClient {
         self.shutdown.load(Ordering::Acquire)
     }
 
+    /// Whether the supervisor declared this operator's executor lost
+    /// (died or wedged). Submissions fast-fail with
+    /// [`ServeError::ExecutorLost`] until the registry respawns the
+    /// tenant — fetch a fresh handle to reach the replacement.
+    pub fn is_lost(&self) -> bool {
+        self.lost.load(Ordering::Acquire)
+    }
+
+    /// A client that stamps every submission with a relative deadline:
+    /// a request still queued `deadline` after its submit is swept and
+    /// resolved [`ServeError::DeadlineExceeded`] instead of being served
+    /// stale (and never burns a padded-flush slot). Per-call deadlines
+    /// via [`BatcherClient::submit_async_with_deadline`] override this.
+    pub fn with_deadline(mut self, deadline: Duration) -> BatcherClient {
+        self.deadline = Some(deadline);
+        self
+    }
+
     /// A client whose submissions go through their own fair-queue lane:
     /// under contention each lane receives dequeue slots in proportion to
     /// `weight` (virtual-finish-time scheduling), so a heavy tenant's
@@ -146,9 +197,12 @@ impl BatcherClient {
             n: self.n,
             stats: Arc::clone(&self.stats),
             shutdown: Arc::clone(&self.shutdown),
+            lost: Arc::clone(&self.lost),
             tenant: label.to_string(),
             weight,
             wait_hist: Some(super::telemetry::tenant_wait_histogram(label)),
+            deadline: self.deadline,
+            shed_below: self.shed_below,
         }
     }
 
@@ -159,6 +213,23 @@ impl BatcherClient {
     /// bounded queue is full. Dropping the future abandons the request
     /// (the batch still runs; the column is discarded).
     pub fn submit_async(&self, x: Vec<f64>) -> Result<SubmitFuture, ServeError> {
+        let deadline = self.deadline.and_then(|d| Instant::now().checked_add(d));
+        self.submit_async_with_deadline(x, deadline)
+    }
+
+    /// Like [`BatcherClient::submit_async`] with an explicit absolute
+    /// deadline: if the request is still queued at `deadline` it is
+    /// swept before the next flush and resolved
+    /// [`ServeError::DeadlineExceeded`] (a request already *in* an
+    /// assembling batch at its deadline is served — the flush timer
+    /// itself tightens to the earliest deadline in the batch). `None`
+    /// means no expiry regardless of any [`BatcherClient::with_deadline`]
+    /// default.
+    pub fn submit_async_with_deadline(
+        &self,
+        x: Vec<f64>,
+        deadline: Option<Instant>,
+    ) -> Result<SubmitFuture, ServeError> {
         if x.len() != self.n {
             return Err(ServeError::BadRequest(format!(
                 "expected a vector of length {}, got {}",
@@ -169,16 +240,36 @@ impl BatcherClient {
         // refuse new work once shutdown begins — otherwise a client that
         // keeps submitting can feed the drain loop indefinitely and stall
         // the executor join in `DynamicBatcher::drop`
+        if self.lost.load(Ordering::Acquire) {
+            return Err(ServeError::ExecutorLost);
+        }
         if self.shutdown.load(Ordering::Acquire) {
             return Err(ServeError::Shutdown);
+        }
+        let now = Instant::now();
+        if deadline.map_or(false, |d| now >= d) {
+            self.stats.record_deadline_expired();
+            return Err(ServeError::DeadlineExceeded);
+        }
+        // brown-out: past the high watermark the batcher sheds the
+        // LIGHTEST lanes first, keeping the queue's remaining slots for
+        // heavyweight traffic until the overload passes
+        if let Some(threshold) = self.shed_below {
+            if self.weight < threshold && self.stats.health() == HealthState::BrownOut {
+                self.stats.record_brownout_shed();
+                return Err(ServeError::Overloaded);
+            }
         }
         let slot = ResponseSlot::new();
         let req = Request {
             x,
-            submitted: Instant::now(),
+            submitted: now,
+            deadline,
             slot: Arc::clone(&slot),
             stats: Arc::clone(&self.stats),
             tenant_wait: self.wait_hist.clone(),
+            shutdown: Arc::clone(&self.shutdown),
+            lost: Arc::clone(&self.lost),
             dequeued: false,
         };
         // submit is recorded first so the executor's dequeue decrement can
@@ -206,6 +297,16 @@ impl BatcherClient {
     /// [`ServeError::Overloaded`] when the bounded queue is full.
     pub fn submit(&self, x: Vec<f64>) -> Result<Ticket, ServeError> {
         self.submit_async(x).map(Ticket::new)
+    }
+
+    /// Blocking-ticket spelling of
+    /// [`BatcherClient::submit_async_with_deadline`].
+    pub fn submit_with_deadline(
+        &self,
+        x: Vec<f64>,
+        deadline: Option<Instant>,
+    ) -> Result<Ticket, ServeError> {
+        self.submit_async_with_deadline(x, deadline).map(Ticket::new)
     }
 
     /// Submit and block for the result — `y = A x`.
@@ -255,6 +356,12 @@ impl ControlHandle {
 pub struct DynamicBatcher {
     client: BatcherClient,
     shutdown: Arc<AtomicBool>,
+    lost: Arc<AtomicBool>,
+    /// Monotone liveness counter bumped by the executor every loop
+    /// iteration (including straggler waits and the shutdown drain); a
+    /// watchdog that sees it frozen while the queue is non-empty has
+    /// found a wedged executor.
+    heartbeat: Arc<AtomicU64>,
     ctl_tx: mpsc::Sender<Control>,
     executor: Option<thread::JoinHandle<()>>,
 }
@@ -337,11 +444,22 @@ impl DynamicBatcher {
         let queue = Arc::new(FairQueue::new(cfg.queue_capacity));
         let (ctl_tx, ctl_rx) = mpsc::channel::<Control>();
         let stats = Arc::new(BatcherStats::with_tenant(tenant));
+        if let Some(b) = &cfg.brownout {
+            stats.set_brownout_depths(
+                watermark_depth(cfg.queue_capacity, b.degraded_at),
+                watermark_depth(cfg.queue_capacity, b.brownout_at),
+            );
+        }
+        let shed_below = cfg.brownout.as_ref().map(|b| b.shed_weight_below);
         let shutdown = Arc::new(AtomicBool::new(false));
+        let lost = Arc::new(AtomicBool::new(false));
+        let heartbeat = Arc::new(AtomicU64::new(0));
         let (btx, brx) = mpsc::channel::<Result<(), ServeError>>();
         let queue_ex = Arc::clone(&queue);
         let stats_ex = Arc::clone(&stats);
         let shutdown_ex = Arc::clone(&shutdown);
+        let heartbeat_ex = Arc::clone(&heartbeat);
+        let tenant_ex = tenant.to_string();
         let executor = thread::Builder::new()
             .name("hmx-serve-executor".to_string())
             .spawn(move || {
@@ -355,7 +473,17 @@ impl DynamicBatcher {
                         return;
                     }
                 };
-                run_executor(&queue_ex, &ctl_rx, n, &cfg, &stats_ex, &shutdown_ex, &mut apply);
+                run_executor(
+                    &queue_ex,
+                    &ctl_rx,
+                    n,
+                    &cfg,
+                    &stats_ex,
+                    &shutdown_ex,
+                    &heartbeat_ex,
+                    &tenant_ex,
+                    &mut apply,
+                );
             })
             .map_err(|e| ServeError::Build(format!("failed to spawn executor thread: {e}")))?;
         let built = brx
@@ -371,11 +499,16 @@ impl DynamicBatcher {
                 n,
                 stats,
                 shutdown: Arc::clone(&shutdown),
+                lost: Arc::clone(&lost),
                 tenant: String::new(),
                 weight: 1.0,
                 wait_hist: None,
+                deadline: None,
+                shed_below,
             },
             shutdown,
+            lost,
+            heartbeat,
             ctl_tx,
             executor: Some(executor),
         })
@@ -414,6 +547,39 @@ impl DynamicBatcher {
     pub fn matvec(&self, x: &[f64]) -> Response {
         self.client.matvec(x)
     }
+
+    /// Current liveness counter (see the `heartbeat` field). A watchdog
+    /// samples this: unchanged across a wedge window while requests are
+    /// queued means the executor is stuck inside an apply.
+    pub fn heartbeat(&self) -> u64 {
+        self.heartbeat.load(Ordering::Acquire)
+    }
+
+    /// Whether the executor thread has exited. `true` without a shutdown
+    /// having been requested means the thread died unexpectedly
+    /// (killed, or an unwind escaped) — supervisor territory.
+    pub fn executor_finished(&self) -> bool {
+        self.executor.as_ref().map_or(true, |h| h.is_finished())
+    }
+
+    /// Supervisor-side teardown of a dead or wedged executor: mark the
+    /// operator lost (submissions fast-fail [`ServeError::ExecutorLost`]),
+    /// close the queue so every parked request resolves the same way, and
+    /// reap the thread if it already exited. A WEDGED thread is detached,
+    /// never joined — joining would block the watchdog on the very hang
+    /// it detected; if the zombie ever wakes it observes the shutdown
+    /// flag and exits, and its late slot writes lose first-writer-wins.
+    pub(crate) fn abort_lost(&mut self) {
+        self.lost.store(true, Ordering::Release);
+        self.shutdown.store(true, Ordering::Release);
+        self.client.queue.close();
+        if let Some(h) = self.executor.take() {
+            if h.is_finished() {
+                let _ = h.join();
+            }
+            // else: detached — see above
+        }
+    }
 }
 
 impl Drop for DynamicBatcher {
@@ -422,7 +588,18 @@ impl Drop for DynamicBatcher {
         if let Some(h) = self.executor.take() {
             let _ = h.join();
         }
+        // Normally the executor's drain already closed the queue and this
+        // is a no-op; if the thread died without running the drain (fault
+        // injection, escaped unwind) it resolves every parked waiter
+        // instead of leaving their futures pending forever.
+        self.client.queue.close();
     }
+}
+
+/// Resolve a brown-out watermark fraction to an absolute queue depth
+/// (at least 1 so a configured watermark can always trip).
+fn watermark_depth(capacity: usize, fraction: f64) -> u64 {
+    ((capacity as f64 * fraction).ceil() as u64).max(1)
 }
 
 /// Run one control command, isolating the executor from a panicking
@@ -468,8 +645,23 @@ impl XbufGovernor {
     }
 }
 
+/// Sweep expired requests out of the queue and resolve each with
+/// [`ServeError::DeadlineExceeded`] — they never burn a padded-flush
+/// slot. Requests already popped into an assembling batch are exempt
+/// (the flush timer tightens to their deadline instead; see
+/// [`run_executor`]).
+fn sweep_expired(queue: &FairQueue<Request>, stats: &BatcherStats) {
+    let now = Instant::now();
+    for req in queue.sweep(|r| r.expired(now)) {
+        let req = dequeue(req, stats);
+        stats.record_deadline_expired();
+        req.slot.complete(Err(ServeError::DeadlineExceeded));
+    }
+}
+
 /// Executor main loop: handle pending control commands, pick up the
 /// fairness-ordered head request, coalesce, flush.
+#[allow(clippy::too_many_arguments)]
 fn run_executor<A: LendingApply>(
     queue: &FairQueue<Request>,
     ctl_rx: &mpsc::Receiver<Control>,
@@ -477,12 +669,19 @@ fn run_executor<A: LendingApply>(
     cfg: &ServeConfig,
     stats: &BatcherStats,
     shutdown: &AtomicBool,
+    heartbeat: &AtomicU64,
+    tenant: &str,
     apply: &mut A,
 ) {
     let ladder = cfg.ladder();
     let mut xbuf: Vec<f64> = Vec::new();
     let mut governor = XbufGovernor::new();
+    // flush ordinal, counted even for a flush the fault plan killed —
+    // the harness addresses faults by "the k-th flush this executor
+    // would run"
+    let mut flush_idx: u64 = 0;
     loop {
+        heartbeat.fetch_add(1, Ordering::Release);
         // control commands run between batches (never inside one); the
         // idle poll bounds their pickup latency at IDLE_POLL
         while let Ok(cmd) = ctl_rx.try_recv() {
@@ -491,6 +690,7 @@ fn run_executor<A: LendingApply>(
         if shutdown.load(Ordering::Acquire) {
             // graceful drain: serve the backlog in full batches, then exit
             loop {
+                heartbeat.fetch_add(1, Ordering::Release);
                 // control must keep draining HERE too — a governor
                 // Compress issued just before shutdown used to be
                 // silently dropped once this drain loop was entered,
@@ -498,10 +698,16 @@ fn run_executor<A: LendingApply>(
                 while let Ok(cmd) = ctl_rx.try_recv() {
                     run_control(apply, cmd);
                 }
+                sweep_expired(queue, stats);
                 let Some(first) = queue.try_pop() else { break };
                 let mut batch = vec![dequeue(first, stats)];
                 drain_backlog(queue, &mut batch, cfg.max_batch, stats);
-                let used = process_batch(&mut xbuf, batch, n, stats, &ladder, apply);
+                let faults = faults::flush_faults(tenant, flush_idx);
+                flush_idx += 1;
+                if faults.kill {
+                    return; // batch dies in hand → drop guards resolve ExecutorLost
+                }
+                let used = process_batch(&mut xbuf, batch, n, stats, &ladder, &faults, apply);
                 governor.after_flush(used, &mut xbuf, stats, apply);
             }
             while let Ok(cmd) = ctl_rx.try_recv() {
@@ -513,6 +719,7 @@ fn run_executor<A: LendingApply>(
             queue.close();
             return;
         }
+        sweep_expired(queue, stats);
         let first = match queue.pop_timeout(IDLE_POLL) {
             Ok(r) => r,
             Err(PopError::Timeout) => continue,
@@ -528,10 +735,18 @@ fn run_executor<A: LendingApply>(
         // whole batch: a request that already aged in a backlogged lane is
         // never delayed another full window
         while batch.len() < cfg.max_batch {
+            heartbeat.fetch_add(1, Ordering::Release);
             // checked_add: a huge max_wait (Duration::MAX = "no deadline,
             // flush on occupancy or shutdown only") must not overflow
             let oldest = batch.iter().map(|r| r.submitted).min().expect("batch is non-empty");
-            let deadline = oldest.checked_add(cfg.max_wait);
+            // the flush fires no later than the TIGHTEST request deadline
+            // in the batch: a member is served at (not past) its expiry
+            // rather than swept, so admission into a batch is a promise
+            let tightest = batch.iter().filter_map(|r| r.deadline).min();
+            let deadline = match (oldest.checked_add(cfg.max_wait), tightest) {
+                (Some(w), Some(d)) => Some(w.min(d)),
+                (w, d) => w.or(d),
+            };
             let now = Instant::now();
             // the wait is chunked at IDLE_POLL so a large max_wait cannot
             // stall shutdown: on the flag the partial batch flushes now
@@ -553,7 +768,17 @@ fn run_executor<A: LendingApply>(
                 Err(PopError::Closed) => break,
             }
         }
-        let used = process_batch(&mut xbuf, batch, n, stats, &ladder, apply);
+        let faults = faults::flush_faults(tenant, flush_idx);
+        flush_idx += 1;
+        if let Some(stall) = faults.stall {
+            // wedge simulation: the heartbeat freezes for the stall — the
+            // registry watchdog must notice queued work + frozen beats
+            thread::sleep(stall);
+        }
+        if faults.kill {
+            return; // see the drain-loop kill above
+        }
+        let used = process_batch(&mut xbuf, batch, n, stats, &ladder, &faults, apply);
         governor.after_flush(used, &mut xbuf, stats, apply);
     }
 }
@@ -594,6 +819,7 @@ fn process_batch<A: LendingApply>(
     n: usize,
     stats: &BatcherStats,
     ladder: &WidthLadder,
+    faults: &FlushFaults,
     apply: &mut A,
 ) -> usize {
     // the flush span covers assemble + batched apply + scatter; with
@@ -628,7 +854,20 @@ fn process_batch<A: LendingApply>(
     // with ApplyPanicked and the executor keeps serving later batches
     let out = {
         let _apply = obs::span(names::SERVE_APPLY);
-        catch_unwind(AssertUnwindSafe(|| apply.apply_batch(&xbuf[..], width)))
+        // injected apply faults fire INSIDE the unwind guard, exactly
+        // where a real operator bug would: a forced panic exercises the
+        // same catch/resolve path, a forced slow apply freezes the
+        // heartbeat mid-flush like a hung kernel (both are no-op stubs
+        // without the `fault-injection` feature)
+        catch_unwind(AssertUnwindSafe(|| {
+            if faults.panic {
+                faults::panic_now();
+            }
+            if let Some(delay) = faults.slow {
+                thread::sleep(delay);
+            }
+            apply.apply_batch(&xbuf[..], width)
+        }))
     };
     let apply_time = t0.elapsed();
     stats.record_batch(nrhs, apply_time);
@@ -846,6 +1085,7 @@ mod tests {
             max_wait: Duration::from_millis(10),
             queue_capacity: 64,
             pad_widths: Some(vec![4]),
+            ..ServeConfig::default()
         };
         let b = DynamicBatcher::spawn(n, cfg, move || {
             Ok(move |x: &[f64], nrhs: usize| {
@@ -1085,6 +1325,115 @@ mod tests {
         .unwrap();
         let err = b.matvec(&[1.0; 4]).unwrap_err();
         assert!(matches!(err, ServeError::Apply(m) if m.contains("synthetic failure")));
+    }
+
+    #[test]
+    fn queued_requests_past_their_deadline_are_swept_not_served() {
+        let n = 4;
+        // gate the apply so the executor is pinned inside flush #1 while
+        // a deadlined request expires in the queue behind it
+        let (started_tx, started_rx) = mpsc::channel::<()>();
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        let cfg = ServeConfig {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+            queue_capacity: 16,
+            ..ServeConfig::default()
+        };
+        let b = DynamicBatcher::spawn(n, cfg, move || {
+            Ok(move |x: &[f64], nrhs: usize| {
+                let _ = started_tx.send(());
+                let _ = release_rx.recv();
+                Ok(diag_apply(x, nrhs, n))
+            })
+        })
+        .unwrap();
+        let client = b.client();
+        let t1 = client.submit(vec![1.0; n]).unwrap();
+        started_rx.recv().unwrap(); // executor blocked inside apply(t1)
+        let tight = Instant::now() + Duration::from_millis(5);
+        let doomed = client.submit_with_deadline(vec![2.0; n], Some(tight)).unwrap();
+        let lax = client.submit(vec![3.0; n]).unwrap();
+        thread::sleep(Duration::from_millis(20)); // deadline passes while queued
+        release_tx.send(()).unwrap(); // flush #1 completes; sweep runs next
+        assert_eq!(t1.wait().unwrap()[1], 2.0);
+        assert_eq!(doomed.wait().unwrap_err(), ServeError::DeadlineExceeded);
+        release_tx.send(()).unwrap();
+        assert_eq!(lax.wait().unwrap()[1], 6.0, "undeadlined request must still be served");
+        assert_eq!(client.stats().deadline_expired(), 1);
+        assert_eq!(client.stats().queue_depth(), 0, "sweep must keep the depth gauge exact");
+        // a deadline already expired at submit never reaches the queue
+        let past = Instant::now() - Duration::from_millis(1);
+        let err = client.submit_with_deadline(vec![4.0; n], Some(past)).unwrap_err();
+        assert_eq!(err, ServeError::DeadlineExceeded);
+        assert_eq!(client.stats().deadline_expired(), 2);
+    }
+
+    #[test]
+    fn brownout_sheds_light_lanes_and_recovers() {
+        let n = 4;
+        let (started_tx, started_rx) = mpsc::channel::<()>();
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        let cfg = ServeConfig {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+            queue_capacity: 8,
+            brownout: Some(BrownoutConfig {
+                degraded_at: 0.25, // depth 2
+                brownout_at: 0.5,  // depth 4
+                shed_weight_below: 1.0,
+            }),
+            ..ServeConfig::default()
+        };
+        let b = DynamicBatcher::spawn(n, cfg, move || {
+            Ok(move |x: &[f64], nrhs: usize| {
+                let _ = started_tx.send(());
+                let _ = release_rx.recv();
+                Ok(diag_apply(x, nrhs, n))
+            })
+        })
+        .unwrap();
+        let heavy = b.client().for_tenant("brownout-test-heavy", 2.0);
+        let light = b.client().for_tenant("brownout-test-light", 0.5);
+        let gate = heavy.submit(vec![0.0; n]).unwrap();
+        started_rx.recv().unwrap(); // executor pinned; everything else queues
+        let mut parked = Vec::new();
+        for i in 0..4 {
+            parked.push(heavy.submit(vec![i as f64; n]).unwrap());
+        }
+        assert_eq!(heavy.stats().health(), HealthState::BrownOut);
+        // depth 4 ≥ brown-out watermark: the light lane (weight 0.5 < 1.0)
+        // sheds, the heavy lane (weight 2.0) is still admitted
+        assert_eq!(light.submit(vec![9.0; n]).unwrap_err(), ServeError::Overloaded);
+        assert_eq!(light.stats().brownout_shed(), 1);
+        let admitted = heavy.submit(vec![5.0; n]).unwrap();
+        // drain: health must come back down as the queue empties
+        for _ in 0..6 {
+            let _ = release_tx.send(());
+        }
+        gate.wait().unwrap();
+        for t in parked {
+            t.wait().unwrap();
+        }
+        admitted.wait().unwrap();
+        assert_eq!(light.stats().health(), HealthState::Ok);
+        let y = light.submit(vec![1.0; n]).unwrap();
+        let _ = release_tx.send(());
+        assert_eq!(y.wait().unwrap()[1], 2.0, "light lane serves again after recovery");
+    }
+
+    #[test]
+    fn executor_heartbeat_advances_while_serving() {
+        let b = diag_batcher(4, ServeConfig::default());
+        let h0 = b.heartbeat();
+        b.matvec(&[1.0; 4]).unwrap();
+        // the loop turns at least once per flush and once per idle poll
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while b.heartbeat() == h0 {
+            assert!(Instant::now() < deadline, "heartbeat frozen on a live executor");
+            thread::sleep(Duration::from_millis(1));
+        }
+        assert!(!b.executor_finished());
     }
 
     #[test]

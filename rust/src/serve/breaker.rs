@@ -1,0 +1,228 @@
+//! Per-tenant rebuild circuit breakers.
+//!
+//! A tenant whose operator build fails (bad config, poisoned artifact,
+//! infeasible memory budget) used to be retried by *every* caller of
+//! `get_or_build` — an expensive H-matrix build attempt per request, a
+//! hot loop that starves healthy tenants of executor-spawn and registry
+//! time. The classic fix is a circuit breaker per tenant:
+//!
+//! * **Closed** — builds are admitted. `failures_to_open` consecutive
+//!   failures trip the breaker.
+//! * **Open(until)** — builds are refused instantly with
+//!   [`crate::serve::ServeError::CircuitOpen`] carrying the remaining
+//!   backoff. Each consecutive failure grows the backoff geometrically
+//!   (`multiplier`, capped at `max_backoff`).
+//! * **HalfOpen** — once the backoff elapses, exactly ONE probe build is
+//!   admitted; concurrent callers keep getting `CircuitOpen` until the
+//!   probe resolves. Success closes the breaker and resets the backoff;
+//!   failure re-opens it with the next-larger backoff.
+//!
+//! The state machine is pure over injected `Instant`s, so backoff growth
+//! and half-open arbitration are unit-testable without sleeping.
+
+use std::time::{Duration, Instant};
+
+/// Breaker policy knobs (see the module docs for the state machine).
+#[derive(Clone, Copy, Debug)]
+pub struct BreakerConfig {
+    /// Consecutive failures before the breaker opens.
+    pub failures_to_open: u32,
+    /// Backoff after the first opening.
+    pub initial_backoff: Duration,
+    /// Geometric backoff growth per consecutive re-opening.
+    pub multiplier: f64,
+    /// Backoff ceiling.
+    pub max_backoff: Duration,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        BreakerConfig {
+            failures_to_open: 1,
+            initial_backoff: Duration::from_millis(100),
+            multiplier: 2.0,
+            max_backoff: Duration::from_secs(30),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum State {
+    Closed,
+    Open { until: Instant },
+    /// One probe is in flight; everyone else is refused.
+    HalfOpen,
+}
+
+/// One tenant's rebuild breaker. Not internally synchronized — the
+/// registry keeps breakers under its own lock.
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    cfg: BreakerConfig,
+    state: State,
+    /// Consecutive failures since the last success (while Closed).
+    failures: u32,
+    /// Backoff the NEXT opening will use.
+    backoff: Duration,
+}
+
+impl CircuitBreaker {
+    pub fn new(cfg: BreakerConfig) -> Self {
+        CircuitBreaker { cfg, state: State::Closed, failures: 0, backoff: cfg.initial_backoff }
+    }
+
+    /// Whether a build may proceed at `now`. `Err(retry_in)` means the
+    /// caller should fail fast with `CircuitOpen`; `Ok(())` admits the
+    /// build, and the caller MUST follow up with [`Self::on_success`] or
+    /// [`Self::on_failure`] (in the half-open state this admission IS
+    /// the single probe).
+    pub fn admit(&mut self, now: Instant) -> Result<(), Duration> {
+        match self.state {
+            State::Closed => Ok(()),
+            State::Open { until } if now >= until => {
+                self.state = State::HalfOpen;
+                Ok(())
+            }
+            State::Open { until } => Err(until.duration_since(now)),
+            // a probe is already in flight; refuse with the full backoff
+            // the breaker would re-open at if the probe fails
+            State::HalfOpen => Err(self.backoff),
+        }
+    }
+
+    /// The admitted build succeeded: close and reset the backoff ladder.
+    pub fn on_success(&mut self) {
+        self.state = State::Closed;
+        self.failures = 0;
+        self.backoff = self.cfg.initial_backoff;
+    }
+
+    /// The admitted build failed at `now`. Returns `true` when this
+    /// failure TRIPPED the breaker open (a closed→open or
+    /// half-open→open transition — the edge `serve.breaker_open`
+    /// counts).
+    pub fn on_failure(&mut self, now: Instant) -> bool {
+        match self.state {
+            State::Closed => {
+                self.failures += 1;
+                if self.failures < self.cfg.failures_to_open {
+                    return false;
+                }
+                self.state = State::Open { until: now + self.backoff };
+                true
+            }
+            State::HalfOpen => {
+                // failed probe: re-open with the grown backoff
+                self.backoff = grow(self.backoff, self.cfg.multiplier, self.cfg.max_backoff);
+                self.state = State::Open { until: now + self.backoff };
+                true
+            }
+            // a late failure report while already open (e.g. a racing
+            // build that started before the trip): keep the open window
+            State::Open { .. } => false,
+        }
+    }
+
+    /// Whether the breaker currently refuses builds submitted at `now`.
+    pub fn is_open(&self, now: Instant) -> bool {
+        matches!(self.state, State::Open { until } if now < until)
+    }
+
+    /// The backoff the next re-opening would impose (test/report hook).
+    pub fn current_backoff(&self) -> Duration {
+        self.backoff
+    }
+}
+
+fn grow(d: Duration, multiplier: f64, cap: Duration) -> Duration {
+    let next = Duration::from_secs_f64((d.as_secs_f64() * multiplier).max(0.0));
+    next.min(cap)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(initial_ms: u64, mult: f64, cap_ms: u64) -> BreakerConfig {
+        BreakerConfig {
+            failures_to_open: 1,
+            initial_backoff: Duration::from_millis(initial_ms),
+            multiplier: mult,
+            max_backoff: Duration::from_millis(cap_ms),
+        }
+    }
+
+    #[test]
+    fn backoff_grows_geometrically_and_caps() {
+        let t0 = Instant::now();
+        let mut b = CircuitBreaker::new(cfg(100, 2.0, 1000));
+        // failure 1: opens at 100ms
+        assert!(b.admit(t0).is_ok());
+        assert!(b.on_failure(t0), "first failure must trip the breaker");
+        assert_eq!(b.admit(t0).unwrap_err(), Duration::from_millis(100));
+        // not yet elapsed: still refused, with the remaining wait
+        let t1 = t0 + Duration::from_millis(40);
+        assert_eq!(b.admit(t1).unwrap_err(), Duration::from_millis(60));
+        // elapsed: half-open probe admitted, fails → backoff doubles
+        let mut now = t0 + Duration::from_millis(100);
+        let mut expect = 200u64;
+        for _ in 0..5 {
+            assert!(b.admit(now).is_ok(), "elapsed backoff must admit the probe");
+            assert!(b.on_failure(now), "failed probe must re-trip");
+            let expected = Duration::from_millis(expect.min(1000));
+            assert_eq!(b.admit(now).unwrap_err(), expected, "backoff ladder diverged");
+            now += expected;
+            expect = expect.saturating_mul(2);
+        }
+        // the ladder capped at max_backoff
+        assert_eq!(b.current_backoff(), Duration::from_millis(1000));
+    }
+
+    #[test]
+    fn half_open_admits_exactly_one_probe() {
+        let t0 = Instant::now();
+        let mut b = CircuitBreaker::new(cfg(50, 2.0, 1000));
+        assert!(b.admit(t0).is_ok());
+        b.on_failure(t0);
+        let t1 = t0 + Duration::from_millis(50);
+        assert!(b.admit(t1).is_ok(), "the probe");
+        assert!(b.admit(t1).is_err(), "second caller must wait out the probe");
+        assert!(b.admit(t1 + Duration::from_secs(5)).is_err(), "still only one probe");
+        b.on_success();
+        assert!(b.admit(t1).is_ok(), "closed after a successful probe");
+        // and the backoff ladder reset to the initial rung
+        assert_eq!(b.current_backoff(), Duration::from_millis(50));
+    }
+
+    #[test]
+    fn failures_below_threshold_do_not_trip() {
+        let t0 = Instant::now();
+        let mut b = CircuitBreaker::new(BreakerConfig {
+            failures_to_open: 3,
+            ..cfg(100, 2.0, 1000)
+        });
+        for _ in 0..2 {
+            assert!(b.admit(t0).is_ok());
+            assert!(!b.on_failure(t0), "below threshold: still closed");
+        }
+        assert!(b.admit(t0).is_ok());
+        assert!(b.on_failure(t0), "third consecutive failure trips");
+        assert!(b.is_open(t0));
+        assert!(!b.is_open(t0 + Duration::from_millis(100)));
+    }
+
+    #[test]
+    fn success_resets_the_consecutive_failure_count() {
+        let t0 = Instant::now();
+        let mut b = CircuitBreaker::new(BreakerConfig {
+            failures_to_open: 2,
+            ..cfg(100, 2.0, 1000)
+        });
+        b.admit(t0).unwrap();
+        assert!(!b.on_failure(t0));
+        b.admit(t0).unwrap();
+        b.on_success();
+        b.admit(t0).unwrap();
+        assert!(!b.on_failure(t0), "the success must have zeroed the streak");
+    }
+}

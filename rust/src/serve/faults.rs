@@ -1,0 +1,338 @@
+//! Deterministic, seeded fault injection for the serving stack.
+//!
+//! Chaos testing a multi-threaded serving layer only works when the
+//! faults are *reproducible*: a flaky fault plan produces flaky tests.
+//! A [`FaultPlan`] therefore triggers faults at exact points — "kill the
+//! executor at flush 3 of tenant `t`", "fail the next 2 builds of
+//! tenant `t`" — plus an optional seeded per-flush panic coin
+//! (splitmix64 over `(seed, tenant, flush index)`, so the same plan
+//! fires at the same flushes on every run).
+//!
+//! The whole harness is compiled behind the `fault-injection` cargo
+//! feature. Without it the hook functions below ([`flush_faults`],
+//! [`build_fault`]) are inlined no-ops — the production hot path pays
+//! nothing, which is what keeps `fig_serve` throughput and
+//! `runtime.matmat_fallback == 0` byte-identical with the feature off.
+//!
+//! Faults the plan can force, and where they land:
+//!
+//! * **Apply panic** — raised *inside* the batched apply, so the
+//!   executor's `catch_unwind` containment path (typed `ApplyPanicked`)
+//!   is exercised.
+//! * **Slow apply** — a sleep inside the apply; with a watchdog wedge
+//!   timeout shorter than the sleep this simulates a wedged executor.
+//! * **Queue stall** — a sleep *before* the flush is assembled, without
+//!   heartbeats, so supervision sees a stalled loop with queued work.
+//! * **Kill executor** — the executor thread returns mid-loop with a
+//!   batch in hand: in-flight requests resolve via their drop guards
+//!   with [`crate::serve::ServeError::ExecutorLost`] and the registry
+//!   watchdog must detect, respawn and rebuild.
+//! * **Build / artifact-load failure** — the next N builds of a tenant
+//!   fail with a typed error before `HMatrix::build` runs, driving the
+//!   rebuild circuit breaker.
+
+#![allow(dead_code)]
+
+use std::time::Duration;
+
+/// What the executor should do for one flush, resolved by
+/// [`flush_faults`]. The order of fields is the order the executor acts
+/// on them: stall first (before assembly), then kill, then the in-apply
+/// faults.
+#[derive(Clone, Copy, Debug, Default)]
+pub(crate) struct FlushFaults {
+    /// Sleep this long before assembling the batch (no heartbeats).
+    pub stall: Option<Duration>,
+    /// Return from the executor loop with the batch in hand.
+    pub kill: bool,
+    /// Panic inside the batched apply.
+    pub panic: bool,
+    /// Sleep this long inside the batched apply before running it.
+    pub slow: Option<Duration>,
+}
+
+impl FlushFaults {
+    pub(crate) const NONE: FlushFaults =
+        FlushFaults { stall: None, kill: false, panic: false, slow: None };
+}
+
+#[cfg(feature = "fault-injection")]
+mod imp {
+    use super::FlushFaults;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Mutex;
+    use std::time::Duration;
+
+    use once_cell::sync::Lazy;
+
+    /// Message prefix every injected fault carries, so tests (and
+    /// humans reading a failure) can tell an injected fault from a real
+    /// one.
+    pub const INJECTED: &str = "fault-injected";
+
+    #[derive(Clone, Debug)]
+    enum Kind {
+        ApplyPanic { at_flush: u64 },
+        SlowApply { at_flush: u64, delay: Duration },
+        QueueStall { at_flush: u64, delay: Duration },
+        KillExecutor { at_flush: u64 },
+        /// Seeded coin: panic each flush with probability `rate`.
+        PanicRate { rate: f64 },
+        BuildFail,
+        ArtifactLoadFail,
+    }
+
+    #[derive(Debug)]
+    struct Spec {
+        /// `None` matches every tenant (including the unlabeled "").
+        tenant: Option<String>,
+        kind: Kind,
+        /// For the count-based build faults: how many more times this
+        /// spec fires. Trigger-indexed specs are not decremented (the
+        /// index match is already one-shot per flush counter).
+        remaining: AtomicU64,
+    }
+
+    impl Spec {
+        fn matches_tenant(&self, tenant: &str) -> bool {
+            self.tenant.as_deref().map_or(true, |t| t == tenant)
+        }
+    }
+
+    /// A deterministic schedule of faults. Build one with the chainable
+    /// constructors, then [`FaultPlan::install`] it process-wide; the
+    /// serving hooks consult the installed plan at exact trigger points.
+    #[derive(Debug, Default)]
+    pub struct FaultPlan {
+        seed: u64,
+        specs: Vec<Spec>,
+    }
+
+    impl FaultPlan {
+        /// An empty plan whose rate-based faults are derived from `seed`.
+        pub fn seeded(seed: u64) -> Self {
+            FaultPlan { seed, specs: Vec::new() }
+        }
+
+        fn spec(mut self, tenant: &str, kind: Kind, remaining: u64) -> Self {
+            // an empty tenant filter matches every executor, including
+            // the unlabeled plain-spawn batchers
+            let tenant = (!tenant.is_empty()).then(|| tenant.to_string());
+            self.specs.push(Spec { tenant, kind, remaining: AtomicU64::new(remaining) });
+            self
+        }
+
+        /// Panic inside `tenant`'s apply at flush index `at_flush`
+        /// (0-based, counted per executor lifetime).
+        pub fn panic_apply(self, tenant: &str, at_flush: u64) -> Self {
+            self.spec(tenant, Kind::ApplyPanic { at_flush }, u64::MAX)
+        }
+
+        /// Sleep `delay` inside `tenant`'s apply at flush `at_flush`.
+        pub fn slow_apply(self, tenant: &str, at_flush: u64, delay: Duration) -> Self {
+            self.spec(tenant, Kind::SlowApply { at_flush, delay }, u64::MAX)
+        }
+
+        /// Sleep `delay` before assembling `tenant`'s flush `at_flush`,
+        /// without publishing heartbeats (a wedged-loop simulation).
+        pub fn stall_queue(self, tenant: &str, at_flush: u64, delay: Duration) -> Self {
+            self.spec(tenant, Kind::QueueStall { at_flush, delay }, u64::MAX)
+        }
+
+        /// Kill `tenant`'s executor thread at flush `at_flush`: the loop
+        /// returns with the batch in hand, leaving in-flight requests to
+        /// their `ExecutorLost` drop guards.
+        pub fn kill_executor(self, tenant: &str, at_flush: u64) -> Self {
+            self.spec(tenant, Kind::KillExecutor { at_flush }, u64::MAX)
+        }
+
+        /// Panic inside `tenant`'s apply with probability `rate` per
+        /// flush — seeded, so the same flushes fire on every run.
+        pub fn panic_rate(self, tenant: &str, rate: f64) -> Self {
+            assert!((0.0..=1.0).contains(&rate), "rate must be in [0, 1]");
+            self.spec(tenant, Kind::PanicRate { rate }, u64::MAX)
+        }
+
+        /// Fail `tenant`'s next `count` operator builds with a typed
+        /// config error (before `HMatrix::build` runs).
+        pub fn fail_builds(self, tenant: &str, count: u64) -> Self {
+            self.spec(tenant, Kind::BuildFail, count)
+        }
+
+        /// Fail `tenant`'s next `count` builds with a typed *artifact*
+        /// error, as if a fixed-width AOT artifact failed to load.
+        pub fn fail_artifact_loads(self, tenant: &str, count: u64) -> Self {
+            self.spec(tenant, Kind::ArtifactLoadFail, count)
+        }
+
+        /// Install this plan process-wide, replacing any previous plan.
+        pub fn install(self) {
+            *ACTIVE.lock().unwrap_or_else(|e| e.into_inner()) = Some(self);
+        }
+    }
+
+    /// Remove the installed plan: later hook calls see no faults.
+    pub fn clear() {
+        *ACTIVE.lock().unwrap_or_else(|e| e.into_inner()) = None;
+    }
+
+    static ACTIVE: Lazy<Mutex<Option<FaultPlan>>> = Lazy::new(|| Mutex::new(None));
+
+    fn splitmix64(mut z: u64) -> u64 {
+        z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+
+    /// Deterministic coin for `(seed, tenant, flush)`: true with
+    /// probability `rate`.
+    fn coin(seed: u64, tenant: &str, flush: u64, rate: f64) -> bool {
+        let mut h = seed;
+        for b in tenant.bytes() {
+            h = splitmix64(h ^ b as u64);
+        }
+        let u = splitmix64(h ^ flush);
+        (u as f64 / u64::MAX as f64) < rate
+    }
+
+    /// The faults scheduled for `(tenant, flush_idx)` under the
+    /// installed plan (all of [`FlushFaults::NONE`] when no plan is
+    /// installed).
+    pub(crate) fn flush_faults(tenant: &str, flush_idx: u64) -> FlushFaults {
+        let guard = ACTIVE.lock().unwrap_or_else(|e| e.into_inner());
+        let Some(plan) = guard.as_ref() else { return FlushFaults::NONE };
+        let mut f = FlushFaults::NONE;
+        for spec in plan.specs.iter().filter(|s| s.matches_tenant(tenant)) {
+            match spec.kind {
+                Kind::ApplyPanic { at_flush } if at_flush == flush_idx => f.panic = true,
+                Kind::SlowApply { at_flush, delay } if at_flush == flush_idx => {
+                    f.slow = Some(delay)
+                }
+                Kind::QueueStall { at_flush, delay } if at_flush == flush_idx => {
+                    f.stall = Some(delay)
+                }
+                Kind::KillExecutor { at_flush } if at_flush == flush_idx => f.kill = true,
+                Kind::PanicRate { rate } if coin(plan.seed, tenant, flush_idx, rate) => {
+                    f.panic = true
+                }
+                _ => {}
+            }
+        }
+        f
+    }
+
+    /// The build fault scheduled for `tenant`'s next build, if any
+    /// (consumes one charge of the matching count-based spec).
+    pub(crate) fn build_fault(tenant: &str) -> Option<crate::Error> {
+        let guard = ACTIVE.lock().unwrap_or_else(|e| e.into_inner());
+        let plan = guard.as_ref()?;
+        for spec in plan.specs.iter().filter(|s| s.matches_tenant(tenant)) {
+            let artifact = match spec.kind {
+                Kind::BuildFail => false,
+                Kind::ArtifactLoadFail => true,
+                _ => continue,
+            };
+            // consume one charge; a spent spec never fires again
+            let took = spec
+                .remaining
+                .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |r| r.checked_sub(1))
+                .is_ok();
+            if !took {
+                continue;
+            }
+            return Some(if artifact {
+                crate::Error::Artifact(format!("{INJECTED} artifact load failure for `{tenant}`"))
+            } else {
+                crate::Error::Config(format!("{INJECTED} build failure for `{tenant}`"))
+            });
+        }
+        None
+    }
+
+    /// The panic message injected apply panics carry.
+    pub(crate) fn panic_now() -> ! {
+        panic!("{INJECTED} apply panic");
+    }
+}
+
+#[cfg(feature = "fault-injection")]
+pub use imp::{clear, FaultPlan, INJECTED};
+#[cfg(feature = "fault-injection")]
+pub(crate) use imp::{build_fault, flush_faults, panic_now};
+
+#[cfg(not(feature = "fault-injection"))]
+mod stub {
+    use super::FlushFaults;
+
+    #[inline(always)]
+    pub(crate) fn flush_faults(_tenant: &str, _flush_idx: u64) -> FlushFaults {
+        FlushFaults::NONE
+    }
+
+    #[inline(always)]
+    pub(crate) fn build_fault(_tenant: &str) -> Option<crate::Error> {
+        None
+    }
+
+    #[inline(always)]
+    pub(crate) fn panic_now() {
+        unreachable!("panic_now is only reachable with fault-injection enabled")
+    }
+}
+
+#[cfg(not(feature = "fault-injection"))]
+pub(crate) use stub::{build_fault, flush_faults, panic_now};
+
+#[cfg(all(test, feature = "fault-injection"))]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    // The installed plan is process-global, so these tests share one
+    // lock to avoid clobbering each other under parallel test threads.
+    static SERIAL: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    #[test]
+    fn indexed_faults_fire_only_at_their_flush() {
+        let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+        FaultPlan::seeded(1)
+            .panic_apply("t", 3)
+            .slow_apply("t", 5, Duration::from_millis(1))
+            .kill_executor("other", 0)
+            .install();
+        assert!(!flush_faults("t", 2).panic);
+        assert!(flush_faults("t", 3).panic);
+        assert!(flush_faults("t", 5).slow.is_some());
+        assert!(!flush_faults("t", 3).kill, "kill targets another tenant");
+        assert!(flush_faults("other", 0).kill);
+        clear();
+        assert!(!flush_faults("t", 3).panic, "cleared plan must not fire");
+    }
+
+    #[test]
+    fn build_faults_consume_their_count() {
+        let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+        FaultPlan::seeded(2).fail_builds("t", 2).fail_artifact_loads("a", 1).install();
+        assert!(matches!(build_fault("t"), Some(crate::Error::Config(_))));
+        assert!(matches!(build_fault("t"), Some(crate::Error::Config(_))));
+        assert!(build_fault("t").is_none(), "two charges, third build succeeds");
+        let e = build_fault("a").expect("artifact fault");
+        assert!(matches!(e, crate::Error::Artifact(ref m) if m.contains(INJECTED)));
+        assert!(build_fault("a").is_none());
+        assert!(build_fault("unrelated").is_none());
+        clear();
+    }
+
+    #[test]
+    fn rate_faults_are_deterministic_across_queries() {
+        let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+        FaultPlan::seeded(42).panic_rate("t", 0.3).install();
+        let first: Vec<bool> = (0..64).map(|i| flush_faults("t", i).panic).collect();
+        let second: Vec<bool> = (0..64).map(|i| flush_faults("t", i).panic).collect();
+        assert_eq!(first, second, "seeded coin must be a pure function of (tenant, flush)");
+        let fired = first.iter().filter(|b| **b).count();
+        assert!(fired > 0 && fired < 64, "rate 0.3 over 64 flushes: {fired} fired");
+        clear();
+    }
+}

@@ -58,6 +58,8 @@
 
 pub mod apply;
 pub mod batcher;
+pub mod breaker;
+pub mod faults;
 mod queue;
 pub mod registry;
 mod slot;
@@ -65,10 +67,14 @@ pub mod telemetry;
 
 pub use apply::{ClosureApply, LendingApply, WidthLadder};
 pub use batcher::{BatcherClient, Control, ControlHandle, DynamicBatcher};
-pub use registry::{OperatorHandle, OperatorMeta, OperatorRegistry};
+pub use breaker::{BreakerConfig, CircuitBreaker};
+#[cfg(feature = "fault-injection")]
+pub use faults::FaultPlan;
+pub use registry::{OperatorHandle, OperatorMeta, OperatorRegistry, SupervisorConfig, Watchdog};
 pub use slot::{block_on, SubmitFuture, Ticket};
-pub use telemetry::{BatcherStats, ServeSnapshot};
+pub use telemetry::{BatcherStats, HealthState, ServeSnapshot};
 
+use std::fmt;
 use std::time::Duration;
 
 /// Dynamic-batching policy for one served operator.
@@ -91,6 +97,9 @@ pub struct ServeConfig {
     /// `Some(widths)` is an explicit ladder (`max_batch` is always
     /// appended as the top rung).
     pub pad_widths: Option<Vec<usize>>,
+    /// Brown-out degradation watermarks on queue depth (`None` = never
+    /// degrade; the health state stays [`HealthState::Ok`]).
+    pub brownout: Option<BrownoutConfig>,
 }
 
 impl Default for ServeConfig {
@@ -100,7 +109,35 @@ impl Default for ServeConfig {
             max_wait: Duration::from_millis(2),
             queue_capacity: 1024,
             pad_widths: None,
+            brownout: None,
         }
+    }
+}
+
+/// Brown-out graceful degradation policy: watermarks on queue depth
+/// (as fractions of [`ServeConfig::queue_capacity`]) drive the
+/// tenant's [`HealthState`], and in the brown-out band the batcher
+/// sheds the lightest fair-queue lanes first so heavyweight traffic
+/// keeps its latency while the overload lasts.
+#[derive(Clone, Copy, Debug)]
+pub struct BrownoutConfig {
+    /// Queue-depth fraction at which health degrades to
+    /// [`HealthState::Degraded`] (observable early warning; nothing is
+    /// shed yet).
+    pub degraded_at: f64,
+    /// Queue-depth fraction at which health becomes
+    /// [`HealthState::BrownOut`] and low-weight lanes start shedding.
+    pub brownout_at: f64,
+    /// During a brown-out, submissions from fair-queue lanes with
+    /// weight strictly below this are shed with
+    /// [`ServeError::Overloaded`] (counted in `serve.brownout_shed`).
+    /// Weight-1.0 default lanes shed iff this exceeds 1.0.
+    pub shed_weight_below: f64,
+}
+
+impl Default for BrownoutConfig {
+    fn default() -> Self {
+        BrownoutConfig { degraded_at: 0.5, brownout_at: 0.9, shed_weight_below: 1.0 }
     }
 }
 
@@ -115,6 +152,19 @@ impl ServeConfig {
         if let Some(widths) = &self.pad_widths {
             if widths.iter().any(|&w| w == 0) {
                 return Err(ServeError::BadRequest("pad widths must be positive".into()));
+            }
+        }
+        if let Some(b) = &self.brownout {
+            let ordered = 0.0 < b.degraded_at && b.degraded_at <= b.brownout_at;
+            if !ordered || !b.degraded_at.is_finite() || !b.brownout_at.is_finite() {
+                return Err(ServeError::BadRequest(
+                    "brownout watermarks must satisfy 0 < degraded_at <= brownout_at".into(),
+                ));
+            }
+            if !b.shed_weight_below.is_finite() || b.shed_weight_below < 0.0 {
+                return Err(ServeError::BadRequest(
+                    "brownout shed_weight_below must be a non-negative finite weight".into(),
+                ));
             }
         }
         Ok(())
@@ -132,36 +182,77 @@ impl ServeConfig {
 }
 
 /// Errors surfaced to serving clients.
-#[derive(Clone, Debug, PartialEq, Eq, thiserror::Error)]
+///
+/// `Display` and `std::error::Error` are implemented by hand (not
+/// derived) so every variant — including the supervision-era ones —
+/// renders a uniform, operator-readable message, and so
+/// [`ServeError::ApplyPanicked`] is guaranteed to carry the ORIGINAL
+/// panic payload text verbatim (the executor extracts it from the
+/// caught unwind before the payload is dropped).
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum ServeError {
-    /// The bounded submission queue is full; the request was shed so the
-    /// caller can retry/back off (load shedding, not blocking).
-    #[error("serving queue full: request shed (backpressure)")]
+    /// The bounded submission queue is full (or a brown-out shed this
+    /// lane); the request was shed so the caller can retry/back off
+    /// (load shedding, not blocking).
     Overloaded,
-    /// The operator's executor has shut down (registry entry removed or
-    /// batcher dropped).
-    #[error("operator is shutting down")]
+    /// The operator's executor has shut down *gracefully* (registry
+    /// entry removed or batcher dropped).
     Shutdown,
+    /// The operator's executor died or wedged with this request in
+    /// flight: the result is unrecoverable, but the tenant is being
+    /// respawned by the registry watchdog — retry after a beat.
+    ExecutorLost,
+    /// The request's deadline expired before its batch flushed; it was
+    /// swept from the queue instead of burning a padded-flush slot.
+    DeadlineExceeded,
+    /// The tenant's rebuild circuit breaker is open after repeated
+    /// build failures; retry no sooner than `retry_in`.
+    CircuitOpen { retry_in: Duration },
     /// Malformed submission (e.g. wrong vector length).
-    #[error("bad request: {0}")]
     BadRequest(String),
     /// No operator registered under this id.
-    #[error("unknown operator id: {0}")]
     UnknownOperator(String),
     /// Operator construction failed on the executor thread.
-    #[error("operator build failed: {0}")]
     Build(String),
     /// The batched apply itself failed; every request in the batch
     /// receives this error.
-    #[error("batched apply failed: {0}")]
     Apply(String),
     /// The batched apply panicked. The unwind is caught on the executor
     /// (which keeps serving later batches); every request in the batch
-    /// resolves with this instead of hanging on a dead executor.
-    #[error("batched apply panicked: {0}")]
+    /// resolves with this — carrying the original panic payload text —
+    /// instead of hanging on a dead executor.
     ApplyPanicked(String),
     /// The memory governor could not fit this operator under the
     /// cross-tenant byte budget even after compressing and evicting.
-    #[error("over memory budget: {0}")]
     OverBudget(String),
 }
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Overloaded => {
+                write!(f, "serving queue full: request shed (backpressure)")
+            }
+            ServeError::Shutdown => write!(f, "operator is shutting down"),
+            ServeError::ExecutorLost => {
+                write!(f, "executor lost: the operator's executor died or wedged mid-flight")
+            }
+            ServeError::DeadlineExceeded => {
+                write!(f, "request deadline expired before the batch flushed")
+            }
+            ServeError::CircuitOpen { retry_in } => write!(
+                f,
+                "rebuild circuit breaker open: retry in {:.3}s",
+                retry_in.as_secs_f64()
+            ),
+            ServeError::BadRequest(m) => write!(f, "bad request: {m}"),
+            ServeError::UnknownOperator(id) => write!(f, "unknown operator id: {id}"),
+            ServeError::Build(m) => write!(f, "operator build failed: {m}"),
+            ServeError::Apply(m) => write!(f, "batched apply failed: {m}"),
+            ServeError::ApplyPanicked(m) => write!(f, "batched apply panicked: {m}"),
+            ServeError::OverBudget(m) => write!(f, "over memory budget: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}

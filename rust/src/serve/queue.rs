@@ -153,6 +153,31 @@ impl<T> FairQueue<T> {
         self.inner.lock().unwrap().len
     }
 
+    /// Remove and return every queued item matching `pred`, across all
+    /// lanes, preserving each lane's order for the survivors. This is
+    /// the deadline sweep: the executor pulls expired requests out
+    /// before assembling a flush so they resolve `DeadlineExceeded`
+    /// instead of burning a padded-batch slot. Lane virtual-finish
+    /// times are left untouched — a swept item's vft gap is harmless
+    /// (the clock only ever advances on pops).
+    pub(crate) fn sweep<F: FnMut(&T) -> bool>(&self, mut pred: F) -> Vec<T> {
+        let mut inner = self.inner.lock().unwrap();
+        let mut out = Vec::new();
+        for lane in inner.lanes.values_mut() {
+            let mut kept = VecDeque::with_capacity(lane.items.len());
+            for (vft, item) in lane.items.drain(..) {
+                if pred(&item) {
+                    out.push(item);
+                } else {
+                    kept.push_back((vft, item));
+                }
+            }
+            lane.items = kept;
+        }
+        inner.len -= out.len();
+        out
+    }
+
     /// Terminal close: refuse future pushes and DROP the leftovers. The
     /// returned count is how many items were discarded (their `Drop`
     /// impls run here — the batcher's request guard resolves waiters).
@@ -259,6 +284,26 @@ mod tests {
         assert!(matches!(q.push("c", 1.0, 3), Err(PushError::Full(3))));
         q.try_pop().unwrap();
         q.push("c", 1.0, 3).ok().unwrap();
+    }
+
+    #[test]
+    fn sweep_removes_matches_and_keeps_lane_order() {
+        let q = FairQueue::new(16);
+        for i in 0..6 {
+            q.push("a", 1.0, i).ok().unwrap();
+        }
+        for i in 10..13 {
+            q.push("b", 1.0, i).ok().unwrap();
+        }
+        let mut swept = q.sweep(|v| v % 2 == 0);
+        swept.sort_unstable();
+        assert_eq!(swept, vec![0, 2, 4, 10, 12]);
+        assert_eq!(q.len(), 4);
+        // survivors still pop in fair order, per-lane FIFO preserved
+        let rest: Vec<_> = std::iter::from_fn(|| q.try_pop()).collect();
+        assert_eq!(rest, vec![1, 11, 3, 5]);
+        // a sweep matching nothing is a no-op
+        assert!(q.sweep(|_| false).is_empty());
     }
 
     #[test]

@@ -26,13 +26,17 @@
 //! never take this lock, so there is no deadlock.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread;
+use std::time::{Duration, Instant};
 
 use super::batcher::{BatcherClient, Control, DynamicBatcher};
+use super::breaker::{BreakerConfig, CircuitBreaker};
+use super::faults;
 use super::slot::{SubmitFuture, Ticket};
-use super::telemetry::BatcherStats;
+use super::telemetry::{BatcherStats, HealthState};
 use super::{LendingApply, ServeConfig, ServeError};
 use crate::compress::{
     CompressBudget, CompressConfig, GovernorAction, MemoryGovernor, TenantUsage,
@@ -40,6 +44,18 @@ use crate::compress::{
 use crate::config::HmxConfig;
 use crate::geometry::points::PointSet;
 use crate::hmatrix::{BuildStats, HMatrix, MatvecWorkspace};
+use crate::metrics::RECORDER;
+use crate::obs::{self, names};
+
+/// Recover a mutex guard even if another thread panicked while holding
+/// the lock. Registry state is a plain map plus counters — every write
+/// sequence leaves it structurally consistent — so inheriting a poisoned
+/// guard is strictly better than cascading the panic into every serving
+/// thread (the availability-first choice for a control plane whose whole
+/// job is surviving tenant failures).
+fn relock<'a, T>(m: &'a Mutex<T>) -> MutexGuard<'a, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
 
 /// Immutable facts about a registered operator, captured at build time.
 #[derive(Clone, Debug)]
@@ -140,11 +156,22 @@ impl LendingApply for HmatServeApply {
     }
 }
 
+/// Everything needed to rebuild a tenant's operator from scratch — the
+/// watchdog's respawn ticket, captured at registration.
+#[derive(Clone)]
+struct BuildRecipe {
+    points: PointSet,
+    cfg: HmxConfig,
+    serve_cfg: ServeConfig,
+}
+
 struct OperatorEntry {
     // owns the executor thread; dropped on `remove`/eviction for a
     // graceful drain (queued batches are still served)
     batcher: DynamicBatcher,
     meta: Arc<OperatorMeta>,
+    /// Respawn ticket: the supervisor rebuilds a dead tenant from this.
+    recipe: BuildRecipe,
     /// Live P-mode factor bytes (updated by governor recompressions).
     factor_bytes: usize,
     /// Milliseconds since the registry epoch of the last register/get —
@@ -157,12 +184,80 @@ struct OperatorEntry {
     seen_requests: u64,
     /// Set once a governor recompression stopped making progress.
     floored: bool,
+    /// Executor heartbeat last observed by [`OperatorRegistry::supervise`].
+    last_beat: u64,
+    /// When `last_beat` last CHANGED — frozen past the wedge timeout
+    /// with requests queued means the executor is stuck.
+    last_beat_at: Instant,
+}
+
+/// Supervision policy: when the watchdog declares an executor wedged,
+/// and how tenant rebuild attempts are circuit-broken.
+#[derive(Clone, Copy, Debug)]
+pub struct SupervisorConfig {
+    /// A live executor whose heartbeat has not advanced for this long
+    /// WHILE requests are queued is declared wedged (aborted and
+    /// respawned). Executors heartbeat every loop turn — at least once
+    /// per idle poll (~20 ms) — so anything above ~100 ms is safe from
+    /// false positives on an idle-but-healthy operator.
+    pub wedge_timeout: Duration,
+    /// Per-tenant rebuild breaker policy (exponential backoff between
+    /// failed rebuild attempts, single half-open probe).
+    pub breaker: BreakerConfig,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> Self {
+        SupervisorConfig {
+            wedge_timeout: Duration::from_secs(2),
+            breaker: BreakerConfig::default(),
+        }
+    }
+}
+
+/// Stop-on-drop handle for the registry's supervision thread (see
+/// [`OperatorRegistry::spawn_watchdog`]). Dropping it stops and joins
+/// the thread; the registry itself keeps working without one (callers
+/// may also drive [`OperatorRegistry::supervise`] manually).
+pub struct Watchdog {
+    stop: Arc<AtomicBool>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl Watchdog {
+    /// Stop the supervision thread and wait for it to exit.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Watchdog {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
 }
 
 /// Build-once/get-many table of served operators keyed by tenant/model id.
 pub struct OperatorRegistry {
     ops: Mutex<HashMap<String, OperatorEntry>>,
     governor: Option<MemoryGovernor>,
+    supervisor: SupervisorConfig,
+    /// Per-tenant rebuild breakers. Kept OUTSIDE the entries so the
+    /// failure history survives the entry's removal (the whole point:
+    /// a tenant that keeps failing to build has no entry to hang
+    /// state off).
+    breakers: Mutex<HashMap<String, CircuitBreaker>>,
+    /// Tenants the supervisor owes a rebuild (executor lost, or a
+    /// rebuild attempt was breaker-denied/failed). Retried every
+    /// [`OperatorRegistry::supervise`] pass.
+    pending: Mutex<HashMap<String, BuildRecipe>>,
     epoch: Instant,
 }
 
@@ -177,6 +272,9 @@ impl OperatorRegistry {
         OperatorRegistry {
             ops: Mutex::new(HashMap::new()),
             governor: None,
+            supervisor: SupervisorConfig::default(),
+            breakers: Mutex::new(HashMap::new()),
+            pending: Mutex::new(HashMap::new()),
             epoch: Instant::now(),
         }
     }
@@ -184,11 +282,13 @@ impl OperatorRegistry {
     /// A registry whose admissions are policed by `governor` (cross-tenant
     /// P-mode factor-byte ceiling; see [`crate::compress::governor`]).
     pub fn with_governor(governor: MemoryGovernor) -> Self {
-        OperatorRegistry {
-            ops: Mutex::new(HashMap::new()),
-            governor: Some(governor),
-            epoch: Instant::now(),
-        }
+        OperatorRegistry { governor: Some(governor), ..OperatorRegistry::new() }
+    }
+
+    /// Override the supervision policy (wedge timeout, breaker knobs).
+    pub fn with_supervisor(mut self, cfg: SupervisorConfig) -> Self {
+        self.supervisor = cfg;
+        self
     }
 
     pub fn governor(&self) -> Option<&MemoryGovernor> {
@@ -221,7 +321,10 @@ impl OperatorRegistry {
         // validate the points/config pairing here with typed errors;
         // inside HMatrix::build the same mismatches are asserts that
         // would unwind the executor thread and surface only as an opaque
-        // "executor thread died"
+        // "executor thread died". Validation runs BEFORE the breaker
+        // gate: a malformed request is the caller's bug, not evidence
+        // the tenant's build is broken, and must not burn the half-open
+        // probe.
         if n != cfg.n {
             return Err(ServeError::BadRequest(format!(
                 "points.len() = {n} does not match cfg.n = {}",
@@ -235,6 +338,48 @@ impl OperatorRegistry {
                 cfg.dim
             )));
         }
+        self.admit_build(id)?;
+        let recipe =
+            BuildRecipe { points: points.clone(), cfg: cfg.clone(), serve_cfg: serve_cfg.clone() };
+        let (batcher, meta) = match Self::spawn_operator(id, points, cfg, serve_cfg) {
+            Ok(built) => {
+                self.record_build_success(id);
+                built
+            }
+            Err(e) => {
+                self.record_build_failure(id);
+                return Err(e);
+            }
+        };
+        // a fresh registration supersedes any rebuild the supervisor owed
+        relock(&self.pending).remove(id);
+        let now = self.now_ms();
+        let mut ops = relock(&self.ops);
+        if let Some(entry) = ops.get_mut(id) {
+            // lost a same-id race: keep the first registration (dropping
+            // our batcher drains its executor gracefully)
+            entry.last_access = now;
+            return Ok(OperatorHandle {
+                client: entry.batcher.client(),
+                meta: Arc::clone(&entry.meta),
+            });
+        }
+        let handle = OperatorHandle { client: batcher.client(), meta: Arc::clone(&meta) };
+        ops.insert(id.to_string(), Self::make_entry(batcher, meta, recipe, now));
+        self.enforce_budget(&mut ops, id)?;
+        Ok(handle)
+    }
+
+    /// Build one operator on a fresh executor thread (the shared core of
+    /// [`OperatorRegistry::register`] and the supervisor's respawn path).
+    /// Runs entirely OUTSIDE the registry lock.
+    fn spawn_operator(
+        id: &str,
+        points: PointSet,
+        cfg: &HmxConfig,
+        serve_cfg: ServeConfig,
+    ) -> Result<(DynamicBatcher, Arc<OperatorMeta>), ServeError> {
+        let n = points.len();
         let warm_nrhs = serve_cfg.max_batch;
         let build_cfg = cfg.clone();
         // the H-matrix is built on the executor thread (engines are not
@@ -249,6 +394,11 @@ impl OperatorRegistry {
         // histograms and queue-depth/xbuf gauges carry the label in the
         // global metric registry
         let batcher = DynamicBatcher::spawn_apply(n, serve_cfg, id, move || {
+            // fault-injection hook (no-op without the feature): forced
+            // build/artifact-load failures exercise the breaker ladder
+            if let Some(e) = faults::build_fault(&meta_id) {
+                return Err(e);
+            }
             let h = HMatrix::build(points, &build_cfg)?;
             let _ = mtx.send(OperatorMeta {
                 id: meta_id,
@@ -263,32 +413,58 @@ impl OperatorRegistry {
             mrx.recv()
                 .map_err(|_| ServeError::Build("executor reported no metadata".into()))?,
         );
-        let now = self.now_ms();
-        let mut ops = self.ops.lock().unwrap();
-        if let Some(entry) = ops.get_mut(id) {
-            // lost a same-id race: keep the first registration (dropping
-            // our batcher drains its executor gracefully)
-            entry.last_access = now;
-            return Ok(OperatorHandle {
-                client: entry.batcher.client(),
-                meta: Arc::clone(&entry.meta),
-            });
-        }
-        let handle = OperatorHandle { client: batcher.client(), meta: Arc::clone(&meta) };
+        Ok((batcher, meta))
+    }
+
+    fn make_entry(
+        batcher: DynamicBatcher,
+        meta: Arc<OperatorMeta>,
+        recipe: BuildRecipe,
+        now: u64,
+    ) -> OperatorEntry {
         let factor_bytes = meta.build_stats.factor_bytes;
-        ops.insert(
-            id.to_string(),
-            OperatorEntry {
-                batcher,
-                meta,
-                factor_bytes,
-                last_access: now,
-                seen_requests: 0,
-                floored: false,
-            },
-        );
-        self.enforce_budget(&mut ops, id)?;
-        Ok(handle)
+        OperatorEntry {
+            batcher,
+            meta,
+            recipe,
+            factor_bytes,
+            last_access: now,
+            seen_requests: 0,
+            floored: false,
+            last_beat: 0,
+            last_beat_at: Instant::now(),
+        }
+    }
+
+    /// Breaker gate for `id`'s build. `Err(CircuitOpen)` fails fast; an
+    /// `Ok` admission (including the single half-open probe) MUST be
+    /// followed by [`OperatorRegistry::record_build_success`] or
+    /// [`OperatorRegistry::record_build_failure`].
+    fn admit_build(&self, id: &str) -> Result<(), ServeError> {
+        let mut breakers = relock(&self.breakers);
+        if let Some(b) = breakers.get_mut(id) {
+            if let Err(retry_in) = b.admit(Instant::now()) {
+                return Err(ServeError::CircuitOpen { retry_in });
+            }
+        }
+        Ok(())
+    }
+
+    fn record_build_success(&self, id: &str) {
+        if let Some(b) = relock(&self.breakers).get_mut(id) {
+            b.on_success();
+        }
+    }
+
+    fn record_build_failure(&self, id: &str) {
+        let mut breakers = relock(&self.breakers);
+        let b = breakers
+            .entry(id.to_string())
+            .or_insert_with(|| CircuitBreaker::new(self.supervisor.breaker));
+        if b.on_failure(Instant::now()) {
+            RECORDER.incr(names::SERVE_BREAKER_OPEN);
+            obs::counter_incr(names::SERVE_BREAKER_OPEN);
+        }
     }
 
     /// [`OperatorRegistry::register`] under its serving-loop name: returns
@@ -400,11 +576,161 @@ impl OperatorRegistry {
         }
     }
 
+    /// One supervision pass: detect dead or wedged executors, abort them
+    /// (parked requests resolve [`ServeError::ExecutorLost`], never
+    /// hang), and rebuild the casualties — plus any tenant owed a
+    /// rebuild from an earlier pass — through the per-tenant circuit
+    /// breakers. Returns how many tenants were respawned. Usually driven
+    /// by a [`Watchdog`] thread ([`OperatorRegistry::spawn_watchdog`]);
+    /// callers with their own maintenance loop may invoke it directly.
+    pub fn supervise(&self) -> usize {
+        let wedge_after = self.supervisor.wedge_timeout;
+        let mut casualties: Vec<(String, BuildRecipe)> = Vec::new();
+        {
+            let mut ops = relock(&self.ops);
+            let now = Instant::now();
+            let mut doomed = Vec::new();
+            for (id, e) in ops.iter_mut() {
+                let beat = e.batcher.heartbeat();
+                if beat != e.last_beat {
+                    e.last_beat = beat;
+                    e.last_beat_at = now;
+                }
+                // dead: the thread exited although the registry never
+                // asked it to shut down (a graceful drop removes the
+                // entry before joining, so anything found here is a
+                // corpse). Wedged: the heartbeat froze across the wedge
+                // window WHILE requests are queued — an idle executor
+                // beats every IDLE_POLL, so a frozen beat with work
+                // parked means the apply (or a fault stall) is stuck.
+                let dead = e.batcher.executor_finished();
+                let wedged = e.batcher.stats().queue_depth() > 0
+                    && now.duration_since(e.last_beat_at) >= wedge_after;
+                if dead || wedged {
+                    doomed.push(id.clone());
+                }
+            }
+            for id in doomed {
+                let mut e = ops.remove(&id).expect("doomed id was just seen");
+                e.batcher.abort_lost();
+                casualties.push((id, e.recipe.clone()));
+            }
+        }
+        {
+            let mut pending = relock(&self.pending);
+            for (id, recipe) in casualties {
+                pending.insert(id, recipe);
+            }
+        }
+        self.rebuild_pending()
+    }
+
+    /// Retry every owed rebuild through its breaker; returns the number
+    /// of tenants successfully respawned. Builds run outside the
+    /// registry lock, exactly like first-time registration.
+    fn rebuild_pending(&self) -> usize {
+        let work: Vec<(String, BuildRecipe)> = relock(&self.pending).drain().collect();
+        let mut restarted = 0;
+        for (id, recipe) in work {
+            // a fresh register() may have raced the respawn in; keep it
+            if self.get(&id).is_some() {
+                continue;
+            }
+            if self.admit_build(&id).is_err() {
+                // breaker still open: the debt carries to the next pass
+                relock(&self.pending).entry(id).or_insert(recipe);
+                continue;
+            }
+            match Self::spawn_operator(
+                &id,
+                recipe.points.clone(),
+                &recipe.cfg,
+                recipe.serve_cfg.clone(),
+            ) {
+                Ok((batcher, meta)) => {
+                    self.record_build_success(&id);
+                    let now = self.now_ms();
+                    let mut ops = relock(&self.ops);
+                    if ops.contains_key(&id) {
+                        continue; // raced: keep the earlier registration
+                    }
+                    ops.insert(id.clone(), Self::make_entry(batcher, meta, recipe, now));
+                    // budget failure removes the tenant again but must
+                    // not fail the pass — the other respawns still count
+                    let _ = self.enforce_budget(&mut ops, &id);
+                    drop(ops);
+                    RECORDER.incr(names::SERVE_EXECUTOR_RESTART);
+                    obs::counter_incr(names::SERVE_EXECUTOR_RESTART);
+                    restarted += 1;
+                }
+                Err(_) => {
+                    self.record_build_failure(&id);
+                    relock(&self.pending).insert(id, recipe);
+                }
+            }
+        }
+        restarted
+    }
+
+    /// Start a supervision thread calling [`OperatorRegistry::supervise`]
+    /// every `interval`. The returned [`Watchdog`] stops and joins the
+    /// thread on drop; it holds only a weak reference, so it never keeps
+    /// a discarded registry alive.
+    pub fn spawn_watchdog(self: &Arc<Self>, interval: Duration) -> Watchdog {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_w = Arc::clone(&stop);
+        let registry = Arc::downgrade(self);
+        let handle = thread::Builder::new()
+            .name("hmx-serve-watchdog".to_string())
+            .spawn(move || {
+                while !stop_w.load(Ordering::Acquire) {
+                    let Some(reg) = registry.upgrade() else { return };
+                    reg.supervise();
+                    drop(reg);
+                    // chunked sleep: Watchdog::drop never waits out a
+                    // long interval
+                    let mut left = interval;
+                    while !stop_w.load(Ordering::Acquire) && left > Duration::ZERO {
+                        let nap = left.min(Duration::from_millis(20));
+                        thread::sleep(nap);
+                        left = left.saturating_sub(nap);
+                    }
+                }
+            })
+            .expect("failed to spawn the serve watchdog thread");
+        Watchdog { stop, handle: Some(handle) }
+    }
+
+    /// The registry-wide health band: the worst per-tenant state (driven
+    /// by queue-depth watermarks) folded with governor byte pressure —
+    /// above the soft limit is [`HealthState::Degraded`], above the hard
+    /// budget [`HealthState::BrownOut`]. Exported as the
+    /// `(serve.health, tenant="")` aggregate gauge by
+    /// [`OperatorRegistry::observe`].
+    pub fn health(&self) -> HealthState {
+        let mut health = HealthState::Ok;
+        let total: usize = {
+            let ops = relock(&self.ops);
+            for e in ops.values() {
+                health = health.max(e.batcher.stats().health());
+            }
+            ops.values().map(|e| e.factor_bytes).sum()
+        };
+        if let Some(gov) = &self.governor {
+            if total > gov.cfg.budget_bytes {
+                health = health.max(HealthState::BrownOut);
+            } else if total > gov.cfg.soft_limit_bytes() {
+                health = health.max(HealthState::Degraded);
+            }
+        }
+        health
+    }
+
     /// A handle for a registered operator, if present (refreshes the
     /// tenant's LRU stamp).
     pub fn get(&self, id: &str) -> Option<OperatorHandle> {
         let now = self.now_ms();
-        let mut ops = self.ops.lock().unwrap();
+        let mut ops = relock(&self.ops);
         ops.get_mut(id).map(|entry| {
             entry.last_access = now;
             OperatorHandle {
@@ -422,7 +748,7 @@ impl OperatorRegistry {
 
     /// Registered ids, sorted.
     pub fn ids(&self) -> Vec<String> {
-        let ops = self.ops.lock().unwrap();
+        let ops = relock(&self.ops);
         let mut v: Vec<String> = ops.keys().cloned().collect();
         v.sort();
         v
@@ -431,34 +757,39 @@ impl OperatorRegistry {
     /// Summed live P-mode factor bytes across tenants — the quantity the
     /// governor budgets.
     pub fn factor_bytes(&self) -> usize {
-        self.ops.lock().unwrap().values().map(|e| e.factor_bytes).sum()
+        relock(&self.ops).values().map(|e| e.factor_bytes).sum()
     }
 
     /// Drop `id`'s operator: its executor drains the queued backlog and
     /// exits; outstanding handles then fail with [`ServeError::Shutdown`].
-    /// Returns whether the id existed.
+    /// Returns whether the id existed. Also forgives any rebuild debt
+    /// the supervisor held for the id — an explicit remove is a
+    /// statement the tenant should stay gone.
     pub fn remove(&self, id: &str) -> bool {
-        let entry = { self.ops.lock().unwrap().remove(id) };
+        relock(&self.pending).remove(id);
+        let entry = { relock(&self.ops).remove(id) };
         entry.is_some()
     }
 
     pub fn len(&self) -> usize {
-        self.ops.lock().unwrap().len()
+        relock(&self.ops).len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.ops.lock().unwrap().is_empty()
+        relock(&self.ops).is_empty()
     }
 
     /// A merged [`crate::obs::MetricsSnapshot`] of every metric in the
     /// process — per-tenant `serve.*` histogram series (labeled with the
     /// operator ids registered here), governor counters, solver and
-    /// construction phases. Refreshes the governor's byte gauge first so
-    /// the snapshot reflects the live registry footprint.
+    /// construction phases. Refreshes the governor's byte gauge and the
+    /// registry-aggregate `serve.health` gauge first so the snapshot
+    /// reflects the live registry footprint and health band.
     pub fn observe(&self) -> crate::obs::MetricsSnapshot {
         if let Some(gov) = &self.governor {
             gov.record_bytes(self.factor_bytes());
         }
+        obs::gauge_set(names::SERVE_HEALTH, self.health() as u8 as f64);
         crate::obs::MetricsSnapshot::capture()
     }
 }

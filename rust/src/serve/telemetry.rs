@@ -11,11 +11,48 @@
 //! the flat [`crate::metrics::RECORDER`] phases by the batcher so
 //! `hmx phases` keeps working.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
 use crate::obs::{self, names, GaugeHandle, Histogram};
+
+/// The serving health ladder, exported as the `serve.health` gauge
+/// (`0/1/2`). Per-tenant states are driven by queue-depth watermarks
+/// ([`crate::serve::BrownoutConfig`]); the registry aggregate
+/// additionally folds in governor byte pressure. Ordered so the
+/// registry can take a `max` across tenants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum HealthState {
+    /// Serving normally.
+    Ok = 0,
+    /// Above the degraded watermark: latency is suffering, nothing is
+    /// shed yet — the early-warning band.
+    Degraded = 1,
+    /// Above the brown-out watermark: low-weight lanes are shed and the
+    /// governor tightens compression on live tenants.
+    BrownOut = 2,
+}
+
+impl HealthState {
+    fn from_u8(v: u8) -> HealthState {
+        match v {
+            2 => HealthState::BrownOut,
+            1 => HealthState::Degraded,
+            _ => HealthState::Ok,
+        }
+    }
+}
+
+impl std::fmt::Display for HealthState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HealthState::Ok => write!(f, "Ok"),
+            HealthState::Degraded => write!(f, "Degraded"),
+            HealthState::BrownOut => write!(f, "BrownOut"),
+        }
+    }
+}
 
 /// Counters for one [`crate::serve::DynamicBatcher`]. All methods are
 /// thread-safe; clients update the submit side while the executor thread
@@ -48,6 +85,20 @@ pub struct BatcherStats {
     xbuf_bytes: AtomicU64,
     /// Mirrors `xbuf_bytes` into the labeled global gauge.
     xbuf_gauge: GaugeHandle,
+    /// Requests resolved with `DeadlineExceeded` (expired at submit or
+    /// swept from the queue before a flush).
+    deadline_expired: AtomicU64,
+    /// Submissions shed from low-weight lanes during a brown-out.
+    brownout_shed: AtomicU64,
+    /// Current [`HealthState`] as its discriminant.
+    health: AtomicU8,
+    /// Mirrors `health` into the labeled `serve.health` gauge.
+    health_gauge: GaugeHandle,
+    /// Queue depth at which health degrades (`u64::MAX` = never, the
+    /// no-brownout default).
+    degraded_depth: AtomicU64,
+    /// Queue depth at which health browns out (`u64::MAX` = never).
+    brownout_depth: AtomicU64,
 }
 
 /// The per-tenant `serve.wait` histogram series for one fair-queue lane,
@@ -90,7 +141,71 @@ impl BatcherStats {
             depth_gauge: obs::gauge_handle(names::SERVE_QUEUE_DEPTH, label),
             xbuf_bytes: AtomicU64::new(0),
             xbuf_gauge: obs::gauge_handle(names::SERVE_XBUF_BYTES, label),
+            deadline_expired: AtomicU64::new(0),
+            brownout_shed: AtomicU64::new(0),
+            health: AtomicU8::new(HealthState::Ok as u8),
+            health_gauge: obs::gauge_handle(names::SERVE_HEALTH, label),
+            degraded_depth: AtomicU64::new(u64::MAX),
+            brownout_depth: AtomicU64::new(u64::MAX),
         }
+    }
+
+    /// Arm the brown-out watermarks (absolute queue depths, already
+    /// resolved from the config's capacity fractions). Called once at
+    /// spawn; before this the health state is pinned at `Ok`.
+    pub(crate) fn set_brownout_depths(&self, degraded: u64, brownout: u64) {
+        self.degraded_depth.store(degraded.max(1), Ordering::Relaxed);
+        self.brownout_depth.store(brownout.max(1), Ordering::Relaxed);
+        self.health_gauge.set(HealthState::Ok as u8 as f64);
+    }
+
+    /// Re-derive the health state from the current queue depth. Called
+    /// on both edges (submit and dequeue) so the state recovers on its
+    /// own as the backlog drains. Returns the state in force.
+    fn update_health(&self, depth: u64) -> HealthState {
+        let state = if depth >= self.brownout_depth.load(Ordering::Relaxed) {
+            HealthState::BrownOut
+        } else if depth >= self.degraded_depth.load(Ordering::Relaxed) {
+            HealthState::Degraded
+        } else {
+            HealthState::Ok
+        };
+        let prev = self.health.swap(state as u8, Ordering::Relaxed);
+        if prev != state as u8 {
+            self.health_gauge.set(state as u8 as f64);
+        }
+        state
+    }
+
+    /// The tenant's current health band (driven by queue depth against
+    /// the [`crate::serve::BrownoutConfig`] watermarks).
+    pub fn health(&self) -> HealthState {
+        HealthState::from_u8(self.health.load(Ordering::Relaxed))
+    }
+
+    /// One request resolved `DeadlineExceeded` (also mirrored into the
+    /// global `serve.deadline_expired` counter).
+    pub(crate) fn record_deadline_expired(&self) {
+        self.deadline_expired.fetch_add(1, Ordering::Relaxed);
+        crate::metrics::RECORDER.incr(names::SERVE_DEADLINE_EXPIRED);
+        obs::counter_incr(names::SERVE_DEADLINE_EXPIRED);
+    }
+
+    /// One submission shed from a low-weight lane during a brown-out
+    /// (also mirrored into the global `serve.brownout_shed` counter).
+    pub(crate) fn record_brownout_shed(&self) {
+        self.brownout_shed.fetch_add(1, Ordering::Relaxed);
+        self.shed.fetch_add(1, Ordering::Relaxed);
+        crate::metrics::RECORDER.incr(names::SERVE_BROWNOUT_SHED);
+        obs::counter_incr(names::SERVE_BROWNOUT_SHED);
+    }
+
+    pub fn deadline_expired(&self) -> u64 {
+        self.deadline_expired.load(Ordering::Relaxed)
+    }
+
+    pub fn brownout_shed(&self) -> u64 {
+        self.brownout_shed.load(Ordering::Relaxed)
     }
 
     /// Client side: called *before* the queue send so the depth gauge can
@@ -101,6 +216,7 @@ impl BatcherStats {
         self.requests.fetch_add(1, Ordering::Relaxed);
         let depth = self.queue_depth.fetch_add(1, Ordering::Relaxed) + 1;
         self.depth_gauge.set(depth as f64);
+        self.update_health(depth);
         depth
     }
 
@@ -117,7 +233,9 @@ impl BatcherStats {
     /// failed send (counts the shed when the queue was full).
     pub(crate) fn record_unsubmit(&self, was_full: bool) {
         saturating_dec(&self.requests);
-        self.depth_gauge.set(saturating_dec(&self.queue_depth) as f64);
+        let depth = saturating_dec(&self.queue_depth);
+        self.depth_gauge.set(depth as f64);
+        self.update_health(depth);
         if was_full {
             self.shed.fetch_add(1, Ordering::Relaxed);
         }
@@ -125,7 +243,9 @@ impl BatcherStats {
 
     /// Executor side: one request taken off the queue.
     pub(crate) fn record_dequeue(&self) {
-        self.depth_gauge.set(saturating_dec(&self.queue_depth) as f64);
+        let depth = saturating_dec(&self.queue_depth);
+        self.depth_gauge.set(depth as f64);
+        self.update_health(depth);
     }
 
     /// Executor side: the input slab's current capacity in bytes (after
@@ -214,6 +334,9 @@ impl BatcherStats {
             mean_occupancy: self.mean_occupancy(),
             queue_depth: self.queue_depth(),
             max_queue_depth: self.max_queue_depth(),
+            deadline_expired: self.deadline_expired(),
+            brownout_shed: self.brownout_shed(),
+            health: self.health(),
             wait_p50: Duration::from_nanos(wait.quantile(0.50)),
             wait_p99: Duration::from_nanos(wait.quantile(0.99)),
             apply_p50: Duration::from_nanos(apply.quantile(0.50)),
@@ -234,6 +357,9 @@ impl BatcherStats {
         self.batched_requests.store(0, Ordering::Relaxed);
         self.queue_depth.store(0, Ordering::Relaxed);
         self.max_queue_depth.store(0, Ordering::Relaxed);
+        self.deadline_expired.store(0, Ordering::Relaxed);
+        self.brownout_shed.store(0, Ordering::Relaxed);
+        self.update_health(0);
         self.wait.clear();
         self.apply.clear();
         self.occupancy.clear();
@@ -265,6 +391,13 @@ pub struct ServeSnapshot {
     pub mean_occupancy: f64,
     pub queue_depth: u64,
     pub max_queue_depth: u64,
+    /// Requests resolved `DeadlineExceeded` instead of being served.
+    pub deadline_expired: u64,
+    /// Submissions shed from low-weight lanes during a brown-out
+    /// (included in `shed` too).
+    pub brownout_shed: u64,
+    /// The health band at capture time.
+    pub health: HealthState,
     pub wait_p50: Duration,
     pub wait_p99: Duration,
     pub apply_p50: Duration,
@@ -275,13 +408,15 @@ impl std::fmt::Display for ServeSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "requests={} shed={} batches={} occupancy={:.2} max_queue={} \
-             wait p50/p99 {:.3}/{:.3} ms, apply p50/p99 {:.3}/{:.3} ms",
+            "requests={} shed={} batches={} occupancy={:.2} max_queue={} health={} \
+             expired={} wait p50/p99 {:.3}/{:.3} ms, apply p50/p99 {:.3}/{:.3} ms",
             self.requests,
             self.shed,
             self.batches,
             self.mean_occupancy,
             self.max_queue_depth,
+            self.health,
+            self.deadline_expired,
             self.wait_p50.as_secs_f64() * 1e3,
             self.wait_p99.as_secs_f64() * 1e3,
             self.apply_p50.as_secs_f64() * 1e3,
@@ -332,6 +467,32 @@ mod tests {
         assert_eq!(s.requests(), 0);
         assert_eq!(s.mean_occupancy(), 0.0);
         assert_eq!(s.wait_quantile(0.5), Duration::ZERO);
+    }
+
+    #[test]
+    fn health_follows_queue_depth_watermarks() {
+        let s = BatcherStats::new();
+        assert_eq!(s.health(), HealthState::Ok);
+        // unarmed watermarks: any depth stays Ok
+        for _ in 0..10 {
+            let d = s.record_submit();
+            s.record_enqueued(d);
+        }
+        assert_eq!(s.health(), HealthState::Ok);
+        s.set_brownout_depths(4, 8);
+        let d = s.record_submit(); // depth 11 >= 8 → BrownOut
+        s.record_enqueued(d);
+        assert_eq!(s.health(), HealthState::BrownOut);
+        for _ in 0..5 {
+            s.record_dequeue(); // depth 6: below 8, at/above 4 → Degraded
+        }
+        assert_eq!(s.health(), HealthState::Degraded);
+        for _ in 0..6 {
+            s.record_dequeue(); // drained → Ok again
+        }
+        assert_eq!(s.health(), HealthState::Ok);
+        assert!(HealthState::Ok < HealthState::Degraded);
+        assert!(HealthState::Degraded < HealthState::BrownOut);
     }
 
     #[test]

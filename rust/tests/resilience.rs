@@ -1,0 +1,356 @@
+//! Resilience integration tests: supervision, deadlines, brown-out and —
+//! behind the `fault-injection` feature — the chaos suite that kills,
+//! wedges and build-fails executors on purpose.
+//!
+//! The ungated tests assert the no-fault invariants: supervision is a
+//! no-op on healthy tenants, deadline plumbing reaches clients derived
+//! from registry handles, and the health gauge is exported. The gated
+//! `chaos` module is the ISSUE's acceptance suite: a forced executor
+//! death during a 200-request async burst must leave zero hung futures
+//! and serve bit-exact after the watchdog rebuilds the tenant.
+
+use hmx::config::HmxConfig;
+use hmx::obs::names;
+use hmx::prelude::*;
+use hmx::util::prng::Xoshiro256;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+// c_leaf 32 keeps the block tree deep enough for admissible blocks at
+// these sizes (same fixture rationale as the registry unit tests).
+fn test_cfg(n: usize) -> HmxConfig {
+    HmxConfig { n, dim: 2, c_leaf: 32, k: 12, ..HmxConfig::default() }
+}
+
+fn column(seed: u64, n: usize) -> Vec<f64> {
+    Xoshiro256::seed(seed).vector(n)
+}
+
+use hmx::util::rel_err;
+
+/// A healthy registry under a watchdog: supervision passes find nothing
+/// to do, handles keep serving across them, and the aggregate health
+/// gauge exports as `(serve.health, tenant="")`.
+#[test]
+fn supervision_is_a_no_op_on_healthy_tenants() {
+    let cfg = test_cfg(256);
+    let reg = Arc::new(OperatorRegistry::new());
+    let h = reg
+        .register("steady", PointSet::halton(cfg.n, cfg.dim), &cfg, ServeConfig::default())
+        .unwrap();
+    let watchdog = reg.spawn_watchdog(Duration::from_millis(10));
+    let x = column(11, cfg.n);
+    let before = h.matvec(&x).unwrap();
+    // several supervision intervals pass while the tenant keeps serving
+    // (tolerance, not bit-equality: the H-matrix accumulates atomically)
+    for _ in 0..5 {
+        std::thread::sleep(Duration::from_millis(12));
+        let again = h.matvec(&x).unwrap();
+        let err = rel_err(&again, &before);
+        assert!(err < 1e-12, "serving drifted across supervision passes: {err}");
+    }
+    assert_eq!(reg.supervise(), 0, "a healthy tenant must never be respawned");
+    assert_eq!(reg.health(), HealthState::Ok);
+    let snap = reg.observe();
+    let health = snap
+        .gauges
+        .iter()
+        .find(|(name, tenant, _)| name == names::SERVE_HEALTH && tenant.is_empty())
+        .expect("registry-aggregate serve.health gauge");
+    assert_eq!(health.2, HealthState::Ok as u8 as f64);
+    watchdog.stop();
+    // the same handle still serves after the watchdog is gone
+    assert!(rel_err(&h.matvec(&x).unwrap(), &before) < 1e-12);
+}
+
+/// Deadline plumbing end to end through a registry handle: an
+/// already-expired deadline fast-fails at submit, a `with_deadline`
+/// client stamps every submission, and a generous deadline is served.
+#[test]
+fn deadlines_flow_through_registry_handles() {
+    let cfg = test_cfg(256);
+    let reg = OperatorRegistry::new();
+    let h = reg
+        .register("deadlined", PointSet::halton(cfg.n, cfg.dim), &cfg, ServeConfig::default())
+        .unwrap();
+    let client = h.client();
+    let past = Instant::now() - Duration::from_millis(1);
+    let err = client.submit_with_deadline(column(1, cfg.n), Some(past)).unwrap_err();
+    assert_eq!(err, ServeError::DeadlineExceeded);
+    assert_eq!(h.stats().deadline_expired(), 1);
+    // a zero relative deadline is expired by the time submit inspects it
+    let zero = client.clone().with_deadline(Duration::ZERO);
+    assert_eq!(zero.submit(column(2, cfg.n)).unwrap_err(), ServeError::DeadlineExceeded);
+    // a generous deadline never fires on an idle executor
+    let lax = client.with_deadline(Duration::from_secs(30));
+    let y = lax.submit(column(3, cfg.n)).unwrap().wait().unwrap();
+    assert_eq!(y.len(), cfg.n);
+    assert_eq!(h.stats().deadline_expired(), 2);
+}
+
+/// `ServeError` is a real `std::error::Error` with operator-readable
+/// messages for the supervision-era variants.
+#[test]
+fn serve_errors_render_and_chain_as_std_errors() {
+    let boxed: Box<dyn std::error::Error> = Box::new(ServeError::ExecutorLost);
+    assert!(boxed.to_string().contains("executor lost"));
+    assert!(ServeError::DeadlineExceeded.to_string().contains("deadline"));
+    let open = ServeError::CircuitOpen { retry_in: Duration::from_millis(250) };
+    assert!(open.to_string().contains("0.250s"), "{open}");
+    let panicked = ServeError::ApplyPanicked("index out of bounds: the len is 3".into());
+    assert!(
+        panicked.to_string().contains("index out of bounds: the len is 3"),
+        "original panic payload must survive verbatim"
+    );
+}
+
+#[cfg(feature = "fault-injection")]
+mod chaos {
+    use super::*;
+    use hmx::hmatrix::HMatrix;
+    use hmx::metrics::RECORDER;
+    use hmx::serve::{faults, FaultPlan};
+    use std::sync::Mutex;
+
+    /// The installed fault plan is process-global; chaos tests take this
+    /// lock so parallel test threads cannot clobber each other's plans.
+    static SERIAL: Mutex<()> = Mutex::new(());
+
+    /// The ISSUE's acceptance test: the executor is killed mid-burst
+    /// (flush 2 of 200 async requests). Every future must resolve — a
+    /// served column bit-matches the direct matvec, an abandoned one
+    /// carries a typed error, none hang — and after the supervisor
+    /// rebuilds the tenant a fresh handle serves bit-exact again.
+    #[test]
+    fn killed_executor_mid_burst_leaves_no_hung_futures_and_respawns() {
+        let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+        let cfg = test_cfg(256);
+        let pts = PointSet::halton(cfg.n, cfg.dim);
+        let reference = HMatrix::build(pts.clone(), &cfg).unwrap();
+        let reg = OperatorRegistry::new();
+        FaultPlan::seeded(7).kill_executor("chaos", 2).install();
+        let serve_cfg = ServeConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            queue_capacity: 512,
+            ..ServeConfig::default()
+        };
+        let handle = reg.register("chaos", pts, &cfg, serve_cfg).unwrap();
+        let mut futures = Vec::new();
+        let mut failed_at_submit = 0usize;
+        for r in 0..200u64 {
+            match handle.submit_async(column(3000 + r, cfg.n)) {
+                Ok(f) => futures.push((3000 + r, f)),
+                // the death can race the tail of the burst: a fast-fail
+                // at submit is a resolved request, not a hung one
+                Err(ServeError::ExecutorLost) | Err(ServeError::Shutdown) => {
+                    failed_at_submit += 1
+                }
+                Err(e) => panic!("unexpected submit error: {e}"),
+            }
+        }
+        // supervise until the death is detected and the tenant respawned.
+        // The plan stays installed until then — clearing it earlier could
+        // race the executor's own flush-2 fault query and defuse the kill.
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            if reg.supervise() >= 1 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "supervisor never detected the killed executor");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // the replacement's flush counter restarts at 0 and it has served
+        // no traffic yet, so clearing HERE guarantees it never reaches a
+        // kill-armed flush 2
+        faults::clear();
+        // zero hung futures: every one of the 200 resolves right now —
+        // flushes 0 and 1 were served before the kill, everything else
+        // was failed over by the drop guards / queue close
+        let mut served = 0usize;
+        let mut lost = 0usize;
+        for (seed, f) in futures {
+            match hmx::serve::block_on(f) {
+                Ok(y) => {
+                    let direct = reference.matvec(&column(seed, cfg.n)).unwrap();
+                    let err = rel_err(&y, &direct);
+                    assert!(err < 1e-12, "seed {seed}: pre-kill serving diverged: {err}");
+                    served += 1;
+                }
+                Err(ServeError::ExecutorLost) | Err(ServeError::Shutdown) => lost += 1,
+                Err(e) => panic!("seed {seed}: unexpected error {e}"),
+            }
+        }
+        assert_eq!(served + lost + failed_at_submit, 200);
+        assert!(lost > 0, "a kill at flush 2 of a 200-burst must strand requests");
+        // the respawned operator serves bit-exact through a FRESH handle
+        let rebuilt = reg.get("chaos").expect("supervisor must have re-registered the tenant");
+        for seed in [9001u64, 9002, 9003] {
+            let x = column(seed, cfg.n);
+            let y = rebuilt.matvec(&x).unwrap();
+            let err = rel_err(&y, &reference.matvec(&x).unwrap());
+            assert!(err < 1e-12, "post-rebuild serving diverged: {err}");
+        }
+        assert!(RECORDER.count(names::SERVE_EXECUTOR_RESTART) >= 1);
+        let snap = reg.observe();
+        assert!(
+            snap.gauges.iter().any(|(n, t, _)| n == names::SERVE_HEALTH && t.is_empty()),
+            "serve.health must be visible in the observe() snapshot"
+        );
+        assert!(
+            snap.counters
+                .iter()
+                .any(|(n, _, v)| n == names::SERVE_EXECUTOR_RESTART && *v >= 1),
+            "serve.executor_restart must be visible in the observe() snapshot"
+        );
+    }
+
+    /// A stalled executor loop (frozen heartbeat, work queued behind it)
+    /// is declared wedged and replaced; the parked requests resolve
+    /// `ExecutorLost` instead of waiting out the stall.
+    #[test]
+    fn wedged_executor_is_detected_and_replaced() {
+        let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+        let cfg = test_cfg(256);
+        let pts = PointSet::halton(cfg.n, cfg.dim);
+        let reg = OperatorRegistry::new().with_supervisor(hmx::serve::SupervisorConfig {
+            wedge_timeout: Duration::from_millis(100),
+            breaker: BreakerConfig::default(),
+        });
+        FaultPlan::seeded(5)
+            .stall_queue("wedgy", 0, Duration::from_secs(4))
+            .install();
+        let serve_cfg = ServeConfig {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+            queue_capacity: 64,
+            ..ServeConfig::default()
+        };
+        let handle = reg.register("wedgy", pts, &cfg, serve_cfg).unwrap();
+        let stalled = handle.submit(column(1, cfg.n)).unwrap();
+        // wait until the executor has POPPED the request — the very next
+        // thing it does is query the fault plan and enter the stall
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while handle.stats().queue_depth() > 0 {
+            assert!(Instant::now() < deadline, "executor never picked the request up");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // park two more requests BEHIND the stalled flush: wedge
+        // detection requires a frozen heartbeat WITH work queued
+        let parked: Vec<_> =
+            (0..2).map(|i| handle.submit_async(column(10 + i, cfg.n)).unwrap()).collect();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            if reg.supervise() >= 1 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "supervisor never declared the stall a wedge");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // cleared only now: the stall spec targets flush 0, and the
+        // replacement executor serves nothing before this point
+        faults::clear();
+        for f in parked {
+            assert_eq!(hmx::serve::block_on(f).unwrap_err(), ServeError::ExecutorLost);
+        }
+        // the replacement serves immediately — no waiting out the stall
+        let t0 = Instant::now();
+        let rebuilt = reg.get("wedgy").expect("wedged tenant must be respawned");
+        rebuilt.matvec(&column(2, cfg.n)).unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_secs(3),
+            "serving had to wait for the zombie's stall to end"
+        );
+        // the detached zombie eventually wakes and completes its batch —
+        // its in-hand request resolves Ok (first-writer-wins, nobody
+        // else ever wrote the slot), proving the late write is harmless
+        let y = stalled.wait().unwrap();
+        assert_eq!(y.len(), cfg.n);
+    }
+
+    /// Forced build failures trip the per-tenant rebuild breaker: the
+    /// second register fast-fails `CircuitOpen` without burning a build,
+    /// the half-open probe after the backoff consumes the next forced
+    /// failure (backoff grows), and once the fault budget is spent the
+    /// tenant builds and serves again.
+    #[test]
+    fn build_failures_trip_the_breaker_and_recovery_closes_it() {
+        let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+        let cfg = test_cfg(256);
+        let reg = OperatorRegistry::new().with_supervisor(hmx::serve::SupervisorConfig {
+            wedge_timeout: Duration::from_secs(2),
+            breaker: BreakerConfig {
+                // generous backoffs: the "immediately" re-registers below
+                // must land inside the open window even on a loaded CI box
+                failures_to_open: 1,
+                initial_backoff: Duration::from_millis(200),
+                multiplier: 2.0,
+                max_backoff: Duration::from_secs(2),
+            },
+        });
+        FaultPlan::seeded(3).fail_builds("flaky", 2).install();
+        let pts = || PointSet::halton(cfg.n, cfg.dim);
+        let serve = ServeConfig::default;
+        // attempt 1: the injected failure comes back typed and trips the
+        // breaker (1 failure to open)
+        let e1 = reg.register("flaky", pts(), &cfg, serve()).unwrap_err();
+        assert!(
+            matches!(&e1, ServeError::Build(m) if m.contains(faults::INJECTED)),
+            "{e1}"
+        );
+        // attempt 2, immediately: fast-fail without consuming a build
+        let e2 = reg.register("flaky", pts(), &cfg, serve()).unwrap_err();
+        assert!(matches!(e2, ServeError::CircuitOpen { .. }), "{e2}");
+        // after the backoff the half-open probe runs — and burns the
+        // second forced failure, growing the backoff to 400 ms
+        std::thread::sleep(Duration::from_millis(300));
+        let e3 = reg.register("flaky", pts(), &cfg, serve()).unwrap_err();
+        assert!(matches!(&e3, ServeError::Build(m) if m.contains(faults::INJECTED)), "{e3}");
+        let e4 = reg.register("flaky", pts(), &cfg, serve()).unwrap_err();
+        assert!(matches!(e4, ServeError::CircuitOpen { .. }), "{e4}");
+        // fault budget exhausted: once the grown backoff passes, the
+        // probe succeeds and the breaker closes
+        std::thread::sleep(Duration::from_millis(500));
+        let h = reg.register("flaky", pts(), &cfg, serve()).unwrap();
+        assert_eq!(h.matvec(&column(4, cfg.n)).unwrap().len(), cfg.n);
+        assert!(RECORDER.count(names::SERVE_BREAKER_OPEN) >= 1);
+        faults::clear();
+        // a later register is the plain build-once fast path again
+        let again = reg.register("flaky", pts(), &cfg, serve()).unwrap();
+        assert!(Arc::ptr_eq(&again.stats(), &h.stats()), "same live operator");
+    }
+
+    /// Injected apply panics exercise the `catch_unwind` containment:
+    /// the batch resolves `ApplyPanicked` carrying the injected payload
+    /// text, and the executor keeps serving later flushes.
+    #[test]
+    fn injected_apply_panic_is_contained_and_typed() {
+        let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+        let cfg = test_cfg(256);
+        let pts = PointSet::halton(cfg.n, cfg.dim);
+        let reference = HMatrix::build(pts.clone(), &cfg).unwrap();
+        let reg = OperatorRegistry::new();
+        FaultPlan::seeded(9).panic_apply("panicky", 0).install();
+        let serve_cfg = ServeConfig {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+            queue_capacity: 16,
+            ..ServeConfig::default()
+        };
+        let handle = reg.register("panicky", pts, &cfg, serve_cfg).unwrap();
+        let err = handle.matvec(&column(1, cfg.n)).unwrap_err();
+        match err {
+            ServeError::ApplyPanicked(m) => {
+                assert!(m.contains(faults::INJECTED), "payload must name the injection: {m}")
+            }
+            other => panic!("expected ApplyPanicked, got {other}"),
+        }
+        faults::clear();
+        // flush 1 and beyond serve normally on the SAME executor
+        let x = column(2, cfg.n);
+        let y = handle.matvec(&x).unwrap();
+        let e = rel_err(&y, &reference.matvec(&x).unwrap());
+        assert!(e < 1e-12, "post-panic serving diverged: {e}");
+        assert_eq!(reg.supervise(), 0, "a contained panic must not look like a dead executor");
+    }
+}

@@ -153,6 +153,7 @@ fn padded_fixed_width_applies_match_unpadded_exactly() {
         max_wait: Duration::from_millis(1),
         queue_capacity: 1024,
         pad_widths: Some(vec![8]),
+        ..ServeConfig::default()
     };
     let recorder_widths = Arc::clone(&widths);
     let batcher = DynamicBatcher::spawn_apply(n, cfg, "pad-prop", move || {
@@ -202,6 +203,7 @@ fn padded_hmatrix_serving_matches_direct_apply() {
         max_wait: Duration::from_millis(1),
         queue_capacity: 256,
         pad_widths: Some(vec![4, 8]),
+        ..ServeConfig::default()
     };
     let registry = OperatorRegistry::new();
     let handle = registry.register("pad-hmat", pts, &cfg, serve_cfg).unwrap();
