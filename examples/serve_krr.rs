@@ -19,7 +19,14 @@
 //! Run:  cargo run --release --example serve_krr -- \
 //!           [--n 4096] [--tenants 2] [--q 4] [--clients 4] [--requests 8] \
 //!           [--sigma2 1e-3] [--max-batch 32] [--max-wait-ms 5] [--max-iter 100] \
-//!           [--budget-mb MB] [--deadline-ms MS]
+//!           [--budget-mb MB] [--deadline-ms MS] [--trace-out PATH] \
+//!           [--slo-p99-ms MS] [--slo-window-s S] [--slo-budget FRAC]
+//!
+//! Every tenant gets a declarative latency SLO (p99 target, window, error
+//! budget); the end-of-run `registry.observe()` reports each tenant's
+//! error-budget burn rate. With `--trace-out` the Chrome trace carries
+//! request-scoped flow links: each predict reads as one connected
+//! submit → queue → apply → scatter timeline across threads.
 //!
 //! With `--budget-mb` the registry runs under a `MemoryGovernor`: tenant
 //! admissions must fit the cross-tenant P-mode factor-byte ceiling, with
@@ -33,6 +40,8 @@
 //! instead of riding a stale backlog.
 
 use hmx::config::{HmxConfig, KernelKind};
+use hmx::obs::names;
+use hmx::obs::slo::SloConfig;
 use hmx::prelude::*;
 use hmx::util::cli::Args;
 use hmx::util::prng::Xoshiro256;
@@ -151,6 +160,22 @@ fn main() -> anyhow::Result<()> {
             handle.meta().build_stats.factor_bytes,
             registry.factor_bytes(),
             t0.elapsed()
+        );
+        // declarative latency SLO: every registry.observe() differentials
+        // the tenant's serve.latency series into error-budget burn-rate
+        // gauges, and sustained burn raises the tenant's health floor
+        // (brown-out shedding driven by the SLO, not just queue depth)
+        let slo = SloConfig {
+            p99_target: Duration::from_millis(args.get("slo-p99-ms", 250u64)),
+            window: Duration::from_secs(args.get("slo-window-s", 60u64)),
+            error_budget: args.get("slo-budget", 0.05f64),
+        };
+        registry.set_slo(&id, slo).expect("SLO config rejected");
+        println!(
+            "[{id}] slo: p99 <= {:?} over {:?} (error budget {:.1}%)",
+            slo.p99_target,
+            slo.window,
+            slo.error_budget * 100.0
         );
 
         // --- q noisy target channels over the shared inputs ---
@@ -294,6 +319,24 @@ fn main() -> anyhow::Result<()> {
             let label =
                 if tenant.is_empty() { name.clone() } else { format!("{name}{{tenant={tenant}}}") };
             println!("  gauge {label:<34} {v}");
+        }
+    }
+    // per-tenant SLO verdicts from the burn-rate gauges the observe()
+    // above refreshed (burn < 1 = sustainable; >= 1 burns the budget)
+    for (name, tenant, burn) in &snap.gauges {
+        if name.as_str() == names::SLO_BURN_RATE {
+            let remaining = snap
+                .gauges
+                .iter()
+                .find(|(n2, t2, _)| {
+                    n2.as_str() == names::SLO_BUDGET_REMAINING && t2 == tenant
+                })
+                .map(|(_, _, v)| *v)
+                .unwrap_or(f64::NAN);
+            println!(
+                "slo[{tenant}]: burn rate {burn:.2}, error budget remaining {:.0}%",
+                remaining * 100.0
+            );
         }
     }
     if !trace_out.is_empty() {

@@ -206,6 +206,46 @@ fn main() {
     println!("# wfq: light tenant p99 wait {light_p99:.3}ms vs heavy {heavy_p99:.3}ms");
     report.point("wfq_wait_p99_ms", 1.0, &[("light", light_p99), ("heavy", heavy_p99)]);
 
+    // --- tracing overhead: the request-scoped span/flow machinery must be
+    // cheap enough to leave on in production (a handful of lock-free ring
+    // pushes per request). Same single-thread closed loop with tracing off
+    // then on, best of 3 rounds each to shave scheduler noise.
+    let trace_requests = if full { 512usize } else { 64 };
+    let client = handle.client();
+    let x = Xoshiro256::seed(400).vector(handle.n());
+    let best_rps = |label: &str| -> f64 {
+        let mut best = 0.0f64;
+        for _ in 0..3 {
+            let t0 = std::time::Instant::now();
+            for _ in 0..trace_requests {
+                client.matvec(&x).unwrap_or_else(|e| panic!("{label} matvec failed: {e}"));
+            }
+            let dt = t0.elapsed().as_secs_f64().max(f64::MIN_POSITIVE);
+            best = best.max(trace_requests as f64 / dt);
+        }
+        best
+    };
+    let off_rps = best_rps("tracing-off");
+    hmx::obs::trace::enable();
+    let on_rps = best_rps("tracing-on");
+    hmx::obs::trace::disable();
+    let ratio = on_rps / off_rps.max(f64::MIN_POSITIVE);
+    println!(
+        "# tracing overhead: {off_rps:.1} rps off vs {on_rps:.1} rps on \
+         (ratio_ok {ratio:.3}; target >= 0.95)"
+    );
+    report.point(
+        "tracing_overhead",
+        trace_requests as f64,
+        &[("off_rps", off_rps), ("on_rps", on_rps), ("ratio_ok", ratio)],
+    );
+    if smoke {
+        assert!(
+            ratio >= 0.95,
+            "tracing overhead exceeded 5%: {off_rps:.1} rps off vs {on_rps:.1} rps on"
+        );
+    }
+
     let fallback_after = RECORDER.count(names::RUNTIME_MATMAT_FALLBACK);
     report.param("matmat_fallback", fallback_after - fallback_before);
     if smoke {

@@ -8,7 +8,10 @@
 //!   obs        run an instrumented workload and export the metrics
 //!              registry (--format json|prometheus, --trace-out PATH for a
 //!              Chrome trace), or schema-check artifacts in place
-//!              (--validate-bench FILE, --validate-trace FILE)
+//!              (--validate-bench FILE, --validate-trace FILE,
+//!              --validate-flight FILE)
+//!   obs diff   compare two hmx-bench/1 artifacts and fail on metrics
+//!              that moved past --threshold PCT in their bad direction
 //!
 //! Common flags: --n, --d, --kernel {gaussian,matern,exponential}, --k,
 //! --c-leaf, --eta, --bs-dense, --bs-aca, --engine {native,xla},
@@ -163,8 +166,59 @@ fn cmd_phases(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `hmx obs diff OLD.json NEW.json [--threshold PCT]`: compare two
+/// `hmx-bench/1` artifacts metric by metric and exit nonzero when any
+/// metric moved more than the threshold in its bad direction (the CI
+/// perf-regression gate against committed baselines).
+fn cmd_obs_diff(args: &Args) -> anyhow::Result<()> {
+    let (Some(old_path), Some(new_path)) = (args.positional.get(2), args.positional.get(3))
+    else {
+        anyhow::bail!("usage: hmx obs diff OLD.json NEW.json [--threshold PCT]");
+    };
+    let threshold = args.get("threshold", 25.0f64);
+    if !(threshold.is_finite() && threshold >= 0.0) {
+        anyhow::bail!("--threshold must be a non-negative percentage");
+    }
+    let old = std::fs::read_to_string(old_path)?;
+    let new = std::fs::read_to_string(new_path)?;
+    let diffs = hmx::obs::diff_reports(&old, &new, threshold)
+        .map_err(|e| anyhow::anyhow!("diff failed: {e}"))?;
+    if diffs.is_empty() {
+        println!("no overlapping (series, x, metric) rows between {old_path} and {new_path}");
+        return Ok(());
+    }
+    let mut regressions = 0usize;
+    for d in &diffs {
+        let verdict = if d.regressed {
+            regressions += 1;
+            "REGRESSED"
+        } else {
+            match d.direction {
+                hmx::obs::Direction::Neutral => "info",
+                _ => "ok",
+            }
+        };
+        println!(
+            "{verdict:>9}  {}[x={}] {}: {:.6} -> {:.6} ({:+.1}%)",
+            d.series, d.x, d.metric, d.old, d.new, d.pct
+        );
+    }
+    println!(
+        "{} metrics compared, {} regression(s) beyond {threshold}%",
+        diffs.len(),
+        regressions
+    );
+    if regressions > 0 {
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
 fn cmd_obs(args: &Args) -> anyhow::Result<()> {
     use hmx::obs;
+    if args.positional.get(1).map(|s| s.as_str()) == Some("diff") {
+        return cmd_obs_diff(args);
+    }
     // artifact validation modes (CI uses these to schema-check outputs)
     let bench = args.get_str("validate-bench", "");
     if !bench.is_empty() {
@@ -186,6 +240,17 @@ fn cmd_obs(args: &Args) -> anyhow::Result<()> {
                 return Ok(());
             }
             Err(e) => anyhow::bail!("invalid chrome trace {trace}: {e}"),
+        }
+    }
+    let flight = args.get_str("validate-flight", "");
+    if !flight.is_empty() {
+        let text = std::fs::read_to_string(&flight)?;
+        match obs::validate_flight(&text) {
+            Ok((events, spans)) => {
+                println!("ok: {flight}: {events} events, {spans} spans");
+                return Ok(());
+            }
+            Err(e) => anyhow::bail!("invalid flight dump {flight}: {e}"),
         }
     }
     // instrumented demo workload: build, a few applies, a small solve —

@@ -1,0 +1,318 @@
+//! The fault flight recorder: a pre-mortem of what the serving stack
+//! was doing just before something died.
+//!
+//! Self-healing (PR 8) made faults *survivable* — executors respawn,
+//! breakers trip, deadlines shed — but also made them *silent*: by the
+//! time a human looks, the respawned executor is healthy and the
+//! telemetry that preceded the fault is gone. The flight recorder keeps
+//! a bounded ring of recent annotations ([`note`]: health transitions,
+//! supervision verdicts, breaker trips, deadline storms) that costs a
+//! mutex push per event, and on a fault ([`dump`]) atomically writes a
+//! validating `hmx-flight/1` JSON artifact combining:
+//!
+//! * the annotation ring (oldest first),
+//! * the most recent completed trace spans (when tracing is enabled),
+//! * counter *deltas* since the previous dump (what moved, not just
+//!   totals), and
+//! * a full embedded `hmx-metrics/1` snapshot.
+//!
+//! Dumps go to `$HMX_FLIGHT_DIR/flight-<reason>-<seq>.json`, written
+//! tmp-then-rename so a crash mid-write never leaves a torn artifact.
+//! With the env var unset, `dump` still records the fault in the ring
+//! (and bumps `obs.flight_dump`) but writes nothing — the hooks stay in
+//! production paths unconditionally. Validate artifacts with
+//! `hmx obs --validate-flight FILE`.
+
+use std::collections::{HashMap, VecDeque};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use once_cell::sync::Lazy;
+
+use super::{names, snapshot::MetricsSnapshot, trace};
+
+/// Schema tag every flight artifact carries.
+pub const FLIGHT_SCHEMA: &str = "hmx-flight/1";
+
+/// Environment variable naming the dump directory.
+pub const FLIGHT_DIR_ENV: &str = "HMX_FLIGHT_DIR";
+
+/// Annotations retained in the ring.
+const NOTE_CAPACITY: usize = 256;
+
+/// Most-recent completed spans embedded per dump.
+const SPAN_WINDOW: usize = 512;
+
+#[derive(Clone, Debug)]
+struct Note {
+    at_ns: u64,
+    kind: String,
+    tenant: String,
+    detail: String,
+}
+
+#[derive(Default)]
+struct Recorder {
+    notes: VecDeque<Note>,
+    /// Counter values as of the previous dump, for delta reporting.
+    last_counters: HashMap<(String, String), u64>,
+}
+
+static RECORDER: Lazy<Mutex<Recorder>> = Lazy::new(|| Mutex::new(Recorder::default()));
+static SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Append one annotation to the ring: a health transition, a
+/// supervision verdict, a breaker trip. Cheap enough for production
+/// paths (one mutex push); the ring keeps the newest
+/// [`NOTE_CAPACITY`] entries.
+pub fn note(kind: &str, tenant: &str, detail: &str) {
+    let mut r = RECORDER.lock().unwrap_or_else(|e| e.into_inner());
+    if r.notes.len() >= NOTE_CAPACITY {
+        r.notes.pop_front();
+    }
+    r.notes.push_back(Note {
+        at_ns: trace::now_ns(),
+        kind: kind.to_string(),
+        tenant: tenant.to_string(),
+        detail: detail.to_string(),
+    });
+}
+
+/// Record a fault and, when `$HMX_FLIGHT_DIR` is set, atomically write
+/// the flight artifact there. Returns the written path, `None` when no
+/// directory is configured (or the write failed — a flight recorder
+/// must never take the process down with it).
+pub fn dump(reason: &str, tenant: &str, detail: &str) -> Option<PathBuf> {
+    note(reason, tenant, detail);
+    super::counter_incr(names::OBS_FLIGHT_DUMP);
+    let dir = std::env::var_os(FLIGHT_DIR_ENV)?;
+    let dir = PathBuf::from(dir);
+    let json = render(reason, tenant, detail);
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    let slug: String = reason
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '-' })
+        .collect();
+    let final_path = dir.join(format!("flight-{slug}-{seq}.json"));
+    let tmp_path = dir.join(format!(".flight-{slug}-{seq}.json.tmp"));
+    let write = || -> std::io::Result<()> {
+        std::fs::create_dir_all(&dir)?;
+        std::fs::write(&tmp_path, &json)?;
+        std::fs::rename(&tmp_path, &final_path)
+    };
+    match write() {
+        Ok(()) => Some(final_path),
+        Err(_) => {
+            let _ = std::fs::remove_file(&tmp_path);
+            None
+        }
+    }
+}
+
+/// Build the artifact JSON (the testable core of [`dump`]).
+fn render(reason: &str, tenant: &str, detail: &str) -> String {
+    let snap = MetricsSnapshot::capture();
+
+    // counter deltas against the previous dump, then roll the baseline
+    let (notes, deltas) = {
+        let mut r = RECORDER.lock().unwrap_or_else(|e| e.into_inner());
+        let mut deltas: Vec<(String, String, u64)> = Vec::new();
+        for (n, t, v) in &snap.counters {
+            let prev =
+                r.last_counters.get(&(n.clone(), t.clone())).copied().unwrap_or(0);
+            if *v > prev {
+                deltas.push((n.clone(), t.clone(), v - prev));
+            }
+        }
+        r.last_counters =
+            snap.counters.iter().map(|(n, t, v)| ((n.clone(), t.clone()), *v)).collect();
+        (r.notes.iter().cloned().collect::<Vec<_>>(), deltas)
+    };
+
+    // the most recent completed spans, oldest first
+    let mut spans = trace::snapshot_spans();
+    spans.sort_by_key(|e| e.end_ns());
+    if spans.len() > SPAN_WINDOW {
+        spans.drain(..spans.len() - SPAN_WINDOW);
+    }
+
+    let mut out = String::with_capacity(4096);
+    out.push_str("{\"schema\":\"");
+    out.push_str(FLIGHT_SCHEMA);
+    out.push_str("\",\"reason\":");
+    super::json::escape_into(reason, &mut out);
+    out.push_str(",\"tenant\":");
+    super::json::escape_into(tenant, &mut out);
+    out.push_str(",\"detail\":");
+    super::json::escape_into(detail, &mut out);
+    out.push_str(&format!(",\"at_ns\":{}", trace::now_ns()));
+
+    out.push_str(",\"events\":[");
+    for (i, n) in notes.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("{{\"at_ns\":{},\"kind\":", n.at_ns));
+        super::json::escape_into(&n.kind, &mut out);
+        out.push_str(",\"tenant\":");
+        super::json::escape_into(&n.tenant, &mut out);
+        out.push_str(",\"detail\":");
+        super::json::escape_into(&n.detail, &mut out);
+        out.push('}');
+    }
+
+    out.push_str("],\"counter_deltas\":[");
+    for (i, (n, t, d)) in deltas.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str("{\"name\":");
+        super::json::escape_into(n, &mut out);
+        out.push_str(",\"tenant\":");
+        super::json::escape_into(t, &mut out);
+        out.push_str(&format!(",\"delta\":{d}}}"));
+    }
+
+    out.push_str("],\"spans\":[");
+    for (i, s) in spans.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str("{\"name\":");
+        super::json::escape_into(&s.name, &mut out);
+        out.push_str(&format!(
+            ",\"tid\":{},\"id\":{},\"parent\":{},\"ctx\":{},\"start_ns\":{},\"dur_ns\":{}}}",
+            s.tid, s.id, s.parent, s.ctx, s.start_ns, s.dur_ns
+        ));
+    }
+
+    out.push_str("],\"metrics\":");
+    out.push_str(&snap.to_json());
+    out.push('}');
+    out
+}
+
+/// Validate a flight artifact: schema tag, required keys, well-formed
+/// event/span/delta arrays, and an embedded `hmx-metrics/1` snapshot.
+/// Returns `(events, spans)` counts.
+pub fn validate_flight(json: &str) -> Result<(usize, usize), String> {
+    let v = super::json::parse(json)?;
+    let schema = v.get("schema").and_then(|s| s.as_str()).ok_or("missing schema")?;
+    if schema != FLIGHT_SCHEMA {
+        return Err(format!("schema: expected {FLIGHT_SCHEMA}, got {schema}"));
+    }
+    let reason = v.get("reason").and_then(|s| s.as_str()).ok_or("missing reason")?;
+    if reason.is_empty() {
+        return Err("empty reason".into());
+    }
+    v.get("tenant").and_then(|s| s.as_str()).ok_or("missing tenant")?;
+    let at = v.get("at_ns").and_then(|n| n.as_f64()).ok_or("missing at_ns")?;
+    if !at.is_finite() || at < 0.0 {
+        return Err("non-finite/negative at_ns".into());
+    }
+
+    let events = v.get("events").and_then(|e| e.as_array()).ok_or("missing events array")?;
+    for (i, e) in events.iter().enumerate() {
+        for k in ["kind", "tenant", "detail"] {
+            e.get(k).and_then(|s| s.as_str()).ok_or(format!("events[{i}]: missing {k}"))?;
+        }
+        e.get("at_ns").and_then(|n| n.as_f64()).ok_or(format!("events[{i}]: missing at_ns"))?;
+    }
+
+    let deltas = v
+        .get("counter_deltas")
+        .and_then(|e| e.as_array())
+        .ok_or("missing counter_deltas array")?;
+    for (i, d) in deltas.iter().enumerate() {
+        d.get("name").and_then(|s| s.as_str()).ok_or(format!("counter_deltas[{i}]: name"))?;
+        let x = d
+            .get("delta")
+            .and_then(|n| n.as_f64())
+            .ok_or(format!("counter_deltas[{i}]: delta"))?;
+        if x <= 0.0 {
+            return Err(format!("counter_deltas[{i}]: non-positive delta"));
+        }
+    }
+
+    let spans = v.get("spans").and_then(|e| e.as_array()).ok_or("missing spans array")?;
+    for (i, s) in spans.iter().enumerate() {
+        s.get("name").and_then(|n| n.as_str()).ok_or(format!("spans[{i}]: missing name"))?;
+        for k in ["tid", "id", "parent", "ctx", "start_ns", "dur_ns"] {
+            let x = s.get(k).and_then(|n| n.as_f64()).ok_or(format!("spans[{i}]: missing {k}"))?;
+            if !x.is_finite() || x < 0.0 {
+                return Err(format!("spans[{i}]: non-finite/negative {k}"));
+            }
+        }
+    }
+
+    let metrics = v.get("metrics").ok_or("missing embedded metrics")?;
+    if metrics.get("schema").and_then(|s| s.as_str()) != Some("hmx-metrics/1") {
+        return Err("embedded metrics must be an hmx-metrics/1 document".into());
+    }
+
+    Ok((events.len(), spans.len()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::json;
+
+    // render() rolls the global counter-delta baseline; serialize the
+    // tests that depend on it so parallel #[test] threads don't clobber
+    // each other's baselines.
+    static SERIAL: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn rendered_dump_validates() {
+        let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+        note("health", "t-flight", "Ok -> Degraded");
+        note("health", "t-flight", "Degraded -> BrownOut");
+        crate::obs::counter_incr("test.flight.ctr");
+        let json = render("executor-lost", "t-flight", "heartbeat frozen 250ms");
+        let (events, _spans) = validate_flight(&json).expect("rendered artifact validates");
+        assert!(events >= 2, "ring annotations embedded, got {events}");
+        assert!(json.contains("\"reason\":\"executor-lost\""));
+        assert!(json.contains("hmx-metrics/1"));
+    }
+
+    #[test]
+    fn counter_deltas_reset_between_dumps() {
+        let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+        crate::obs::counter_add("test.flight.delta", 3);
+        let has_delta = |v: &json::Json| {
+            v.get("counter_deltas").and_then(|d| d.as_array()).is_some_and(|ds| {
+                ds.iter().any(|d| {
+                    d.get("name").and_then(|n| n.as_str()) == Some("test.flight.delta")
+                })
+            })
+        };
+        let first = render("r1", "", "");
+        let v = json::parse(&first).unwrap();
+        assert!(has_delta(&v), "first dump reports the accumulated delta");
+        // no movement since: the series must drop out of the next dump
+        let second = render("r2", "", "");
+        let v2 = json::parse(&second).unwrap();
+        assert!(!has_delta(&v2), "unmoved counters are not deltas");
+    }
+
+    #[test]
+    fn validator_rejects_malformed_artifacts() {
+        assert!(validate_flight("{}").is_err());
+        assert!(validate_flight(r#"{"schema":"hmx-flight/2"}"#).is_err());
+        let no_metrics = r#"{"schema":"hmx-flight/1","reason":"r","tenant":"","detail":"",
+            "at_ns":1,"events":[],"counter_deltas":[],"spans":[]}"#;
+        assert!(validate_flight(no_metrics).unwrap_err().contains("metrics"));
+    }
+
+    #[test]
+    fn note_ring_is_bounded() {
+        for i in 0..(NOTE_CAPACITY + 10) {
+            note("bound-test", "", &format!("{i}"));
+        }
+        let r = RECORDER.lock().unwrap();
+        assert!(r.notes.len() <= NOTE_CAPACITY);
+        assert_eq!(r.notes.back().unwrap().detail, format!("{}", NOTE_CAPACITY + 9));
+    }
+}

@@ -104,6 +104,20 @@ impl Histogram {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Observations `>= threshold`, up to bucket resolution: a bucket
+    /// straddling the threshold counts fully when its midpoint is at or
+    /// above it, so the answer is exact to within [`MAX_REL_ERR`] of the
+    /// threshold (the SLO engine's miss counter).
+    pub fn count_ge(&self, threshold: u64) -> u64 {
+        let mut n = 0;
+        for (i, c) in self.counts.iter().enumerate() {
+            if bucket_rep(i) >= threshold {
+                n += c.load(Ordering::Relaxed);
+            }
+        }
+        n
+    }
+
     pub fn sum(&self) -> u64 {
         self.sum.load(Ordering::Relaxed)
     }
@@ -261,6 +275,18 @@ mod tests {
         assert_eq!(acc.sum, a.sum() + b.sum());
         assert_eq!(acc.min(), a.accum().min().min(b.accum().min()));
         assert_eq!(acc.max(), a.accum().max().max(b.accum().max()));
+    }
+
+    #[test]
+    fn count_ge_splits_at_the_threshold() {
+        let h = Histogram::new();
+        for v in [1u64, 2, 3, 10, 11, 12] {
+            h.record(v);
+        }
+        // small values are exact unit buckets, so the split is exact
+        assert_eq!(h.count_ge(0), 6);
+        assert_eq!(h.count_ge(10), 3);
+        assert_eq!(h.count_ge(13), 0);
     }
 
     #[test]

@@ -26,28 +26,51 @@
 //!   `BENCH_<name>.json` (schema `hmx-bench/1`) with per-series
 //!   median/mean/min/max points — the machine-readable perf trajectory CI
 //!   validates and archives.
+//! * **Request-scoped flows** ([`trace`]): the serving layer stamps every
+//!   submission with a process-unique `RequestId` and tags the request's
+//!   spans with it ([`span_with_ctx`], [`trace::record_span_with_ctx`]);
+//!   the Chrome export links each request's spans across client and
+//!   executor threads with flow events, so one request reads as one
+//!   connected timeline (submit → queue → apply → scatter).
+//! * **SLO burn rates** ([`slo`]): declarative per-tenant latency
+//!   objectives ([`SloConfig`]) assessed at `observe()` time into
+//!   multi-window error-budget burn rates (`slo.burn_rate` /
+//!   `slo.budget_remaining` gauges) that drive the serving brown-out
+//!   controller.
+//! * **Flight recorder** ([`flight`]): a bounded ring of health
+//!   transitions and fault annotations, dumped atomically with recent
+//!   spans, counter deltas and a metrics snapshot as a validating
+//!   `hmx-flight/1` artifact when the serving layer loses an executor,
+//!   trips a breaker, or sheds a deadline storm.
 //!
 //! Every metric/span name is a `const` in [`names`], with kind, unit and
 //! label metadata in [`names::REGISTRY`] (rendered in `docs/metrics.md`).
 //! Instrumentation sites use the consts so typos fail at compile time.
 
+pub mod flight;
 pub mod hist;
 pub mod json;
 pub mod names;
 pub mod report;
+pub mod slo;
 pub mod snapshot;
 pub mod trace;
 
+pub use flight::{validate_flight, FLIGHT_SCHEMA};
 pub use hist::{HistAccum, Histogram, MAX_REL_ERR};
-pub use report::{validate as validate_bench_report, BenchReport};
+pub use report::{
+    diff_reports, metric_direction, validate as validate_bench_report, BenchReport, Direction,
+    MetricDiff,
+};
+pub use slo::{SloAssessment, SloConfig, SloEngine};
 pub use snapshot::{
     counter_add, counter_incr, counter_value, gauge_handle, gauge_set, gauge_set_labeled,
     histogram, observe, observe_duration, register_histogram, GaugeHandle, HistSeries,
     MetricsSnapshot,
 };
 pub use trace::{
-    chrome_trace_json, snapshot_spans, span, validate_chrome_trace, write_chrome_trace, SpanEvent,
-    SpanGuard,
+    chrome_trace_json, snapshot_spans, span, span_with_ctx, validate_chrome_trace,
+    write_chrome_trace, SpanEvent, SpanGuard,
 };
 
 /// Convenience constructor mirroring `obs::bench_report("fig13_matvec")`.

@@ -62,6 +62,17 @@ pub const SERVE_EXECUTOR_RESTART: &str = "serve.executor_restart";
 pub const SERVE_BREAKER_OPEN: &str = "serve.breaker_open";
 pub const SERVE_BROWNOUT_SHED: &str = "serve.brownout_shed";
 
+// --- request-scoped tracing (one flow-linked chain per RequestId) ---
+pub const SERVE_LATENCY: &str = "serve.latency";
+pub const SERVE_REQUEST_SUBMIT: &str = "serve.request.submit";
+pub const SERVE_REQUEST_QUEUE: &str = "serve.request.queue";
+pub const SERVE_REQUEST_APPLY: &str = "serve.request.apply";
+pub const SERVE_REQUEST_SCATTER: &str = "serve.request.scatter";
+
+// --- per-tenant SLO burn-rate engine ---
+pub const SLO_BURN_RATE: &str = "slo.burn_rate";
+pub const SLO_BUDGET_REMAINING: &str = "slo.budget_remaining";
+
 // --- compression / memory governance ---
 pub const COMPRESS_PASS: &str = "compress.pass";
 pub const GOVERNOR_RECOMPRESS: &str = "governor.recompress";
@@ -82,6 +93,7 @@ pub const SOLVER_BLOCK_BICGSTAB_RESIDUAL: &str = "solver.block_bicgstab.final_re
 
 // --- the observability layer itself ---
 pub const OBS_TRACE_DROPPED: &str = "obs.trace_dropped";
+pub const OBS_FLIGHT_DUMP: &str = "obs.flight_dump";
 
 /// Every name the crate records, with kind/unit/label metadata. Kept
 /// sorted by name; `docs/metrics.md` mirrors this table.
@@ -100,6 +112,7 @@ pub const REGISTRY: &[MetricDef] = &[
     MetricDef { name: GOVERNOR_REJECT, kind: MetricKind::Counter, unit: "", labels: "", help: "admissions rejected because the operator cannot fit even alone" },
     MetricDef { name: MATVEC_ACA, kind: MetricKind::Span, unit: "ns", labels: "", help: "batched low-rank (ACA factor) products of one mat-mat" },
     MetricDef { name: MATVEC_DENSE, kind: MetricKind::Span, unit: "ns", labels: "", help: "batched dense near-field products of one mat-mat" },
+    MetricDef { name: OBS_FLIGHT_DUMP, kind: MetricKind::Counter, unit: "", labels: "", help: "flight-recorder artifacts dumped on faults (executor loss, breaker open, deadline storm)" },
     MetricDef { name: OBS_TRACE_DROPPED, kind: MetricKind::Counter, unit: "", labels: "", help: "span events overwritten in a full per-thread trace ring" },
     MetricDef { name: RUNTIME_MATMAT_FALLBACK, kind: MetricKind::Counter, unit: "", labels: "", help: "multi-RHS applies that fell back to columnwise (no fused artifact)" },
     MetricDef { name: SERVE_APPLY, kind: MetricKind::Histogram, unit: "ns", labels: "tenant", help: "batched-apply latency per flushed batch" },
@@ -111,11 +124,18 @@ pub const REGISTRY: &[MetricDef] = &[
     MetricDef { name: SERVE_EXECUTOR_RESTART, kind: MetricKind::Counter, unit: "", labels: "", help: "dead/wedged executors respawned (operator rebuilt) by the registry watchdog" },
     MetricDef { name: SERVE_FLUSH, kind: MetricKind::Span, unit: "ns", labels: "", help: "one batcher flush: assemble block, batched apply, scatter" },
     MetricDef { name: SERVE_HEALTH, kind: MetricKind::Gauge, unit: "state", labels: "tenant", help: "serving health state: 0 = Ok, 1 = Degraded, 2 = BrownOut (per tenant; \"\" = registry aggregate)" },
+    MetricDef { name: SERVE_LATENCY, kind: MetricKind::Histogram, unit: "ns", labels: "tenant", help: "submit -> result end-to-end latency per completed request (the SLO engine's input)" },
     MetricDef { name: SERVE_PAD_COLS, kind: MetricKind::Counter, unit: "cols", labels: "", help: "zero columns added to pad flushes up to their width-ladder rung" },
     MetricDef { name: SERVE_QUEUE_DEPTH, kind: MetricKind::Gauge, unit: "reqs", labels: "tenant", help: "queued-but-not-dequeued submissions right now" },
+    MetricDef { name: SERVE_REQUEST_APPLY, kind: MetricKind::Span, unit: "ns", labels: "", help: "one request's share of a batched apply (ctx = RequestId, flow-linked)" },
+    MetricDef { name: SERVE_REQUEST_QUEUE, kind: MetricKind::Span, unit: "ns", labels: "", help: "one request's fair-queue wait, recorded by the executor at pickup (ctx = RequestId)" },
+    MetricDef { name: SERVE_REQUEST_SCATTER, kind: MetricKind::Span, unit: "ns", labels: "", help: "scattering one request's result column (ctx = RequestId, terminates the flow)" },
+    MetricDef { name: SERVE_REQUEST_SUBMIT, kind: MetricKind::Span, unit: "ns", labels: "", help: "client-side submit of one request (ctx = RequestId, starts the flow)" },
     MetricDef { name: SERVE_SCATTER, kind: MetricKind::Span, unit: "ns", labels: "", help: "scattering per-caller result columns after a batched apply" },
     MetricDef { name: SERVE_WAIT, kind: MetricKind::Histogram, unit: "ns", labels: "tenant", help: "submit -> batch-pickup wait per request (per-tenant fair-queue lanes record their own series)" },
     MetricDef { name: SERVE_XBUF_BYTES, kind: MetricKind::Gauge, unit: "bytes", labels: "tenant", help: "executor input-slab capacity (shrinks toward a recent high-water mark)" },
+    MetricDef { name: SLO_BUDGET_REMAINING, kind: MetricKind::Gauge, unit: "frac", labels: "tenant", help: "fraction of the tenant's error budget left in the SLO window (1 = untouched, 0 = exhausted)" },
+    MetricDef { name: SLO_BURN_RATE, kind: MetricKind::Gauge, unit: "x", labels: "tenant", help: "worst multi-window error-budget burn rate (1 = burning exactly the budget; >1 = on track to exhaust it early)" },
     MetricDef { name: SOLVER_BLOCK_BICGSTAB_RESIDUAL, kind: MetricKind::Gauge, unit: "rel", labels: "", help: "worst-column relative residual of the last block-BiCGSTAB solve" },
     MetricDef { name: SOLVER_BLOCK_BICGSTAB_ITERS, kind: MetricKind::Histogram, unit: "iters", labels: "", help: "block-BiCGSTAB iterations per solve" },
     MetricDef { name: SOLVER_BLOCK_BICGSTAB_SOLVE, kind: MetricKind::Span, unit: "ns", labels: "", help: "one block-BiCGSTAB solve end to end" },
@@ -152,6 +172,12 @@ mod tests {
             GOVERNOR_EVICT,
             SOLVER_BLOCK_CG_ITERS,
             OBS_TRACE_DROPPED,
+            OBS_FLIGHT_DUMP,
+            SERVE_LATENCY,
+            SERVE_REQUEST_SUBMIT,
+            SERVE_REQUEST_SCATTER,
+            SLO_BURN_RATE,
+            SLO_BUDGET_REMAINING,
         ] {
             assert!(is_registered(name), "{name} missing from REGISTRY");
         }

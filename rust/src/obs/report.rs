@@ -137,6 +137,125 @@ impl BenchReport {
     }
 }
 
+/// Which way a bench metric is supposed to move, inferred from its name
+/// by [`metric_direction`]. Drives the regression verdict in
+/// [`diff_reports`]: only movement in the *bad* direction past the
+/// threshold counts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    /// Throughput-shaped (`rps`, `gflops`, ...): a drop is a regression.
+    HigherIsBetter,
+    /// Latency/footprint-shaped (`*_ms`, `*_s`, `bytes`, ...): a rise is
+    /// a regression.
+    LowerIsBetter,
+    /// Unrecognized: reported, never a verdict.
+    Neutral,
+}
+
+/// Name-based direction heuristic for bench metrics. Substring match on
+/// the lowercased metric key; throughput cues win over latency cues so a
+/// name like `rows_per_sec` classifies as higher-is-better even though it
+/// ends in a time unit.
+pub fn metric_direction(metric: &str) -> Direction {
+    let m = metric.to_ascii_lowercase();
+    // "per_s" also covers "per_sec"; checked before the "_s" unit suffix
+    // so "served_per_s" reads as throughput, not latency
+    const HIGHER: [&str; 5] = ["rps", "throughput", "gflops", "per_s", "ratio_ok"];
+    // unit suffixes must anchor at the end: "…_shed" must not match "_s"
+    const LOWER_SUFFIX: [&str; 4] = ["_ms", "_us", "_ns", "_s"];
+    const LOWER_WORD: [&str; 5] = ["latency", "wait", "bytes", "seconds", "overhead"];
+    if HIGHER.iter().any(|cue| m.contains(cue)) {
+        Direction::HigherIsBetter
+    } else if LOWER_SUFFIX.iter().any(|cue| m.ends_with(cue))
+        || LOWER_WORD.iter().any(|cue| m.contains(cue))
+    {
+        Direction::LowerIsBetter
+    } else {
+        Direction::Neutral
+    }
+}
+
+/// One metric compared between two bench artifacts by [`diff_reports`].
+#[derive(Clone, Debug)]
+pub struct MetricDiff {
+    pub series: String,
+    pub x: f64,
+    pub metric: String,
+    pub old: f64,
+    pub new: f64,
+    /// Signed percent change, `(new - old) / |old| * 100`. `±inf` when a
+    /// zero baseline moved.
+    pub pct: f64,
+    pub direction: Direction,
+    /// Whether the change exceeds the threshold in the bad direction.
+    pub regressed: bool,
+}
+
+/// Compare two `hmx-bench/1` artifacts point by point (matched on
+/// `(series name, x)`; points present in only one artifact are skipped —
+/// coverage drift is a review concern, not a perf verdict). A metric
+/// regresses when it moved more than `threshold_pct` percent in its bad
+/// direction per [`metric_direction`]. Both inputs are schema-validated
+/// first. This is what `hmx obs diff OLD NEW --threshold PCT` runs, and
+/// what CI uses to fail perf regressions against committed baselines.
+pub fn diff_reports(
+    old: &str,
+    new: &str,
+    threshold_pct: f64,
+) -> Result<Vec<MetricDiff>, String> {
+    validate(old).map_err(|e| format!("old artifact: {e}"))?;
+    validate(new).map_err(|e| format!("new artifact: {e}"))?;
+    let old = json::parse(old)?;
+    let new = json::parse(new)?;
+    let flatten = |doc: &Json| -> Vec<(String, f64, String, f64)> {
+        let mut rows = Vec::new();
+        // validate() above guarantees the shape, so the unwraps cannot
+        // fire; flatten to (series, x, metric, value) rows
+        for s in doc.get("series").and_then(|s| s.as_array()).unwrap() {
+            let name = s.get("name").and_then(|n| n.as_str()).unwrap().to_string();
+            for p in s.get("points").and_then(|p| p.as_array()).unwrap() {
+                let x = p.get("x").and_then(|x| x.as_f64()).unwrap();
+                for (k, v) in p.get("metrics").and_then(|m| m.as_object()).unwrap() {
+                    if let Some(v) = v.as_f64() {
+                        rows.push((name.clone(), x, k.clone(), v));
+                    }
+                }
+            }
+        }
+        rows
+    };
+    let old_rows = flatten(&old);
+    let new_rows = flatten(&new);
+    let mut out = Vec::new();
+    for (series, x, metric, old_v) in old_rows {
+        let Some(new_v) = new_rows
+            .iter()
+            .find_map(|(s, nx, m, v)| (*s == series && *nx == x && *m == metric).then_some(*v))
+        else {
+            continue;
+        };
+        let pct = if old_v == 0.0 {
+            if new_v == 0.0 {
+                0.0
+            } else if new_v > 0.0 {
+                f64::INFINITY
+            } else {
+                f64::NEG_INFINITY
+            }
+        } else {
+            (new_v - old_v) / old_v.abs() * 100.0
+        };
+        let direction = metric_direction(&metric);
+        let regressed = match direction {
+            Direction::LowerIsBetter => pct > threshold_pct,
+            Direction::HigherIsBetter => pct < -threshold_pct,
+            Direction::Neutral => false,
+        };
+        out.push(MetricDiff { series, x, metric, old: old_v, new: new_v, pct, direction, regressed });
+    }
+    Ok(out)
+}
+
 /// Schema-validate a `BENCH_*.json` document. Returns (series, points).
 pub fn validate(input: &str) -> Result<(usize, usize), String> {
     let v = json::parse(input)?;
@@ -231,5 +350,69 @@ mod tests {
         let r = BenchReport::new("pathcheck");
         let p = r.path();
         assert!(p.to_string_lossy().ends_with("BENCH_pathcheck.json"));
+    }
+
+    #[test]
+    fn direction_heuristics_classify_common_names() {
+        assert_eq!(metric_direction("rps"), Direction::HigherIsBetter);
+        assert_eq!(metric_direction("rows_per_sec"), Direction::HigherIsBetter);
+        // throughput cues win over the "_s" unit suffix
+        assert_eq!(metric_direction("served_per_s"), Direction::HigherIsBetter);
+        assert_eq!(metric_direction("median_s"), Direction::LowerIsBetter);
+        assert_eq!(metric_direction("p99_ms"), Direction::LowerIsBetter);
+        assert_eq!(metric_direction("wait_p99_us"), Direction::LowerIsBetter);
+        assert_eq!(metric_direction("factor_bytes"), Direction::LowerIsBetter);
+        // "_s" is a suffix cue only — shed counts are not latencies
+        assert_eq!(metric_direction("brownout_shed"), Direction::Neutral);
+        assert_eq!(metric_direction("occupancy"), Direction::Neutral);
+    }
+
+    fn report_json(latency_ms: f64, rps: f64, shed: f64) -> String {
+        let mut r = BenchReport::new("difftest");
+        r.param("mode", "unit");
+        r.point(
+            "serve",
+            1.0,
+            &[("p99_ms", latency_ms), ("rps", rps), ("brownout_shed", shed)],
+        );
+        r.to_json()
+    }
+
+    #[test]
+    fn diff_flags_regressions_by_direction_only() {
+        let old = report_json(10.0, 1000.0, 5.0);
+        // p99 doubled (regression), rps halved (regression), shed exploded
+        // (neutral: reported, never a verdict)
+        let new = report_json(20.0, 500.0, 500.0);
+        let diffs = diff_reports(&old, &new, 25.0).unwrap();
+        assert_eq!(diffs.len(), 3);
+        let by_name = |n: &str| diffs.iter().find(|d| d.metric == n).unwrap();
+        assert!(by_name("p99_ms").regressed);
+        assert!((by_name("p99_ms").pct - 100.0).abs() < 1e-9);
+        assert!(by_name("rps").regressed);
+        assert!((by_name("rps").pct + 50.0).abs() < 1e-9);
+        assert!(!by_name("brownout_shed").regressed);
+        // improvements and small moves pass
+        let better = report_json(8.0, 1200.0, 0.0);
+        assert!(diff_reports(&old, &better, 25.0).unwrap().iter().all(|d| !d.regressed));
+        let small = report_json(11.0, 950.0, 5.0);
+        assert!(diff_reports(&old, &small, 25.0).unwrap().iter().all(|d| !d.regressed));
+    }
+
+    #[test]
+    fn diff_handles_zero_baselines_and_missing_points() {
+        let old = report_json(0.0, 1000.0, 0.0);
+        let new = report_json(5.0, 1000.0, 0.0);
+        let diffs = diff_reports(&old, &new, 25.0).unwrap();
+        let p99 = diffs.iter().find(|d| d.metric == "p99_ms").unwrap();
+        assert!(p99.pct.is_infinite() && p99.regressed);
+        // a point that exists only in one artifact is skipped, not an error
+        let mut r = BenchReport::new("difftest");
+        r.param("mode", "unit");
+        r.point("serve", 2.0, &[("p99_ms", 1.0)]);
+        let diffs = diff_reports(&old, &r.to_json(), 25.0).unwrap();
+        assert!(diffs.is_empty());
+        // malformed inputs are typed errors
+        assert!(diff_reports("{}", &new, 25.0).is_err());
     }
 }

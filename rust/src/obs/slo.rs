@@ -1,0 +1,330 @@
+//! Per-tenant latency SLOs and multi-window error-budget burn rates.
+//!
+//! An [`SloConfig`] declares a tenant's objective: "at most
+//! `error_budget` of requests may take longer than `p99_target`, judged
+//! over `window`". The [`SloEngine`] turns the crate's cumulative
+//! latency histograms ([`super::hist::Histogram`], which have no time
+//! axis) into *windowed* burn rates by sampling `(total, missed)`
+//! counts at every `observe()` and differencing against retained
+//! samples — the standard SRE construction:
+//!
+//! ```text
+//! burn = (misses in window / requests in window) / error_budget
+//! ```
+//!
+//! A burn of 1 consumes the budget exactly at the sustainable rate; a
+//! burn of 4 exhausts a window's budget in a quarter of the window. Two
+//! windows are assessed — the full `window` (slow burn: sustained
+//! degradation) and `window/12` clamped to ≥ 1 s (fast burn: an acute
+//! incident) — and the worst is reported, so a short spike registers
+//! immediately without a long quiet tail hiding it, and a slow leak
+//! registers even when the last minute looked fine.
+//!
+//! The engine is deliberately pure bookkeeping: no threads, no clocks of
+//! its own (callers pass timestamps, production callers use
+//! [`super::trace::now_ns`]), no dependency on the serving layer. The
+//! serving registry maps the returned burn rate onto its brown-out
+//! health ladder via [`DEGRADED_BURN`] / [`BROWNOUT_BURN`] and exports
+//! the numbers as the `slo.burn_rate` / `slo.budget_remaining` gauges.
+
+use std::collections::{HashMap, VecDeque};
+use std::time::Duration;
+
+use super::hist::Histogram;
+
+/// Burn rate at or above which a tenant should be considered Degraded.
+pub const DEGRADED_BURN: f64 = 1.0;
+
+/// Burn rate at or above which a tenant should brown out (shed load):
+/// budget gone in a quarter of the window or faster.
+pub const BROWNOUT_BURN: f64 = 4.0;
+
+/// A tenant's declarative latency objective.
+#[derive(Clone, Copy, Debug)]
+pub struct SloConfig {
+    /// Latency target: a request slower than this is an SLO miss.
+    pub p99_target: Duration,
+    /// Budget window the objective is judged over.
+    pub window: Duration,
+    /// Fraction of requests allowed to miss the target within the
+    /// window (e.g. `0.01` = 1%). Must be in (0, 1].
+    pub error_budget: f64,
+}
+
+impl SloConfig {
+    /// `Err` with the reason if the config is unusable.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.p99_target.is_zero() {
+            return Err("p99_target must be positive".into());
+        }
+        if self.window.is_zero() {
+            return Err("window must be positive".into());
+        }
+        if !(self.error_budget > 0.0 && self.error_budget <= 1.0) {
+            return Err(format!("error_budget must be in (0, 1], got {}", self.error_budget));
+        }
+        Ok(())
+    }
+}
+
+/// One `observe()`-time verdict for a tenant.
+#[derive(Clone, Copy, Debug)]
+pub struct SloAssessment {
+    /// Worst burn rate across the assessed windows (1 = burning exactly
+    /// the budget; 0 = no misses or no traffic).
+    pub burn_rate: f64,
+    /// Fraction of the full-window error budget still unspent, clamped
+    /// to [0, 1].
+    pub budget_remaining: f64,
+}
+
+/// A cumulative `(timestamp, total, missed)` sample.
+#[derive(Clone, Copy, Debug)]
+struct Sample {
+    at_ns: u64,
+    total: u64,
+    missed: u64,
+}
+
+struct TenantState {
+    cfg: SloConfig,
+    /// Oldest-first cumulative samples covering at least `cfg.window`.
+    samples: VecDeque<Sample>,
+}
+
+/// Burn-rate bookkeeping for every tenant with a declared SLO.
+#[derive(Default)]
+pub struct SloEngine {
+    tenants: HashMap<String, TenantState>,
+}
+
+impl SloEngine {
+    pub fn new() -> Self {
+        SloEngine::default()
+    }
+
+    /// Declare (or replace) `tenant`'s objective. Replacing drops the
+    /// tenant's sample history — old samples were judged against the old
+    /// target, so differencing across the change would be meaningless.
+    pub fn set(&mut self, tenant: &str, cfg: SloConfig) -> Result<(), String> {
+        cfg.validate()?;
+        self.tenants
+            .insert(tenant.to_string(), TenantState { cfg, samples: VecDeque::new() });
+        Ok(())
+    }
+
+    /// Drop `tenant`'s objective and history.
+    pub fn remove(&mut self, tenant: &str) {
+        self.tenants.remove(tenant);
+    }
+
+    pub fn config(&self, tenant: &str) -> Option<SloConfig> {
+        self.tenants.get(tenant).map(|t| t.cfg)
+    }
+
+    /// Tenants with a declared objective (arbitrary order).
+    pub fn tenants(&self) -> Vec<String> {
+        self.tenants.keys().cloned().collect()
+    }
+
+    /// Sample `latency` (a cumulative nanosecond histogram) for `tenant`
+    /// at [`super::trace::now_ns`] and assess. `None` if the tenant has
+    /// no declared SLO.
+    pub fn assess(&mut self, tenant: &str, latency: &Histogram) -> Option<SloAssessment> {
+        let target_ns = {
+            let t = self.tenants.get(tenant)?;
+            t.cfg.p99_target.as_nanos().min(u64::MAX as u128) as u64
+        };
+        let total = latency.count();
+        let missed = latency.count_ge(target_ns);
+        self.assess_at(tenant, total, missed, super::trace::now_ns())
+    }
+
+    /// Assess from explicit cumulative counts at an explicit timestamp
+    /// (the testable core of [`SloEngine::assess`]). A decrease in
+    /// `total` means the underlying histogram was reset; history is
+    /// dropped and the window restarts from this sample.
+    pub fn assess_at(
+        &mut self,
+        tenant: &str,
+        total: u64,
+        missed: u64,
+        at_ns: u64,
+    ) -> Option<SloAssessment> {
+        let t = self.tenants.get_mut(tenant)?;
+        if t.samples.back().is_some_and(|s| s.total > total) {
+            t.samples.clear();
+        }
+        t.samples.push_back(Sample { at_ns, total, missed });
+
+        let window_ns = t.cfg.window.as_nanos().min(u64::MAX as u128) as u64;
+        // retain the newest sample at or before the window edge as the
+        // full-window baseline, drop everything older
+        let edge = at_ns.saturating_sub(window_ns);
+        while t.samples.len() >= 2 && t.samples[1].at_ns <= edge {
+            t.samples.pop_front();
+        }
+
+        let fast_ns = (window_ns / 12).max(Duration::from_secs(1).as_nanos() as u64);
+        let slow = burn_over(&t.samples, at_ns, window_ns, t.cfg.error_budget);
+        let fast = burn_over(&t.samples, at_ns, fast_ns, t.cfg.error_budget);
+        Some(SloAssessment {
+            burn_rate: slow.burn.max(fast.burn),
+            budget_remaining: slow.budget_remaining,
+        })
+    }
+}
+
+struct WindowBurn {
+    burn: f64,
+    budget_remaining: f64,
+}
+
+/// Burn over the trailing `window_ns` ending at `now_ns`, from
+/// oldest-first cumulative samples. The baseline is the retained sample
+/// closest to the window edge (samples are taken at `observe()` cadence,
+/// so the edge rarely lands exactly on one); with no traffic in the
+/// window the burn is 0 and the budget untouched.
+fn burn_over(samples: &VecDeque<Sample>, now_ns: u64, window_ns: u64, budget: f64) -> WindowBurn {
+    let newest = match samples.back() {
+        Some(s) => *s,
+        None => return WindowBurn { burn: 0.0, budget_remaining: 1.0 },
+    };
+    let edge = now_ns.saturating_sub(window_ns);
+    let base = match samples
+        .iter()
+        .take(samples.len() - 1)
+        .min_by_key(|s| s.at_ns.abs_diff(edge))
+        .copied()
+    {
+        Some(s) => s,
+        None => return WindowBurn { burn: 0.0, budget_remaining: 1.0 },
+    };
+    let d_total = newest.total.saturating_sub(base.total);
+    let d_missed = newest.missed.saturating_sub(base.missed).min(d_total);
+    if d_total == 0 {
+        return WindowBurn { burn: 0.0, budget_remaining: 1.0 };
+    }
+    let miss_frac = d_missed as f64 / d_total as f64;
+    let burn = miss_frac / budget;
+    WindowBurn { burn, budget_remaining: (1.0 - burn).clamp(0.0, 1.0) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const S: u64 = 1_000_000_000;
+
+    fn cfg(window_s: u64, budget: f64) -> SloConfig {
+        SloConfig {
+            p99_target: Duration::from_millis(5),
+            window: Duration::from_secs(window_s),
+            error_budget: budget,
+        }
+    }
+
+    #[test]
+    fn config_validation_rejects_nonsense() {
+        assert!(cfg(60, 0.01).validate().is_ok());
+        assert!(cfg(0, 0.01).validate().is_err());
+        assert!(cfg(60, 0.0).validate().is_err());
+        assert!(cfg(60, 1.5).validate().is_err());
+        let mut e = SloEngine::new();
+        assert!(e.set("t", cfg(60, 2.0)).is_err());
+        assert!(e.assess_at("t", 10, 0, S).is_none(), "rejected config must not register");
+    }
+
+    #[test]
+    fn burn_is_miss_fraction_over_budget() {
+        let mut e = SloEngine::new();
+        e.set("t", cfg(60, 0.01)).unwrap();
+        e.assess_at("t", 0, 0, 0).unwrap();
+        // 1000 requests, 20 misses => 2% miss rate against a 1% budget
+        let a = e.assess_at("t", 1000, 20, 10 * S).unwrap();
+        assert!((a.burn_rate - 2.0).abs() < 1e-9, "burn {}", a.burn_rate);
+        assert!((a.budget_remaining - 0.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clean_traffic_burns_nothing() {
+        let mut e = SloEngine::new();
+        e.set("t", cfg(60, 0.01)).unwrap();
+        e.assess_at("t", 0, 0, 0).unwrap();
+        let a = e.assess_at("t", 500, 0, 5 * S).unwrap();
+        assert_eq!(a.burn_rate, 0.0);
+        assert_eq!(a.budget_remaining, 1.0);
+        // idle tenant: no delta, no burn
+        let a = e.assess_at("t", 500, 0, 20 * S).unwrap();
+        assert_eq!(a.burn_rate, 0.0);
+    }
+
+    #[test]
+    fn fast_window_catches_an_acute_spike() {
+        let mut e = SloEngine::new();
+        // 120 s window => fast window is 10 s
+        e.set("t", cfg(120, 0.1)).unwrap();
+        e.assess_at("t", 0, 0, 0).unwrap();
+        // a long clean stretch...
+        e.assess_at("t", 100_000, 0, 100 * S).unwrap();
+        // ...then 1000 requests all missing inside the last 5 s
+        let a = e.assess_at("t", 101_000, 1000, 105 * S).unwrap();
+        // slow window dilutes to ~1%/10% ≈ 0.099; fast window sees 100%/10% = 10
+        assert!(a.burn_rate > 9.0, "fast burn should dominate, got {}", a.burn_rate);
+        assert!(a.budget_remaining > 0.8, "full-window budget barely touched");
+    }
+
+    #[test]
+    fn slow_leak_registers_over_the_full_window() {
+        let mut e = SloEngine::new();
+        e.set("t", cfg(60, 0.01)).unwrap();
+        // steady 1.5% miss rate, sampled every 10 s: every window burns 1.5
+        for k in 0..=12u64 {
+            let total = k * 1000;
+            let missed = total * 15 / 1000;
+            let a = e.assess_at("t", total, missed, k * 10 * S).unwrap();
+            if k >= 2 {
+                assert!((a.burn_rate - 1.5).abs() < 0.1, "k={k} burn {}", a.burn_rate);
+            }
+        }
+    }
+
+    #[test]
+    fn old_samples_age_out_of_the_window() {
+        let mut e = SloEngine::new();
+        e.set("t", cfg(60, 0.01)).unwrap();
+        // a bad burst at t=0..10s
+        e.assess_at("t", 0, 0, 0).unwrap();
+        e.assess_at("t", 1000, 100, 10 * S).unwrap();
+        // two minutes later, clean traffic: the burst is out of window
+        let a = e.assess_at("t", 2000, 100, 130 * S).unwrap();
+        assert_eq!(a.burn_rate, 0.0, "aged-out misses must not burn");
+        assert_eq!(a.budget_remaining, 1.0);
+        assert!(e.tenants.get("t").unwrap().samples.len() <= 3, "pruned");
+    }
+
+    #[test]
+    fn histogram_reset_restarts_the_window() {
+        let mut e = SloEngine::new();
+        e.set("t", cfg(60, 0.01)).unwrap();
+        e.assess_at("t", 1000, 500, 10 * S).unwrap();
+        // counts went backwards: stats.reset() happened
+        let a = e.assess_at("t", 10, 0, 20 * S).unwrap();
+        assert_eq!(a.burn_rate, 0.0, "pre-reset misses must not carry over");
+    }
+
+    #[test]
+    fn assess_reads_the_histogram() {
+        let mut e = SloEngine::new();
+        e.set("t", cfg(60, 0.5)).unwrap();
+        let h = Histogram::new();
+        e.assess("t", &h).unwrap();
+        // 2 fast, 2 slow against a 5 ms target and 50% budget => burn 1
+        for d in [1u64, 2, 50_000_000, 60_000_000] {
+            h.record(d);
+        }
+        let a = e.assess("t", &h).unwrap();
+        assert!((a.burn_rate - 1.0).abs() < 1e-9, "burn {}", a.burn_rate);
+        assert!(e.assess("absent", &h).is_none());
+    }
+}

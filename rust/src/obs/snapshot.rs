@@ -31,10 +31,19 @@ struct HistEntry {
     weak: Vec<Weak<Histogram>>,
 }
 
+struct GaugeEntry {
+    cell: Arc<AtomicU64>, // f64 bits
+    /// Whether a [`GaugeHandle`] was ever issued for this gauge. Owned
+    /// gauges belong to a component (a tenant's `BatcherStats`) and are
+    /// swept once every handle is dropped; plain `gauge_set` gauges are
+    /// process-lifetime.
+    owned: bool,
+}
+
 struct Registry {
     hists: Mutex<HashMap<Key, HistEntry>>,
     counters: Mutex<HashMap<Key, Arc<AtomicU64>>>,
-    gauges: Mutex<HashMap<Key, Arc<AtomicU64>>>, // f64 bits
+    gauges: Mutex<HashMap<Key, GaugeEntry>>,
 }
 
 static REGISTRY: Lazy<Registry> = Lazy::new(|| Registry {
@@ -103,7 +112,10 @@ pub fn counter_value(name: &str) -> u64 {
 pub fn gauge_set_labeled(name: &str, tenant: &str, v: f64) {
     let cell = {
         let mut gauges = REGISTRY.gauges.lock().unwrap();
-        Arc::clone(gauges.entry(key(name, tenant)).or_default())
+        let entry = gauges
+            .entry(key(name, tenant))
+            .or_insert_with(|| GaugeEntry { cell: Arc::default(), owned: false });
+        Arc::clone(&entry.cell)
     };
     cell.store(v.to_bits(), Ordering::Relaxed);
 }
@@ -122,10 +134,17 @@ impl GaugeHandle {
     }
 }
 
-/// Obtain a reusable handle to the gauge `(name, tenant)`.
+/// Obtain a reusable handle to the gauge `(name, tenant)`. The gauge
+/// becomes *owned*: once every issued handle is dropped, the series is
+/// swept from the registry at the next [`MetricsSnapshot::capture`]
+/// (evicted tenants must not export stale gauges forever).
 pub fn gauge_handle(name: &str, tenant: &str) -> GaugeHandle {
     let mut gauges = REGISTRY.gauges.lock().unwrap();
-    GaugeHandle(Arc::clone(gauges.entry(key(name, tenant)).or_default()))
+    let entry = gauges
+        .entry(key(name, tenant))
+        .or_insert_with(|| GaugeEntry { cell: Arc::default(), owned: false });
+    entry.owned = true;
+    GaugeHandle(Arc::clone(&entry.cell))
 }
 
 /// Summary of one `(name, tenant)` histogram series at capture time.
@@ -159,12 +178,22 @@ impl MetricsSnapshot {
     /// Merge every registered histogram/counter/gauge plus the recorder's
     /// phase totals. Output is sorted by `(name, tenant)` so exports are
     /// deterministic.
+    ///
+    /// Capture also sweeps dead registrations: histogram entries whose
+    /// weak registrants have all been dropped (and that have no shared
+    /// instance), and owned gauges whose every [`GaugeHandle`] is gone —
+    /// otherwise every evicted or respawned tenant would leave its
+    /// `(name, tenant)` series in the registry, and in every export,
+    /// forever.
     pub fn capture() -> Self {
         let mut histograms = Vec::new();
         {
             let mut hists = REGISTRY.hists.lock().unwrap();
-            for ((name, tenant), entry) in hists.iter_mut() {
+            hists.retain(|_, entry| {
                 entry.weak.retain(|w| w.strong_count() > 0);
+                entry.shared.is_some() || !entry.weak.is_empty()
+            });
+            for ((name, tenant), entry) in hists.iter() {
                 let mut acc = HistAccum::new();
                 if let Some(h) = &entry.shared {
                     h.fold_into(&mut acc);
@@ -203,9 +232,14 @@ impl MetricsSnapshot {
         counters.sort();
 
         let mut gauges: Vec<(String, String, f64)> = {
-            let g = REGISTRY.gauges.lock().unwrap();
+            let mut g = REGISTRY.gauges.lock().unwrap();
+            // owned gauges with no live handle belong to a dropped
+            // component: sweep them (strong_count 1 = only the registry)
+            g.retain(|_, e| !e.owned || Arc::strong_count(&e.cell) > 1);
             g.iter()
-                .map(|((n, t), v)| (n.clone(), t.clone(), f64::from_bits(v.load(Ordering::Relaxed))))
+                .map(|((n, t), e)| {
+                    (n.clone(), t.clone(), f64::from_bits(e.cell.load(Ordering::Relaxed)))
+                })
                 .collect()
         };
         gauges.sort_by(|a, b| (&a.0, &a.1).cmp(&(&b.0, &b.1)));
@@ -284,15 +318,39 @@ impl MetricsSnapshot {
         out
     }
 
-    /// Serialize in the Prometheus text exposition format.
+    /// Serialize in the Prometheus text exposition format. Metric names
+    /// are sanitized to the Prometheus charset
+    /// (`[a-zA-Z_:][a-zA-Z0-9_:]*`) and label values escaped per the
+    /// exposition spec (backslash, double quote, newline) — tenant
+    /// labels like `krr/fit` or anything user-supplied must never
+    /// produce an invalid or ambiguous line.
     pub fn to_prometheus(&self) -> String {
         fn mangle(name: &str) -> String {
-            name.chars().map(|c| if c.is_ascii_alphanumeric() { c } else { '_' }).collect()
+            let mut out: String = name
+                .chars()
+                .map(|c| if c.is_ascii_alphanumeric() || c == ':' { c } else { '_' })
+                .collect();
+            if out.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+                out.insert(0, '_');
+            }
+            out
+        }
+        fn escape_label_value(v: &str) -> String {
+            let mut out = String::with_capacity(v.len());
+            for c in v.chars() {
+                match c {
+                    '\\' => out.push_str("\\\\"),
+                    '"' => out.push_str("\\\""),
+                    '\n' => out.push_str("\\n"),
+                    c => out.push(c),
+                }
+            }
+            out
         }
         fn label(tenant: &str, extra: &str) -> String {
             let mut parts = Vec::new();
             if !tenant.is_empty() {
-                parts.push(format!("tenant=\"{tenant}\""));
+                parts.push(format!("tenant=\"{}\"", escape_label_value(tenant)));
             }
             if !extra.is_empty() {
                 parts.push(extra.to_string());
@@ -331,6 +389,18 @@ impl MetricsSnapshot {
         }
         out
     }
+}
+
+/// Whether the registry currently holds an entry for this histogram
+/// series (test support for the stale-sweep regression tests).
+#[cfg(test)]
+fn hist_entry_exists(name: &str, tenant: &str) -> bool {
+    REGISTRY.hists.lock().unwrap().contains_key(&key(name, tenant))
+}
+
+#[cfg(test)]
+fn gauge_entry_exists(name: &str, tenant: &str) -> bool {
+    REGISTRY.gauges.lock().unwrap().contains_key(&key(name, tenant))
 }
 
 #[cfg(test)]
@@ -378,5 +448,94 @@ mod tests {
         assert!(prom.contains("hmx_test_snapshot_ctr_total 2"));
         assert!(prom.contains("hmx_test_snapshot_gauge 1.5"));
         assert!(prom.contains("quantile=\"0.5\""));
+    }
+
+    #[test]
+    fn prometheus_escapes_label_values_and_sanitizes_names() {
+        histogram("test.snapshot.9prom", "krr/fit \"q\"\\\n2").record(5);
+        let snap = MetricsSnapshot::capture();
+        let prom = snap.to_prometheus();
+        // name: dots mangled, and a leading digit after the prefix is
+        // fine because every name is prefixed `hmx_`
+        assert!(prom.contains("hmx_test_snapshot_9prom_count"), "{prom}");
+        // label value: backslash, quote and newline escaped; the slash
+        // passes through untouched
+        assert!(prom.contains("tenant=\"krr/fit \\\"q\\\"\\\\\\n2\""), "{prom}");
+        // the embedded newline must not split any sample line: exactly
+        // the 5 expected lines (3 quantiles, _sum, _count) mention the
+        // series, each with a trailing value
+        let lines: Vec<&str> =
+            prom.lines().filter(|l| l.contains("test_snapshot_9prom")).collect();
+        assert_eq!(lines.len(), 5, "{lines:?}");
+        for line in lines {
+            assert!(line.rsplit(' ').next().unwrap().parse::<f64>().is_ok(), "{line}");
+        }
+    }
+
+    #[test]
+    fn dead_weak_histograms_are_swept_at_capture() {
+        let h = Arc::new(Histogram::new());
+        h.record(11);
+        register_histogram("test.snapshot.sweep_hist", "gone-tenant", &h);
+        MetricsSnapshot::capture();
+        assert!(hist_entry_exists("test.snapshot.sweep_hist", "gone-tenant"));
+        drop(h);
+        let snap = MetricsSnapshot::capture();
+        assert!(
+            !snap.histograms.iter().any(|s| s.name == "test.snapshot.sweep_hist"),
+            "dead series must not export"
+        );
+        assert!(
+            !hist_entry_exists("test.snapshot.sweep_hist", "gone-tenant"),
+            "dead entry must leave the registry, not just the export"
+        );
+    }
+
+    #[test]
+    fn dead_owned_gauges_are_swept_but_set_gauges_persist() {
+        let g = gauge_handle("test.snapshot.sweep_gauge", "gone-tenant");
+        g.set(3.0);
+        gauge_set("test.snapshot.keep_gauge", 4.0);
+        let snap = MetricsSnapshot::capture();
+        assert!(snap.gauges.iter().any(|(n, t, v)| {
+            n == "test.snapshot.sweep_gauge" && t == "gone-tenant" && *v == 3.0
+        }));
+        drop(g);
+        let snap = MetricsSnapshot::capture();
+        assert!(
+            !gauge_entry_exists("test.snapshot.sweep_gauge", "gone-tenant"),
+            "ownerless gauge must be swept"
+        );
+        assert!(
+            !snap.gauges.iter().any(|(n, _, _)| n == "test.snapshot.sweep_gauge"),
+            "ownerless gauge must not export"
+        );
+        assert!(
+            snap.gauges.iter().any(|(n, _, v)| n == "test.snapshot.keep_gauge" && *v == 4.0),
+            "plain gauge_set series are process-lifetime"
+        );
+    }
+
+    #[test]
+    fn respawned_tenant_reregisters_cleanly() {
+        // first life
+        let h1 = Arc::new(Histogram::new());
+        h1.record(1);
+        register_histogram("test.snapshot.respawn", "t", &h1);
+        drop(h1);
+        MetricsSnapshot::capture(); // sweeps the dead entry
+        // second life of the same (name, tenant)
+        let h2 = Arc::new(Histogram::new());
+        h2.record(2);
+        h2.record(3);
+        register_histogram("test.snapshot.respawn", "t", &h2);
+        let snap = MetricsSnapshot::capture();
+        let s = snap
+            .histograms
+            .iter()
+            .find(|s| s.name == "test.snapshot.respawn" && s.tenant == "t")
+            .expect("respawned series");
+        assert_eq!(s.count, 2, "only the new life's data, no ghost of the first");
+        drop(h2);
     }
 }

@@ -20,6 +20,14 @@
 //!   therefore contain the `matvec.dense`/`matvec.aca` spans of their
 //!   batched apply, and a construction run shows
 //!   morton -> tree -> batched ACA -> recompress as a timeline.
+//! * Cross-thread request timelines use a *context id* (the serving
+//!   layer's `RequestId`): [`span_with_ctx`] tags a guard span with the
+//!   id, [`record_span_with_ctx`] retroactively records an interval that
+//!   started on another thread (e.g. the queue wait measured by the
+//!   executor from the client's submit timestamp), and
+//!   [`chrome_trace_json`] threads each context's spans together with
+//!   Chrome flow events (`ph:"s"/"t"/"f"`), so one request renders as a
+//!   single connected arrow chain crossing client and executor threads.
 
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
@@ -92,6 +100,8 @@ struct Slot {
     id_parent: AtomicU64,
     start_ns: AtomicU64,
     dur_ns: AtomicU64,
+    /// Request context id (0 = not request-scoped).
+    ctx: AtomicU64,
 }
 
 /// A per-thread ring of completed spans.
@@ -112,19 +122,21 @@ impl SpanRing {
                     id_parent: AtomicU64::new(0),
                     start_ns: AtomicU64::new(0),
                     dur_ns: AtomicU64::new(0),
+                    ctx: AtomicU64::new(0),
                 })
                 .collect(),
         }
     }
 
     /// Owner thread only: publish one completed span.
-    fn push(&self, name_id: u32, id: u32, parent: u32, start_ns: u64, dur_ns: u64) {
+    fn push(&self, name_id: u32, id: u32, parent: u32, start_ns: u64, dur_ns: u64, ctx: u64) {
         let c = self.cursor.load(Ordering::Relaxed);
         let slot = &self.slots[(c % RING_CAPACITY as u64) as usize];
         slot.name_id.store(name_id as u64, Ordering::Relaxed);
         slot.id_parent.store(((id as u64) << 32) | parent as u64, Ordering::Relaxed);
         slot.start_ns.store(start_ns, Ordering::Relaxed);
         slot.dur_ns.store(dur_ns, Ordering::Relaxed);
+        slot.ctx.store(ctx, Ordering::Relaxed);
         self.cursor.store(c + 1, Ordering::Release);
         if c >= RING_CAPACITY as u64 {
             super::counter_incr(names::OBS_TRACE_DROPPED);
@@ -146,6 +158,7 @@ impl SpanRing {
                 parent: (id_parent & 0xffff_ffff) as u32,
                 start_ns: slot.start_ns.load(Ordering::Relaxed),
                 dur_ns: slot.dur_ns.load(Ordering::Relaxed),
+                ctx: slot.ctx.load(Ordering::Relaxed),
             });
         }
     }
@@ -163,6 +176,8 @@ pub struct SpanEvent {
     pub parent: u32,
     pub start_ns: u64,
     pub dur_ns: u64,
+    /// Request context id linking spans across threads (0 = none).
+    pub ctx: u64,
 }
 
 impl SpanEvent {
@@ -213,6 +228,7 @@ struct LiveSpan {
     id: u32,
     parent: u32,
     start_ns: u64,
+    ctx: u64,
 }
 
 impl Drop for SpanGuard {
@@ -226,7 +242,7 @@ impl Drop for SpanGuard {
                 } else if let Some(pos) = tt.stack.iter().rposition(|&i| i == s.id) {
                     tt.stack.truncate(pos);
                 }
-                tt.ring.push(s.name_id, s.id, s.parent, s.start_ns, dur);
+                tt.ring.push(s.name_id, s.id, s.parent, s.start_ns, dur, s.ctx);
             });
         }
     }
@@ -237,6 +253,13 @@ impl Drop for SpanGuard {
 /// a single atomic load.
 #[inline]
 pub fn span(name: &str) -> SpanGuard {
+    span_with_ctx(name, 0)
+}
+
+/// Like [`span`], but tags the recorded span with a request context id so
+/// exporters can flow-link it to same-context spans on other threads.
+#[inline]
+pub fn span_with_ctx(name: &str, ctx: u64) -> SpanGuard {
     if !is_enabled() {
         return SpanGuard { live: None, _not_send: std::marker::PhantomData };
     }
@@ -246,9 +269,29 @@ pub fn span(name: &str) -> SpanGuard {
         let id = tt.next_id;
         let parent = tt.stack.last().copied().unwrap_or(0);
         tt.stack.push(id);
-        LiveSpan { name_id, id, parent, start_ns: now_ns() }
+        LiveSpan { name_id, id, parent, start_ns: now_ns(), ctx }
     });
     SpanGuard { live: Some(live), _not_send: std::marker::PhantomData }
+}
+
+/// Retroactively record a completed interval on the *current* thread's
+/// ring, tagged with a context id. This is how the executor records a
+/// request's queue wait: the interval started on the client thread (the
+/// submit timestamp travels with the request), but the executor is the
+/// thread that learns when it ended. The span takes the current thread's
+/// innermost open span as parent so it nests under e.g. `serve.flush`.
+/// No-op while tracing is disabled.
+pub fn record_span_with_ctx(name: &str, ctx: u64, start_ns: u64, end_ns: u64) {
+    if !is_enabled() {
+        return;
+    }
+    let name_id = intern(name);
+    with_thread_trace(|tt| {
+        tt.next_id += 1;
+        let id = tt.next_id;
+        let parent = tt.stack.last().copied().unwrap_or(0);
+        tt.ring.push(name_id, id, parent, start_ns, end_ns.saturating_sub(start_ns), ctx);
+    });
 }
 
 /// Snapshot every thread's retained spans (oldest first per thread).
@@ -263,26 +306,75 @@ pub fn snapshot_spans() -> Vec<SpanEvent> {
 }
 
 /// Serialize spans as Chrome trace-event JSON (the `chrome://tracing` /
-/// Perfetto "JSON Array Format" wrapped in a `traceEvents` object, all
-/// complete `"X"` events with microsecond timestamps).
+/// Perfetto "JSON Array Format" wrapped in a `traceEvents` object):
+/// complete `"X"` events with microsecond timestamps, plus, for every
+/// request context that spans recorded under (`ctx != 0`), a chain of
+/// flow events (`ph:"s"` at the first span, `ph:"t"` steps, `ph:"f"`
+/// with `bp:"e"` at the last) sharing `id = ctx` — Perfetto draws these
+/// as arrows connecting the request's spans across threads.
 pub fn chrome_trace_json(events: &[SpanEvent]) -> String {
+    use std::collections::BTreeMap;
+
     let mut out = String::with_capacity(events.len() * 96 + 64);
     out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
-    for (i, e) in events.iter().enumerate() {
-        if i > 0 {
+    let mut first = true;
+    let mut emit = |s: &str, out: &mut String| {
+        if !first {
             out.push(',');
         }
-        out.push_str("{\"name\":");
-        super::json::escape_into(&e.name, &mut out);
-        out.push_str(&format!(
+        first = false;
+        out.push_str(s);
+    };
+    for e in events {
+        let mut ev = String::with_capacity(96);
+        ev.push_str("{\"name\":");
+        super::json::escape_into(&e.name, &mut ev);
+        ev.push_str(&format!(
             ",\"ph\":\"X\",\"pid\":1,\"tid\":{},\"ts\":{:.3},\"dur\":{:.3},\
-             \"args\":{{\"id\":{},\"parent\":{}}}}}",
+             \"args\":{{\"id\":{},\"parent\":{},\"ctx\":{}}}}}",
             e.tid,
             e.start_ns as f64 / 1e3,
             e.dur_ns as f64 / 1e3,
             e.id,
-            e.parent
+            e.parent,
+            e.ctx
         ));
+        emit(&ev, &mut out);
+    }
+    // flow chains: group request-scoped spans by ctx, in start order
+    let mut chains: BTreeMap<u64, Vec<&SpanEvent>> = BTreeMap::new();
+    for e in events.iter().filter(|e| e.ctx != 0) {
+        chains.entry(e.ctx).or_default().push(e);
+    }
+    for (ctx, mut chain) in chains {
+        if chain.len() < 2 {
+            continue; // an arrow needs two ends
+        }
+        chain.sort_by_key(|e| (e.start_ns, e.tid, e.id));
+        let last = chain.len() - 1;
+        for (k, e) in chain.iter().enumerate() {
+            // flow events bind to the enclosing slice on (pid, tid) at
+            // `ts`; `bp:"e"` makes the terminator bind enclosing too
+            let ph = if k == 0 {
+                "s"
+            } else if k == last {
+                "f"
+            } else {
+                "t"
+            };
+            let bp = if ph == "f" { ",\"bp\":\"e\"" } else { "" };
+            let ev = format!(
+                "{{\"name\":\"request\",\"cat\":\"request\",\"ph\":\"{}\",\"id\":{},\
+                 \"pid\":1,\"tid\":{},\"ts\":{:.3}{}}}",
+                ph,
+                ctx,
+                e.tid,
+                // land inside the bound slice, not on its edge
+                (e.start_ns as f64 + (e.dur_ns as f64 / 2.0).min(500.0)) / 1e3,
+                bp
+            );
+            emit(&ev, &mut out);
+        }
     }
     out.push_str("]}");
     out
@@ -296,25 +388,51 @@ pub fn write_chrome_trace(path: &std::path::Path) -> std::io::Result<usize> {
 }
 
 /// Validate that `json` parses as a Chrome trace and every event carries
-/// the required keys with sane values. Returns the event count.
+/// the required keys with sane values. Complete (`"X"`) events need a
+/// duration; flow events (`"s"`/`"t"`/`"f"`) need a flow `id` instead,
+/// and every flow chain must have a start and a terminator. Returns the
+/// event count.
 pub fn validate_chrome_trace(json: &str) -> Result<usize, String> {
+    use std::collections::HashMap;
+
     let v = super::json::parse(json)?;
     let events = v
         .get("traceEvents")
         .and_then(|e| e.as_array())
         .ok_or("missing traceEvents array")?;
+    // flow id -> (saw "s", saw "f")
+    let mut flows: HashMap<u64, (bool, bool)> = HashMap::new();
     for (i, e) in events.iter().enumerate() {
         let ctx = |k: &str| format!("traceEvents[{i}]: missing/invalid {k}");
         e.get("name").and_then(|n| n.as_str()).ok_or_else(|| ctx("name"))?;
         let ph = e.get("ph").and_then(|n| n.as_str()).ok_or_else(|| ctx("ph"))?;
-        if ph != "X" {
-            return Err(format!("traceEvents[{i}]: expected ph=X, got {ph}"));
-        }
-        for key in ["ts", "dur", "pid", "tid"] {
+        let keys: &[&str] = match ph {
+            "X" => &["ts", "dur", "pid", "tid"],
+            "s" | "t" | "f" => &["ts", "pid", "tid"],
+            _ => return Err(format!("traceEvents[{i}]: expected ph in {{X,s,t,f}}, got {ph}")),
+        };
+        for key in keys {
             let x = e.get(key).and_then(|n| n.as_f64()).ok_or_else(|| ctx(key))?;
             if !x.is_finite() || x < 0.0 {
                 return Err(format!("traceEvents[{i}]: non-finite/negative {key}"));
             }
+        }
+        if ph != "X" {
+            let id = e.get("id").and_then(|n| n.as_f64()).ok_or_else(|| ctx("id"))?;
+            if !id.is_finite() || id < 1.0 {
+                return Err(format!("traceEvents[{i}]: flow event with invalid id"));
+            }
+            let entry = flows.entry(id as u64).or_insert((false, false));
+            match ph {
+                "s" => entry.0 = true,
+                "f" => entry.1 = true,
+                _ => {}
+            }
+        }
+    }
+    for (id, (start, finish)) in flows {
+        if !start || !finish {
+            return Err(format!("flow {id}: missing {}", if start { "finish" } else { "start" }));
         }
     }
     Ok(events.len())
@@ -370,10 +488,81 @@ mod tests {
                 parent: 0,
                 start_ns: 1000,
                 dur_ns: 2500,
+                ctx: 0,
             },
-            SpanEvent { name: "b".into(), tid: 3, id: 2, parent: 1, start_ns: 1200, dur_ns: 100 },
+            SpanEvent {
+                name: "b".into(),
+                tid: 3,
+                id: 2,
+                parent: 1,
+                start_ns: 1200,
+                dur_ns: 100,
+                ctx: 0,
+            },
         ];
         let json = chrome_trace_json(&events);
         assert_eq!(validate_chrome_trace(&json).unwrap(), 2);
+    }
+
+    #[test]
+    fn flow_events_link_same_ctx_spans_across_threads() {
+        let mk = |name: &str, tid, id, start_ns, ctx| SpanEvent {
+            name: name.into(),
+            tid,
+            id,
+            parent: 0,
+            start_ns,
+            dur_ns: 400,
+            ctx,
+        };
+        let events = vec![
+            mk("submit", 1, 1, 1_000, 7),
+            mk("queue", 2, 1, 1_500, 7),
+            mk("apply", 2, 2, 2_000, 7),
+            mk("lonely", 2, 3, 2_500, 9), // single-span ctx: no arrow
+            mk("plain", 2, 4, 3_000, 0),
+        ];
+        let json = chrome_trace_json(&events);
+        // 5 X events + a 3-link flow chain (s, t, f); ctx 9 has one span
+        // so no flow is emitted for it
+        assert_eq!(validate_chrome_trace(&json).unwrap(), 8);
+        assert!(json.contains("\"ph\":\"s\",\"id\":7"));
+        assert!(json.contains("\"ph\":\"t\",\"id\":7"));
+        assert!(json.contains("\"ph\":\"f\",\"id\":7"));
+        assert!(json.contains("\"bp\":\"e\""));
+        assert!(!json.contains("\"id\":9,"), "singleton ctx must not emit flow events");
+    }
+
+    #[test]
+    fn validator_rejects_dangling_flows_and_unknown_phases() {
+        let dangling = r#"{"traceEvents":[
+            {"name":"r","cat":"r","ph":"s","id":3,"pid":1,"tid":1,"ts":1.0}
+        ]}"#;
+        assert!(validate_chrome_trace(dangling).unwrap_err().contains("flow 3"));
+        let unknown = r#"{"traceEvents":[
+            {"name":"r","ph":"Q","pid":1,"tid":1,"ts":1.0}
+        ]}"#;
+        assert!(validate_chrome_trace(unknown).unwrap_err().contains("ph"));
+    }
+
+    #[test]
+    fn record_span_with_ctx_lands_on_current_ring() {
+        let events = std::thread::spawn(|| {
+            enable();
+            let tid = with_thread_trace(|tt| tt.ring.tid);
+            {
+                let _flush = span("test.ctx_flush");
+                record_span_with_ctx("test.ctx_queue", 42, now_ns().saturating_sub(1_000), now_ns());
+            }
+            snapshot_spans().into_iter().filter(|e| e.tid == tid).collect::<Vec<_>>()
+        })
+        .join()
+        .unwrap();
+        assert_eq!(events.len(), 2);
+        let queue = events.iter().find(|e| e.name == "test.ctx_queue").unwrap();
+        let flush = events.iter().find(|e| e.name == "test.ctx_flush").unwrap();
+        assert_eq!(queue.ctx, 42);
+        assert_eq!(queue.parent, flush.id, "retroactive span nests under the open span");
+        assert_eq!(flush.ctx, 0);
     }
 }

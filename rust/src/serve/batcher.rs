@@ -59,8 +59,18 @@ impl Control {
     }
 }
 
+/// Process-unique `RequestId` source. Ids start at 1 so 0 can mean "no
+/// trace context" in the span ring.
+static NEXT_REQUEST_ID: AtomicU64 = AtomicU64::new(1);
+
 /// One queued submission.
 pub(crate) struct Request {
+    /// Process-unique `RequestId`: the trace context id of every span this
+    /// request emits (submit → queue → apply → scatter flow linking).
+    id: u64,
+    /// `obs::trace::now_ns()` at submit when tracing was enabled, else 0.
+    /// The executor turns it into a retroactive `serve.request.queue` span.
+    trace_start_ns: u64,
     x: Vec<f64>,
     submitted: Instant,
     /// Absolute expiry: past it the request is swept from the queue and
@@ -122,6 +132,11 @@ fn dequeue(mut req: Request, stats: &BatcherStats) -> Request {
 
 /// How long the idle executor sleeps between shutdown-flag checks.
 const IDLE_POLL: Duration = Duration::from_millis(20);
+
+/// One sweep expiring at least this many requests counts as a deadline
+/// storm and triggers a [`obs::flight`] dump (smaller sweeps only leave a
+/// flight-recorder note).
+const DEADLINE_STORM_SWEEP: usize = 8;
 
 /// The executor re-evaluates its input-slab size every this many flushes:
 /// capacity above the window's high-water mark is released (and the
@@ -260,8 +275,20 @@ impl BatcherClient {
                 return Err(ServeError::Overloaded);
             }
         }
+        let req_id = NEXT_REQUEST_ID.fetch_add(1, Ordering::Relaxed);
+        let tracing = obs::trace::is_enabled();
+        // the submit span carries the request id as its trace context; the
+        // executor's queue/apply/scatter spans reuse it, so the Chrome
+        // export can flow-link one request across both threads
+        let _submit = if tracing {
+            Some(obs::span_with_ctx(names::SERVE_REQUEST_SUBMIT, req_id))
+        } else {
+            None
+        };
         let slot = ResponseSlot::new();
         let req = Request {
+            id: req_id,
+            trace_start_ns: if tracing { obs::trace::now_ns() } else { 0 },
             x,
             submitted: now,
             deadline,
@@ -278,7 +305,7 @@ impl BatcherClient {
         match self.queue.push(&self.tenant, self.weight, req) {
             Ok(()) => {
                 self.stats.record_enqueued(depth);
-                Ok(SubmitFuture::new(slot))
+                Ok(SubmitFuture::new(slot, req_id))
             }
             Err(PushError::Full(mut req)) => {
                 req.dequeued = true; // record_unsubmit rolls the gauge back
@@ -650,12 +677,26 @@ impl XbufGovernor {
 /// slot. Requests already popped into an assembling batch are exempt
 /// (the flush timer tightens to their deadline instead; see
 /// [`run_executor`]).
-fn sweep_expired(queue: &FairQueue<Request>, stats: &BatcherStats) {
+fn sweep_expired(queue: &FairQueue<Request>, stats: &BatcherStats, tenant: &str) {
     let now = Instant::now();
+    let mut swept = 0usize;
     for req in queue.sweep(|r| r.expired(now)) {
         let req = dequeue(req, stats);
         stats.record_deadline_expired();
         req.slot.complete(Err(ServeError::DeadlineExceeded));
+        swept += 1;
+    }
+    // a deadline storm — a whole cohort expiring in one sweep — is the
+    // kind of incident the flight recorder exists for: dump the recent
+    // span/metric/health context before the evidence ages out of the rings
+    if swept >= DEADLINE_STORM_SWEEP {
+        obs::flight::dump(
+            "deadline-storm",
+            tenant,
+            &format!("{swept} requests expired in one sweep"),
+        );
+    } else if swept > 0 {
+        obs::flight::note("deadline-expired", tenant, &format!("swept {swept}"));
     }
 }
 
@@ -698,7 +739,7 @@ fn run_executor<A: LendingApply>(
                 while let Ok(cmd) = ctl_rx.try_recv() {
                     run_control(apply, cmd);
                 }
-                sweep_expired(queue, stats);
+                sweep_expired(queue, stats, tenant);
                 let Some(first) = queue.try_pop() else { break };
                 let mut batch = vec![dequeue(first, stats)];
                 drain_backlog(queue, &mut batch, cfg.max_batch, stats);
@@ -719,7 +760,7 @@ fn run_executor<A: LendingApply>(
             queue.close();
             return;
         }
-        sweep_expired(queue, stats);
+        sweep_expired(queue, stats, tenant);
         let first = match queue.pop_timeout(IDLE_POLL) {
             Ok(r) => r,
             Err(PopError::Timeout) => continue,
@@ -826,9 +867,11 @@ fn process_batch<A: LendingApply>(
     // tracing enabled it therefore *contains* the matvec.dense/matvec.aca
     // spans the apply emits on this same executor thread
     let _flush = obs::span(names::SERVE_FLUSH);
+    let tracing = obs::trace::is_enabled();
     let nrhs = batch.len();
     let width = ladder.width_for(nrhs);
     let picked = Instant::now();
+    let picked_ns = if tracing { obs::trace::now_ns() } else { 0 };
     for req in &batch {
         let wait = picked.duration_since(req.submitted);
         stats.record_wait(wait);
@@ -836,6 +879,17 @@ fn process_batch<A: LendingApply>(
             h.record_duration(wait);
         }
         RECORDER.add(names::SERVE_WAIT, wait);
+        // retroactive queue-wait span: stamped on the client thread at
+        // submit, recorded here on the executor's ring so the flow chain
+        // crosses threads (it nests under this serve.flush span)
+        if tracing && req.trace_start_ns != 0 {
+            obs::trace::record_span_with_ctx(
+                names::SERVE_REQUEST_QUEUE,
+                req.id,
+                req.trace_start_ns,
+                picked_ns,
+            );
+        }
     }
     xbuf.clear();
     xbuf.reserve(n * width);
@@ -849,6 +903,7 @@ fn process_batch<A: LendingApply>(
         RECORDER.incr(names::SERVE_PAD_COLS);
     }
     let t0 = Instant::now();
+    let apply_start_ns = if tracing { obs::trace::now_ns() } else { 0 };
     // the unwind is caught so a panicking user apply cannot kill the
     // executor and leave every queued waiter hanging: the batch resolves
     // with ApplyPanicked and the executor keeps serving later batches
@@ -870,8 +925,21 @@ fn process_batch<A: LendingApply>(
         }))
     };
     let apply_time = t0.elapsed();
+    let apply_end_ns = if tracing { obs::trace::now_ns() } else { 0 };
     stats.record_batch(nrhs, apply_time);
     RECORDER.add(names::SERVE_APPLY, apply_time);
+    if tracing {
+        // each request in the batch shares the one batched-apply interval;
+        // per-request copies keep every flow chain self-contained
+        for req in &batch {
+            obs::trace::record_span_with_ctx(
+                names::SERVE_REQUEST_APPLY,
+                req.id,
+                apply_start_ns,
+                apply_end_ns,
+            );
+        }
+    }
     let _scatter = obs::span(names::SERVE_SCATTER);
     match out {
         // the shape check is a hard runtime guard, not a debug_assert:
@@ -880,11 +948,17 @@ fn process_batch<A: LendingApply>(
         // operator) or silently mis-scatter columns
         Ok(Ok(y)) if y.len() == n * width => {
             for (c, mut req) in batch.into_iter().enumerate() {
+                let _col_span = if tracing {
+                    Some(obs::span_with_ctx(names::SERVE_REQUEST_SCATTER, req.id))
+                } else {
+                    None
+                };
                 // recycle the request's own input vector as its output
                 // buffer: the scatter is slab → caller buffer, with no
                 // per-request allocation on the executor
                 let mut col = std::mem::take(&mut req.x);
                 col.copy_from_slice(&y[c * n..(c + 1) * n]);
+                stats.record_latency(req.submitted.elapsed());
                 req.slot.complete(Ok(col));
             }
         }

@@ -258,6 +258,9 @@ pub struct OperatorRegistry {
     /// rebuild attempt was breaker-denied/failed). Retried every
     /// [`OperatorRegistry::supervise`] pass.
     pending: Mutex<HashMap<String, BuildRecipe>>,
+    /// Per-tenant latency SLOs, assessed into error-budget burn rates at
+    /// every [`OperatorRegistry::observe`] (see [`crate::obs::slo`]).
+    slo: Mutex<crate::obs::slo::SloEngine>,
     epoch: Instant,
 }
 
@@ -275,6 +278,7 @@ impl OperatorRegistry {
             supervisor: SupervisorConfig::default(),
             breakers: Mutex::new(HashMap::new()),
             pending: Mutex::new(HashMap::new()),
+            slo: Mutex::new(crate::obs::slo::SloEngine::new()),
             epoch: Instant::now(),
         }
     }
@@ -293,6 +297,33 @@ impl OperatorRegistry {
 
     pub fn governor(&self) -> Option<&MemoryGovernor> {
         self.governor.as_ref()
+    }
+
+    /// Declare `id`'s latency SLO. From the next [`OperatorRegistry::observe`]
+    /// on, the tenant's `serve.latency` series is differentialed into
+    /// multi-window error-budget burn rates, exported as the
+    /// `(slo.burn_rate, tenant=id)` / `(slo.budget_remaining, tenant=id)`
+    /// gauges, and folded into the tenant's health band: sustained burn ≥
+    /// [`crate::obs::slo::DEGRADED_BURN`] degrades it, ≥
+    /// [`crate::obs::slo::BROWNOUT_BURN`] browns it out (engaging
+    /// low-weight-lane shedding even while the queue is shallow).
+    /// Replacing an existing config restarts the burn window.
+    pub fn set_slo(&self, id: &str, cfg: crate::obs::slo::SloConfig) -> Result<(), ServeError> {
+        relock(&self.slo).set(id, cfg).map_err(ServeError::BadRequest)
+    }
+
+    /// Forget `id`'s SLO (its burn gauges stop updating and any SLO-driven
+    /// health floor is cleared at the next observe).
+    pub fn clear_slo(&self, id: &str) {
+        relock(&self.slo).remove(id);
+        if let Some(e) = relock(&self.ops).get(id) {
+            e.batcher.stats().set_slo_floor(HealthState::Ok);
+        }
+    }
+
+    /// The tenant's declared SLO, if any.
+    pub fn slo(&self, id: &str) -> Option<crate::obs::slo::SloConfig> {
+        relock(&self.slo).config(id)
     }
 
     fn now_ms(&self) -> u64 {
@@ -464,6 +495,7 @@ impl OperatorRegistry {
         if b.on_failure(Instant::now()) {
             RECORDER.incr(names::SERVE_BREAKER_OPEN);
             obs::counter_incr(names::SERVE_BREAKER_OPEN);
+            obs::flight::dump("breaker-open", id, "rebuild failures tripped the circuit breaker");
         }
     }
 
@@ -615,6 +647,12 @@ impl OperatorRegistry {
                 e.batcher.abort_lost();
                 casualties.push((id, e.recipe.clone()));
             }
+        }
+        // dump the flight recorder per casualty BEFORE the rebuild: the
+        // artifact captures the spans/metrics/health trail leading up to
+        // the loss, not the recovered steady state after it
+        for (id, _) in &casualties {
+            obs::flight::dump("executor-lost", id, "supervisor found the executor dead or wedged");
         }
         {
             let mut pending = relock(&self.pending);
@@ -789,8 +827,46 @@ impl OperatorRegistry {
         if let Some(gov) = &self.governor {
             gov.record_bytes(self.factor_bytes());
         }
+        self.assess_slos();
         obs::gauge_set(names::SERVE_HEALTH, self.health() as u8 as f64);
         crate::obs::MetricsSnapshot::capture()
+    }
+
+    /// Assess every declared SLO against its tenant's live `serve.latency`
+    /// series: refresh the burn-rate gauges and raise/clear the tenant's
+    /// SLO-driven health floor (the burn-rate spelling of brown-out — the
+    /// controller reacts to budget burn, not just raw queue depth).
+    fn assess_slos(&self) {
+        let mut engine = relock(&self.slo);
+        let tenants = engine.tenants();
+        if tenants.is_empty() {
+            return;
+        }
+        // stats handles are collected under the ops lock but assessed
+        // outside it: assessment walks histogram buckets and takes the
+        // metric-registry lock, neither of which belongs under `ops`
+        let stats: Vec<(String, Arc<BatcherStats>)> = {
+            let ops = relock(&self.ops);
+            tenants
+                .iter()
+                .filter_map(|t| ops.get(t).map(|e| (t.clone(), e.batcher.stats())))
+                .collect()
+        };
+        for (tenant, st) in stats {
+            let Some(a) = engine.assess(&tenant, &st.latency_histogram()) else {
+                continue;
+            };
+            obs::gauge_set_labeled(names::SLO_BURN_RATE, &tenant, a.burn_rate);
+            obs::gauge_set_labeled(names::SLO_BUDGET_REMAINING, &tenant, a.budget_remaining);
+            let floor = if a.burn_rate >= crate::obs::slo::BROWNOUT_BURN {
+                HealthState::BrownOut
+            } else if a.burn_rate >= crate::obs::slo::DEGRADED_BURN {
+                HealthState::Degraded
+            } else {
+                HealthState::Ok
+            };
+            st.set_slo_floor(floor);
+        }
     }
 }
 

@@ -84,11 +84,20 @@ impl ResponseSlot {
 pub struct SubmitFuture {
     slot: Arc<ResponseSlot>,
     done: bool,
+    id: u64,
 }
 
 impl SubmitFuture {
-    pub(crate) fn new(slot: Arc<ResponseSlot>) -> Self {
-        SubmitFuture { slot, done: false }
+    pub(crate) fn new(slot: Arc<ResponseSlot>, id: u64) -> Self {
+        SubmitFuture { slot, done: false, id }
+    }
+
+    /// The process-unique `RequestId` stamped at submit. With tracing
+    /// enabled this is the trace context id of the request's spans: pass
+    /// it to tooling to pull one request's flow-linked timeline out of a
+    /// Chrome trace export.
+    pub fn request_id(&self) -> u64 {
+        self.id
     }
 }
 
@@ -119,6 +128,11 @@ pub struct Ticket {
 impl Ticket {
     pub(crate) fn new(fut: SubmitFuture) -> Self {
         Ticket { fut }
+    }
+
+    /// The process-unique `RequestId` (see [`SubmitFuture::request_id`]).
+    pub fn request_id(&self) -> u64 {
+        self.fut.request_id()
     }
 
     /// Block until the batch containing this request has been applied.
@@ -174,7 +188,7 @@ mod tests {
         slot.complete(Ok(vec![1.0, 2.0]));
         // later completions lose
         slot.complete(Err(ServeError::Shutdown));
-        let y = block_on(SubmitFuture::new(slot)).unwrap();
+        let y = block_on(SubmitFuture::new(slot, 0)).unwrap();
         assert_eq!(y, vec![1.0, 2.0]);
     }
 
@@ -188,7 +202,7 @@ mod tests {
                 slot.complete(Ok(vec![7.0]));
             })
         };
-        let y = block_on(SubmitFuture::new(slot)).unwrap();
+        let y = block_on(SubmitFuture::new(slot, 0)).unwrap();
         assert_eq!(y, vec![7.0]);
         producer.join().unwrap();
     }
@@ -198,7 +212,7 @@ mod tests {
         // one thread holds N pending futures and redeems them all
         let slots: Vec<_> = (0..64).map(|_| ResponseSlot::new()).collect();
         let futs: Vec<_> =
-            slots.iter().map(|s| SubmitFuture::new(Arc::clone(s))).collect();
+            slots.iter().map(|s| SubmitFuture::new(Arc::clone(s), 0)).collect();
         let producer = {
             let slots = slots.clone();
             std::thread::spawn(move || {

@@ -72,10 +72,16 @@ pub struct BatcherStats {
     queue_depth: AtomicU64,
     /// High-water mark of `queue_depth`.
     max_queue_depth: AtomicU64,
+    /// Tenant label the stats were registered under ("" for the plain
+    /// constructor); identifies this batcher in flight-recorder notes.
+    tenant: String,
     /// Submit → batch-pickup latency per request (ns).
     wait: Arc<Histogram>,
     /// Batched-apply latency per batch (ns).
     apply: Arc<Histogram>,
+    /// End-to-end submit → scatter latency per served request (ns) — the
+    /// series the per-tenant SLO burn-rate engine assesses.
+    latency: Arc<Histogram>,
     /// Requests coalesced per flushed batch.
     occupancy: Arc<Histogram>,
     /// Mirrors `queue_depth` into the labeled global gauge.
@@ -99,6 +105,12 @@ pub struct BatcherStats {
     degraded_depth: AtomicU64,
     /// Queue depth at which health browns out (`u64::MAX` = never).
     brownout_depth: AtomicU64,
+    /// SLO-driven floor under the health state ([`HealthState`]
+    /// discriminant): the registry raises it when the tenant's error-budget
+    /// burn rate crosses [`crate::obs::slo::DEGRADED_BURN`] /
+    /// [`crate::obs::slo::BROWNOUT_BURN`], so brown-out shedding engages on
+    /// budget burn even while the queue itself still looks shallow.
+    slo_floor: AtomicU8,
 }
 
 /// The per-tenant `serve.wait` histogram series for one fair-queue lane,
@@ -125,10 +137,13 @@ impl BatcherStats {
         let wait = Arc::new(Histogram::new());
         let apply = Arc::new(Histogram::new());
         let occupancy = Arc::new(Histogram::new());
+        let latency = Arc::new(Histogram::new());
         obs::register_histogram(names::SERVE_WAIT, label, &wait);
         obs::register_histogram(names::SERVE_APPLY, label, &apply);
         obs::register_histogram(names::SERVE_BATCH_OCCUPANCY, label, &occupancy);
+        obs::register_histogram(names::SERVE_LATENCY, label, &latency);
         BatcherStats {
+            tenant: label.to_string(),
             requests: AtomicU64::new(0),
             shed: AtomicU64::new(0),
             batches: AtomicU64::new(0),
@@ -138,6 +153,7 @@ impl BatcherStats {
             wait,
             apply,
             occupancy,
+            latency,
             depth_gauge: obs::gauge_handle(names::SERVE_QUEUE_DEPTH, label),
             xbuf_bytes: AtomicU64::new(0),
             xbuf_gauge: obs::gauge_handle(names::SERVE_XBUF_BYTES, label),
@@ -147,6 +163,7 @@ impl BatcherStats {
             health_gauge: obs::gauge_handle(names::SERVE_HEALTH, label),
             degraded_depth: AtomicU64::new(u64::MAX),
             brownout_depth: AtomicU64::new(u64::MAX),
+            slo_floor: AtomicU8::new(HealthState::Ok as u8),
         }
     }
 
@@ -159,22 +176,46 @@ impl BatcherStats {
         self.health_gauge.set(HealthState::Ok as u8 as f64);
     }
 
-    /// Re-derive the health state from the current queue depth. Called
-    /// on both edges (submit and dequeue) so the state recovers on its
-    /// own as the backlog drains. Returns the state in force.
+    /// Re-derive the health state from the current queue depth (and the
+    /// SLO floor: the worse of the two bands wins). Called on both edges
+    /// (submit and dequeue) so the state recovers on its own as the
+    /// backlog drains. Returns the state in force.
     fn update_health(&self, depth: u64) -> HealthState {
-        let state = if depth >= self.brownout_depth.load(Ordering::Relaxed) {
+        let depth_state = if depth >= self.brownout_depth.load(Ordering::Relaxed) {
             HealthState::BrownOut
         } else if depth >= self.degraded_depth.load(Ordering::Relaxed) {
             HealthState::Degraded
         } else {
             HealthState::Ok
         };
+        let state = depth_state.max(HealthState::from_u8(self.slo_floor.load(Ordering::Relaxed)));
         let prev = self.health.swap(state as u8, Ordering::Relaxed);
         if prev != state as u8 {
             self.health_gauge.set(state as u8 as f64);
+            obs::flight::note(
+                "health",
+                &self.tenant,
+                &format!("{} -> {}", HealthState::from_u8(prev), state),
+            );
         }
         state
+    }
+
+    /// Raise or clear the SLO-driven health floor (set by the registry
+    /// from the tenant's burn-rate assessment at `observe()` time). The
+    /// effective health is `max(queue-depth band, floor)`, so a burning
+    /// error budget engages degradation/brown-out shedding even while the
+    /// queue is shallow — and the floor clears as soon as the burn does.
+    pub fn set_slo_floor(&self, floor: HealthState) {
+        let prev = self.slo_floor.swap(floor as u8, Ordering::Relaxed);
+        if prev != floor as u8 {
+            self.update_health(self.queue_depth.load(Ordering::Relaxed));
+        }
+    }
+
+    /// The current SLO-driven health floor.
+    pub fn slo_floor(&self) -> HealthState {
+        HealthState::from_u8(self.slo_floor.load(Ordering::Relaxed))
     }
 
     /// The tenant's current health band (driven by queue depth against
@@ -265,6 +306,25 @@ impl BatcherStats {
     /// Executor side: per-request wait (submit → batch pickup).
     pub(crate) fn record_wait(&self, d: Duration) {
         self.wait.record_duration(d);
+    }
+
+    /// Executor side: end-to-end latency (submit → scatter) of one served
+    /// request — the `serve.latency` series the SLO engine assesses.
+    pub(crate) fn record_latency(&self, d: Duration) {
+        self.latency.record_duration(d);
+    }
+
+    /// The end-to-end `serve.latency` histogram (submit → scatter per
+    /// served request). The registry's SLO engine differentials this
+    /// series into multi-window burn rates.
+    pub fn latency_histogram(&self) -> Arc<Histogram> {
+        Arc::clone(&self.latency)
+    }
+
+    /// End-to-end latency quantile over every served request (histogram
+    /// estimate; relative error ≤ [`crate::obs::MAX_REL_ERR`]).
+    pub fn latency_quantile(&self, q: f64) -> Duration {
+        self.latency.quantile_duration(q)
     }
 
     /// Executor side: one flushed batch of `occupancy` requests applied in
@@ -363,6 +423,7 @@ impl BatcherStats {
         self.wait.clear();
         self.apply.clear();
         self.occupancy.clear();
+        self.latency.clear();
     }
 }
 

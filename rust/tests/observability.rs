@@ -171,6 +171,122 @@ fn serve_flush_spans_contain_matvec_spans() {
     }
 }
 
+#[test]
+fn request_flows_link_submit_to_scatter_across_threads() {
+    obs::trace::enable();
+    let n = 512;
+    let cfg = HmxConfig { n, dim: 2, k: 8, c_leaf: 64, precompute: true, ..HmxConfig::default() };
+    let serve_cfg = ServeConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(1),
+        queue_capacity: 256,
+        ..ServeConfig::default()
+    };
+    let registry = OperatorRegistry::new();
+    let handle = registry
+        .register("flow-tenant", PointSet::halton(n, 2), &cfg, serve_cfg)
+        .expect("register failed");
+    let client = handle.client();
+    let x = Xoshiro256::seed(11).vector(n);
+    // several requests in flight at once from this one client thread: the
+    // batch spans on the executor are shared, but every request must still
+    // come out as its own flow-linked chain keyed by its RequestId
+    let futs: Vec<_> =
+        (0..6).map(|_| client.submit_async(x.clone()).expect("submit shed")).collect();
+    let ids: Vec<u64> = futs.iter().map(|f| f.request_id()).collect();
+    for f in futs {
+        block_on(f).expect("served request failed");
+    }
+    assert!(ids.iter().all(|&id| id > 0), "request ids must be nonzero");
+    let mut uniq = ids.clone();
+    uniq.sort_unstable();
+    uniq.dedup();
+    assert_eq!(uniq.len(), ids.len(), "request ids must be process-unique");
+    // executor-side spans close shortly after the future resolves (and the
+    // enclosing serve.flush span closes last of all); poll until every
+    // request's four-stage chain is present, crosses threads, and its
+    // queue span is parented to a closed serve.flush span on the executor
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let events = obs::snapshot_spans();
+        let complete = ids.iter().all(|&id| {
+            let chain: Vec<_> = events.iter().filter(|e| e.ctx == id).collect();
+            let has = |n: &str| chain.iter().any(|e| e.name == n);
+            let mut tids: Vec<_> = chain.iter().map(|e| e.tid).collect();
+            tids.sort_unstable();
+            tids.dedup();
+            let queue_in_flush = chain.iter().any(|q| {
+                q.name == names::SERVE_REQUEST_QUEUE
+                    && events.iter().any(|f| {
+                        f.name == names::SERVE_FLUSH && f.tid == q.tid && f.id == q.parent
+                    })
+            });
+            has(names::SERVE_REQUEST_SUBMIT)
+                && has(names::SERVE_REQUEST_APPLY)
+                && has(names::SERVE_REQUEST_SCATTER)
+                && queue_in_flush
+                && tids.len() >= 2
+        });
+        if complete {
+            // the Chrome export flow-links the chains: the validator checks
+            // every flow id has both its start (s) and finish (f) arrow
+            let json = obs::chrome_trace_json(&events);
+            obs::validate_chrome_trace(&json).expect("flow-linked trace rejected");
+            assert!(json.contains("\"ph\":\"s\""), "no flow-start events in export");
+            assert!(json.contains("\"ph\":\"f\""), "no flow-finish events in export");
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "request span chains incomplete; {} events so far",
+            events.len()
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[test]
+fn slo_gauges_appear_for_every_configured_tenant() {
+    use hmx::obs::slo::SloConfig;
+    let n = 256;
+    let cfg = HmxConfig { n, dim: 2, k: 8, c_leaf: 64, precompute: true, ..HmxConfig::default() };
+    let registry = OperatorRegistry::new();
+    let handle = registry
+        .register("slo-tenant", PointSet::halton(n, 2), &cfg, ServeConfig::default())
+        .expect("register failed");
+    let slo = SloConfig {
+        p99_target: Duration::from_millis(250),
+        window: Duration::from_secs(60),
+        error_budget: 0.05,
+    };
+    registry.set_slo("slo-tenant", slo).expect("valid config rejected");
+    assert!(registry.slo("slo-tenant").is_some());
+    // malformed configs are typed errors, not silent misconfigurations
+    let bad = SloConfig { error_budget: 0.0, ..slo };
+    assert!(registry.set_slo("slo-tenant", bad).is_err());
+    let x = Xoshiro256::seed(3).vector(n);
+    for _ in 0..3 {
+        handle.matvec(&x).expect("served matvec failed");
+    }
+    let snap = registry.observe();
+    let gauge = |name: &str| {
+        snap.gauges
+            .iter()
+            .find(|(n2, t, _)| n2.as_str() == name && t == "slo-tenant")
+            .map(|(_, _, v)| *v)
+    };
+    let burn = gauge(names::SLO_BURN_RATE).expect("slo.burn_rate gauge missing");
+    let remaining = gauge(names::SLO_BUDGET_REMAINING).expect("slo.budget_remaining missing");
+    assert!(burn >= 0.0 && burn.is_finite());
+    assert!((0.0..=1.0).contains(&remaining));
+    // the first observe() establishes the baseline sample, so the burn is
+    // deterministically 0 and the health floor stays Ok
+    assert_eq!(burn, 0.0);
+    assert_eq!(handle.stats().slo_floor(), HealthState::Ok);
+    registry.clear_slo("slo-tenant");
+    assert!(registry.slo("slo-tenant").is_none());
+}
+
 // ------------------------------------------------------------ bench artifacts
 
 #[test]

@@ -320,6 +320,128 @@ mod chaos {
         assert!(Arc::ptr_eq(&again.stats(), &h.stats()), "same live operator");
     }
 
+    /// Trace completeness under chaos: with tracing on and a flight dir
+    /// configured, an executor killed mid async burst must still leave a
+    /// coherent story behind — every SERVED request has its full
+    /// flow-linked submit→queue→apply→scatter chain across at least two
+    /// threads, every RESCUED request has at least its submit span tagged
+    /// with its request id, the Chrome export with its flow arrows still
+    /// validates, and the supervisor's `executor-lost` flight dump lands
+    /// on disk as a validating `hmx-flight/1` artifact.
+    #[test]
+    fn killed_executor_yields_connected_traces_and_flight_dump() {
+        let _g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+        hmx::obs::trace::enable();
+        let flight_dir =
+            std::env::temp_dir().join(format!("hmx-flight-chaos-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&flight_dir);
+        std::env::set_var(hmx::obs::flight::FLIGHT_DIR_ENV, &flight_dir);
+        let cfg = test_cfg(256);
+        let pts = PointSet::halton(cfg.n, cfg.dim);
+        let reg = OperatorRegistry::new();
+        FaultPlan::seeded(21).kill_executor("trace-chaos", 2).install();
+        let serve_cfg = ServeConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            queue_capacity: 512,
+            ..ServeConfig::default()
+        };
+        let handle = reg.register("trace-chaos", pts, &cfg, serve_cfg).unwrap();
+        // 64 requests against a kill at flush 2: at most 16 can be served
+        // before the death, so rescued requests are guaranteed
+        let mut futures = Vec::new();
+        for r in 0..64u64 {
+            match handle.submit_async(column(5000 + r, cfg.n)) {
+                Ok(f) => futures.push(f),
+                Err(ServeError::ExecutorLost) | Err(ServeError::Shutdown) => {}
+                Err(e) => panic!("unexpected submit error: {e}"),
+            }
+        }
+        // supervise WHILE the flight dir is configured: the rescue pass is
+        // what writes the executor-lost dump
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            if reg.supervise() >= 1 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "supervisor never detected the kill");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        faults::clear();
+        std::env::remove_var(hmx::obs::flight::FLIGHT_DIR_ENV);
+        let mut served_ids = Vec::new();
+        let mut rescued_ids = Vec::new();
+        for f in futures {
+            let id = f.request_id();
+            assert!(id > 0, "every accepted request carries a nonzero id");
+            match hmx::serve::block_on(f) {
+                Ok(_) => served_ids.push(id),
+                Err(ServeError::ExecutorLost) | Err(ServeError::Shutdown) => {
+                    rescued_ids.push(id)
+                }
+                Err(e) => panic!("unexpected error {e}"),
+            }
+        }
+        assert!(!served_ids.is_empty(), "flushes 0 and 1 must have served requests");
+        assert!(!rescued_ids.is_empty(), "a kill at flush 2 of 64 must strand requests");
+        // served chains are complete and cross threads; rescued requests
+        // at minimum left their client-side submit span behind
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let events = hmx::obs::snapshot_spans();
+            let chain_ok = |id: u64| {
+                let chain: Vec<_> = events.iter().filter(|e| e.ctx == id).collect();
+                let has = |n: &str| chain.iter().any(|e| e.name == n);
+                let mut tids: Vec<_> = chain.iter().map(|e| e.tid).collect();
+                tids.sort_unstable();
+                tids.dedup();
+                has(names::SERVE_REQUEST_SUBMIT)
+                    && has(names::SERVE_REQUEST_QUEUE)
+                    && has(names::SERVE_REQUEST_APPLY)
+                    && has(names::SERVE_REQUEST_SCATTER)
+                    && tids.len() >= 2
+            };
+            let submit_ok = |id: u64| {
+                events.iter().any(|e| e.ctx == id && e.name == names::SERVE_REQUEST_SUBMIT)
+            };
+            if served_ids.iter().all(|&id| chain_ok(id))
+                && rescued_ids.iter().all(|&id| submit_ok(id))
+            {
+                // truncated chains must not corrupt the flow linking: the
+                // export still validates (every flow id has s and f ends)
+                let json = hmx::obs::chrome_trace_json(&events);
+                hmx::obs::validate_chrome_trace(&json)
+                    .expect("chaos trace export must stay valid");
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "incomplete chaos traces: {} served, {} rescued, {} events",
+                served_ids.len(),
+                rescued_ids.len(),
+                events.len()
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // the flight recorder wrote a validating executor-lost artifact
+        let dump = std::fs::read_dir(&flight_dir)
+            .expect("flight dir must exist after the dump")
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .find(|p| {
+                p.file_name()
+                    .and_then(|f| f.to_str())
+                    .is_some_and(|f| f.starts_with("flight-executor-lost-") && f.ends_with(".json"))
+            })
+            .expect("no executor-lost flight dump written");
+        let text = std::fs::read_to_string(&dump).unwrap();
+        let (events, spans) =
+            hmx::obs::validate_flight(&text).expect("flight dump must validate");
+        assert!(events >= 1, "dump must embed the fault annotation ring");
+        assert!(spans >= 1, "dump must embed recent spans (tracing was on)");
+        let _ = std::fs::remove_dir_all(&flight_dir);
+    }
+
     /// Injected apply panics exercise the `catch_unwind` containment:
     /// the batch resolves `ApplyPanicked` carrying the injected payload
     /// text, and the executor keeps serving later flushes.
