@@ -7,6 +7,7 @@
 
 use hmx::config::HmxConfig;
 use hmx::metrics::{measure, CsvTable};
+use hmx::obs::profile;
 use hmx::prelude::*;
 use hmx::util::prng::Xoshiro256;
 
@@ -24,6 +25,8 @@ fn main() {
     let table = CsvTable::new("fig13", &["d", "mode", "n", "seconds", "sec_per_nlogn_x1e9"]);
     let mut report = hmx::obs::bench_report("fig13_matvec");
     report.param("k", 16).param("c_leaf", 512).param("max_pow", max_pow).param("trials", trials);
+    profile::reset();
+    profile::enable(); // no-op without the `prof` feature
     println!("# Fig 13: H-matvec runtime vs N (k=16, C_leaf=2048 scaled down to 512 on CPU)");
     for dim in [2usize, 3] {
         for pow in 12..=max_pow {
@@ -63,6 +66,16 @@ fn main() {
                     ],
                 );
             }
+        }
+    }
+    profile::disable();
+    let prof = profile::ProfileSnapshot::capture();
+    if !prof.rows.is_empty() {
+        println!("# work attribution (cumulative over the sweep):");
+        print!("{}", profile::render_table(&prof));
+        match prof.write("fig13_matvec") {
+            Ok(p) => println!("# profile artifact: {}", p.display()),
+            Err(e) => eprintln!("# profile artifact write failed: {e}"),
         }
     }
     println!("# expectation (paper): O(N log N) slope; P faster than NP; d=3 slightly slower");

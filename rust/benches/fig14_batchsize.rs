@@ -8,8 +8,32 @@
 
 use hmx::config::HmxConfig;
 use hmx::metrics::{measure, CsvTable, RECORDER};
+use hmx::obs::profile::{self, Phase};
 use hmx::prelude::*;
 use hmx::util::prng::Xoshiro256;
+
+/// Cumulative profiler totals the sweep differences per configuration:
+/// dense batch-plan storage (bytes, pad bytes) and apply-phase flops.
+#[derive(Clone, Copy, Default)]
+struct ProfMarks {
+    plan_bytes: u64,
+    plan_pad: u64,
+    dense_flops: u64,
+    aca_flops: u64,
+}
+
+fn prof_marks(snap: &profile::ProfileSnapshot) -> ProfMarks {
+    let mut m = ProfMarks::default();
+    for r in snap.rows.iter().filter(|r| r.phase == Phase::BatchPlan.name()) {
+        if r.class == "dense" {
+            m.plan_bytes += r.work.bytes;
+            m.plan_pad += r.work.pad_bytes;
+        }
+    }
+    m.dense_flops = snap.phase_total(Phase::DenseApply.name()).flops;
+    m.aca_flops = snap.phase_total(Phase::LowRankApply.name()).flops;
+    m
+}
 
 fn main() {
     let full = std::env::var("HMX_BENCH_FULL").is_ok();
@@ -21,6 +45,9 @@ fn main() {
     println!("# Fig 14: batching size sweep (N={n}, k=16, d=2)");
     let mut report = hmx::obs::bench_report("fig14_batchsize");
     report.param("n", n).param("k", 16);
+    profile::reset();
+    profile::enable(); // no-op without the `prof` feature
+    let mut marks = ProfMarks::default();
     let c_leafs = if full { vec![1024usize, 2048] } else { vec![256usize, 512] };
     for &c_leaf in &c_leafs {
         // sweep bs_dense with bs_aca fixed, then vice versa
@@ -56,12 +83,44 @@ fn main() {
                     format!("{aca_s:.6}"),
                     format!("{:.6}", m.secs()),
                 ]);
-                report.point(&format!("{sweep}-c{c_leaf}"), bs_pow as f64, &[
+                let mut metrics = vec![
                     ("dense_s", dense_s),
                     ("aca_s", aca_s),
                     ("total_s", m.secs()),
-                ]);
+                ];
+                let prof = profile::ProfileSnapshot::capture();
+                if !prof.rows.is_empty() {
+                    // per-config deltas of the cumulative counters: plan
+                    // occupancy (1 - pad share of the padded dense batch
+                    // storage) and modeled work per apply
+                    let now = prof_marks(&prof);
+                    let bytes = now.plan_bytes - marks.plan_bytes;
+                    let pad = now.plan_pad - marks.plan_pad;
+                    let occ = 1.0 - pad as f64 / bytes.max(1) as f64;
+                    let dense_gf = (now.dense_flops - marks.dense_flops) as f64 / 3e9;
+                    let aca_gf = (now.aca_flops - marks.aca_flops) as f64 / 3e9;
+                    marks = now;
+                    println!(
+                        "#   {sweep} c_leaf={c_leaf} bs=2^{bs_pow}: dense occupancy \
+                         {occ:.3}, work/apply {dense_gf:.3}+{aca_gf:.3} gflop"
+                    );
+                    metrics.push(("dense_occupancy", occ));
+                    metrics.push(("dense_gflop", dense_gf));
+                    metrics.push(("aca_gflop", aca_gf));
+                }
+                report.point(&format!("{sweep}-c{c_leaf}"), bs_pow as f64, &metrics);
             }
+        }
+    }
+    profile::disable();
+    let prof = profile::ProfileSnapshot::capture();
+    if !prof.rows.is_empty() {
+        println!("# work attribution (cumulative over the sweep):");
+        print!("{}", profile::render_table(&prof));
+        print!("{}", profile::render_padding(&prof));
+        match prof.write("fig14_batchsize") {
+            Ok(p) => println!("# profile artifact: {}", p.display()),
+            Err(e) => eprintln!("# profile artifact write failed: {e}"),
         }
     }
     println!("# expectation (paper): runtime improves with batch size to an optimum, then");

@@ -13,19 +13,30 @@
 use hmx::baseline::h2lib_like::SequentialHMatrix;
 use hmx::config::HmxConfig;
 use hmx::metrics::{measure, CsvTable};
+use hmx::obs::profile::{self, Phase};
 use hmx::prelude::*;
 
 fn main() {
     let full = std::env::var("HMX_BENCH_FULL").is_ok();
-    let max_pow = if full { 18 } else { 15 };
+    let smoke = std::env::var("HMX_BENCH_SMOKE").is_ok();
+    let max_pow = if full {
+        18
+    } else if smoke {
+        13
+    } else {
+        15
+    };
     let table = CsvTable::new("fig16", &["impl", "n", "seconds", "speedup_vs_seq"]);
     println!("# Fig 16: H-matrix setup, parallel engine vs sequential baseline (k=16, d=2)");
     let mut report = hmx::obs::bench_report("fig16_construction");
     report.param("max_pow", max_pow).param("k", 16);
+    profile::reset();
+    profile::enable(); // no-op without the `prof` feature
+    let mut prev_asm = 0u64;
     for pow in 12..=max_pow {
         let n = 1usize << pow;
         let pts = PointSet::halton(n, 2);
-        let trials = if pow >= 16 { 1 } else { 3 };
+        let trials = if pow >= 16 || smoke { 1 } else { 3 };
         let seq = measure(trials, || {
             SequentialHMatrix::build(pts.clone(), Kernel::gaussian(), 1.5, 128, 16)
         });
@@ -63,10 +74,32 @@ fn main() {
             ("seconds", np.secs()),
             ("speedup_vs_seq", seq.secs() / np.secs()),
         ]);
-        report.point("hmx-P", n as f64, &[
+        let mut p_metrics = vec![
             ("seconds", p.secs()),
             ("speedup_vs_seq", seq.secs() / p.secs()),
-        ]);
+        ];
+        let prof = profile::ProfileSnapshot::capture();
+        if !prof.rows.is_empty() {
+            // modeled ACA assembly work of ONE P-mode build at this N
+            // (delta of the cumulative counter across `trials` builds)
+            let asm = prof.phase_total(Phase::AcaAssembly.name()).flops;
+            let asm_gf = (asm - prev_asm) as f64 / trials as f64 / 1e9;
+            prev_asm = asm;
+            println!("#   N=2^{pow}: {asm_gf:.3} gflop modeled ACA assembly per P build");
+            p_metrics.push(("aca_assembly_gflop", asm_gf));
+        }
+        report.point("hmx-P", n as f64, &p_metrics);
+    }
+    profile::disable();
+    let prof = profile::ProfileSnapshot::capture();
+    if !prof.rows.is_empty() {
+        println!("# work attribution (cumulative over the sweep):");
+        print!("{}", profile::render_table(&prof));
+        print!("{}", profile::render_roofline(&prof));
+        match prof.write("fig16_construction") {
+            Ok(p) => println!("# profile artifact: {}", p.display()),
+            Err(e) => eprintln!("# profile artifact write failed: {e}"),
+        }
     }
     println!("# expectation (paper): NP fastest, P close, seq orders of magnitude slower,");
     println!("# gap growing with N (paper: >100x on GPU at N=2^19)");

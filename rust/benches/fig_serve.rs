@@ -246,6 +246,33 @@ fn main() {
         );
     }
 
+    // --- profiling overhead: the work-attribution counters (`prof`
+    // feature) ride the same hot path — a Tally flush per batched apply
+    // plus one record per launch/pad event — and must also stay cheap
+    // enough to leave on. Without the feature the hooks compile to no-ops
+    // and this measures noise (ratio ~1).
+    let prof_off_rps = best_rps("profiling-off");
+    hmx::obs::profile::enable();
+    let prof_on_rps = best_rps("profiling-on");
+    hmx::obs::profile::disable();
+    let prof_ratio = prof_on_rps / prof_off_rps.max(f64::MIN_POSITIVE);
+    println!(
+        "# profiling overhead: {prof_off_rps:.1} rps off vs {prof_on_rps:.1} rps on \
+         (ratio_ok {prof_ratio:.3}; target >= 0.95; compiled: {})",
+        hmx::obs::profile::COMPILED
+    );
+    report.point(
+        "profiling_overhead",
+        trace_requests as f64,
+        &[("off_rps", prof_off_rps), ("on_rps", prof_on_rps), ("ratio_ok", prof_ratio)],
+    );
+    if smoke {
+        assert!(
+            prof_ratio >= 0.95,
+            "profiling overhead exceeded 5%: {prof_off_rps:.1} rps off vs {prof_on_rps:.1} rps on"
+        );
+    }
+
     let fallback_after = RECORDER.count(names::RUNTIME_MATMAT_FALLBACK);
     report.param("matmat_fallback", fallback_after - fallback_before);
     if smoke {

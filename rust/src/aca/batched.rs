@@ -24,6 +24,7 @@ use crate::dpp::executor::{launch_with_grain, GlobalMem};
 use crate::dpp::scan::exclusive_scan;
 use crate::geometry::kernel::Kernel;
 use crate::geometry::points::PointSet;
+use crate::obs::profile::{self, model};
 use crate::tree::block::WorkItem;
 use crate::util::atomic::AtomicF64Vec;
 
@@ -186,6 +187,30 @@ pub fn batched_aca_factors(batch: &AcaBatch<'_>) -> AcaFactors {
     }
 
     let ranks: Vec<usize> = state.iter().map(|s| s.rank).collect();
+    // charge modeled assembly work per block now that achieved ranks are
+    // known (phase `aca.assembly` whether this runs at build time — P
+    // mode — or inside an NP-mode apply)
+    if profile::is_enabled() {
+        let n_root = points.len();
+        let mut tally = profile::Tally::new();
+        for (b, w) in blocks.iter().enumerate() {
+            let (m, n) = (w.rows(), w.cols());
+            let key = profile::WorkKey::new(
+                profile::Phase::AcaAssembly,
+                profile::level_of(n_root, m),
+                profile::rank_class(ranks[b]),
+                0,
+            );
+            let work = profile::Work {
+                flops: model::aca_assembly_flops(m, n, ranks[b]),
+                bytes: model::aca_assembly_bytes(m, n, ranks[b], k),
+                items: 1,
+                ..profile::Work::default()
+            };
+            tally.add(key, work);
+        }
+        tally.flush();
+    }
     AcaFactors { u_all, v_all, row_offsets, col_offsets, ranks, k }
 }
 
@@ -211,6 +236,30 @@ impl AcaFactors {
         let n = x.len() / nrhs;
         let total_m = *self.row_offsets.last().unwrap();
         let total_n = *self.col_offsets.last().unwrap();
+        if profile::is_enabled() {
+            let mut tally = profile::Tally::new();
+            for (b, w) in blocks.iter().enumerate() {
+                let rank = self.ranks[b];
+                if rank == 0 {
+                    continue;
+                }
+                let (m, nc) = (w.rows(), w.cols());
+                let key = profile::WorkKey::new(
+                    profile::Phase::LowRankApply,
+                    profile::level_of(n, m),
+                    profile::rank_class(rank),
+                    profile::width_of(nrhs),
+                );
+                let work = profile::Work {
+                    flops: model::lowrank_apply_flops(m, nc, rank, nrhs),
+                    bytes: model::lowrank_apply_bytes(m, nc, rank, nrhs, 8),
+                    items: 1,
+                    ..profile::Work::default()
+                };
+                tally.add(key, work);
+            }
+            tally.flush();
+        }
         launch_with_grain(nb, 1, |b| {
             let w = &blocks[b];
             let (rlo, rhi) = (self.row_offsets[b], self.row_offsets[b + 1]);

@@ -26,6 +26,7 @@
 use super::batched::AcaFactors;
 use super::linalg::{matmul_cm, qr_thin, svd_jacobi};
 use crate::dpp::executor::{launch_with_grain, GlobalMem};
+use crate::obs::profile::{self, model};
 use crate::tree::block::WorkItem;
 
 /// Truncation rule for recompression.
@@ -245,6 +246,36 @@ pub fn recompress(
                 None => rk,
             })
             .collect();
+        // charge modeled QR+SVD+rebuild work before the in-place
+        // truncation overwrites the old per-block ranks
+        if profile::is_enabled() {
+            let mut tally = profile::Tally::new();
+            for (b, w) in blocks.iter().enumerate() {
+                let key = profile::WorkKey::new(
+                    profile::Phase::Recompress,
+                    profile::LEVEL_AGG,
+                    profile::rank_class(ranks[b]),
+                    0,
+                );
+                let work = profile::Work {
+                    flops: model::recompress_flops(w.rows(), w.cols(), factors.ranks[b], ranks[b]),
+                    bytes: model::recompress_bytes(w.rows(), w.cols(), factors.ranks[b], ranks[b]),
+                    items: 1,
+                    ..profile::Work::default()
+                };
+                tally.add(key, work);
+            }
+            tally.add(
+                profile::WorkKey::new(
+                    profile::Phase::Recompress,
+                    profile::LEVEL_AGG,
+                    profile::CLASS_AGG,
+                    0,
+                ),
+                profile::Work { events: 1, ..profile::Work::default() },
+            );
+            tally.flush();
+        }
         truncate_to_ranks(factors, blocks, &cores, &ranks)
     })
 }

@@ -8,6 +8,8 @@
 //! * ACA blocks:    Σ_i n_i ≤ bs_ACA (total rows of the batched rank-k
 //!   factors, §5.4.1).
 
+use crate::obs::profile;
+
 /// Shape of one block in a work queue (rows = |τ|, cols = |σ|).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct BlockShape {
@@ -91,7 +93,52 @@ pub fn plan_batches(shapes: &[BlockShape], budget: BatchBudget) -> BatchPlan {
             }
         }
     }
+    profile_plan(shapes, budget, &batches);
     BatchPlan { batches }
+}
+
+/// Charge plan-time batch footprints to the profiler: per batch, the
+/// storage it commits (`bytes`), the zero-padding share of that storage
+/// (`pad_bytes`, dense padded batches only — occupancy is
+/// `1 - pad_bytes / bytes`), the blocks packed (`items`) on a bucketed
+/// blocks-per-batch width axis, and one `events` per planned batch.
+/// No-op unless profiling is enabled.
+fn profile_plan(shapes: &[BlockShape], budget: BatchBudget, batches: &[(usize, usize)]) {
+    if !profile::is_enabled() {
+        return;
+    }
+    let mut tally = profile::Tally::new();
+    for &(s, e) in batches {
+        let blocks = &shapes[s..e];
+        let total_rows: u64 = blocks.iter().map(|b| b.rows as u64).sum();
+        let actual: u64 = blocks.iter().map(|b| b.rows as u64 * b.cols as u64).sum();
+        let (class, bytes, pad_bytes) = match budget {
+            BatchBudget::DensePaddedElems { .. } => {
+                let max_cols = blocks.iter().map(|b| b.cols).max().unwrap_or(0) as u64;
+                let padded = max_cols * total_rows;
+                (profile::CLASS_DENSE, 8 * padded, 8 * (padded - actual))
+            }
+            // rank-k factor row storage: exact (no padding), rank applied
+            // downstream — total batched rows is the plan-time footprint
+            BatchBudget::AcaTotalRows { .. } => (profile::CLASS_AGG, 8 * total_rows, 0),
+            BatchBudget::Unbatched => (profile::CLASS_AGG, 8 * actual, 0),
+        };
+        let key = profile::WorkKey::new(
+            profile::Phase::BatchPlan,
+            profile::LEVEL_AGG,
+            class,
+            profile::width_bucket(blocks.len()),
+        );
+        let work = profile::Work {
+            bytes,
+            pad_bytes,
+            items: blocks.len() as u64,
+            events: 1,
+            ..profile::Work::default()
+        };
+        tally.add(key, work);
+    }
+    tally.flush();
 }
 
 #[cfg(test)]

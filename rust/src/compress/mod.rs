@@ -51,6 +51,7 @@ pub use truncate::{waterfill, BlockSpectrum, WaterfillResult};
 
 use crate::aca::batched::AcaFactors;
 use crate::aca::recompress::{core_svds, truncate_to_ranks};
+use crate::obs::profile::{self, model};
 use crate::tree::block::WorkItem;
 
 /// f32 unit roundoff, widened — what demoting a factor stripe costs.
@@ -213,6 +214,38 @@ pub fn compress_batches(
         // 4. truncate every batch to its chosen ranks, then pack compact
         let mut packed = Vec::with_capacity(batches.len());
         for (bi, (f, blocks)) in batches.iter_mut().zip(batch_blocks).enumerate() {
+            // charge modeled truncation work before `f.ranks` is
+            // overwritten: read at the old rank, rebuilt at the target
+            if profile::is_enabled() {
+                let mut tally = profile::Tally::new();
+                for (blk, w) in blocks.iter().enumerate() {
+                    let (k_old, r_new) = (f.ranks[blk], ranks[bi][blk]);
+                    let key = profile::WorkKey::new(
+                        profile::Phase::CompressPass,
+                        profile::LEVEL_AGG,
+                        profile::rank_class(r_new),
+                        0,
+                    );
+                    let work = profile::Work {
+                        flops: model::recompress_flops(w.rows(), w.cols(), k_old, r_new),
+                        bytes: model::recompress_bytes(w.rows(), w.cols(), k_old, r_new),
+                        items: 1,
+                        ..profile::Work::default()
+                    };
+                    tally.add(key, work);
+                }
+                let batch_key = profile::WorkKey::new(
+                    profile::Phase::CompressPass,
+                    profile::LEVEL_AGG,
+                    profile::CLASS_AGG,
+                    0,
+                );
+                tally.add(
+                    batch_key,
+                    profile::Work { events: 1, ..profile::Work::default() },
+                );
+                tally.flush();
+            }
             truncate_to_ranks(f, blocks, &cores[bi], &ranks[bi]);
             packed.push(PackedFactors::pack(f, blocks, &fp32[bi]));
         }

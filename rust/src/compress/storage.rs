@@ -14,6 +14,7 @@
 use crate::aca::batched::AcaFactors;
 use crate::dpp::executor::launch_with_grain;
 use crate::dpp::scan::exclusive_scan;
+use crate::obs::profile::{self, model};
 use crate::tree::block::WorkItem;
 use crate::util::atomic::AtomicF64Vec;
 
@@ -189,6 +190,29 @@ impl PackedFactors {
         }
         debug_assert_eq!(x.len() % nrhs, 0);
         let n = x.len() / nrhs;
+        if profile::is_enabled() {
+            let mut tally = profile::Tally::new();
+            for (p, w) in self.dir.iter().zip(blocks) {
+                if p.rank == 0 {
+                    continue;
+                }
+                let elem_bytes = if p.fp32 { 4 } else { 8 };
+                let key = profile::WorkKey::new(
+                    profile::Phase::LowRankApply,
+                    profile::level_of(n, w.rows()),
+                    profile::rank_class(p.rank),
+                    profile::width_of(nrhs),
+                );
+                let work = profile::Work {
+                    flops: model::lowrank_apply_flops(p.m, p.n, p.rank, nrhs),
+                    bytes: model::lowrank_apply_bytes(p.m, p.n, p.rank, nrhs, elem_bytes),
+                    items: 1,
+                    ..profile::Work::default()
+                };
+                tally.add(key, work);
+            }
+            tally.flush();
+        }
         launch_with_grain(nb, 1, |b| {
             let p = &self.dir[b];
             let w = &blocks[b];
@@ -229,6 +253,17 @@ impl PackedFactors {
     /// Sum of stored ranks across blocks.
     pub fn stored_ranks(&self) -> usize {
         self.dir.iter().map(|p| p.rank).sum()
+    }
+
+    /// Achieved rank per block, in block order (what the conservation
+    /// tests and `HMatrix::flops_per_col` recompute work models from).
+    pub fn block_ranks(&self) -> Vec<usize> {
+        self.dir.iter().map(|p| p.rank).collect()
+    }
+
+    /// Whether block `b` is stored in the f32 arenas.
+    pub fn is_fp32(&self, b: usize) -> bool {
+        self.dir[b].fp32
     }
 
     /// Blocks stored in f32.

@@ -14,6 +14,22 @@
 
 use super::pool;
 use crate::metrics;
+use crate::obs::profile;
+
+/// Charge one kernel launch of `n` virtual threads to the profiler
+/// (self-guarded: a no-op unless profiling is compiled in and enabled).
+#[inline]
+fn profile_launch(n: usize) {
+    profile::record(
+        profile::WorkKey::new(
+            profile::Phase::DppLaunch,
+            profile::LEVEL_AGG,
+            profile::CLASS_AGG,
+            0,
+        ),
+        profile::Work { items: n as u64, events: 1, ..profile::Work::default() },
+    );
+}
 
 /// Default minimum number of virtual threads per chunk. Tuned in the §Perf
 /// pass: small enough that mid-sized kernels still fan out, large enough
@@ -35,6 +51,7 @@ pub fn launch_with_grain<F: Fn(usize) + Send + Sync>(n: usize, grain: usize, bod
     }
     let _span = crate::obs::span(crate::obs::names::DPP_LAUNCH);
     metrics::count_launch(n);
+    profile_launch(n);
     let grain = grain.max(1);
     // Below one grain (or with an empty pool) just run inline: a kernel
     // launch on real hardware has fixed overhead too, and the paper's
@@ -66,6 +83,7 @@ pub fn launch_blocked<F: Fn(usize, usize) + Send + Sync>(n: usize, grain: usize,
     }
     let _span = crate::obs::span(crate::obs::names::DPP_LAUNCH);
     metrics::count_launch(n);
+    profile_launch(n);
     let grain = grain.max(1);
     let p = pool::global();
     if n <= grain || p.workers == 0 {

@@ -12,8 +12,35 @@ use crate::dpp::executor::{launch, GlobalMem};
 use crate::dpp::scan::exclusive_scan;
 use crate::geometry::kernel::Kernel;
 use crate::geometry::points::PointSet;
+use crate::obs::profile::{self, model};
 use crate::tree::block::WorkItem;
 use crate::util::atomic::AtomicF64Vec;
+
+/// Charge the modeled work of one dense batch to the profiler, one row
+/// per `(level, width)` key (no-op unless profiling is enabled).
+fn profile_dense_blocks(n_root: usize, blocks: &[WorkItem], nrhs: usize) {
+    if !profile::is_enabled() {
+        return;
+    }
+    let mut tally = profile::Tally::new();
+    for w in blocks {
+        let (m, nc) = (w.rows(), w.cols());
+        let key = profile::WorkKey::new(
+            profile::Phase::DenseApply,
+            profile::level_of(n_root, m),
+            profile::CLASS_DENSE,
+            profile::width_of(nrhs),
+        );
+        let work = profile::Work {
+            flops: model::dense_apply_flops(m, nc, nrhs),
+            bytes: model::dense_apply_bytes(m, nc, nrhs),
+            items: 1,
+            ..profile::Work::default()
+        };
+        tally.add(key, work);
+    }
+    tally.flush();
+}
 
 /// Flat batched-row bookkeeping shared by every dense batch kernel:
 /// exclusive row offsets per block plus the flat-row → owning-block map.
@@ -46,6 +73,7 @@ pub fn batched_dense_matvec(
     if nb == 0 {
         return;
     }
+    profile_dense_blocks(points.len(), blocks, 1);
     let (row_offsets, row_block) = flatten_rows(blocks);
     let total_m = row_offsets[nb];
     launch(total_m, |fr| {
@@ -84,6 +112,7 @@ pub fn batched_dense_matmat(
     }
     let n = points.len();
     debug_assert_eq!(x.len(), n * nrhs);
+    profile_dense_blocks(n, blocks, nrhs);
     let (row_offsets, row_block) = flatten_rows(blocks);
     let total_m = row_offsets[nb];
     launch(total_m, |fr| {

@@ -333,6 +333,60 @@ impl HMatrix {
         self.factors.as_ref().map(|s| s.storage_bytes()).unwrap_or(0)
     }
 
+    /// Per-admissible-block low-rank ranks in effect, aligned with
+    /// [`HMatrix::admissible`] (batch-plan order): the *stored* ranks in
+    /// P mode (flat or packed — after ACA early termination,
+    /// recompression or [`HMatrix::compress`] they can sit well below
+    /// `cfg.k`), the nominal fixed rank `cfg.k` in NP mode (where
+    /// factors are rebuilt on every apply and early termination isn't
+    /// knowable up front). The profiler's conservation tests recompute
+    /// whole-operator work totals from this.
+    pub fn lowrank_block_ranks(&self) -> Vec<usize> {
+        match &self.factors {
+            Some(FactorStore::Flat(fs)) => {
+                fs.iter().flat_map(|f| f.ranks.iter().copied()).collect()
+            }
+            Some(FactorStore::Packed(ps)) => ps.iter().flat_map(|p| p.block_ranks()).collect(),
+            None => vec![self.cfg.k; self.admissible.len()],
+        }
+    }
+
+    /// Per-admissible-block storage precision, aligned with
+    /// [`HMatrix::lowrank_block_ranks`]: `true` where a packed store
+    /// holds the block in f32 stripes, `false` everywhere else (flat and
+    /// NP operators store nothing narrower than f64).
+    pub fn lowrank_block_fp32(&self) -> Vec<bool> {
+        match &self.factors {
+            Some(FactorStore::Packed(ps)) => {
+                ps.iter().flat_map(|p| (0..p.blocks()).map(move |b| p.is_fp32(b))).collect()
+            }
+            _ => vec![false; self.admissible.len()],
+        }
+    }
+
+    /// Modeled flops of applying the operator to ONE column: Σ 2 m n over
+    /// dense blocks plus Σ 2 r (m + n) over low-rank blocks at the ranks
+    /// of [`HMatrix::lowrank_block_ranks`] — the same work model the
+    /// profiler charges per apply, so the serving layer can price
+    /// padded-column waste in flops.
+    pub fn flops_per_col(&self) -> u64 {
+        let dense: u64 = self
+            .dense
+            .iter()
+            .map(|w| crate::obs::profile::model::dense_apply_flops(w.rows(), w.cols(), 1))
+            .sum();
+        let ranks = self.lowrank_block_ranks();
+        let lowrank: u64 = self
+            .admissible
+            .iter()
+            .zip(&ranks)
+            .map(|(w, &r)| {
+                crate::obs::profile::model::lowrank_apply_flops(w.rows(), w.cols(), r, 1)
+            })
+            .sum();
+        dense + lowrank
+    }
+
     /// True if this instance holds pre-computed factors (P mode).
     pub fn is_precomputed(&self) -> bool {
         self.factors.is_some()

@@ -9,9 +9,17 @@
 //!              registry (--format json|prometheus, --trace-out PATH for a
 //!              Chrome trace), or schema-check artifacts in place
 //!              (--validate-bench FILE, --validate-trace FILE,
-//!              --validate-flight FILE)
+//!              --validate-flight FILE, --validate-profile FILE)
 //!   obs diff   compare two hmx-bench/1 artifacts and fail on metrics
 //!              that moved past --threshold PCT in their bad direction
+//!   profile    run an instrumented workload with the work-attribution
+//!              profiler on (needs a `--features prof` build) and render
+//!              the per-level/per-class/per-width work table, top-k
+//!              hotspots, padding-waste breakdown and roofline summary
+//!              (--nrhs W, --top K, --out PROFILE.json)
+//!   profile show FILE      render an existing hmx-profile/1 artifact
+//!   profile diff OLD NEW   compare two hmx-profile/1 artifacts and fail
+//!              on efficiency regressions past --threshold PCT
 //!
 //! Common flags: --n, --d, --kernel {gaussian,matern,exponential}, --k,
 //! --c-leaf, --eta, --bs-dense, --bs-aca, --engine {native,xla},
@@ -253,6 +261,17 @@ fn cmd_obs(args: &Args) -> anyhow::Result<()> {
             Err(e) => anyhow::bail!("invalid flight dump {flight}: {e}"),
         }
     }
+    let profile = args.get_str("validate-profile", "");
+    if !profile.is_empty() {
+        let text = std::fs::read_to_string(&profile)?;
+        match obs::validate_profile(&text) {
+            Ok((rows, flops)) => {
+                println!("ok: {profile}: {rows} rows, {flops} modeled flops");
+                return Ok(());
+            }
+            Err(e) => anyhow::bail!("invalid profile artifact {profile}: {e}"),
+        }
+    }
     // instrumented demo workload: build, a few applies, a small solve —
     // then export whatever the registry collected
     let trace_out = args.get_str("trace-out", "");
@@ -287,6 +306,124 @@ fn cmd_obs(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Render every section of a profile snapshot to stdout.
+fn print_profile(snap: &hmx::obs::ProfileSnapshot, topk: usize) {
+    use hmx::obs::profile;
+    print!("{}", profile::render_table(snap));
+    println!();
+    print!("{}", profile::render_hotspots(snap, topk));
+    println!();
+    print!("{}", profile::render_padding(snap));
+    println!();
+    print!("{}", profile::render_roofline(snap));
+}
+
+/// `hmx profile diff OLD.json NEW.json [--threshold PCT]`: compare two
+/// `hmx-profile/1` artifacts through the bench-diff machinery and exit
+/// nonzero on per-key efficiency regressions (gflop/s drop, bytes or
+/// padding overhead rise).
+fn cmd_profile_diff(args: &Args) -> anyhow::Result<()> {
+    let (Some(old_path), Some(new_path)) = (args.positional.get(2), args.positional.get(3))
+    else {
+        anyhow::bail!("usage: hmx profile diff OLD.json NEW.json [--threshold PCT]");
+    };
+    let threshold = args.get("threshold", 25.0f64);
+    if !(threshold.is_finite() && threshold >= 0.0) {
+        anyhow::bail!("--threshold must be a non-negative percentage");
+    }
+    let old = std::fs::read_to_string(old_path)?;
+    let new = std::fs::read_to_string(new_path)?;
+    let diffs = hmx::obs::diff_profiles(&old, &new, threshold)
+        .map_err(|e| anyhow::anyhow!("profile diff failed: {e}"))?;
+    if diffs.is_empty() {
+        println!("no overlapping (series, x, metric) rows between {old_path} and {new_path}");
+        return Ok(());
+    }
+    let mut regressions = 0usize;
+    for d in &diffs {
+        let verdict = if d.regressed {
+            regressions += 1;
+            "REGRESSED"
+        } else {
+            match d.direction {
+                hmx::obs::Direction::Neutral => "info",
+                _ => "ok",
+            }
+        };
+        println!(
+            "{verdict:>9}  {}[x={}] {}: {:.6} -> {:.6} ({:+.1}%)",
+            d.series, d.x, d.metric, d.old, d.new, d.pct
+        );
+    }
+    println!(
+        "{} metrics compared, {} regression(s) beyond {threshold}%",
+        diffs.len(),
+        regressions
+    );
+    if regressions > 0 {
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
+/// `hmx profile [show FILE | diff OLD NEW]`: run an instrumented
+/// workload under the work-attribution profiler (`prof` builds), or
+/// render / diff existing `hmx-profile/1` artifacts (any build).
+fn cmd_profile(args: &Args) -> anyhow::Result<()> {
+    use hmx::obs::profile;
+    match args.positional.get(1).map(|s| s.as_str()) {
+        Some("diff") => return cmd_profile_diff(args),
+        Some("show") => {
+            let Some(path) = args.positional.get(2) else {
+                anyhow::bail!("usage: hmx profile show PROFILE.json [--top K]");
+            };
+            let text = std::fs::read_to_string(path)?;
+            let snap = profile::ProfileSnapshot::from_json(&text)
+                .map_err(|e| anyhow::anyhow!("invalid profile artifact {path}: {e}"))?;
+            print_profile(&snap, args.get("top", 10usize));
+            return Ok(());
+        }
+        _ => {}
+    }
+    if !profile::COMPILED {
+        anyhow::bail!(
+            "this build has no profiler table: rebuild with `cargo build --features prof` \
+             (instrumentation hooks compile to no-ops without it; \
+             `hmx profile show/diff` still work on existing artifacts)"
+        );
+    }
+    let cfg = config_from(args);
+    let nrhs = args.get("nrhs", 8usize).max(1);
+    profile::reset();
+    profile::enable();
+    let points = PointSet::halton(cfg.n, cfg.dim);
+    let h = HMatrix::build(points, &cfg)?;
+    let mut rng = Xoshiro256::seed(cfg.seed);
+    for _ in 0..args.get("trials", 3usize) {
+        let x = rng.vector(cfg.n);
+        let _ = h.matvec(&x)?;
+    }
+    let x = rng.vector(cfg.n * nrhs);
+    let _ = h.matmat(&x, nrhs)?;
+    profile::disable();
+    let snap = profile::ProfileSnapshot::capture();
+    println!(
+        "profile: n={} kernel={} k={} precompute={} nrhs={nrhs}",
+        cfg.n,
+        cfg.kernel.name(),
+        cfg.k,
+        h.is_precomputed()
+    );
+    println!();
+    print_profile(&snap, args.get("top", 10usize));
+    let out = args.get_str("out", "");
+    if !out.is_empty() {
+        std::fs::write(&out, snap.to_json())?;
+        eprintln!("wrote {} profile rows to {out}", snap.rows.len());
+    }
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let args = Args::parse();
     match args.positional.first().map(|s| s.as_str()) {
@@ -295,9 +432,10 @@ fn main() -> anyhow::Result<()> {
         Some("solve") => cmd_solve(&args),
         Some("phases") => cmd_phases(&args),
         Some("obs") => cmd_obs(&args),
+        Some("profile") => cmd_profile(&args),
         _ => {
             eprintln!(
-                "usage: hmx <construct|matvec|solve|phases|obs> [--n N] [--d D] [--kernel K] ..."
+                "usage: hmx <construct|matvec|solve|phases|obs|profile> [--n N] [--d D] [--kernel K] ..."
             );
             eprintln!("see rust/src/main.rs header for the full flag list");
             std::process::exit(2);

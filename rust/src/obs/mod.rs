@@ -43,6 +43,15 @@
 //!   `hmx-flight/1` artifact when the serving layer loses an executor,
 //!   trips a breaker, or sheds a deadline storm.
 //!
+//! * **Work attribution** ([`profile`], `prof` feature): lock-free
+//!   per-thread counters charging modeled flops, bytes moved and
+//!   zero-padding waste to `(phase, tree level, block class, batch
+//!   width)` keys across batch planning, both kernel paths, compression
+//!   and the serve width ladder; captured into a validating
+//!   `hmx-profile/1` artifact that `hmx profile` renders as work tables,
+//!   hotspots, padding breakdowns and a roofline-style summary joined
+//!   against the span times above.
+//!
 //! Every metric/span name is a `const` in [`names`], with kind, unit and
 //! label metadata in [`names::REGISTRY`] (rendered in `docs/metrics.md`).
 //! Instrumentation sites use the consts so typos fail at compile time.
@@ -51,16 +60,18 @@ pub mod flight;
 pub mod hist;
 pub mod json;
 pub mod names;
+pub mod profile;
 pub mod report;
 pub mod slo;
 pub mod snapshot;
 pub mod trace;
 
 pub use flight::{validate_flight, FLIGHT_SCHEMA};
+pub use profile::{diff_profiles, validate_profile, ProfileSnapshot, PROFILE_SCHEMA};
 pub use hist::{HistAccum, Histogram, MAX_REL_ERR};
 pub use report::{
-    diff_reports, metric_direction, validate as validate_bench_report, BenchReport, Direction,
-    MetricDiff,
+    diff_reports, idle_gauge_like, metric_direction, validate as validate_bench_report,
+    BenchReport, Direction, MetricDiff,
 };
 pub use slo::{SloAssessment, SloConfig, SloEngine};
 pub use snapshot::{

@@ -15,6 +15,9 @@ pub enum MetricKind {
     Counter,
     /// A last-value gauge.
     Gauge,
+    /// A work-attribution profile series: modeled flop/byte/padding
+    /// counters keyed by `(phase, level, class, width)` (`obs::profile`).
+    Profile,
 }
 
 /// One registry row: name plus the metadata the exporters and docs need.
@@ -91,13 +94,21 @@ pub const SOLVER_CG_RESIDUAL: &str = "solver.cg.final_residual";
 pub const SOLVER_BLOCK_CG_RESIDUAL: &str = "solver.block_cg.final_residual";
 pub const SOLVER_BLOCK_BICGSTAB_RESIDUAL: &str = "solver.block_bicgstab.final_residual";
 
+// --- work-attribution profiler (obs::profile, `prof` feature) ---
+pub const ACA_ASSEMBLY: &str = "aca.assembly";
+pub const BATCH_PLAN: &str = "batch.plan";
+pub const SERVE_PAD_WASTE: &str = "serve.pad_waste";
+
 // --- the observability layer itself ---
 pub const OBS_TRACE_DROPPED: &str = "obs.trace_dropped";
 pub const OBS_FLIGHT_DUMP: &str = "obs.flight_dump";
+pub const OBS_PROFILE_DROPPED: &str = "obs.profile_dropped";
 
 /// Every name the crate records, with kind/unit/label metadata. Kept
 /// sorted by name; `docs/metrics.md` mirrors this table.
 pub const REGISTRY: &[MetricDef] = &[
+    MetricDef { name: ACA_ASSEMBLY, kind: MetricKind::Profile, unit: "work", labels: "phase,level,class,width", help: "modeled ACA cross-approximation assembly work (prof feature)" },
+    MetricDef { name: BATCH_PLAN, kind: MetricKind::Profile, unit: "work", labels: "phase,level,class,width", help: "planned batch footprints and padding occupancy at plan time (prof feature)" },
     MetricDef { name: BLOCK_TREE_BBOX_MAP, kind: MetricKind::Span, unit: "ns", labels: "", help: "bbox lookup-map construction inside block-tree build" },
     MetricDef { name: BLOCK_TREE_BBOX_TABLE, kind: MetricKind::Span, unit: "ns", labels: "", help: "batched bounding-box table computation" },
     MetricDef { name: BUILD_BLOCK_TREE, kind: MetricKind::Span, unit: "ns", labels: "", help: "level-wise block cluster tree traversal (paper Fig 12 R)" },
@@ -113,6 +124,7 @@ pub const REGISTRY: &[MetricDef] = &[
     MetricDef { name: MATVEC_ACA, kind: MetricKind::Span, unit: "ns", labels: "", help: "batched low-rank (ACA factor) products of one mat-mat" },
     MetricDef { name: MATVEC_DENSE, kind: MetricKind::Span, unit: "ns", labels: "", help: "batched dense near-field products of one mat-mat" },
     MetricDef { name: OBS_FLIGHT_DUMP, kind: MetricKind::Counter, unit: "", labels: "", help: "flight-recorder artifacts dumped on faults (executor loss, breaker open, deadline storm)" },
+    MetricDef { name: OBS_PROFILE_DROPPED, kind: MetricKind::Counter, unit: "", labels: "", help: "work records lost to profiler table overflow (0 in any healthy run)" },
     MetricDef { name: OBS_TRACE_DROPPED, kind: MetricKind::Counter, unit: "", labels: "", help: "span events overwritten in a full per-thread trace ring" },
     MetricDef { name: RUNTIME_MATMAT_FALLBACK, kind: MetricKind::Counter, unit: "", labels: "", help: "multi-RHS applies that fell back to columnwise (no fused artifact)" },
     MetricDef { name: SERVE_APPLY, kind: MetricKind::Histogram, unit: "ns", labels: "tenant", help: "batched-apply latency per flushed batch" },
@@ -126,6 +138,7 @@ pub const REGISTRY: &[MetricDef] = &[
     MetricDef { name: SERVE_HEALTH, kind: MetricKind::Gauge, unit: "state", labels: "tenant", help: "serving health state: 0 = Ok, 1 = Degraded, 2 = BrownOut (per tenant; \"\" = registry aggregate)" },
     MetricDef { name: SERVE_LATENCY, kind: MetricKind::Histogram, unit: "ns", labels: "tenant", help: "submit -> result end-to-end latency per completed request (the SLO engine's input)" },
     MetricDef { name: SERVE_PAD_COLS, kind: MetricKind::Counter, unit: "cols", labels: "", help: "zero columns added to pad flushes up to their width-ladder rung" },
+    MetricDef { name: SERVE_PAD_WASTE, kind: MetricKind::Profile, unit: "work", labels: "phase,level,class,width", help: "padded-FLOP/byte waste per width-ladder rung on the serve path (prof feature)" },
     MetricDef { name: SERVE_QUEUE_DEPTH, kind: MetricKind::Gauge, unit: "reqs", labels: "tenant", help: "queued-but-not-dequeued submissions right now" },
     MetricDef { name: SERVE_REQUEST_APPLY, kind: MetricKind::Span, unit: "ns", labels: "", help: "one request's share of a batched apply (ctx = RequestId, flow-linked)" },
     MetricDef { name: SERVE_REQUEST_QUEUE, kind: MetricKind::Span, unit: "ns", labels: "", help: "one request's fair-queue wait, recorded by the executor at pickup (ctx = RequestId)" },
@@ -178,6 +191,10 @@ mod tests {
             SERVE_REQUEST_SCATTER,
             SLO_BURN_RATE,
             SLO_BUDGET_REMAINING,
+            ACA_ASSEMBLY,
+            BATCH_PLAN,
+            SERVE_PAD_WASTE,
+            OBS_PROFILE_DROPPED,
         ] {
             assert!(is_registered(name), "{name} missing from REGISTRY");
         }

@@ -1,0 +1,1303 @@
+//! Work-attribution profiler: lock-free per-thread counters that charge
+//! **flops, bytes moved, batch occupancy and zero-padding waste** to a
+//! structured key `(phase, tree_level, block_class, batch_width)`.
+//!
+//! The span layer ([`super::trace`]) answers *where the time went*; this
+//! module answers *where the work went* — which tree level, which block
+//! class (dense vs. low-rank by rank bucket), which batch width — so a
+//! roofline-style join of the two (`flops / bytes` vs. measured span
+//! time) says whether a phase is compute- or bandwidth-limited and how
+//! much of its arithmetic is padding. This is the per-level batch-shape
+//! accounting that drives H-matrix kernel tuning (Boukaram et al.,
+//! arXiv:1902.01829) applied to the phases of Zaspel's pipeline.
+//!
+//! ## Key model
+//!
+//! * **phase** ([`Phase`]): which algorithmic stage did the work
+//!   (batched dense apply, batched low-rank apply, ACA assembly,
+//!   recompression, truncation pass, batch planning, serve-path width
+//!   padding, DPP kernel launch).
+//! * **level**: block cluster tree depth, derived from cluster
+//!   cardinality ([`level_of`]; clusters halve per level from the root).
+//!   [`LEVEL_AGG`] (rendered `-1`/`all`) marks work not attributable to
+//!   one level.
+//! * **class**: [`CLASS_DENSE`] for near-field blocks, or a power-of-two
+//!   rank bucket for low-rank blocks ([`rank_class`]; `lowrank-r8` ⇒
+//!   rank ≤ 8). [`CLASS_AGG`] aggregates.
+//! * **width**: RHS columns of the apply (matvec = 1), the width-ladder
+//!   rung on the serve path, or the bucketed blocks-per-batch for plan
+//!   rows ([`width_bucket`]).
+//!
+//! Counts are **modeled work** computed from block shapes with the exact
+//! integer formulas in [`model`] — not hardware counters — which is what
+//! makes the conservation property testable: per-key sums must equal
+//! whole-operator totals recomputed independently from the block tree.
+//!
+//! ## Overhead contract
+//!
+//! * Built without the `prof` feature: every hook is an inlined no-op —
+//!   instrumented sites compile to nothing (the `fault-injection`
+//!   pattern).
+//! * Built with `prof`, profiling disabled: one relaxed atomic load per
+//!   instrumented call site.
+//! * Enabled: kernel sites pre-aggregate per-block work into a local
+//!   [`Tally`] and flush one atomic merge per distinct key; the
+//!   `fig_serve` smoke pins the serving-path cost at ≤ 5% throughput.
+//!
+//! Captures aggregate into a validating `hmx-profile/1` artifact
+//! ([`PROFILE_SCHEMA`], [`validate_profile`]) rendered by `hmx profile`,
+//! and [`diff_profiles`] bridges two artifacts through the
+//! `hmx-bench/1` diff machinery for efficiency regressions.
+
+use std::io;
+use std::path::PathBuf;
+
+use super::json::{self, Json};
+use super::names;
+use super::report::{self, MetricDiff};
+use crate::metrics::RECORDER;
+
+/// Schema tag written into (and required from) every profile artifact.
+pub const PROFILE_SCHEMA: &str = "hmx-profile/1";
+
+/// Whether the `prof` feature (and thus the counter table) is compiled
+/// into this build. When `false`, captures are always empty.
+pub const COMPILED: bool = cfg!(feature = "prof");
+
+/// Level value meaning "aggregated across tree levels" (rendered `-1`).
+pub const LEVEL_AGG: u8 = u8::MAX;
+/// Block class of near-field (dense) blocks.
+pub const CLASS_DENSE: u8 = 0;
+/// Block class meaning "aggregated across classes" (rendered `all`).
+pub const CLASS_AGG: u8 = u8::MAX;
+
+/// Which algorithmic stage a work record charges.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Phase {
+    /// Batched dense (near-field) block products.
+    DenseApply = 0,
+    /// Batched low-rank (ACA / packed factor) block products.
+    LowRankApply = 1,
+    /// ACA factor assembly (cross approximation sweeps).
+    AcaAssembly = 2,
+    /// Build-time Bebendorf–Kunis recompression.
+    Recompress = 3,
+    /// Budgeted truncation / mixed-precision packing pass.
+    CompressPass = 4,
+    /// Batch planning: group shapes, padded footprints, occupancy.
+    BatchPlan = 5,
+    /// Serve-path zero-padding up to the width-ladder rung.
+    ServePad = 6,
+    /// DPP kernel launches (events + virtual threads only).
+    DppLaunch = 7,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 8] = [
+        Phase::DenseApply,
+        Phase::LowRankApply,
+        Phase::AcaAssembly,
+        Phase::Recompress,
+        Phase::CompressPass,
+        Phase::BatchPlan,
+        Phase::ServePad,
+        Phase::DppLaunch,
+    ];
+
+    /// Registered metric name for this work phase.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::DenseApply => names::MATVEC_DENSE,
+            Phase::LowRankApply => names::MATVEC_ACA,
+            Phase::AcaAssembly => names::ACA_ASSEMBLY,
+            Phase::Recompress => names::BUILD_RECOMPRESS,
+            Phase::CompressPass => names::COMPRESS_PASS,
+            Phase::BatchPlan => names::BATCH_PLAN,
+            Phase::ServePad => names::SERVE_PAD_WASTE,
+            Phase::DppLaunch => names::DPP_LAUNCH,
+        }
+    }
+
+    /// The span whose measured wall time pairs with this phase in the
+    /// roofline summary (`None` when no one span covers the work — e.g.
+    /// assembly during NP-mode applies runs under `matvec.aca`).
+    pub fn span_name(self) -> Option<&'static str> {
+        match self {
+            Phase::DenseApply => Some(names::MATVEC_DENSE),
+            Phase::LowRankApply => Some(names::MATVEC_ACA),
+            Phase::AcaAssembly => Some(names::BUILD_PRECOMPUTE_ACA),
+            Phase::Recompress => Some(names::BUILD_RECOMPRESS),
+            Phase::CompressPass => Some(names::COMPRESS_PASS),
+            Phase::DppLaunch => Some(names::DPP_LAUNCH),
+            Phase::BatchPlan | Phase::ServePad => None,
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<Phase> {
+        Phase::ALL.into_iter().find(|p| *p as u8 == v)
+    }
+}
+
+/// One attribution bucket: everything is charged to a `WorkKey`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorkKey {
+    pub phase: Phase,
+    pub level: u8,
+    pub class: u8,
+    pub width: u16,
+}
+
+impl WorkKey {
+    pub fn new(phase: Phase, level: u8, class: u8, width: u16) -> Self {
+        WorkKey { phase, level, class, width }
+    }
+
+    /// Pack into a nonzero u64 (bit 63 tags occupancy so an empty table
+    /// slot — key 0 — is never a valid encoding).
+    fn encode(self) -> u64 {
+        (1u64 << 63)
+            | ((self.phase as u64) << 48)
+            | ((self.level as u64) << 40)
+            | ((self.class as u64) << 32)
+            | self.width as u64
+    }
+
+    fn decode(enc: u64) -> Option<WorkKey> {
+        if enc >> 63 != 1 {
+            return None;
+        }
+        Some(WorkKey {
+            phase: Phase::from_u8(((enc >> 48) & 0xFF) as u8)?,
+            level: ((enc >> 40) & 0xFF) as u8,
+            class: ((enc >> 32) & 0xFF) as u8,
+            width: (enc & 0xFFFF) as u16,
+        })
+    }
+}
+
+/// The counters charged to one [`WorkKey`]. All modeled, all exact
+/// integers (see [`model`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Work {
+    /// Modeled floating-point operations (padded columns included — the
+    /// kernel executes them; `pad_flops` says how many were padding).
+    pub flops: u64,
+    /// Modeled bytes moved (factor/block loads + RHS reads + writes).
+    pub bytes: u64,
+    /// Flops spent on zero-padding (width-ladder fill, batch padding).
+    pub pad_flops: u64,
+    /// Bytes moved for zero-padding (padded batch storage, zero columns).
+    pub pad_bytes: u64,
+    /// Work items attributed (blocks, padded columns, virtual threads).
+    pub items: u64,
+    /// Instrumented call-site events (launches, flushes, planned batches).
+    pub events: u64,
+}
+
+impl Work {
+    pub fn merge(&mut self, o: &Work) {
+        self.flops += o.flops;
+        self.bytes += o.bytes;
+        self.pad_flops += o.pad_flops;
+        self.pad_bytes += o.pad_bytes;
+        self.items += o.items;
+        self.events += o.events;
+    }
+
+    pub fn is_zero(&self) -> bool {
+        *self == Work::default()
+    }
+}
+
+/// Tree level of a cluster with `len` points in a tree rooted at
+/// `n_root` points. Clusters halve per level (`tree::cluster` splits at
+/// `len / 2`), so depth ≈ `log2(n_root / len)`, clamped into `[0, 254]`.
+pub fn level_of(n_root: usize, len: usize) -> u8 {
+    if len == 0 || n_root == 0 || len >= n_root {
+        return 0;
+    }
+    let l = (n_root as f64 / len as f64).log2().round();
+    l.clamp(0.0, 254.0) as u8
+}
+
+/// Power-of-two rank bucket for a low-rank block: the class covering
+/// rank `r` is `lowrank-r{2^ceil(log2 r)}` — `rank_class(5) ==
+/// rank_class(8)`, labeled `lowrank-r8`.
+pub fn rank_class(rank: usize) -> u8 {
+    let r = rank.max(1);
+    let bucket =
+        if r <= 1 { 0 } else { (usize::BITS - (r - 1).leading_zeros()) as u8 };
+    1 + bucket.min(62)
+}
+
+/// Human label for a class code (`dense`, `lowrank-r8`, `all`).
+pub fn class_label(class: u8) -> String {
+    match class {
+        CLASS_DENSE => "dense".to_string(),
+        CLASS_AGG => "all".to_string(),
+        c => format!("lowrank-r{}", 1u64 << (c - 1).min(62)),
+    }
+}
+
+/// Clamp a width-axis value (RHS columns, ladder rung) into the key.
+pub fn width_of(w: usize) -> u16 {
+    w.min(u16::MAX as usize) as u16
+}
+
+/// Power-of-two bucket for counts riding the width axis (e.g.
+/// blocks-per-batch in plan rows): 0→0, 1→1, 2→2, 3..4→4, 5..8→8, …
+pub fn width_bucket(count: usize) -> u16 {
+    if count == 0 {
+        return 0;
+    }
+    width_of(count.next_power_of_two())
+}
+
+/// Exact integer work models shared by the instrumentation sites and the
+/// conservation tests. `m`/`n` are block rows/cols, `r` the low-rank
+/// rank, `w` the RHS width, `k` the factor slot count. f64 values are
+/// 8 bytes; packed fp32 factors pass `elem_bytes = 4`.
+pub mod model {
+    /// Dense block product `Y += A X`: one multiply + one add per entry
+    /// per column.
+    pub fn dense_apply_flops(m: usize, n: usize, w: usize) -> u64 {
+        2 * m as u64 * n as u64 * w as u64
+    }
+
+    /// Dense block product traffic: the block plus RHS reads and result
+    /// writes.
+    pub fn dense_apply_bytes(m: usize, n: usize, w: usize) -> u64 {
+        8 * (m as u64 * n as u64 + (m as u64 + n as u64) * w as u64)
+    }
+
+    /// Low-rank product `Y += U (Vᵀ X)`: per rank level, a length-`n`
+    /// dot and a length-`m` axpy per column.
+    pub fn lowrank_apply_flops(m: usize, n: usize, r: usize, w: usize) -> u64 {
+        2 * r as u64 * (m as u64 + n as u64) * w as u64
+    }
+
+    /// Low-rank product traffic: factor stripes (at `elem_bytes` each)
+    /// plus f64 RHS reads and result writes.
+    pub fn lowrank_apply_bytes(
+        m: usize,
+        n: usize,
+        r: usize,
+        w: usize,
+        elem_bytes: usize,
+    ) -> u64 {
+        elem_bytes as u64 * r as u64 * (m as u64 + n as u64)
+            + 8 * (m as u64 + n as u64) * w as u64
+    }
+
+    /// ACA assembly to rank `r`: per level `l`, a row+column kernel
+    /// evaluation and `l` stripe axpys over `m + n` entries —
+    /// `Σ_{l<r} (m+n)(2+2l) = (m+n)·r·(r+1)`.
+    pub fn aca_assembly_flops(m: usize, n: usize, r: usize) -> u64 {
+        (m as u64 + n as u64) * r as u64 * (r as u64 + 1)
+    }
+
+    /// ACA assembly traffic: all `k` factor slots written (inactive
+    /// levels store zero stripes) plus the triangular stripe re-reads.
+    pub fn aca_assembly_bytes(m: usize, n: usize, r: usize, k: usize) -> u64 {
+        8 * (m as u64 + n as u64) * (k as u64 + r as u64 * (r as u64 + 1) / 2)
+    }
+
+    /// Rank-`k` factor recompression to rank `r`: two thin QRs, a small
+    /// `k×k` SVD, and the rank-`r` rebuild.
+    pub fn recompress_flops(m: usize, n: usize, k: usize, r: usize) -> u64 {
+        let (m, n, k, r) = (m as u64, n as u64, k as u64, r as u64);
+        2 * k * k * (m + n) + 12 * k * k * k + 2 * k * r * (m + n)
+    }
+
+    /// Recompression traffic: factors read at rank `k`, written at `r`.
+    pub fn recompress_bytes(m: usize, n: usize, k: usize, r: usize) -> u64 {
+        8 * (m as u64 + n as u64) * (k as u64 + r as u64)
+    }
+}
+
+#[cfg(feature = "prof")]
+mod imp {
+    use super::{Work, WorkKey};
+    use once_cell::sync::Lazy;
+    use std::cell::Cell;
+    use std::collections::BTreeMap;
+    use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+    // Sharded open-addressed tables: threads pin to a shard, so two
+    // kernel workers never contend on the same cache line for the same
+    // key. Capture merges shards; the slot count bounds distinct keys
+    // per shard (overflow increments `DROPPED`, never blocks).
+    const N_SHARDS: usize = 8;
+    const SLOTS: usize = 1024;
+    const PROBE_LIMIT: usize = 64;
+
+    struct Slot {
+        key: AtomicU64,
+        flops: AtomicU64,
+        bytes: AtomicU64,
+        pad_flops: AtomicU64,
+        pad_bytes: AtomicU64,
+        items: AtomicU64,
+        events: AtomicU64,
+    }
+
+    impl Slot {
+        fn new() -> Slot {
+            Slot {
+                key: AtomicU64::new(0),
+                flops: AtomicU64::new(0),
+                bytes: AtomicU64::new(0),
+                pad_flops: AtomicU64::new(0),
+                pad_bytes: AtomicU64::new(0),
+                items: AtomicU64::new(0),
+                events: AtomicU64::new(0),
+            }
+        }
+
+        fn add(&self, w: &Work) {
+            if w.flops != 0 {
+                self.flops.fetch_add(w.flops, Ordering::Relaxed);
+            }
+            if w.bytes != 0 {
+                self.bytes.fetch_add(w.bytes, Ordering::Relaxed);
+            }
+            if w.pad_flops != 0 {
+                self.pad_flops.fetch_add(w.pad_flops, Ordering::Relaxed);
+            }
+            if w.pad_bytes != 0 {
+                self.pad_bytes.fetch_add(w.pad_bytes, Ordering::Relaxed);
+            }
+            if w.items != 0 {
+                self.items.fetch_add(w.items, Ordering::Relaxed);
+            }
+            if w.events != 0 {
+                self.events.fetch_add(w.events, Ordering::Relaxed);
+            }
+        }
+    }
+
+    static SHARDS: Lazy<Vec<Vec<Slot>>> = Lazy::new(|| {
+        (0..N_SHARDS).map(|_| (0..SLOTS).map(|_| Slot::new()).collect()).collect()
+    });
+    static ENABLED: AtomicBool = AtomicBool::new(false);
+    static DROPPED: AtomicU64 = AtomicU64::new(0);
+    static NEXT_SHARD: AtomicUsize = AtomicUsize::new(0);
+
+    thread_local! {
+        static MY_SHARD: Cell<usize> = const { Cell::new(usize::MAX) };
+    }
+
+    fn my_shard() -> usize {
+        MY_SHARD.with(|c| {
+            let v = c.get();
+            if v != usize::MAX {
+                return v;
+            }
+            let s = NEXT_SHARD.fetch_add(1, Ordering::Relaxed) & (N_SHARDS - 1);
+            c.set(s);
+            s
+        })
+    }
+
+    #[inline]
+    pub fn is_enabled() -> bool {
+        ENABLED.load(Ordering::Relaxed)
+    }
+
+    pub fn enable() {
+        ENABLED.store(true, Ordering::Relaxed);
+    }
+
+    pub fn disable() {
+        ENABLED.store(false, Ordering::Relaxed);
+    }
+
+    /// Zero every slot. Call while no instrumented work is in flight
+    /// (same contract as the span recorder's reset): a recorder racing a
+    /// reset may re-home its increments into a freshly cleared slot.
+    pub fn reset() {
+        for shard in SHARDS.iter() {
+            for s in shard {
+                s.key.store(0, Ordering::Relaxed);
+                s.flops.store(0, Ordering::Relaxed);
+                s.bytes.store(0, Ordering::Relaxed);
+                s.pad_flops.store(0, Ordering::Relaxed);
+                s.pad_bytes.store(0, Ordering::Relaxed);
+                s.items.store(0, Ordering::Relaxed);
+                s.events.store(0, Ordering::Relaxed);
+            }
+        }
+        DROPPED.store(0, Ordering::Relaxed);
+    }
+
+    pub fn dropped() -> u64 {
+        DROPPED.load(Ordering::Relaxed)
+    }
+
+    fn slot_index(enc: u64) -> usize {
+        // Fibonacci hash spreads the packed key's low-entropy fields
+        (enc.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32) as usize & (SLOTS - 1)
+    }
+
+    pub fn record(key: WorkKey, w: Work) {
+        if !is_enabled() || w.is_zero() {
+            return;
+        }
+        let enc = key.encode();
+        let slots = &SHARDS[my_shard()];
+        let mut idx = slot_index(enc);
+        for _ in 0..PROBE_LIMIT {
+            let k = slots[idx].key.load(Ordering::Acquire);
+            if k == enc {
+                slots[idx].add(&w);
+                return;
+            }
+            if k == 0 {
+                match slots[idx].key.compare_exchange(
+                    0,
+                    enc,
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                ) {
+                    Ok(_) => {
+                        slots[idx].add(&w);
+                        return;
+                    }
+                    Err(cur) if cur == enc => {
+                        slots[idx].add(&w);
+                        return;
+                    }
+                    Err(_) => {}
+                }
+            }
+            idx = (idx + 1) & (SLOTS - 1);
+        }
+        DROPPED.fetch_add(1, Ordering::Relaxed);
+        crate::obs::counter_incr(crate::obs::names::OBS_PROFILE_DROPPED);
+    }
+
+    /// Merge every shard's live slots into `(key, work)` rows in
+    /// deterministic key order. Non-destructive.
+    pub fn drain_rows() -> Vec<(WorkKey, Work)> {
+        let mut merged: BTreeMap<u64, Work> = BTreeMap::new();
+        for shard in SHARDS.iter() {
+            for s in shard {
+                let k = s.key.load(Ordering::Acquire);
+                if k == 0 {
+                    continue;
+                }
+                let w = Work {
+                    flops: s.flops.load(Ordering::Relaxed),
+                    bytes: s.bytes.load(Ordering::Relaxed),
+                    pad_flops: s.pad_flops.load(Ordering::Relaxed),
+                    pad_bytes: s.pad_bytes.load(Ordering::Relaxed),
+                    items: s.items.load(Ordering::Relaxed),
+                    events: s.events.load(Ordering::Relaxed),
+                };
+                merged.entry(k).or_default().merge(&w);
+            }
+        }
+        merged
+            .into_iter()
+            .filter_map(|(k, w)| WorkKey::decode(k).map(|key| (key, w)))
+            .collect()
+    }
+}
+
+#[cfg(not(feature = "prof"))]
+mod imp {
+    //! Without the `prof` feature every hook is an inlined no-op, so the
+    //! instrumented kernels compile exactly as before (the
+    //! `serve::faults` pattern).
+    use super::{Work, WorkKey};
+
+    #[inline(always)]
+    pub fn is_enabled() -> bool {
+        false
+    }
+
+    #[inline(always)]
+    pub fn enable() {}
+
+    #[inline(always)]
+    pub fn disable() {}
+
+    #[inline(always)]
+    pub fn reset() {}
+
+    #[inline(always)]
+    pub fn dropped() -> u64 {
+        0
+    }
+
+    #[inline(always)]
+    pub fn record(_key: WorkKey, _w: Work) {}
+
+    #[inline(always)]
+    pub fn drain_rows() -> Vec<(WorkKey, Work)> {
+        Vec::new()
+    }
+}
+
+pub use imp::{disable, dropped, enable, is_enabled, record, reset};
+
+/// Local pre-aggregator for per-block instrumentation loops: merges
+/// same-key work in a small linear buffer so a kernel charging thousands
+/// of blocks flushes one atomic merge per *distinct* key. Call
+/// [`Tally::flush`] when the loop ends.
+#[derive(Default)]
+pub struct Tally {
+    entries: Vec<(WorkKey, Work)>,
+}
+
+impl Tally {
+    pub fn new() -> Self {
+        Tally { entries: Vec::new() }
+    }
+
+    pub fn add(&mut self, key: WorkKey, w: Work) {
+        if let Some((_, acc)) = self.entries.iter_mut().find(|(k, _)| *k == key) {
+            acc.merge(&w);
+        } else {
+            self.entries.push((key, w));
+        }
+    }
+
+    pub fn flush(&mut self) {
+        for (k, w) in self.entries.drain(..) {
+            record(k, w);
+        }
+    }
+}
+
+/// One aggregated artifact row: a [`WorkKey`] rendered with its human
+/// labels plus the work charged to it.
+#[derive(Clone, Debug)]
+pub struct ProfileRow {
+    pub phase: String,
+    /// Tree level, `-1` = aggregated across levels.
+    pub level: i64,
+    pub class: String,
+    pub width: u64,
+    pub work: Work,
+}
+
+/// A capture of the whole profiler state: aggregated rows plus the span
+/// recorder's cumulative per-phase wall time (ns), so the artifact is
+/// self-contained for roofline summaries and diffs.
+#[derive(Clone, Debug, Default)]
+pub struct ProfileSnapshot {
+    pub rows: Vec<ProfileRow>,
+    /// `(work-phase metric name, cumulative span ns)` for phases whose
+    /// work has a matching measured span ([`Phase::span_name`]).
+    pub phase_times_ns: Vec<(String, u64)>,
+    /// Records lost to table overflow (0 in any healthy run).
+    pub dropped: u64,
+}
+
+impl ProfileSnapshot {
+    /// Merge every thread's counters (non-destructively) and join the
+    /// span recorder's cumulative phase times. Empty without the `prof`
+    /// feature.
+    pub fn capture() -> Self {
+        let rows = imp::drain_rows()
+            .into_iter()
+            .map(|(k, w)| ProfileRow {
+                phase: k.phase.name().to_string(),
+                level: if k.level == LEVEL_AGG { -1 } else { k.level as i64 },
+                class: class_label(k.class),
+                width: k.width as u64,
+                work: w,
+            })
+            .collect::<Vec<_>>();
+        let mut phase_times_ns: Vec<(String, u64)> = Vec::new();
+        for p in Phase::ALL {
+            let Some(span) = p.span_name() else { continue };
+            if !rows.iter().any(|r| r.phase == p.name()) {
+                continue;
+            }
+            if let Some(s) = RECORDER.stat(span) {
+                let ns = s.total.as_nanos().min(u64::MAX as u128) as u64;
+                if !phase_times_ns.iter().any(|(n, _)| n == p.name()) {
+                    phase_times_ns.push((p.name().to_string(), ns));
+                }
+            }
+        }
+        let mut snap =
+            ProfileSnapshot { rows, phase_times_ns, dropped: imp::dropped() };
+        snap.sort_rows();
+        snap
+    }
+
+    fn sort_rows(&mut self) {
+        self.rows.sort_by(|a, b| {
+            (&a.phase, a.level, &a.class, a.width)
+                .cmp(&(&b.phase, b.level, &b.class, b.width))
+        });
+    }
+
+    /// Sum of every row charged to `phase_name`.
+    pub fn phase_total(&self, phase_name: &str) -> Work {
+        let mut acc = Work::default();
+        for r in self.rows.iter().filter(|r| r.phase == phase_name) {
+            acc.merge(&r.work);
+        }
+        acc
+    }
+
+    /// Sum over all rows.
+    pub fn total(&self) -> Work {
+        let mut acc = Work::default();
+        for r in &self.rows {
+            acc.merge(&r.work);
+        }
+        acc
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(1024);
+        out.push_str("{\"schema\":");
+        json::escape_into(PROFILE_SCHEMA, &mut out);
+        out.push_str(",\"rows\":[");
+        for (i, r) in self.rows.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str("{\"phase\":");
+            json::escape_into(&r.phase, &mut out);
+            out.push_str(&format!(",\"level\":{}", r.level));
+            out.push_str(",\"class\":");
+            json::escape_into(&r.class, &mut out);
+            out.push_str(&format!(
+                ",\"width\":{},\"flops\":{},\"bytes\":{},\"pad_flops\":{},\
+                 \"pad_bytes\":{},\"items\":{},\"events\":{}}}",
+                r.width,
+                r.work.flops,
+                r.work.bytes,
+                r.work.pad_flops,
+                r.work.pad_bytes,
+                r.work.items,
+                r.work.events
+            ));
+        }
+        out.push_str("],\"phase_times_ns\":{");
+        for (i, (name, ns)) in self.phase_times_ns.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            json::escape_into(name, &mut out);
+            out.push_str(&format!(":{ns}"));
+        }
+        out.push_str(&format!("}},\"dropped\":{}}}", self.dropped));
+        out
+    }
+
+    /// Parse a validated `hmx-profile/1` document back into a snapshot.
+    pub fn from_json(input: &str) -> Result<Self, String> {
+        validate_profile(input)?;
+        let v = json::parse(input)?;
+        let u = |row: &Json, k: &str| -> u64 {
+            row.get(k).and_then(|x| x.as_f64()).unwrap_or(0.0) as u64
+        };
+        let rows = v
+            .get("rows")
+            .and_then(|r| r.as_array())
+            .unwrap()
+            .iter()
+            .map(|row| ProfileRow {
+                phase: row.get("phase").and_then(|p| p.as_str()).unwrap().to_string(),
+                level: row.get("level").and_then(|l| l.as_f64()).unwrap() as i64,
+                class: row.get("class").and_then(|c| c.as_str()).unwrap().to_string(),
+                width: u(row, "width"),
+                work: Work {
+                    flops: u(row, "flops"),
+                    bytes: u(row, "bytes"),
+                    pad_flops: u(row, "pad_flops"),
+                    pad_bytes: u(row, "pad_bytes"),
+                    items: u(row, "items"),
+                    events: u(row, "events"),
+                },
+            })
+            .collect();
+        let phase_times_ns = v
+            .get("phase_times_ns")
+            .and_then(|p| p.as_object())
+            .map(|o| {
+                o.iter()
+                    .filter_map(|(k, val)| val.as_f64().map(|ns| (k.clone(), ns as u64)))
+                    .collect()
+            })
+            .unwrap_or_default();
+        let dropped =
+            v.get("dropped").and_then(|d| d.as_f64()).unwrap_or(0.0) as u64;
+        Ok(ProfileSnapshot { rows, phase_times_ns, dropped })
+    }
+
+    /// Target path: `$HMX_BENCH_OUT/PROFILE_<name>.json` (cwd if unset).
+    pub fn artifact_path(name: &str) -> PathBuf {
+        let dir = std::env::var(report::BENCH_OUT_ENV).unwrap_or_else(|_| ".".to_string());
+        PathBuf::from(dir).join(format!("PROFILE_{name}.json"))
+    }
+
+    /// Write the artifact; returns the path written.
+    pub fn write(&self, name: &str) -> io::Result<PathBuf> {
+        let path = Self::artifact_path(name);
+        std::fs::write(&path, self.to_json())?;
+        Ok(path)
+    }
+}
+
+/// Schema-validate a `PROFILE_*.json` document. Returns `(rows, total
+/// flops)`.
+pub fn validate_profile(input: &str) -> Result<(usize, u64), String> {
+    let v = json::parse(input)?;
+    match v.get("schema").and_then(|s| s.as_str()) {
+        Some(PROFILE_SCHEMA) => {}
+        other => return Err(format!("bad schema tag: {other:?}")),
+    }
+    let rows = v.get("rows").and_then(|r| r.as_array()).ok_or("missing rows array")?;
+    if rows.is_empty() {
+        return Err("rows array is empty (was profiling enabled and the \
+                    `prof` feature compiled in?)"
+            .into());
+    }
+    let mut total_flops = 0u64;
+    for (i, row) in rows.iter().enumerate() {
+        let ctx = format!("rows[{i}]");
+        let phase = row
+            .get("phase")
+            .and_then(|p| p.as_str())
+            .ok_or_else(|| format!("{ctx}: missing phase"))?;
+        if phase.is_empty() {
+            return Err(format!("{ctx}: empty phase name"));
+        }
+        let level = row
+            .get("level")
+            .and_then(|l| l.as_f64())
+            .ok_or_else(|| format!("{ctx}: missing level"))?;
+        if !(level.is_finite() && level >= -1.0 && level.fract() == 0.0) {
+            return Err(format!("{ctx}: level must be an integer >= -1"));
+        }
+        let class = row
+            .get("class")
+            .and_then(|c| c.as_str())
+            .ok_or_else(|| format!("{ctx}: missing class"))?;
+        if class.is_empty() {
+            return Err(format!("{ctx}: empty class label"));
+        }
+        for key in ["width", "flops", "bytes", "pad_flops", "pad_bytes", "items", "events"]
+        {
+            let x = row
+                .get(key)
+                .and_then(|x| x.as_f64())
+                .ok_or_else(|| format!("{ctx}: missing {key}"))?;
+            if !(x.is_finite() && x >= 0.0) {
+                return Err(format!("{ctx}: {key} must be a finite non-negative number"));
+            }
+            if key == "flops" {
+                total_flops += x as u64;
+            }
+        }
+    }
+    if let Some(times) = v.get("phase_times_ns") {
+        let obj = times.as_object().ok_or("phase_times_ns must be an object")?;
+        for (k, val) in obj {
+            match val.as_f64() {
+                Some(x) if x.is_finite() && x >= 0.0 => {}
+                _ => return Err(format!("phase_times_ns.{k}: not a finite number")),
+            }
+        }
+    }
+    if let Some(d) = v.get("dropped") {
+        match d.as_f64() {
+            Some(x) if x.is_finite() && x >= 0.0 => {}
+            _ => return Err("dropped: not a finite non-negative number".into()),
+        }
+    }
+    Ok((rows.len(), total_flops))
+}
+
+fn gflop(f: u64) -> f64 {
+    f as f64 / 1e9
+}
+
+fn gib(b: u64) -> f64 {
+    b as f64 / (1u64 << 30) as f64
+}
+
+/// The per-level / per-class / per-width work table.
+pub fn render_table(snap: &ProfileSnapshot) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<16} {:>5} {:<12} {:>6} {:>12} {:>10} {:>10} {:>9} {:>10} {:>8}\n",
+        "phase", "level", "class", "width", "gflop", "GiB", "pad_gflop", "pad_GiB",
+        "items", "events"
+    ));
+    for r in &snap.rows {
+        let level = if r.level < 0 { "all".to_string() } else { r.level.to_string() };
+        out.push_str(&format!(
+            "{:<16} {:>5} {:<12} {:>6} {:>12.4} {:>10.4} {:>10.4} {:>9.4} {:>10} {:>8}\n",
+            r.phase,
+            level,
+            r.class,
+            r.width,
+            gflop(r.work.flops),
+            gib(r.work.bytes),
+            gflop(r.work.pad_flops),
+            gib(r.work.pad_bytes),
+            r.work.items,
+            r.work.events
+        ));
+    }
+    if snap.dropped > 0 {
+        out.push_str(&format!(
+            "# WARNING: {} records dropped to table overflow\n",
+            snap.dropped
+        ));
+    }
+    out
+}
+
+/// The `k` rows holding the most flops, with their share of the total.
+pub fn render_hotspots(snap: &ProfileSnapshot, k: usize) -> String {
+    let total = snap.total().flops.max(1) as f64;
+    let mut rows: Vec<&ProfileRow> = snap.rows.iter().collect();
+    rows.sort_by(|a, b| b.work.flops.cmp(&a.work.flops));
+    let mut out = String::new();
+    out.push_str(&format!("top {} hotspots by flops:\n", k.min(rows.len())));
+    for r in rows.iter().take(k) {
+        let level = if r.level < 0 { "all".to_string() } else { r.level.to_string() };
+        out.push_str(&format!(
+            "  {:>5.1}%  {:<16} L{:<4} {:<12} w{:<5} {:>10.4} gflop\n",
+            r.work.flops as f64 / total * 100.0,
+            r.phase,
+            level,
+            r.class,
+            r.width,
+            gflop(r.work.flops)
+        ));
+    }
+    out
+}
+
+/// Zero-padding waste: per-phase totals and the per-rung serve-path
+/// breakdown (width-ladder padding).
+pub fn render_padding(snap: &ProfileSnapshot) -> String {
+    let mut out = String::new();
+    out.push_str("padding waste by phase:\n");
+    for p in Phase::ALL {
+        let w = snap.phase_total(p.name());
+        if w.pad_flops == 0 && w.pad_bytes == 0 {
+            continue;
+        }
+        let flop_pct = if w.flops > 0 {
+            w.pad_flops as f64 / w.flops as f64 * 100.0
+        } else {
+            0.0
+        };
+        let byte_pct = if w.bytes > 0 {
+            w.pad_bytes as f64 / w.bytes as f64 * 100.0
+        } else {
+            0.0
+        };
+        out.push_str(&format!(
+            "  {:<16} pad {:>10.4} gflop ({:>5.1}% of phase flops), \
+             {:>9.4} GiB ({:>5.1}% of phase bytes)\n",
+            p.name(),
+            gflop(w.pad_flops),
+            flop_pct,
+            gib(w.pad_bytes),
+            byte_pct
+        ));
+    }
+    let serve: Vec<&ProfileRow> =
+        snap.rows.iter().filter(|r| r.phase == names::SERVE_PAD_WASTE).collect();
+    if !serve.is_empty() {
+        out.push_str("serve width-ladder padding by rung:\n");
+        for r in serve {
+            out.push_str(&format!(
+                "  width {:>5}: {:>10.4} pad gflop, {:>9.4} pad GiB, \
+                 {} zero cols over {} flushes\n",
+                r.width,
+                gflop(r.work.pad_flops),
+                gib(r.work.pad_bytes),
+                r.work.items,
+                r.work.events
+            ));
+        }
+    }
+    if out == "padding waste by phase:\n" {
+        out.push_str("  (none recorded)\n");
+    }
+    out
+}
+
+/// Roofline-style summary: per phase, modeled arithmetic intensity
+/// (flop/byte) against achieved rates from the measured span time.
+pub fn render_roofline(snap: &ProfileSnapshot) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<16} {:>12} {:>10} {:>11} {:>10} {:>10} {:>10}\n",
+        "phase", "gflop", "GiB", "flop/byte", "time_s", "gflop/s", "GiB/s"
+    ));
+    for p in Phase::ALL {
+        let w = snap.phase_total(p.name());
+        if w.flops == 0 && w.bytes == 0 {
+            continue;
+        }
+        let intensity = if w.bytes > 0 {
+            format!("{:>11.3}", w.flops as f64 / w.bytes as f64)
+        } else {
+            format!("{:>11}", "-")
+        };
+        let time_s = snap
+            .phase_times_ns
+            .iter()
+            .find(|(n, _)| n == p.name())
+            .map(|(_, ns)| *ns as f64 / 1e9);
+        let (t, rate, bw) = match time_s {
+            Some(t) if t > 0.0 => (
+                format!("{t:>10.4}"),
+                format!("{:>10.3}", gflop(w.flops) / t),
+                format!("{:>10.3}", gib(w.bytes) / t),
+            ),
+            _ => (
+                format!("{:>10}", "-"),
+                format!("{:>10}", "-"),
+                format!("{:>10}", "-"),
+            ),
+        };
+        out.push_str(&format!(
+            "{:<16} {:>12.4} {:>10.4} {} {} {} {}\n",
+            p.name(),
+            gflop(w.flops),
+            gib(w.bytes),
+            intensity,
+            t,
+            rate,
+            bw
+        ));
+    }
+    out.push_str(
+        "# high flop/byte + low gflop/s = compute headroom; \
+         low flop/byte = bandwidth-bound by design\n",
+    );
+    out
+}
+
+/// Bridge a profile snapshot into an in-memory `hmx-bench/1` document so
+/// [`report::diff_reports`] can compare two captures. Per-row series are
+/// `"{phase}/L{level}/{class}"` with `x = width`; metric names are
+/// chosen so the bench direction heuristics read efficiency regressions
+/// correctly (`gflops_per_s` higher-is-better, `bytes_moved` and
+/// `pad_overhead_pct` lower-is-better, raw `flops` informational).
+pub fn to_bench_json(snap: &ProfileSnapshot, bench: &str) -> String {
+    let mut r = report::BenchReport::new(bench);
+    r.param("schema_source", PROFILE_SCHEMA);
+    r.param("dropped", snap.dropped);
+    for row in &snap.rows {
+        let level = if row.level < 0 { "all".to_string() } else { row.level.to_string() };
+        let series = format!("{}/L{}/{}", row.phase, level, row.class);
+        let pad_pct = if row.work.flops > 0 {
+            row.work.pad_flops as f64 / row.work.flops as f64 * 100.0
+        } else {
+            0.0
+        };
+        r.point(
+            &series,
+            row.width as f64,
+            &[
+                ("flops", row.work.flops as f64),
+                ("bytes_moved", row.work.bytes as f64),
+                ("pad_overhead_pct", pad_pct),
+                ("items", row.work.items as f64),
+            ],
+        );
+    }
+    for (name, ns) in &snap.phase_times_ns {
+        let w = snap.phase_total(name);
+        let t = *ns as f64 / 1e9;
+        if t <= 0.0 {
+            continue;
+        }
+        let intensity =
+            if w.bytes > 0 { w.flops as f64 / w.bytes as f64 } else { 0.0 };
+        r.point(
+            &format!("roofline/{name}"),
+            0.0,
+            &[
+                ("gflops_per_s", gflop(w.flops) / t),
+                ("intensity_flop_per_byte", intensity),
+            ],
+        );
+    }
+    r.to_json()
+}
+
+/// Diff two `hmx-profile/1` artifacts through the `hmx-bench/1` diff
+/// machinery: a per-key `gflops_per_s` drop or a `bytes_moved` /
+/// `pad_overhead_pct` rise past the threshold reads as an efficiency
+/// regression; raw work counts report as informational.
+pub fn diff_profiles(
+    old: &str,
+    new: &str,
+    threshold_pct: f64,
+) -> Result<Vec<MetricDiff>, String> {
+    let old = ProfileSnapshot::from_json(old).map_err(|e| format!("old artifact: {e}"))?;
+    let new = ProfileSnapshot::from_json(new).map_err(|e| format!("new artifact: {e}"))?;
+    report::diff_reports(
+        &to_bench_json(&old, "profile"),
+        &to_bench_json(&new, "profile"),
+        threshold_pct,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_snapshot() -> ProfileSnapshot {
+        ProfileSnapshot {
+            rows: vec![
+                ProfileRow {
+                    phase: names::MATVEC_DENSE.to_string(),
+                    level: 3,
+                    class: class_label(CLASS_DENSE),
+                    width: 1,
+                    work: Work {
+                        flops: 4_000_000,
+                        bytes: 2_000_000,
+                        pad_flops: 0,
+                        pad_bytes: 0,
+                        items: 64,
+                        events: 1,
+                    },
+                },
+                ProfileRow {
+                    phase: names::SERVE_PAD_WASTE.to_string(),
+                    level: -1,
+                    class: class_label(CLASS_AGG),
+                    width: 8,
+                    work: Work {
+                        flops: 0,
+                        bytes: 0,
+                        pad_flops: 300_000,
+                        pad_bytes: 80_000,
+                        items: 3,
+                        events: 1,
+                    },
+                },
+            ],
+            phase_times_ns: vec![(names::MATVEC_DENSE.to_string(), 2_000_000)],
+            dropped: 0,
+        }
+    }
+
+    #[test]
+    fn key_encoding_roundtrips() {
+        for phase in Phase::ALL {
+            for (level, class, width) in
+                [(0u8, CLASS_DENSE, 1u16), (7, rank_class(13), 32), (LEVEL_AGG, CLASS_AGG, 0)]
+            {
+                let k = WorkKey::new(phase, level, class, width);
+                assert_eq!(WorkKey::decode(k.encode()), Some(k));
+            }
+        }
+        assert_eq!(WorkKey::decode(0), None);
+    }
+
+    #[test]
+    fn rank_classes_bucket_by_power_of_two() {
+        assert_eq!(rank_class(1), 1);
+        assert_eq!(rank_class(2), 2);
+        assert_eq!(rank_class(3), rank_class(4));
+        assert_eq!(rank_class(5), rank_class(8));
+        assert_ne!(rank_class(8), rank_class(9));
+        assert_eq!(class_label(rank_class(8)), "lowrank-r8");
+        assert_eq!(class_label(rank_class(13)), "lowrank-r16");
+        assert_eq!(class_label(CLASS_DENSE), "dense");
+        assert_eq!(class_label(CLASS_AGG), "all");
+    }
+
+    #[test]
+    fn levels_follow_cardinality_halving() {
+        assert_eq!(level_of(1024, 1024), 0);
+        assert_eq!(level_of(1024, 512), 1);
+        assert_eq!(level_of(1024, 128), 3);
+        // uneven splits round to the nearest level
+        assert_eq!(level_of(1000, 251), 2);
+        assert_eq!(level_of(0, 0), 0);
+    }
+
+    #[test]
+    fn width_buckets_are_powers_of_two() {
+        assert_eq!(width_bucket(0), 0);
+        assert_eq!(width_bucket(1), 1);
+        assert_eq!(width_bucket(3), 4);
+        assert_eq!(width_bucket(1 << 20), u16::MAX);
+    }
+
+    #[test]
+    fn work_models_are_symmetric_and_scale() {
+        assert_eq!(model::dense_apply_flops(10, 20, 1), 400);
+        assert_eq!(model::dense_apply_flops(10, 20, 4), 1600);
+        assert_eq!(
+            model::lowrank_apply_flops(10, 20, 5, 2),
+            2 * 5 * 30 * 2
+        );
+        // fp32 factors halve the factor traffic, not the f64 vector traffic
+        let b64 = model::lowrank_apply_bytes(10, 20, 5, 1, 8);
+        let b32 = model::lowrank_apply_bytes(10, 20, 5, 1, 4);
+        assert_eq!(b64 - b32, 4 * 5 * 30);
+        assert_eq!(model::aca_assembly_flops(10, 20, 4), 30 * 4 * 5);
+    }
+
+    #[test]
+    fn snapshot_json_roundtrips_and_validates() {
+        let snap = sample_snapshot();
+        let text = snap.to_json();
+        let (rows, flops) = validate_profile(&text).unwrap();
+        assert_eq!(rows, 2);
+        assert_eq!(flops, 4_000_000);
+        let back = ProfileSnapshot::from_json(&text).unwrap();
+        assert_eq!(back.rows.len(), 2);
+        assert_eq!(back.rows[0].work, snap.rows[0].work);
+        assert_eq!(back.phase_times_ns, snap.phase_times_ns);
+    }
+
+    #[test]
+    fn validate_rejects_bad_documents() {
+        assert!(validate_profile("{}").is_err());
+        assert!(validate_profile(r#"{"schema":"hmx-profile/1","rows":[]}"#).is_err());
+        assert!(validate_profile(
+            r#"{"schema":"hmx-profile/1","rows":[{"phase":"x","level":0.5,
+                "class":"dense","width":1,"flops":1,"bytes":1,"pad_flops":0,
+                "pad_bytes":0,"items":1,"events":1}]}"#
+        )
+        .is_err());
+        assert!(validate_profile(
+            r#"{"schema":"hmx-bench/1","rows":[{"phase":"x","level":0,
+                "class":"dense","width":1,"flops":1,"bytes":1,"pad_flops":0,
+                "pad_bytes":0,"items":1,"events":1}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn renders_cover_every_row() {
+        let snap = sample_snapshot();
+        let table = render_table(&snap);
+        assert!(table.contains(names::MATVEC_DENSE));
+        assert!(table.contains("dense"));
+        let hot = render_hotspots(&snap, 5);
+        assert!(hot.contains("100.0%"));
+        let pad = render_padding(&snap);
+        assert!(pad.contains("width     8"));
+        let roof = render_roofline(&snap);
+        // 4 Mflop over 2 ms = 2 gflop/s
+        assert!(roof.contains("2.000"), "roofline missing rate:\n{roof}");
+    }
+
+    #[test]
+    fn bench_bridge_diffs_efficiency_regressions() {
+        let old = sample_snapshot();
+        let mut new = sample_snapshot();
+        // same work, twice the time: gflops_per_s halves -> regression
+        new.phase_times_ns[0].1 *= 2;
+        let diffs =
+            diff_profiles(&old.to_json(), &new.to_json(), 25.0).unwrap();
+        let roof = diffs
+            .iter()
+            .find(|d| d.series.starts_with("roofline/") && d.metric == "gflops_per_s")
+            .unwrap();
+        assert!(roof.regressed, "halved gflops_per_s must regress");
+        // raw work counts are informational, never a verdict
+        assert!(diffs
+            .iter()
+            .filter(|d| d.metric == "flops" || d.metric == "items")
+            .all(|d| !d.regressed));
+        // identical captures: nothing regresses
+        assert!(diff_profiles(&old.to_json(), &old.to_json(), 25.0)
+            .unwrap()
+            .iter()
+            .all(|d| !d.regressed));
+    }
+
+    #[cfg(feature = "prof")]
+    mod recording {
+        use super::*;
+        use std::sync::Mutex;
+
+        // the counter table is process-global: serialize these tests
+        static SERIAL: Mutex<()> = Mutex::new(());
+
+        #[test]
+        fn record_capture_roundtrip_merges_keys() {
+            let _g = SERIAL.lock().unwrap();
+            reset();
+            enable();
+            let key = WorkKey::new(Phase::DenseApply, 2, CLASS_DENSE, 1);
+            record(key, Work { flops: 100, bytes: 10, items: 1, ..Work::default() });
+            record(key, Work { flops: 50, bytes: 5, items: 1, ..Work::default() });
+            let other = WorkKey::new(Phase::LowRankApply, 2, rank_class(8), 1);
+            record(other, Work { flops: 7, ..Work::default() });
+            disable();
+            let snap = ProfileSnapshot::capture();
+            let dense = snap.phase_total(Phase::DenseApply.name());
+            assert_eq!(dense.flops, 150);
+            assert_eq!(dense.bytes, 15);
+            assert_eq!(dense.items, 2);
+            assert_eq!(snap.phase_total(Phase::LowRankApply.name()).flops, 7);
+            reset();
+            assert!(ProfileSnapshot::capture().rows.is_empty());
+        }
+
+        #[test]
+        fn disabled_recording_is_dropped() {
+            let _g = SERIAL.lock().unwrap();
+            reset();
+            disable();
+            record(
+                WorkKey::new(Phase::DenseApply, 0, CLASS_DENSE, 1),
+                Work { flops: 1, ..Work::default() },
+            );
+            assert!(ProfileSnapshot::capture().rows.is_empty());
+        }
+
+        #[test]
+        fn concurrent_recording_conserves_totals() {
+            let _g = SERIAL.lock().unwrap();
+            reset();
+            enable();
+            let threads = 4;
+            let per_thread = 1000u64;
+            let handles: Vec<_> = (0..threads)
+                .map(|t| {
+                    std::thread::spawn(move || {
+                        let key = WorkKey::new(
+                            Phase::AcaAssembly,
+                            (t % 3) as u8,
+                            rank_class(4),
+                            0,
+                        );
+                        for _ in 0..per_thread {
+                            record(key, Work { flops: 3, ..Work::default() });
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            disable();
+            let snap = ProfileSnapshot::capture();
+            assert_eq!(
+                snap.phase_total(Phase::AcaAssembly.name()).flops,
+                3 * per_thread * threads as u64
+            );
+            assert_eq!(snap.dropped, 0);
+            reset();
+        }
+    }
+}

@@ -175,6 +175,21 @@ pub fn metric_direction(metric: &str) -> Direction {
     }
 }
 
+/// Occupancy gauges and fault/event counters commonly sitting at zero in
+/// a healthy baseline — the names where a zero-to-nonzero move means
+/// "there was some activity", not "performance regressed infinitely".
+/// [`diff_reports`] downgrades these to [`Direction::Neutral`] when (and
+/// only when) the baseline value is exactly zero; with a nonzero
+/// baseline the normal direction heuristics apply. Deliberately excludes
+/// every latency/throughput/size cue so e.g. a `p99_ms` that was zero
+/// and moved still produces a verdict.
+pub fn idle_gauge_like(metric: &str) -> bool {
+    let m = metric.to_ascii_lowercase();
+    const CUES: [&str; 9] =
+        ["depth", "dropped", "shed", "evict", "reject", "panic", "inflight", "backlog", "pad_cols"];
+    CUES.iter().any(|cue| m.contains(cue))
+}
+
 /// One metric compared between two bench artifacts by [`diff_reports`].
 #[derive(Clone, Debug)]
 pub struct MetricDiff {
@@ -245,7 +260,16 @@ pub fn diff_reports(
         } else {
             (new_v - old_v) / old_v.abs() * 100.0
         };
-        let direction = metric_direction(&metric);
+        // a gauge or event counter that idled at zero in the baseline has
+        // no meaningful percentage base: queue_depth 0 -> 1 or dropped
+        // 0 -> 2 is "activity", not an infinite regression. Report it,
+        // never fail on it. Latency/throughput names never match the cue
+        // list, so a zero-baseline p99 that moved stays a real verdict.
+        let direction = if old_v == 0.0 && idle_gauge_like(&metric) {
+            Direction::Neutral
+        } else {
+            metric_direction(&metric)
+        };
         let regressed = match direction {
             Direction::LowerIsBetter => pct > threshold_pct,
             Direction::HigherIsBetter => pct < -threshold_pct,
@@ -414,5 +438,34 @@ mod tests {
         assert!(diffs.is_empty());
         // malformed inputs are typed errors
         assert!(diff_reports("{}", &new, 25.0).is_err());
+    }
+
+    #[test]
+    fn zero_baseline_idle_gauges_are_informational() {
+        // a gauge/counter that idled at zero in the baseline and saw
+        // activity in the new run must report, not fail — even when its
+        // name also matches a lower-is-better cue ("dropped_bytes" hits
+        // the "bytes" cue, so it used to read as an inf% regression)
+        let mk = |dropped: f64, wait: f64| {
+            let mut r = BenchReport::new("difftest");
+            r.param("mode", "unit");
+            r.point("serve", 1.0, &[("dropped_bytes", dropped), ("wait_ms", wait)]);
+            r.to_json()
+        };
+        let diffs = diff_reports(&mk(0.0, 0.0), &mk(3.0, 2.0), 25.0).unwrap();
+        let dropped = diffs.iter().find(|d| d.metric == "dropped_bytes").unwrap();
+        assert!(dropped.pct.is_infinite(), "pct still reports the move");
+        assert_eq!(dropped.direction, Direction::Neutral);
+        assert!(!dropped.regressed, "idle gauge activity is not a verdict");
+        // latency names are excluded from the downgrade: zero-baseline
+        // wait_ms that moved is still a regression
+        let wait = diffs.iter().find(|d| d.metric == "wait_ms").unwrap();
+        assert!(wait.regressed);
+        // with a NONZERO baseline the same name keeps its normal
+        // lower-is-better direction and verdict
+        let diffs = diff_reports(&mk(2.0, 1.0), &mk(8.0, 1.0), 25.0).unwrap();
+        let dropped = diffs.iter().find(|d| d.metric == "dropped_bytes").unwrap();
+        assert_eq!(dropped.direction, Direction::LowerIsBetter);
+        assert!(dropped.regressed);
     }
 }

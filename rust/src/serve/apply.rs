@@ -39,6 +39,14 @@ pub trait LendingApply {
     /// elements (the executor calls this when it shrinks its own input
     /// slab toward the recent high-water mark). Default: no-op.
     fn trim(&mut self, _max_elems: usize) {}
+
+    /// Modeled flops of applying the operator to one column, if the
+    /// operator knows its work model ([`crate::hmatrix::HMatrix`] does).
+    /// The executor uses it to charge width-ladder zero-padding to the
+    /// profiler as wasted flops per padded column. Default: unknown.
+    fn work_per_col(&self) -> Option<u64> {
+        None
+    }
 }
 
 /// Adapter: the pre-existing closure contract (`(x, nrhs) -> Vec<f64>`)

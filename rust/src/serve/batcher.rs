@@ -31,6 +31,7 @@ use super::telemetry::{BatcherStats, HealthState};
 use super::{BrownoutConfig, ServeConfig, ServeError};
 use crate::compress::{CompressConfig, CompressStats};
 use crate::metrics::RECORDER;
+use crate::obs::profile;
 use crate::obs::{self, names, Histogram};
 
 /// Out-of-band commands handled by the executor thread *between*
@@ -901,6 +902,28 @@ fn process_batch<A: LendingApply>(
     xbuf.resize(n * width, 0.0);
     for _ in nrhs..width {
         RECORDER.incr(names::SERVE_PAD_COLS);
+    }
+    // profile the ladder's zero-padding as pure waste: each padded
+    // column costs one operator apply (`work_per_col` flops when the
+    // operator knows its model) and its share of RHS traffic, charged
+    // to this flush's rung so `hmx profile` can rank the ladder
+    if profile::is_enabled() && width > nrhs {
+        let pad = (width - nrhs) as u64;
+        profile::record(
+            profile::WorkKey::new(
+                profile::Phase::ServePad,
+                profile::LEVEL_AGG,
+                profile::CLASS_AGG,
+                profile::width_of(width),
+            ),
+            profile::Work {
+                pad_flops: apply.work_per_col().unwrap_or(0).saturating_mul(pad),
+                pad_bytes: 8 * n as u64 * pad,
+                items: pad,
+                events: 1,
+                ..profile::Work::default()
+            },
+        );
     }
     let t0 = Instant::now();
     let apply_start_ns = if tracing { obs::trace::now_ns() } else { 0 };

@@ -154,6 +154,10 @@ impl LendingApply for HmatServeApply {
     fn trim(&mut self, max_elems: usize) {
         self.ws.shrink_to(max_elems);
     }
+
+    fn work_per_col(&self) -> Option<u64> {
+        Some(self.h.flops_per_col())
+    }
 }
 
 /// Everything needed to rebuild a tenant's operator from scratch — the

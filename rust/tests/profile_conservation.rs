@@ -1,0 +1,311 @@
+//! Conservation properties of the `prof` work-attribution profiler: the
+//! per-level × per-class × per-width rows it records must sum to the
+//! whole-operator totals recomputed independently from the block tree —
+//! nothing lost to bucketing, nothing double counted between the flat,
+//! packed and NP kernel paths.
+//!
+//! Requires `--features prof` (the instrumentation compiles to no-ops
+//! otherwise), so the whole file is gated.
+#![cfg(feature = "prof")]
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use hmx::config::HmxConfig;
+use hmx::obs::profile::{self, model, Phase};
+use hmx::prelude::*;
+
+/// The profiler counter table is process-global; tests that reset and
+/// enable it must not interleave.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn p_cfg(n: usize) -> HmxConfig {
+    HmxConfig { n, dim: 2, c_leaf: 64, k: 12, precompute: true, ..HmxConfig::default() }
+}
+
+fn build(cfg: &HmxConfig) -> HMatrix {
+    HMatrix::build(PointSet::halton(cfg.n, cfg.dim), cfg).unwrap()
+}
+
+/// Row key as it appears in a [`profile::ProfileSnapshot`]:
+/// `(phase, level, class, width)`.
+type RowKey = (String, i64, String, u64);
+
+fn snapshot_rows(snap: &profile::ProfileSnapshot, phase: Phase) -> BTreeMap<RowKey, profile::Work> {
+    let mut out = BTreeMap::new();
+    for r in snap.rows.iter().filter(|r| r.phase == phase.name()) {
+        let key = (r.phase.clone(), r.level, r.class.clone(), r.width);
+        out.entry(key).or_default().merge(&r.work);
+    }
+    out
+}
+
+fn add(
+    map: &mut BTreeMap<RowKey, profile::Work>,
+    phase: Phase,
+    level: u8,
+    class: u8,
+    width: u16,
+    work: profile::Work,
+) {
+    let key = (
+        phase.name().to_string(),
+        if level == profile::LEVEL_AGG { -1 } else { level as i64 },
+        profile::class_label(class),
+        width as u64,
+    );
+    map.entry(key).or_default().merge(&work);
+}
+
+/// Recompute, from the block tree alone, every row that `applies` mat-mats
+/// of width `nrhs` should charge to the dense and low-rank apply phases.
+fn expected_apply_rows(h: &HMatrix, nrhs: usize, applies: u64) -> BTreeMap<RowKey, profile::Work> {
+    let n_root = h.points.len();
+    let mut out = BTreeMap::new();
+    for w in &h.dense {
+        let (m, nc) = (w.rows(), w.cols());
+        let work = profile::Work {
+            flops: applies * model::dense_apply_flops(m, nc, nrhs),
+            bytes: applies * model::dense_apply_bytes(m, nc, nrhs),
+            items: applies,
+            ..profile::Work::default()
+        };
+        let level = profile::level_of(n_root, m);
+        add(&mut out, Phase::DenseApply, level, profile::CLASS_DENSE, profile::width_of(nrhs), work);
+    }
+    let ranks = h.lowrank_block_ranks();
+    for (w, &r) in h.admissible.iter().zip(&ranks) {
+        if r == 0 {
+            continue; // rank-0 blocks are skipped by the apply kernels
+        }
+        let (m, nc) = (w.rows(), w.cols());
+        let work = profile::Work {
+            flops: applies * model::lowrank_apply_flops(m, nc, r, nrhs),
+            bytes: applies * model::lowrank_apply_bytes(m, nc, r, nrhs, 8),
+            items: applies,
+            ..profile::Work::default()
+        };
+        let (level, class) = (profile::level_of(n_root, m), profile::rank_class(r));
+        add(&mut out, Phase::LowRankApply, level, class, profile::width_of(nrhs), work);
+    }
+    out
+}
+
+fn want_phase(
+    all: &BTreeMap<RowKey, profile::Work>,
+    phase: Phase,
+) -> BTreeMap<RowKey, profile::Work> {
+    all.iter().filter(|(k, _)| k.0 == phase.name()).map(|(k, v)| (k.clone(), *v)).collect()
+}
+
+fn assert_rows_equal(
+    got: &BTreeMap<RowKey, profile::Work>,
+    want: &BTreeMap<RowKey, profile::Work>,
+    what: &str,
+) {
+    for (k, w) in want {
+        let g = got.get(k).unwrap_or_else(|| panic!("{what}: missing row {k:?}"));
+        assert_eq!(g, w, "{what}: row {k:?} differs");
+    }
+    for k in got.keys() {
+        assert!(want.contains_key(k), "{what}: unexpected row {k:?}");
+    }
+}
+
+/// Matvec: profiler rows reconstruct exactly from dense leaves + stored
+/// per-block ranks, bucket by bucket, over repeated applies.
+#[test]
+fn matvec_rows_are_conserved() {
+    let _g = serial();
+    let cfg = p_cfg(2048);
+    let h = build(&cfg); // built before enable: construction work excluded
+    let x = hmx::util::prng::Xoshiro256::seed(7).vector(cfg.n);
+
+    profile::reset();
+    profile::enable();
+    let applies = 3u64;
+    for _ in 0..applies {
+        h.matvec(&x).unwrap();
+    }
+    profile::disable();
+    let snap = profile::ProfileSnapshot::capture();
+
+    let want = expected_apply_rows(&h, 1, applies);
+    let dense = want_phase(&want, Phase::DenseApply);
+    let lowrank = want_phase(&want, Phase::LowRankApply);
+    assert_rows_equal(&snapshot_rows(&snap, Phase::DenseApply), &dense, "dense matvec");
+    assert_rows_equal(&snapshot_rows(&snap, Phase::LowRankApply), &lowrank, "lowrank matvec");
+    // apply-only window: no construction-phase rows may leak in
+    assert_eq!(snap.phase_total(Phase::AcaAssembly.name()), profile::Work::default());
+    assert_eq!(snap.phase_total(Phase::BatchPlan.name()), profile::Work::default());
+    assert_eq!(snap.dropped, 0, "healthy run must not drop records");
+}
+
+/// Mat-mat at a non-power-of-two width: the width axis carries the true
+/// nrhs and totals scale linearly with it.
+#[test]
+fn matmat_rows_are_conserved() {
+    let _g = serial();
+    let cfg = p_cfg(2048);
+    let h = build(&cfg);
+    let nrhs = 7usize;
+    let x = hmx::util::prng::Xoshiro256::seed(8).vector(cfg.n * nrhs);
+
+    profile::reset();
+    profile::enable();
+    h.matmat(&x, nrhs).unwrap();
+    profile::disable();
+    let snap = profile::ProfileSnapshot::capture();
+
+    let want = expected_apply_rows(&h, nrhs, 1);
+    let dense = want_phase(&want, Phase::DenseApply);
+    let lowrank = want_phase(&want, Phase::LowRankApply);
+    assert_rows_equal(&snapshot_rows(&snap, Phase::DenseApply), &dense, "dense matmat");
+    assert_rows_equal(&snapshot_rows(&snap, Phase::LowRankApply), &lowrank, "lowrank matmat");
+
+    // width-7 flops are exactly 7× the per-column model (linear in nrhs;
+    // recomputed independently of the profiler)
+    let total = snap.phase_total(Phase::DenseApply.name()).flops
+        + snap.phase_total(Phase::LowRankApply.name()).flops;
+    assert_eq!(total, h.flops_per_col() * nrhs as u64);
+}
+
+/// Construction (P mode): assembly totals reconstruct from the achieved
+/// ranks, and the batch-plan rows reconstruct from re-running the §5.4
+/// planner arithmetic on the stored plans.
+#[test]
+fn construction_rows_are_conserved() {
+    let _g = serial();
+    let cfg = p_cfg(2048);
+
+    profile::reset();
+    profile::enable();
+    let h = build(&cfg);
+    profile::disable();
+    let snap = profile::ProfileSnapshot::capture();
+
+    // ACA assembly: modeled flops/bytes from the achieved per-block ranks
+    let ranks = h.lowrank_block_ranks();
+    let mut flops = 0u64;
+    let mut bytes = 0u64;
+    for (w, &r) in h.admissible.iter().zip(&ranks) {
+        flops += model::aca_assembly_flops(w.rows(), w.cols(), r);
+        bytes += model::aca_assembly_bytes(w.rows(), w.cols(), r, cfg.k);
+    }
+    let asm = snap.phase_total(Phase::AcaAssembly.name());
+    assert_eq!(asm.flops, flops, "assembly flops");
+    assert_eq!(asm.bytes, bytes, "assembly bytes");
+    assert_eq!(asm.items, h.admissible.len() as u64, "assembly items");
+
+    // batch planning: bytes committed + dense padding recomputed from the
+    // plans (aca batches: 8 · total rows; dense batches: padded elems)
+    let mut plan_bytes = 0u64;
+    let mut plan_pad = 0u64;
+    for &(s, e) in &h.aca_plan.batches {
+        plan_bytes += 8 * h.admissible[s..e].iter().map(|w| w.rows() as u64).sum::<u64>();
+    }
+    for &(s, e) in &h.dense_plan.batches {
+        let blocks = &h.dense[s..e];
+        let total_rows: u64 = blocks.iter().map(|w| w.rows() as u64).sum();
+        let actual: u64 = blocks.iter().map(|w| w.rows() as u64 * w.cols() as u64).sum();
+        let max_cols = blocks.iter().map(|w| w.cols()).max().unwrap_or(0) as u64;
+        plan_bytes += 8 * max_cols * total_rows;
+        plan_pad += 8 * (max_cols * total_rows - actual);
+    }
+    let plan = snap.phase_total(Phase::BatchPlan.name());
+    assert_eq!(plan.bytes, plan_bytes, "plan bytes");
+    assert_eq!(plan.pad_bytes, plan_pad, "plan pad bytes");
+    assert_eq!(plan.items, (h.aca_plan.n_blocks() + h.dense_plan.n_blocks()) as u64);
+    assert_eq!(plan.events, (h.aca_plan.n_batches() + h.dense_plan.n_batches()) as u64);
+
+    // no apply-phase rows during construction
+    assert_eq!(snap.phase_total(Phase::DenseApply.name()), profile::Work::default());
+    assert_eq!(snap.phase_total(Phase::LowRankApply.name()), profile::Work::default());
+    assert_eq!(snap.dropped, 0);
+}
+
+/// Build-time recompression: charged work reconstructs from the rank
+/// transition (assembly ranks → recompressed ranks) observed via a twin
+/// build without recompression (the pipeline is deterministic).
+#[test]
+fn recompress_rows_are_conserved() {
+    let _g = serial();
+    let plain = build(&p_cfg(2048));
+    let k_old = plain.lowrank_block_ranks();
+
+    let cfg = HmxConfig { recompress_eps: Some(1e-4), ..p_cfg(2048) };
+    profile::reset();
+    profile::enable();
+    let h = build(&cfg);
+    profile::disable();
+    let snap = profile::ProfileSnapshot::capture();
+
+    let k_new = h.lowrank_block_ranks();
+    assert_eq!(k_old.len(), k_new.len());
+    let mut flops = 0u64;
+    let mut bytes = 0u64;
+    for ((w, &ko), &kn) in h.admissible.iter().zip(&k_old).zip(&k_new) {
+        flops += model::recompress_flops(w.rows(), w.cols(), ko, kn);
+        bytes += model::recompress_bytes(w.rows(), w.cols(), ko, kn);
+    }
+    let rc = snap.phase_total(Phase::Recompress.name());
+    assert_eq!(rc.flops, flops, "recompress flops");
+    assert_eq!(rc.bytes, bytes, "recompress bytes");
+    assert_eq!(rc.items, h.admissible.len() as u64);
+    assert_eq!(rc.events, h.aca_plan.n_batches() as u64, "one event per batch pass");
+}
+
+/// Operator-wide compression: charged work reconstructs from the stored
+/// ranks before and after the pass, and the packed apply path afterwards
+/// charges the mixed-precision byte model per block.
+#[test]
+fn compress_pass_rows_are_conserved() {
+    let _g = serial();
+    let cfg = p_cfg(2048);
+    let mut h = build(&cfg);
+    let k_old = h.lowrank_block_ranks();
+
+    profile::reset();
+    profile::enable();
+    h.compress(&CompressConfig::rel_err(1e-3)).unwrap();
+    profile::disable();
+    let snap = profile::ProfileSnapshot::capture();
+
+    let k_new = h.lowrank_block_ranks();
+    let mut flops = 0u64;
+    for ((w, &ko), &kn) in h.admissible.iter().zip(&k_old).zip(&k_new) {
+        flops += model::recompress_flops(w.rows(), w.cols(), ko, kn);
+    }
+    let cp = snap.phase_total(Phase::CompressPass.name());
+    assert_eq!(cp.flops, flops, "compress flops");
+    assert_eq!(cp.items, h.admissible.len() as u64);
+    assert_eq!(cp.events, h.aca_plan.n_batches() as u64);
+
+    // packed (possibly f32) apply still conserves: totals reconstruct with
+    // the per-block element width the store actually holds
+    profile::reset();
+    profile::enable();
+    let x = hmx::util::prng::Xoshiro256::seed(9).vector(cfg.n);
+    h.matvec(&x).unwrap();
+    profile::disable();
+    let snap2 = profile::ProfileSnapshot::capture();
+
+    let fp32 = h.lowrank_block_fp32();
+    let mut lr_flops = 0u64;
+    let mut lr_bytes = 0u64;
+    for (b, (w, &r)) in h.admissible.iter().zip(&k_new).enumerate() {
+        if r == 0 {
+            continue;
+        }
+        let elem = if fp32[b] { 4 } else { 8 };
+        lr_flops += model::lowrank_apply_flops(w.rows(), w.cols(), r, 1);
+        lr_bytes += model::lowrank_apply_bytes(w.rows(), w.cols(), r, 1, elem);
+    }
+    let lr = snap2.phase_total(Phase::LowRankApply.name());
+    assert_eq!(lr.flops, lr_flops, "packed lowrank flops");
+    assert_eq!(lr.bytes, lr_bytes, "packed lowrank bytes");
+}
